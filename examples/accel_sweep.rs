@@ -1,0 +1,26 @@
+//! The acceleration story end to end: Amdahl limits (Fig 9), the
+//! emulation sweep with its 8x instability (Fig 10), the bandwidth
+//! culprit (Fig 11), and the three mitigations (Fig 15).
+//!
+//!     cargo run --release --example accel_sweep [-- --quick] [--skip-fig15]
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::{fig09, fig10, fig11, fig15};
+use aitax::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    println!("== What AI acceleration does to the AI tax ==");
+
+    fig09::print(&fig09::run());
+    fig10::print(&fig10::run(fidelity));
+    fig11::print(&fig11::run(fidelity));
+    if !args.flag("skip-fig15") {
+        fig15::print(&fig15::run(fidelity));
+    }
+}

@@ -1,0 +1,28 @@
+//! Full data-center Face Recognition study: the paper's §4.2 deployment
+//! (840 producers / 1680 consumers / 3 brokers) in virtual time, plus the
+//! Fig-7 faces-vs-latency timeseries.
+//!
+//!     cargo run --release --example face_recognition_dc [-- --secs 30]
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::{fig06, fig07};
+use aitax::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    println!("== Face Recognition at data-center scale (virtual time) ==");
+    println!("deployment: 840 ingest/detect + 1680 identification + 3 brokers\n");
+
+    let report = fig06::run(fidelity);
+    fig06::print(&report);
+
+    let f7 = fig07::run(fidelity);
+    fig07::print(&f7);
+
+    println!("\nfaces in flight peaked at {}", report.population.iter().map(|p| p.1).max().unwrap_or(0));
+}

@@ -1,0 +1,26 @@
+//! The second application (§6): Object Detection through the same broker
+//! substrate — baseline breakdown (Fig 13) and the acceleration sweep with
+//! its "Delay" AI-tax component (Fig 14).
+//!
+//!     cargo run --release --example object_detection [-- --quick]
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::{fig13, fig14};
+use aitax::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    println!("== Object Detection (R-CNN) through the Kafka-like substrate ==");
+    println!("deployment: 21 producers x 30 FPS -> 3 brokers -> 2016 detectors\n");
+
+    let baseline = fig13::run(fidelity);
+    fig13::print(&baseline);
+
+    let sweep = fig14::run(fidelity);
+    fig14::print(&sweep);
+}

@@ -1,0 +1,49 @@
+//! TCO planner (§7): price out the homogeneous vs purpose-built edge data
+//! centers, then explore what-ifs over the price book.
+//!
+//!     cargo run --release --example tco_planner [-- --nvme-price 299]
+
+use aitax::experiments::table34;
+use aitax::tco::catalog::Catalog;
+use aitax::tco::designs::{homogeneous_1024_upgraded, purpose_built, summarize};
+use aitax::tco::power::PowerModel;
+use aitax::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    table34::print(&table34::run());
+
+    // What-if: sweep a couple of price-book knobs.
+    println!("\n== what-ifs ==");
+    let power = PowerModel::default();
+    for (label, mutate) in [
+        (
+            "NVMe price drops to $299",
+            Box::new(|c: &mut Catalog| c.nvme = 299.0) as Box<dyn Fn(&mut Catalog)>,
+        ),
+        (
+            "100G switches drop 30%",
+            Box::new(|c: &mut Catalog| c.switch_100g *= 0.7),
+        ),
+        (
+            "broker servers cost like compute servers",
+            Box::new(|c: &mut Catalog| c.broker_server = c.compute_server),
+        ),
+    ] {
+        let mut catalog = Catalog::default();
+        mutate(&mut catalog);
+        if let Some(v) = args.get("nvme-price").and_then(|s| s.parse::<f64>().ok()) {
+            catalog.nvme = v;
+        }
+        let homo = summarize(&homogeneous_1024_upgraded(&catalog), &power);
+        let pb = summarize(&purpose_built(&catalog), &power);
+        let savings = 1.0 - pb.yearly_total / homo.yearly_total;
+        println!(
+            "  {:<44} purpose-built saves {:>5.1}%  (${:.2}M vs ${:.2}M yearly)",
+            label,
+            100.0 * savings,
+            pb.yearly_total / 1e6,
+            homo.yearly_total / 1e6
+        );
+    }
+}

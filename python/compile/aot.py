@@ -1,0 +1,105 @@
+"""AOT export: lower the Layer-2 JAX graphs to HLO text for the Rust
+runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple*``.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts          # write artifacts
+    python -m compile.aot --report                    # HLO op-count report
+
+Python runs only at build time; the Rust binary is self-contained once
+``artifacts/`` exists (``make artifacts`` is incremental).
+"""
+
+import argparse
+import collections
+import json
+import os
+import re
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is essential: the default printer elides
+    # big weight constants as `constant({...})`, which the xla_extension
+    # 0.5.1 text parser silently reads back as ZEROS.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_entry(name):
+    fn, shapes = model.ENTRY_POINTS[name]
+    args = [jax.ShapeDtypeStruct(s, "float32") for s in shapes]
+    lowered = jax.jit(fn).lower(*args)
+    outs = [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in jax.tree_util.tree_leaves(lowered.out_info)
+    ]
+    return to_hlo_text(lowered), outs
+
+
+def op_histogram(hlo_text):
+    """Count HLO opcodes (the L2 profile: fusion/redundancy sanity)."""
+    ops = collections.Counter()
+    for m in re.finditer(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+(\w+)\(",
+                         hlo_text, re.M):
+        ops[m.group(1)] += 1
+    return ops
+
+
+def export_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"frame_side": model.FRAME_SIDE, "detect_side": model.DETECT_SIDE,
+                "thumb_side": model.THUMB_SIDE, "embed_dim": model.EMBED_DIM,
+                "gallery": model.GALLERY, "batch": model.BATCH, "entries": {}}
+    for name in model.ENTRY_POINTS:
+        hlo, outs = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        _, shapes = model.ENTRY_POINTS[name]
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": "float32"} for s in shapes],
+            "outputs": outs,
+        }
+        print(f"  {name:<16} {len(hlo):>9} chars  -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['entries'])} entries to {out_dir}")
+
+
+def report():
+    for name in model.ENTRY_POINTS:
+        hlo, _ = lower_entry(name)
+        ops = op_histogram(hlo)
+        total = sum(ops.values())
+        top = ", ".join(f"{op}:{n}" for op, n in ops.most_common(6))
+        print(f"{name:<16} {total:>5} ops   {top}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--report", action="store_true", help="print HLO op stats")
+    args = ap.parse_args()
+    if args.report:
+        report()
+    else:
+        export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the Face Recognition pipeline.
+
+Three kernels cover the pipeline's compute:
+
+* ``matmul``   — blocked matrix multiply (dense layers, SVM scores,
+  im2col-style contractions). Tiled for the MXU's 128x128 systolic feeds.
+* ``conv2d``   — direct 2D convolution, expressed as per-tap (rows*W, Cin)
+  x (Cin, Cout) matmuls so every tap feeds the MXU.
+* ``downsample`` — box down-sampling (the paper's 1920x1080 -> 960x540
+  frame resize is an exact factor-2 box filter); the paper shows resizing
+  alone is 17.8% of end-to-end cycles, which is why pre-processing gets a
+  first-class kernel here.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom calls); their *structure* — BlockSpecs, VMEM tile footprints — is
+what carries to real TPU. ``ref.py`` holds pure-jnp oracles.
+"""
+
+from . import conv2d, downsample, matmul, ref  # noqa: F401

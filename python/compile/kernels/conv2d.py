@@ -1,0 +1,85 @@
+"""Direct 2D convolution Pallas kernel (VALID padding, stride 1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU
+TensorFlow convs become MXU-shaped tile matmuls. Each program owns a block
+of output *rows*; for every filter tap (dy, dx) it multiplies the shifted
+input band, flattened to (BH*W_out, Cin), against that tap's (Cin, Cout)
+weight slice — so all arithmetic is MXU matmuls.
+
+Note on staging: output-row bands need a kh-1 halo, and overlapping input
+blocks are not expressible with standard `Blocked` BlockSpecs, so the
+input is staged whole and each program slices its band with
+``lax.dynamic_slice`` (the interpret-mode equivalent of a halo DMA; on
+real TPU this would become a manual double-buffered copy — see
+EXPERIMENTS.md §Perf for the VMEM budget).
+
+VMEM per program (fp32): H*W*Cin (staged input) + kh*kw*Cin*Cout +
+BH*W_out*Cout floats. For the pipeline's largest conv (64x64x3 input,
+8 output channels, BH=16) that is ~0.3 MB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BH = 16
+
+
+def _conv_kernel(kh, kw, bh, w_out, x_ref, w_ref, o_ref):
+    cout = o_ref.shape[2]
+    cin = x_ref.shape[2]
+    row0 = pl.program_id(0) * bh
+    acc = jnp.zeros((bh * w_out, cout), dtype=jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            # Shifted input band for this tap: (bh, w_out, cin).
+            window = jax.lax.dynamic_slice(
+                x_ref[...], (row0 + dy, dx, 0), (bh, w_out, cin)
+            ).astype(jnp.float32)
+            tap = w_ref[dy, dx].astype(jnp.float32)  # (cin, cout)
+            acc += jnp.dot(
+                window.reshape(bh * w_out, cin),
+                tap,
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc.reshape(bh, w_out, cout)
+
+
+@functools.partial(jax.jit, static_argnames=("bh",))
+def conv2d(x, w, bh=DEFAULT_BH):
+    """VALID conv: ``x`` (H, W, Cin) * ``w`` (kh, kw, Cin, Cout) -> HWC.
+
+    Output rows are padded to a multiple of the row-block and sliced back.
+    """
+    h, width, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"channel mismatch: {cin} != {cin2}"
+    h_out = h - kh + 1
+    w_out = width - kw + 1
+    assert h_out > 0 and w_out > 0, "kernel larger than input"
+    bh = min(bh, h_out)
+    hp = pl.cdiv(h_out, bh) * bh
+    # Pad input rows so the last block has a full (bh + kh - 1) window.
+    pad_rows = hp + kh - 1 - h
+    if pad_rows > 0:
+        x = jnp.pad(x, ((0, pad_rows), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kh, kw, bh, w_out),
+        grid=(hp // bh,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, w_out, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w_out, cout), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:h_out]
+
+
+def vmem_bytes(h, w, cin, kh, kw, cout, bh=DEFAULT_BH, dtype_bytes=4):
+    """Per-program VMEM footprint estimate (see module docs)."""
+    w_out = w - kw + 1
+    return dtype_bytes * (h * w * cin + kh * kw * cin * cout + bh * w_out * cout)

@@ -1,0 +1,74 @@
+"""Blocked matmul Pallas kernel.
+
+The pipeline's dense compute (embedding projection, SVM scores, conv taps)
+funnels through this kernel. Blocking strategy:
+
+* grid = (M/BM, N/BN); each program owns one (BM, BN) output tile;
+* A-tile (BM, K) and B-tile (K, BN) are staged HBM->VMEM by BlockSpec;
+* accumulation is fp32 regardless of input dtype (MXU-native).
+
+VMEM footprint per program (fp32): BM*K + K*BN + BM*BN floats. With the
+default BM=BN=128 and the pipeline's K <= 2048 this stays under 2.2 MB —
+comfortably inside a TPU core's ~16 MB VMEM, leaving room for
+double-buffering (see DESIGN.md / EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, rows, cols):
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """``a @ b`` with fp32 accumulation via a blocked Pallas kernel.
+
+    Arbitrary (M, K) x (K, N); inputs are zero-padded up to tile multiples
+    and the result is sliced back, so callers never see the blocking.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} != {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    mp = pl.cdiv(m, bm) * bm
+    np_ = pl.cdiv(n, bn) * bn
+    a_p = _pad_to(a, mp, k)
+    b_p = _pad_to(b, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(m, k, n, bm=DEFAULT_BM, bn=DEFAULT_BN, dtype_bytes=4):
+    """Per-program VMEM footprint estimate (see module docs)."""
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    return dtype_bytes * (bm * k + k * bn + bm * bn)

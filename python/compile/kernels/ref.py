@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels match these references.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a, b):
+    """Plain matmul with fp32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(x, w):
+    """VALID 2D convolution, HWC x HWIO -> HWC.
+
+    ``x``: (H, W, Cin); ``w``: (kh, kw, Cin, Cout).
+    """
+    x4 = x[None].astype(jnp.float32)  # NHWC
+    out = lax.conv_general_dilated(
+        x4,
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
+def downsample_ref(x, factor):
+    """Box down-sampling by an integer factor over H and W of an HWC image.
+
+    For factor 2 this is exactly the bilinear half-resolution resize the
+    pipeline uses (1920x1080 -> 960x540).
+    """
+    h, w, c = x.shape
+    assert h % factor == 0 and w % factor == 0, "shape must divide the factor"
+    x = x.astype(jnp.float32)
+    x = x.reshape(h // factor, factor, w // factor, factor, c)
+    return x.mean(axis=(1, 3))

@@ -1,0 +1,162 @@
+"""Layer-2 JAX models: the Face Recognition pipeline's compute graphs.
+
+Stand-ins for the paper's MT-CNN + FaceNet + SVM stack with the same
+pipeline topology and inter-stage data shapes (DESIGN.md §6): the AI-tax
+claims depend on where time and bytes go, not on model accuracy. All four
+graphs are built from the Layer-1 Pallas kernels so that lowering them
+produces a single HLO module per stage with the kernels inlined.
+
+Scaled geometry (the paper's 1920x1080 -> 960x540 -> 160x160 path, scaled
+to CPU-interpretable sizes):
+
+* frames   : 128x128x3  (FRAME_SIDE)
+* detector : 64x64x3    (after the factor-2 preprocess downsample)
+* thumbnail: 32x32x3    (THUMB_SIDE; the paper's 160x160 face crop)
+* embedding: 128-d      (the paper's FaceNet width)
+* gallery  : 32 known identities (SVM one-vs-all)
+
+The face detector is architecturally a P-Net-style fully-convolutional
+stack, but its channel-0 path is *hand-assembled* as a brightness
+integrator so the end-to-end demo genuinely localizes the synthetic
+bright-blob faces the Rust frame generator draws; remaining channels carry
+seeded random weights. Identification is a random (but fixed) projection:
+identities are consistent, not semantically meaningful — documented in
+README §Limitations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.conv2d import conv2d
+from .kernels.downsample import downsample
+from .kernels.matmul import matmul
+
+FRAME_SIDE = 128
+DETECT_SIDE = 64
+THUMB_SIDE = 32
+EMBED_DIM = 128
+GALLERY = 32
+SEED = 0xFACE
+
+
+def _rng(salt):
+    return np.random.default_rng(SEED + salt)
+
+
+def _conv_weights(salt, kh, kw, cin, cout, passthrough=False):
+    """Seeded He-scaled conv weights; optionally wire channel 0 as a
+    brightness-passthrough (center tap averages/forwards channel 0)."""
+    rng = _rng(salt)
+    w = rng.normal(0.0, np.sqrt(2.0 / (kh * kw * cin)), (kh, kw, cin, cout))
+    w = w.astype(np.float32)
+    if passthrough:
+        w[:, :, :, 0] = 0.0
+        if cin >= 3:
+            # First layer: channel 0 = mean brightness of the RGB window.
+            w[:, :, :3, 0] = 1.0 / (kh * kw * 3)
+        else:
+            w[kh // 2, kw // 2, 0, 0] = 1.0
+    return jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Stage graphs
+# ---------------------------------------------------------------------------
+
+
+def preprocess_fn(frame):
+    """Ingestion resize: (128,128,3) -> (64,64,3) box downsample."""
+    return (downsample(frame, factor=2),)
+
+
+# Detector weights (module-level constants fold into the HLO).
+_DW1 = _conv_weights(1, 3, 3, 3, 8, passthrough=True)
+_DW2 = _conv_weights(2, 3, 3, 8, 16, passthrough=True)
+_DW_PROB = _conv_weights(3, 1, 1, 16, 1)
+_DW_BBOX = _conv_weights(4, 1, 1, 16, 4)
+# Brightness channel -> positive logit for bright windows. The synthetic
+# frames use background 0.1 and face blobs ~0.8 mean; threshold between.
+_PROB_GAIN = 24.0
+_PROB_BIAS = -24.0 * 0.45
+
+
+def detect_fn(image):
+    """P-Net-style detector: (64,64,3) -> prob map (60,60) + bbox (60,60,4).
+
+    Two 3x3 VALID convs (so the map is 60x60; each cell sees an 8x8-ish
+    receptive field at frame scale) followed by 1x1 heads.
+    """
+    h1 = jax.nn.relu(conv2d(image, _DW1))
+    h2 = jax.nn.relu(conv2d(h1, _DW2))
+    logits = conv2d(h2, _DW_PROB)[..., 0]
+    # Channel 0 of h2 is the brightness integrator; mix it into the logit.
+    prob = jax.nn.sigmoid(_PROB_GAIN * h2[..., 0] + _PROB_BIAS + 0.05 * logits)
+    bbox = conv2d(h2, _DW_BBOX)
+    return prob, bbox
+
+
+# Embedder weights.
+_EW1 = _conv_weights(10, 3, 3, 3, 16)
+_EW2 = _conv_weights(11, 3, 3, 16, 32)
+_EW3 = _conv_weights(12, 3, 3, 32, 32)
+_EP = jnp.asarray(
+    _rng(13).normal(0.0, 0.05, (13 * 13 * 32, EMBED_DIM)).astype(np.float32)
+)
+
+
+def embed_fn(thumb):
+    """FaceNet stand-in: (32,32,3) -> unit-norm 128-d embedding."""
+    h = jax.nn.relu(conv2d(thumb, _EW1))        # 30x30x16
+    h = jax.nn.relu(conv2d(h, _EW2))            # 28x28x32
+    h = jax.nn.relu(conv2d(h, _EW3))            # 26x26x32
+    # 2x2 mean pool -> 13x13x32, flatten, project.
+    h = h.reshape(13, 2, 13, 2, 32).mean(axis=(1, 3))
+    flat = h.reshape(1, -1)
+    emb = matmul(flat, _EP)[0]
+    return (emb / (jnp.linalg.norm(emb) + 1e-6),)
+
+
+# SVM one-vs-all gallery.
+_SVM_W = jnp.asarray(_rng(20).normal(0.0, 1.0, (EMBED_DIM, GALLERY)).astype(np.float32))
+_SVM_B = jnp.asarray(_rng(21).normal(0.0, 0.1, (GALLERY,)).astype(np.float32))
+
+
+def classify_fn(embedding):
+    """Linear SVM scores: (128,) -> (GALLERY,)."""
+    scores = matmul(embedding.reshape(1, -1), _SVM_W)[0] + _SVM_B
+    return (scores,)
+
+
+def identify_fn(thumb):
+    """Fused feature extraction + classification — the paper's
+    'identification' stage is exactly this fusion (§3.3: 'feature
+    extraction and classification are tightly coupled')."""
+    (emb,) = embed_fn(thumb)
+    (scores,) = classify_fn(emb)
+    return emb, scores
+
+
+def identify_batch_fn(thumbs):
+    """Batched identification: (B,32,32,3) -> (B,128), (B,GALLERY).
+
+    Used by the Rust coordinator's dynamic batcher; exported for B=8.
+    """
+    embs, scores = jax.vmap(identify_fn)(thumbs)
+    return embs, scores
+
+
+BATCH = 8
+
+# ---------------------------------------------------------------------------
+# Entry-point registry for AOT export (name -> (fn, example input shapes))
+# ---------------------------------------------------------------------------
+
+ENTRY_POINTS = {
+    "preprocess": (preprocess_fn, [(FRAME_SIDE, FRAME_SIDE, 3)]),
+    "detect": (detect_fn, [(DETECT_SIDE, DETECT_SIDE, 3)]),
+    "embed": (embed_fn, [(THUMB_SIDE, THUMB_SIDE, 3)]),
+    "classify": (classify_fn, [(EMBED_DIM,)]),
+    "identify": (identify_fn, [(THUMB_SIDE, THUMB_SIDE, 3)]),
+    "identify_batch": (identify_batch_fn, [(BATCH, THUMB_SIDE, THUMB_SIDE, 3)]),
+}

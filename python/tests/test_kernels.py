@@ -1,0 +1,141 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every property asserts allclose
+against ``ref.py``. This is the CORE correctness signal for the AOT
+artifacts — the same kernel code is inlined into every exported HLO.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, downsample, matmul, ref
+
+F32 = np.float32
+BF16 = jnp.bfloat16
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(F32)
+    if dtype is BF16:
+        return jnp.asarray(x, dtype=BF16)
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------- matmul
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 80),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), F32)
+    b = _rand(rng, (k, n), F32)
+    out = matmul.matmul(a, b)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref_bf16(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), BF16)
+    b = _rand(rng, (k, n), BF16)
+    out = matmul.matmul(a, b)
+    # bf16 inputs, fp32 accumulation: tolerance set by input rounding.
+    np.testing.assert_allclose(
+        out, ref.matmul_ref(a, b), rtol=2e-2, atol=2e-2 * np.sqrt(k)
+    )
+
+
+@given(bm=st.sampled_from([8, 16, 32, 128]), bn=st.sampled_from([8, 16, 32, 128]))
+def test_matmul_block_shape_invariant(bm, bn):
+    """Result must not depend on the blocking (pure performance knob)."""
+    rng = np.random.default_rng(7)
+    a = _rand(rng, (50, 33), F32)
+    b = _rand(rng, (33, 41), F32)
+    out = matmul.matmul(a, b, bm=bm, bn=bn)
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_vmem_estimate_positive():
+    assert matmul.vmem_bytes(512, 2048, 128) <= 2_300_000
+
+
+# ---------------------------------------------------------------- conv2d
+
+@given(
+    h=st.integers(4, 36),
+    w=st.integers(4, 36),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([1, 4, 8]),
+    kh=st.sampled_from([1, 3]),
+    kw=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, kh, kw, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (h, w, cin), F32)
+    wts = _rand(rng, (kh, kw, cin, cout), F32)
+    out = conv2d.conv2d(x, wts)
+    assert out.shape == (h - kh + 1, w - kw + 1, cout)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, wts), rtol=1e-4, atol=1e-4)
+
+
+@given(bh=st.sampled_from([1, 2, 5, 16, 64]))
+def test_conv2d_row_block_invariant(bh):
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (23, 19, 3), F32)
+    w = _rand(rng, (3, 3, 3, 8), F32)
+    out = conv2d.conv2d(x, w, bh=bh)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_identity_kernel():
+    """A 1x1 identity kernel must return the input."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((9, 7, 3)), F32)
+    w = jnp.eye(3, dtype=F32).reshape(1, 1, 3, 3)
+    np.testing.assert_allclose(conv2d.conv2d(x, w), x, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ downsample
+
+@given(
+    hb=st.integers(1, 12),
+    wb=st.integers(1, 12),
+    c=st.sampled_from([1, 3]),
+    factor=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_downsample_matches_ref(hb, wb, c, factor, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (hb * factor, wb * factor, c), F32)
+    out = downsample.downsample(x, factor=factor, bh=1)
+    assert out.shape == (hb, wb, c)
+    np.testing.assert_allclose(out, ref.downsample_ref(x, factor), rtol=1e-5, atol=1e-6)
+
+
+def test_downsample_constant_is_preserved():
+    x = jnp.full((16, 8, 3), 0.37, F32)
+    out = downsample.downsample(x, factor=2, bh=4)
+    np.testing.assert_allclose(out, jnp.full((8, 4, 3), 0.37), rtol=1e-6)
+
+
+def test_downsample_frame_geometry():
+    """The pipeline's actual frame path: 128x128 -> 64x64."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (128, 128, 3), F32)
+    out = downsample.downsample(x, factor=2)
+    assert out.shape == (64, 64, 3)
+    np.testing.assert_allclose(out, ref.downsample_ref(x, 2), rtol=1e-5, atol=1e-6)

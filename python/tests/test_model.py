@@ -1,0 +1,88 @@
+"""Layer-2 model tests: shapes, determinism and the detector's behavior
+on the synthetic workload the Rust frame generator produces."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def synthetic_frame(faces):
+    """Mirror of the Rust `Frame::synthetic` generator."""
+    side = model.FRAME_SIDE
+    f = np.full((side, side, 3), 0.1, np.float32)
+    fs = side // 8
+    for (cx, cy) in faces:
+        f[cy : cy + fs, cx : cx + fs, 0] = 0.9
+        f[cy : cy + fs, cx : cx + fs, 1] = 0.72
+        f[cy : cy + fs, cx : cx + fs, 2] = 0.63
+    return jnp.asarray(f)
+
+
+def test_preprocess_shape():
+    (out,) = model.preprocess_fn(synthetic_frame([]))
+    assert out.shape == (model.DETECT_SIDE, model.DETECT_SIDE, 3)
+
+
+def test_detect_finds_bright_faces():
+    frame = synthetic_frame([(16, 16), (80, 80)])
+    (small,) = model.preprocess_fn(frame)
+    prob, bbox = model.detect_fn(small)
+    assert prob.shape == (60, 60)
+    assert bbox.shape == (60, 60, 4)
+    # Face regions (frame coords /2 - conv offset) light up...
+    assert float(prob[8:14, 8:14].max()) > 0.9
+    assert float(prob[40:46, 40:46].max()) > 0.9
+    # ...and empty regions stay dark.
+    assert float(prob[25:35, 25:35].mean()) < 0.05
+
+
+def test_detect_empty_frame_is_quiet():
+    (small,) = model.preprocess_fn(synthetic_frame([]))
+    prob, _ = model.detect_fn(small)
+    assert float(prob.max()) < 0.05
+
+
+def test_embedding_is_unit_norm_and_deterministic():
+    rng = np.random.default_rng(5)
+    thumb = jnp.asarray(rng.random((32, 32, 3)), jnp.float32)
+    (e1,) = model.embed_fn(thumb)
+    (e2,) = model.embed_fn(thumb)
+    assert e1.shape == (model.EMBED_DIM,)
+    np.testing.assert_allclose(e1, e2)
+    assert abs(float(jnp.linalg.norm(e1)) - 1.0) < 1e-4
+
+
+def test_distinct_thumbs_get_distinct_embeddings():
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.random((32, 32, 3)), jnp.float32)
+    b = jnp.asarray(rng.random((32, 32, 3)), jnp.float32)
+    (ea,) = model.embed_fn(a)
+    (eb,) = model.embed_fn(b)
+    assert float(jnp.dot(ea, eb)) < 0.99
+
+
+def test_classify_scores_shape():
+    (emb,) = model.embed_fn(jnp.ones((32, 32, 3)))
+    (scores,) = model.classify_fn(emb)
+    assert scores.shape == (model.GALLERY,)
+
+
+def test_identify_fuses_embed_and_classify():
+    thumb = jnp.ones((32, 32, 3)) * 0.5
+    emb, scores = model.identify_fn(thumb)
+    (emb2,) = model.embed_fn(thumb)
+    (scores2,) = model.classify_fn(emb2)
+    np.testing.assert_allclose(emb, emb2, rtol=1e-6)
+    np.testing.assert_allclose(scores, scores2, rtol=1e-5, atol=1e-5)
+
+
+def test_identify_batch_matches_unbatched():
+    rng = np.random.default_rng(9)
+    thumbs = jnp.asarray(rng.random((model.BATCH, 32, 32, 3)), jnp.float32)
+    embs, scores = model.identify_batch_fn(thumbs)
+    assert embs.shape == (model.BATCH, model.EMBED_DIM)
+    assert scores.shape == (model.BATCH, model.GALLERY)
+    e0, s0 = model.identify_fn(thumbs[0])
+    np.testing.assert_allclose(embs[0], e0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(scores[0], s0, rtol=1e-4, atol=1e-4)

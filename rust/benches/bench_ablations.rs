@@ -1,0 +1,27 @@
+//! Bench: design-knob ablations (timer tuning, replication factor,
+//! storage media) — the DESIGN.md §8 ablation suite.
+use aitax::experiments::ablation;
+use aitax::experiments::common::Fidelity;
+use aitax::util::bench::Bench;
+
+fn main() {
+    let f = Fidelity::from_env();
+    let mut b = Bench::new("ablations");
+    let mut tuning = None;
+    b.run_once("kafka timer tuning sweep (4 runs)", 4.0, || {
+        tuning = Some(ablation::tuning_sweep(f));
+    });
+    ablation::print_tuning(&tuning.unwrap());
+
+    let mut repl = None;
+    b.run_once("replication sweep @6x (3 runs)", 3.0, || {
+        repl = Some(ablation::replication_sweep(6.0, f));
+    });
+    ablation::print_replication(&repl.unwrap(), 6.0);
+
+    let mut media = None;
+    b.run_once("storage media sweep (6 runs)", 6.0, || {
+        media = Some(ablation::storage_media_sweep(f));
+    });
+    ablation::print_storage_media(&media.unwrap());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 5 (FR container core scaling) + time the model.
+use aitax::experiments::fig05;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let r = fig05::run(16);
+    fig05::print(&r);
+    paper_row("ingest/detect latency @2 cores", r.ingest_detect[1].relative_latency, 0.84, "rel");
+    paper_row("identification latency @2 cores", r.identification[1].relative_latency, 0.64, "rel");
+    let mut b = Bench::new("fig05");
+    b.run("core-scaling sweep (16 cores, both containers)", 32.0, || {
+        std::hint::black_box(fig05::run(16));
+    });
+}

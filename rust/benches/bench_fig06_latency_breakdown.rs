@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 6 + §4.2 tails (full paper-scale DES run).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig06;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig06");
+    let fidelity = Fidelity::from_env();
+    let mut out = None;
+    b.run_once("facerec 840p/1680c/3b simulation", 1.0, || {
+        out = Some(fig06::run(fidelity));
+    });
+    let r = out.unwrap();
+    fig06::print(&r);
+    paper_row("ingestion mean (ms)", r.ingest_mean_us / 1e3, 18.8, "ms");
+    paper_row("detection mean (ms)", r.detect_mean_us / 1e3, 74.8, "ms");
+    paper_row("broker wait mean (ms)", r.wait_mean_us / 1e3, 126.1, "ms");
+    paper_row("identification mean (ms)", r.identify_mean_us / 1e3, 131.5, "ms");
+    paper_row("end-to-end mean (ms)", r.e2e_mean_us / 1e3, 351.0, "ms");
+    paper_row("end-to-end p99 (s)", r.e2e_p99_us as f64 / 1e6, 2.21, "s");
+    paper_row("detection p99 (s)", r.detect_p99_us as f64 / 1e6, 1.84, "s");
+    paper_row("ingestion p99 (ms)", r.ingest_p99_us as f64 / 1e3, 27.0, "ms");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig 8 (per-process CPU-time breakdowns).
+use aitax::experiments::fig08;
+use aitax::util::bench::paper_row;
+
+fn main() {
+    let stages = fig08::run();
+    fig08::print(&stages);
+    paper_row("detection AI share", stages[1].ai_fraction, 0.42, "frac");
+    paper_row("identification AI share", stages[2].ai_fraction, 0.88, "frac");
+    paper_row("end-to-end AI share", fig08::end_to_end_ai_share(), 0.552, "frac");
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 9 (Amdahl projections).
+use aitax::accel::amdahl::stage_speedup;
+use aitax::experiments::fig09;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let r = fig09::run();
+    fig09::print(&r);
+    paper_row("detection speedup @8x", stage_speedup(0.42, 8.0), 1.59, "x");
+    paper_row("detection speedup @16x", stage_speedup(0.42, 16.0), 1.66, "x");
+    paper_row("identification speedup @16x", stage_speedup(0.88, 16.0), 5.6, "x");
+    paper_row("identification speedup @32x", stage_speedup(0.88, 32.0), 6.6, "x");
+    let mut b = Bench::new("fig09");
+    b.run("amdahl full sweep", 21.0, || {
+        std::hint::black_box(fig09::run());
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig 10 + §5.5 (acceleration sweep, 8x instability).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig10;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig10");
+    let mut out = None;
+    b.run_once("facerec accel sweep 1..8x (5 DES runs)", 5.0, || {
+        out = Some(fig10::run(Fidelity::from_env()));
+    });
+    let r = out.unwrap();
+    fig10::print(&r);
+    // §5.5 wait-share trend.
+    let paper_shares = [64.6, 66.4, 68.0, 79.1];
+    for (rep, paper) in r.reports.iter().zip(paper_shares) {
+        paper_row(
+            &format!("wait share @{}x (%)", rep.accel),
+            100.0 * rep.wait_fraction,
+            paper,
+            "%",
+        );
+    }
+    println!(
+        "\n  8x unstable: measured {} | paper: yes (latency -> infinity)",
+        !r.reports[4].verdict.stable
+    );
+}

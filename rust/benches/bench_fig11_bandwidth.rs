@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 11 (network vs storage bandwidth under accel).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig11;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig11");
+    let mut out = None;
+    b.run_once("facerec bandwidth sweep 1..8x", 5.0, || {
+        out = Some(fig11::run(Fidelity::from_env()));
+    });
+    let r = out.unwrap();
+    fig11::print(&r);
+    paper_row("storage write util @1x (%)", 100.0 * r.reports[0].storage_write_util, 10.0, "%");
+    paper_row("storage write util @8x (%)", 100.0 * r.reports[4].storage_write_util, 67.0, "%");
+    paper_row("broker net rx util @8x (%)", 100.0 * r.reports[4].broker_net_rx_util, 6.0, "%");
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig 12 (Object Detection near-linear core scaling).
+use aitax::experiments::fig12;
+use aitax::util::bench::paper_row;
+
+fn main() {
+    let r = fig12::run(14);
+    fig12::print(&r);
+    paper_row("speedup @14 cores", r.detection[13].speedup, 12.0, "x");
+    println!("  (paper shows 'very good efficiency'; 14 cores per container chosen)");
+}

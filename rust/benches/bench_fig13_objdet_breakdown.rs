@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig 13 (Object Detection latency breakdown).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig13;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig13");
+    let mut out = None;
+    b.run_once("objdet 21p/2016c/3b simulation", 1.0, || {
+        out = Some(fig13::run(Fidelity::from_env()));
+    });
+    let r = out.unwrap();
+    fig13::print(&r);
+    paper_row("ingestion mean (ms)", r.ingest_mean_us / 1e3, 4.5, "ms");
+    paper_row("broker wait mean (ms)", r.wait_mean_us / 1e3, 629.0, "ms");
+    paper_row("detection mean (ms)", r.detect_mean_us / 1e3, 687.0, "ms");
+    paper_row("throughput (FPS)", r.throughput_fps, 630.0, "fps");
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig 14 (Object Detection under acceleration).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig14;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig14");
+    let mut out = None;
+    b.run_once("objdet accel sweep 1..16x (6 DES runs)", 6.0, || {
+        out = Some(fig14::run(Fidelity::from_env()));
+    });
+    let r = out.unwrap();
+    fig14::print(&r);
+    paper_row("throughput @1x (FPS)", r.reports[0].throughput_fps, 630.0, "fps");
+    paper_row("throughput @8x (FPS)", r.reports[3].throughput_fps, 8.0 * 630.0, "fps");
+    println!(
+        "  16x saturated: measured {} | paper: yes",
+        !r.reports[5].verdict.stable || r.reports[5].throughput_fps < 0.8 * 16.0 * 630.0
+    );
+}

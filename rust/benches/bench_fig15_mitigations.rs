@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 15 (drives / brokers / thumbnail mitigations).
+//! This is the heaviest sweep (~60 DES runs); AITAX_QUICK=1 shortens it.
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::fig15;
+use aitax::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig15");
+    let mut out = None;
+    b.run_once("mitigation grid (12 variants x 5 factors)", 60.0, || {
+        out = Some(fig15::run(Fidelity::from_env()));
+    });
+    let r = out.unwrap();
+    fig15::print(&r);
+    println!("\n  unlock summary (ours vs paper):");
+    let paper_drives = ["<8x", "12x", "24x", "32x"];
+    for (v, p) in r.drives.iter().zip(paper_drives) {
+        println!(
+            "    {:<22} {:>6} (paper {})",
+            v.label,
+            v.unlocked.map(|k| format!("{k}x")).unwrap_or("<8x".into()),
+            p
+        );
+    }
+    let paper_brokers = ["<8x", "8x", "16x", "32x"];
+    for (v, p) in r.brokers.iter().zip(paper_brokers) {
+        println!(
+            "    {:<22} {:>6} (paper {})",
+            v.label,
+            v.unlocked.map(|k| format!("{k}x")).unwrap_or("<8x".into()),
+            p
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Hot-path microbenchmarks — the §Perf numbers for Layer 3.
+//!
+//! Targets (EXPERIMENTS.md §Perf): the DES must sustain >=1M events/s so
+//! paper-scale sweeps run in seconds; the broker append path must push
+//! >=1 GB/s in memory (i.e. the *modeled* 1.1 GB/s device, not our code,
+//! is the bottleneck — the paper's own L3 claim); record framing and the
+//! RNG must be nanosecond-scale.
+
+use aitax::broker::controller::Controller;
+use aitax::broker::record::{Record, RecordBatch};
+use aitax::broker::topic::TopicPartition;
+use aitax::config::{Config, Deployment};
+use aitax::pipeline::facerec::FaceRecSim;
+use aitax::sim::engine::EventQueue;
+use aitax::sim::resource::FifoServer;
+use aitax::storage::backend::MemBackend;
+use aitax::util::bench::Bench;
+use aitax::util::rng::Rng;
+use aitax::util::stats::Histogram;
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+
+    // --- DES event queue throughput ---
+    b.run("event queue push+pop (batch of 1024)", 1024.0, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = Rng::new(1);
+        for i in 0..1024u64 {
+            q.at(rng.below(1 << 20), i);
+        }
+        while let Some(x) = q.pop() {
+            std::hint::black_box(x);
+        }
+    });
+
+    // --- whole-simulation events/second ---
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::facerec_accel();
+    cfg.duration_us = 10 * 1_000_000;
+    cfg.accel = 4.0;
+    let sim_events = {
+        // Count events via one instrumented run: faces ~ producers*fps*dur.
+        let r = FaceRecSim::new(cfg.clone()).run();
+        // ~12 events per face through the fabric + frame + polls.
+        (r.faces_produced * 12 + r.frames_ingested) as f64
+    };
+    b.run_once("facerec DES 10s @4x (300p/455c)", sim_events, || {
+        std::hint::black_box(FaceRecSim::new(cfg.clone()).run());
+    });
+
+    // --- broker append path (records/s, bytes/s) ---
+    let payload = vec![0u8; 37_300];
+    let mut ctl = Controller::new(64 << 20);
+    for i in 0..3 {
+        ctl.add_broker(i, Box::new(MemBackend::new()));
+    }
+    ctl.create_topic("faces", 64, 3).unwrap();
+    let mut key = 0u64;
+    b.run("broker produce 37.3kB, acks=all x3 (bytes)", 3.0 * 37_300.0, || {
+        let mut batch = RecordBatch::new();
+        batch.push(Record::new(key, key, payload.clone()));
+        key += 1;
+        let tp = TopicPartition::new("faces", (key % 64) as u32);
+        ctl.produce(&tp, &batch).unwrap();
+    });
+
+    // --- record framing ---
+    let mut batch = RecordBatch::new();
+    for i in 0..8 {
+        batch.push(Record::new(i, i, vec![0u8; 37_300]));
+    }
+    let wire = batch.encode();
+    b.run("batch encode (8x37.3kB)", 8.0, || {
+        std::hint::black_box(batch.encode());
+    });
+    b.run("batch decode (8x37.3kB)", 8.0, || {
+        std::hint::black_box(RecordBatch::decode(&wire).unwrap());
+    });
+
+    // --- primitives ---
+    let mut rng = Rng::new(7);
+    b.run("rng lognormal sample", 1.0, || {
+        std::hint::black_box(rng.lognormal_mean_cv(131_500.0, 0.5));
+    });
+    let mut server = FifoServer::new(1.1e9, 18);
+    let mut t = 0u64;
+    b.run("FifoServer submit", 1.0, || {
+        t += 10;
+        std::hint::black_box(server.submit(t, 37_300.0));
+    });
+    let mut hist = Histogram::new();
+    let mut x = 1u64;
+    b.run("histogram record", 1.0, || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        hist.record((x >> 40).max(1));
+    });
+}

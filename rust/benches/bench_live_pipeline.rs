@@ -1,0 +1,57 @@
+//! Bench: the live three-layer pipeline (real PJRT inference through the
+//! real broker substrate) — end-to-end FPS and per-stage inference times.
+use aitax::coordinator::live::{LiveConfig, LiveRunner};
+use aitax::pipeline::frame::Frame;
+use aitax::runtime::engine::{Engine, FacePipeline};
+use aitax::runtime::manifest::Manifest;
+use aitax::runtime::tensor::Tensor;
+use aitax::util::bench::Bench;
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("bench_live_pipeline: artifacts missing; run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("live");
+
+    // Per-stage inference microbenches.
+    let engine = Engine::load_default().expect("engine");
+    let pipe = FacePipeline::new(engine);
+    let f = Frame::synthetic(0, 0, 0, 128, &[(24, 24), (80, 80)]);
+    let frame = Tensor::new(vec![128, 128, 3], f.pixels);
+    let image = pipe.preprocess(&frame).unwrap();
+    let dets = pipe.detect(&image).unwrap();
+    let thumb = pipe.crop_thumb(&image, &dets[0]);
+    b.run("preprocess (128^2 -> 64^2)", 1.0, || {
+        std::hint::black_box(pipe.preprocess(&frame).unwrap());
+    });
+    b.run("detect (64^2, P-Net-style)", 1.0, || {
+        std::hint::black_box(pipe.engine.run("detect", std::slice::from_ref(&image)).unwrap());
+    });
+    b.run("identify (32^2 thumb)", 1.0, || {
+        std::hint::black_box(pipe.identify(&thumb).unwrap());
+    });
+    let thumbs: Vec<Tensor> = (0..8).map(|_| thumb.clone()).collect();
+    b.run("identify_batch (8 thumbs)", 8.0, || {
+        std::hint::black_box(pipe.identify_batch(&thumbs).unwrap());
+    });
+
+    // End-to-end live run.
+    for (label, batched) in [("unbatched", false), ("batched", true)] {
+        let cfg = LiveConfig {
+            producers: 2,
+            consumers: 4,
+            partitions: 8,
+            duration: std::time::Duration::from_secs(8),
+            batched_identify: batched,
+            ..LiveConfig::default()
+        };
+        let report = LiveRunner::new(cfg).run().expect("live run");
+        println!(
+            "  live e2e ({label:>9}): {:>6.1} FPS, {} faces identified, e2e mean {:.1} ms",
+            report.throughput_fps,
+            report.faces_identified,
+            report.breakdown.e2e_mean_us / 1e3,
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Tables 3 & 4 + the §7.3 TCO comparison.
+use aitax::experiments::table34;
+use aitax::util::bench::{paper_row, Bench};
+
+fn main() {
+    let r = table34::run();
+    table34::print(&r);
+    paper_row("Table 3 equipment ($M)", r.homogeneous.equipment_cost() / 1e6, 33.577760, "$M");
+    paper_row("Table 4 equipment ($M)", r.purpose_built.equipment_cost() / 1e6, 27.878431, "$M");
+    paper_row("homogeneous yearly TCO ($M)", r.homo_tco.yearly_total / 1e6, 12.9, "$M");
+    paper_row("purpose-built yearly TCO ($M)", r.pb_tco.yearly_total / 1e6, 10.8, "$M");
+    paper_row("savings (%)", 100.0 * r.savings, 16.6, "%");
+    let mut b = Bench::new("tco");
+    b.run("design + price both data centers", 2.0, || {
+        std::hint::black_box(table34::run());
+    });
+}

@@ -1,0 +1,114 @@
+//! Amdahl's-law projections for AI acceleration (§5.1, Fig 9).
+//!
+//! "Amdahl's law dictates that the overall speedup of a system is limited
+//! by the portion of execution that is not accelerated." Each stage has an
+//! AI fraction (Fig 8); accelerating only that share gives
+//! `speedup(k) = 1 / ((1 - f) + f/k)` with asymptote `1/(1 - f)`.
+
+/// Overall stage speedup when its AI share `ai_frac` is accelerated `k`×.
+pub fn stage_speedup(ai_frac: f64, k: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&ai_frac));
+    assert!(k >= 1.0);
+    1.0 / ((1.0 - ai_frac) + ai_frac / k)
+}
+
+/// A named Amdahl curve for one pipeline stage.
+#[derive(Clone, Debug)]
+pub struct AmdahlCurve {
+    pub stage: &'static str,
+    pub ai_frac: f64,
+}
+
+impl AmdahlCurve {
+    /// The paper's three Face Recognition processes (Fig 9).
+    pub fn facerec() -> Vec<AmdahlCurve> {
+        vec![
+            AmdahlCurve {
+                stage: "ingestion",
+                ai_frac: 0.0,
+            },
+            AmdahlCurve {
+                stage: "detection",
+                ai_frac: 0.42,
+            },
+            AmdahlCurve {
+                stage: "identification",
+                ai_frac: 0.88,
+            },
+        ]
+    }
+
+    pub fn speedup(&self, k: f64) -> f64 {
+        stage_speedup(self.ai_frac, k)
+    }
+
+    /// Asymptotic speedup as k → ∞.
+    pub fn asymptote(&self) -> f64 {
+        if self.ai_frac >= 1.0 {
+            f64::INFINITY
+        } else {
+            1.0 / (1.0 - self.ai_frac)
+        }
+    }
+
+    /// Sweep over acceleration factors.
+    pub fn sweep(&self, factors: &[f64]) -> Vec<(f64, f64)> {
+        factors.iter().map(|&k| (k, self.speedup(k))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_quoted_values() {
+        // "Detection ... rapidly approaches its asymptotic speedup of just
+        //  1.74x, achieving 1.59x at 8x and 1.66x at 16x. Identification,
+        //  at 88% AI, has an asymptotic limit of just 8.3x. At 16x it
+        //  achieves 5.6x, and even at 32x it shows just 6.6x."
+        // Tolerances cover the paper's rounding of the 42%/88% AI shares.
+        assert!((stage_speedup(0.42, 8.0) - 1.59).abs() < 0.02);
+        assert!((stage_speedup(0.42, 16.0) - 1.66).abs() < 0.02);
+        assert!((stage_speedup(0.88, 16.0) - 5.6).abs() < 0.2);
+        assert!((stage_speedup(0.88, 32.0) - 6.6).abs() < 0.2);
+        let curves = AmdahlCurve::facerec();
+        assert!((curves[1].asymptote() - 1.724).abs() < 0.01);
+        assert!((curves[2].asymptote() - 8.33).abs() < 0.01);
+    }
+
+    #[test]
+    fn ingestion_gains_nothing() {
+        let c = &AmdahlCurve::facerec()[0];
+        for k in [2.0, 8.0, 32.0] {
+            assert_eq!(c.speedup(k), 1.0);
+        }
+        assert_eq!(c.asymptote(), 1.0);
+    }
+
+    #[test]
+    fn speedup_monotone_in_k() {
+        let c = AmdahlCurve {
+            stage: "x",
+            ai_frac: 0.6,
+        };
+        let sweep = c.sweep(&[1.0, 2.0, 4.0, 8.0, 16.0, 32.0]);
+        for w in sweep.windows(2) {
+            assert!(w[1].1 > w[0].1);
+            assert!(w[1].1 < c.asymptote());
+        }
+    }
+
+    #[test]
+    fn full_ai_stage_unbounded() {
+        assert_eq!(
+            AmdahlCurve {
+                stage: "pure",
+                ai_frac: 1.0
+            }
+            .asymptote(),
+            f64::INFINITY
+        );
+        assert!((stage_speedup(1.0, 32.0) - 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Acceleration analysis (§5).
+//!
+//! * [`amdahl`] — the §5.1 analytical model: per-stage speedup limits under
+//!   AI-share-only acceleration (Fig 9).
+//! * The emulation protocol itself (§5.2) lives in
+//!   [`crate::pipeline::stage::StageModel`]; this module adds the
+//!   system-level sweep helpers used by the Fig-10/14/15 benches.
+
+pub mod amdahl;
+
+pub use amdahl::{stage_speedup, AmdahlCurve};

@@ -1,0 +1,249 @@
+//! Consumer client with Kafka fetch semantics.
+//!
+//! §5.5: "when a consumer requests available messages from a broker, the
+//! broker can withhold messages until there exists some minimum amount of
+//! data" (`fetch.min.bytes`), bounded by a timeout (`fetch.max.wait`).
+//! Both behaviors contribute to broker waiting time and both are
+//! implemented here, time-driven so the same code runs live and simulated.
+
+use anyhow::Result;
+
+use crate::broker::controller::Controller;
+use crate::broker::record::Record;
+use crate::broker::topic::TopicPartition;
+use crate::config::KafkaTuning;
+
+/// Outcome of one fetch poll.
+#[derive(Debug)]
+pub enum FetchResult {
+    /// Records delivered (flattened across batches, in order).
+    Records(Vec<Record>),
+    /// Not enough data yet; caller should retry at/after the given time
+    /// (when fetch.max.wait would force a response).
+    WaitUntil(u64),
+}
+
+/// A consumer pinned to a set of partitions (assigned by the group
+/// coordinator; at most one consumer per partition).
+pub struct Consumer {
+    assignment: Vec<TopicPartition>,
+    /// Next offset to fetch, per partition.
+    positions: std::collections::HashMap<TopicPartition, u64>,
+    tuning: KafkaTuning,
+    /// Time at which the current min-bytes wait started, per partition.
+    wait_started: std::collections::HashMap<TopicPartition, u64>,
+    pub records_consumed: u64,
+    pub fetch_requests: u64,
+}
+
+impl Consumer {
+    pub fn new(tuning: KafkaTuning) -> Self {
+        Consumer {
+            assignment: Vec::new(),
+            positions: Default::default(),
+            tuning,
+            wait_started: Default::default(),
+            records_consumed: 0,
+            fetch_requests: 0,
+        }
+    }
+
+    /// Replace the assignment (rebalance). Positions of retained
+    /// partitions survive; new partitions start at offset 0.
+    pub fn assign(&mut self, partitions: Vec<TopicPartition>) {
+        for tp in &partitions {
+            self.positions.entry(tp.clone()).or_insert(0);
+        }
+        self.positions.retain(|tp, _| partitions.contains(tp));
+        self.wait_started.retain(|tp, _| partitions.contains(tp));
+        self.assignment = partitions;
+    }
+
+    pub fn assignment(&self) -> &[TopicPartition] {
+        &self.assignment
+    }
+
+    pub fn position(&self, tp: &TopicPartition) -> u64 {
+        self.positions.get(tp).copied().unwrap_or(0)
+    }
+
+    /// Poll one partition honoring fetch.min.bytes / fetch.max.wait.
+    pub fn poll_partition(
+        &mut self,
+        controller: &mut Controller,
+        tp: &TopicPartition,
+        now: u64,
+    ) -> Result<FetchResult> {
+        let offset = self.position(tp);
+        let available = controller.fetchable_bytes(tp, offset);
+        let started = *self.wait_started.entry(tp.clone()).or_insert(now);
+        let deadline = started + self.tuning.fetch_max_wait_us;
+        if (available as usize) < self.tuning.fetch_min_bytes && now < deadline {
+            // Broker withholds the response.
+            return Ok(FetchResult::WaitUntil(deadline));
+        }
+        self.fetch_requests += 1;
+        self.wait_started.remove(tp);
+        if available == 0 {
+            // Timed out with nothing: empty response, restart the wait.
+            return Ok(FetchResult::Records(Vec::new()));
+        }
+        let (batches, next) = controller.fetch(tp, offset, self.tuning.batch_max_bytes)?;
+        self.positions.insert(tp.clone(), next);
+        let records: Vec<Record> = batches.into_iter().flat_map(|b| b.records).collect();
+        self.records_consumed += records.len() as u64;
+        Ok(FetchResult::Records(records))
+    }
+
+    /// Poll all assigned partitions; returns delivered records and, if
+    /// everything is waiting, the earliest retry time.
+    pub fn poll(&mut self, controller: &mut Controller, now: u64) -> Result<(Vec<Record>, Option<u64>)> {
+        let mut all = Vec::new();
+        let mut earliest: Option<u64> = None;
+        let assignment = self.assignment.clone();
+        for tp in &assignment {
+            match self.poll_partition(controller, tp, now)? {
+                FetchResult::Records(mut rs) => all.append(&mut rs),
+                FetchResult::WaitUntil(t) => {
+                    earliest = Some(earliest.map_or(t, |e: u64| e.min(t)));
+                }
+            }
+        }
+        let wait = if all.is_empty() { earliest } else { None };
+        Ok((all, wait))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::record::RecordBatch;
+    use crate::storage::backend::MemBackend;
+
+    fn setup(partitions: u32) -> Controller {
+        let mut c = Controller::new(1 << 20);
+        for b in 0..3 {
+            c.add_broker(b, Box::new(MemBackend::new()));
+        }
+        c.create_topic("faces", partitions, 3).unwrap();
+        c
+    }
+
+    fn produce(c: &mut Controller, partition: u32, key: u64, bytes: usize) {
+        let mut b = RecordBatch::new();
+        b.push(Record::new(key, key, vec![0u8; bytes]));
+        c.produce(&TopicPartition::new("faces", partition), &b).unwrap();
+    }
+
+    fn tuning(min_bytes: usize, max_wait: u64) -> KafkaTuning {
+        KafkaTuning {
+            fetch_min_bytes: min_bytes,
+            fetch_max_wait_us: max_wait,
+            ..KafkaTuning::default()
+        }
+    }
+
+    #[test]
+    fn immediate_fetch_with_min_one() {
+        let mut c = setup(1);
+        produce(&mut c, 0, 7, 100);
+        let mut consumer = Consumer::new(tuning(1, 10_000));
+        consumer.assign(vec![TopicPartition::new("faces", 0)]);
+        let (records, wait) = consumer.poll(&mut c, 0).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].key, 7);
+        assert!(wait.is_none());
+    }
+
+    #[test]
+    fn min_bytes_withholds_until_enough() {
+        let mut c = setup(1);
+        produce(&mut c, 0, 1, 100);
+        let mut consumer = Consumer::new(tuning(1000, 50_000));
+        consumer.assign(vec![TopicPartition::new("faces", 0)]);
+        // 100 bytes < 1000 min: withheld.
+        let (records, wait) = consumer.poll(&mut c, 0).unwrap();
+        assert!(records.is_empty());
+        assert_eq!(wait, Some(50_000));
+        // More data arrives -> released immediately.
+        produce(&mut c, 0, 2, 2000);
+        let (records, _) = consumer.poll(&mut c, 1_000).unwrap();
+        assert_eq!(records.len(), 2);
+    }
+
+    #[test]
+    fn max_wait_forces_release() {
+        let mut c = setup(1);
+        produce(&mut c, 0, 1, 100);
+        let mut consumer = Consumer::new(tuning(1_000_000, 30_000));
+        consumer.assign(vec![TopicPartition::new("faces", 0)]);
+        assert!(matches!(
+            consumer.poll_partition(&mut c, &TopicPartition::new("faces", 0), 0).unwrap(),
+            FetchResult::WaitUntil(30_000)
+        ));
+        // At the deadline the broker answers with whatever it has.
+        match consumer
+            .poll_partition(&mut c, &TopicPartition::new("faces", 0), 30_000)
+            .unwrap()
+        {
+            FetchResult::Records(rs) => assert_eq!(rs.len(), 1),
+            other => panic!("expected records, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn position_advances_no_redelivery() {
+        let mut c = setup(1);
+        produce(&mut c, 0, 1, 10);
+        produce(&mut c, 0, 2, 10);
+        let mut consumer = Consumer::new(tuning(1, 1000));
+        let tp = TopicPartition::new("faces", 0);
+        consumer.assign(vec![tp.clone()]);
+        let (r1, _) = consumer.poll(&mut c, 0).unwrap();
+        assert_eq!(r1.len(), 2);
+        assert_eq!(consumer.position(&tp), 2);
+        produce(&mut c, 0, 3, 10);
+        let (r2, _) = consumer.poll(&mut c, 10).unwrap();
+        assert_eq!(r2.len(), 1);
+        assert_eq!(r2[0].key, 3);
+    }
+
+    #[test]
+    fn rebalance_preserves_position() {
+        let mut c = setup(2);
+        produce(&mut c, 0, 1, 10);
+        let mut consumer = Consumer::new(tuning(1, 1000));
+        let tp0 = TopicPartition::new("faces", 0);
+        let tp1 = TopicPartition::new("faces", 1);
+        consumer.assign(vec![tp0.clone()]);
+        consumer.poll(&mut c, 0).unwrap();
+        assert_eq!(consumer.position(&tp0), 1);
+        // Rebalance adds tp1, keeps tp0: position survives.
+        consumer.assign(vec![tp0.clone(), tp1.clone()]);
+        assert_eq!(consumer.position(&tp0), 1);
+        assert_eq!(consumer.position(&tp1), 0);
+        // Rebalance away tp0 then back: position resets (group would
+        // normally restore from committed offsets; we start at 0).
+        consumer.assign(vec![tp1.clone()]);
+        consumer.assign(vec![tp0.clone(), tp1]);
+        assert_eq!(consumer.position(&tp0), 0);
+    }
+
+    #[test]
+    fn multi_partition_poll_merges() {
+        let mut c = setup(3);
+        produce(&mut c, 0, 10, 10);
+        produce(&mut c, 2, 30, 10);
+        let mut consumer = Consumer::new(tuning(1, 1000));
+        consumer.assign(vec![
+            TopicPartition::new("faces", 0),
+            TopicPartition::new("faces", 1),
+            TopicPartition::new("faces", 2),
+        ]);
+        let (records, wait) = consumer.poll(&mut c, 0).unwrap();
+        let mut keys: Vec<u64> = records.iter().map(|r| r.key).collect();
+        keys.sort();
+        assert_eq!(keys, vec![10, 30]);
+        assert!(wait.is_none(), "got data so no wait hint");
+    }
+}

@@ -1,0 +1,207 @@
+//! Consumer-group coordination: membership and partition assignment.
+//!
+//! §3.4: "partitions may have a maximum of one consumer. Thus an
+//! application should divide a topic into at least as many partitions as
+//! there are consumers in order to maximize parallelism." The group
+//! coordinator enforces exactly that: it assigns every partition to at
+//! most one member (range assignment, Kafka's default), and rebalances on
+//! membership changes, bumping a generation counter so stale members can
+//! be fenced.
+
+use std::collections::BTreeMap;
+
+use crate::broker::topic::TopicPartition;
+
+/// Coordinates one consumer group over one topic.
+pub struct GroupCoordinator {
+    topic: String,
+    partitions: u32,
+    /// Member id -> assigned partitions. BTreeMap for deterministic
+    /// assignment order.
+    members: BTreeMap<u64, Vec<TopicPartition>>,
+    generation: u64,
+    pub rebalances: u64,
+}
+
+impl GroupCoordinator {
+    pub fn new(topic: impl Into<String>, partitions: u32) -> Self {
+        GroupCoordinator {
+            topic: topic.into(),
+            partitions,
+            members: BTreeMap::new(),
+            generation: 0,
+            rebalances: 0,
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Add a member and rebalance. Returns the new generation.
+    pub fn join(&mut self, member: u64) -> u64 {
+        self.members.entry(member).or_default();
+        self.rebalance();
+        self.generation
+    }
+
+    /// Remove a member (consumer crash / shutdown) and rebalance.
+    pub fn leave(&mut self, member: u64) -> u64 {
+        if self.members.remove(&member).is_some() {
+            self.rebalance();
+        }
+        self.generation
+    }
+
+    /// Current assignment for a member.
+    pub fn assignment(&self, member: u64) -> &[TopicPartition] {
+        self.members
+            .get(&member)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Range assignment: sort partitions and members, then hand out
+    /// contiguous ranges, earlier members receiving the remainder.
+    fn rebalance(&mut self) {
+        self.generation += 1;
+        self.rebalances += 1;
+        let n = self.members.len();
+        if n == 0 {
+            return;
+        }
+        let per = self.partitions as usize / n;
+        let extra = self.partitions as usize % n;
+        let mut next = 0u32;
+        for (i, (_, assigned)) in self.members.iter_mut().enumerate() {
+            let take = per + usize::from(i < extra);
+            assigned.clear();
+            for _ in 0..take {
+                assigned.push(TopicPartition::new(self.topic.clone(), next));
+                next += 1;
+            }
+        }
+        debug_assert_eq!(next, self.partitions);
+    }
+
+    /// Invariant: every partition is assigned to exactly one member (when
+    /// the group is non-empty).
+    pub fn assignment_is_valid(&self) -> bool {
+        if self.members.is_empty() {
+            return true;
+        }
+        let mut seen = vec![false; self.partitions as usize];
+        for parts in self.members.values() {
+            for tp in parts {
+                if tp.topic != self.topic || tp.partition >= self.partitions {
+                    return false;
+                }
+                if seen[tp.partition as usize] {
+                    return false; // double-assigned
+                }
+                seen[tp.partition as usize] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_member_owns_everything() {
+        let mut g = GroupCoordinator::new("faces", 6);
+        g.join(1);
+        assert_eq!(g.assignment(1).len(), 6);
+        assert!(g.assignment_is_valid());
+    }
+
+    #[test]
+    fn even_split() {
+        let mut g = GroupCoordinator::new("faces", 6);
+        g.join(1);
+        g.join(2);
+        g.join(3);
+        for m in [1, 2, 3] {
+            assert_eq!(g.assignment(m).len(), 2);
+        }
+        assert!(g.assignment_is_valid());
+    }
+
+    #[test]
+    fn remainder_goes_to_early_members() {
+        let mut g = GroupCoordinator::new("faces", 7);
+        g.join(1);
+        g.join(2);
+        g.join(3);
+        let sizes: Vec<usize> = [1, 2, 3].iter().map(|&m| g.assignment(m).len()).collect();
+        assert_eq!(sizes, vec![3, 2, 2]);
+        assert!(g.assignment_is_valid());
+    }
+
+    #[test]
+    fn leave_triggers_rebalance() {
+        let mut g = GroupCoordinator::new("faces", 4);
+        g.join(1);
+        g.join(2);
+        let gen_before = g.generation();
+        g.leave(1);
+        assert!(g.generation() > gen_before);
+        assert_eq!(g.assignment(2).len(), 4);
+        assert_eq!(g.assignment(1).len(), 0);
+        assert!(g.assignment_is_valid());
+    }
+
+    #[test]
+    fn more_members_than_partitions() {
+        let mut g = GroupCoordinator::new("faces", 2);
+        for m in 1..=4 {
+            g.join(m);
+        }
+        let total: usize = (1..=4).map(|m| g.assignment(m).len()).sum();
+        assert_eq!(total, 2, "only 2 partitions to hand out");
+        assert!(g.assignment_is_valid());
+    }
+
+    #[test]
+    fn generation_fences_each_change() {
+        let mut g = GroupCoordinator::new("faces", 4);
+        let g1 = g.join(1);
+        let g2 = g.join(2);
+        let g3 = g.leave(2);
+        assert!(g1 < g2 && g2 < g3);
+    }
+
+    #[test]
+    fn assignment_valid_property() {
+        crate::util::prop::check(200, |rng| {
+            let partitions = 1 + rng.below(64) as u32;
+            let mut g = GroupCoordinator::new("t", partitions);
+            let mut members: Vec<u64> = Vec::new();
+            for _ in 0..rng.below(30) {
+                if members.is_empty() || rng.chance(0.6) {
+                    let m = rng.next_u64();
+                    members.push(m);
+                    g.join(m);
+                } else {
+                    let i = rng.below(members.len() as u64) as usize;
+                    g.leave(members.swap_remove(i));
+                }
+                if !g.assignment_is_valid() {
+                    return Err(format!(
+                        "invalid assignment at {} members, {} partitions",
+                        g.member_count(),
+                        partitions
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

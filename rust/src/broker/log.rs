@@ -1,0 +1,300 @@
+//! Partition log: an append-only sequence of record batches stored in
+//! rolling segments ("partitions—open file handles", §3.4).
+//!
+//! Each append assigns consecutive *offsets* to the batch's records and
+//! writes the framed batch to the active segment through a
+//! [`StorageBackend`]. An in-memory index maps offsets to (segment,
+//! position, length) so fetches are O(log n) lookups plus one backend read.
+
+use anyhow::Result;
+
+use crate::broker::record::RecordBatch;
+use crate::storage::backend::StorageBackend;
+
+/// Index entry for one appended batch.
+#[derive(Clone, Debug)]
+struct BatchIndex {
+    base_offset: u64,
+    count: u64,
+    segment: u32,
+    position: u64,
+    length: u32,
+}
+
+/// An append-only partition log over a storage backend.
+pub struct PartitionLog {
+    /// Used to namespace segment files in the backend.
+    name: String,
+    /// Roll to a new segment after this many bytes (Kafka default 1 GiB;
+    /// we default lower so tests exercise rolling).
+    segment_bytes: u64,
+    index: Vec<BatchIndex>,
+    active_segment: u32,
+    active_size: u64,
+    next_offset: u64,
+    bytes_appended: u64,
+}
+
+impl PartitionLog {
+    pub fn new(name: impl Into<String>, segment_bytes: u64) -> Self {
+        PartitionLog {
+            name: name.into(),
+            segment_bytes: segment_bytes.max(1),
+            index: Vec::new(),
+            active_segment: 0,
+            active_size: 0,
+            next_offset: 0,
+            bytes_appended: 0,
+        }
+    }
+
+    fn segment_file(&self, segment: u32) -> String {
+        format!("{}.seg{:06}", self.name, segment)
+    }
+
+    /// Next offset to be assigned (== log end offset).
+    pub fn end_offset(&self) -> u64 {
+        self.next_offset
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes_appended
+    }
+
+    pub fn segments(&self) -> u32 {
+        self.active_segment + 1
+    }
+
+    /// Append a batch; returns the base offset assigned to its first
+    /// record. Empty batches are rejected (they would create unfetchable
+    /// index entries).
+    pub fn append(&mut self, backend: &mut dyn StorageBackend, batch: &RecordBatch) -> Result<u64> {
+        anyhow::ensure!(!batch.is_empty(), "refusing to append an empty batch");
+        let wire = batch.encode();
+        self.append_encoded(backend, &wire, batch.len() as u64)
+    }
+
+    /// Append pre-encoded wire bytes (§Perf: replication appends the same
+    /// framed batch to every ISR member; encoding once at the leader and
+    /// sharing the bytes mirrors Kafka's zero-re-serialization design and
+    /// removes two of the three encodes from the produce hot path).
+    pub fn append_encoded(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        wire: &[u8],
+        count: u64,
+    ) -> Result<u64> {
+        anyhow::ensure!(count > 0, "refusing to append an empty batch");
+        if self.active_size + wire.len() as u64 > self.segment_bytes && self.active_size > 0 {
+            self.active_segment += 1;
+            self.active_size = 0;
+        }
+        let file = self.segment_file(self.active_segment);
+        let position = backend.append(&file, wire)?;
+        let base_offset = self.next_offset;
+        self.index.push(BatchIndex {
+            base_offset,
+            count,
+            segment: self.active_segment,
+            position,
+            length: wire.len() as u32,
+        });
+        self.next_offset += count;
+        self.active_size += wire.len() as u64;
+        self.bytes_appended += wire.len() as u64;
+        Ok(base_offset)
+    }
+
+    /// Read batches starting at `offset`, up to `max_bytes` of wire data.
+    /// Returns the decoded batches and the next offset to fetch from.
+    /// Always returns at least one batch if any data exists at or after
+    /// `offset` (Kafka semantics: max_bytes is a soft limit so a large
+    /// record can still be consumed).
+    pub fn read(
+        &self,
+        backend: &mut dyn StorageBackend,
+        offset: u64,
+        max_bytes: usize,
+    ) -> Result<(Vec<RecordBatch>, u64)> {
+        let mut batches = Vec::new();
+        let mut next = offset;
+        let mut budget = max_bytes.min(i64::MAX as usize) as i64;
+        // Binary search for the first batch containing `offset`.
+        let start = self
+            .index
+            .partition_point(|b| b.base_offset + b.count <= offset);
+        for entry in &self.index[start..] {
+            if !batches.is_empty() && budget <= 0 {
+                break;
+            }
+            let wire = backend.read(
+                &self.segment_file(entry.segment),
+                entry.position,
+                entry.length as usize,
+            )?;
+            let batch = RecordBatch::decode(&wire)?;
+            budget -= wire.len() as i64;
+            next = entry.base_offset + entry.count;
+            batches.push(batch);
+        }
+        Ok((batches, next.max(offset)))
+    }
+
+    /// Bytes available at or after `offset` (the `fetch.min.bytes` check).
+    pub fn bytes_available_from(&self, offset: u64) -> u64 {
+        let start = self
+            .index
+            .partition_point(|b| b.base_offset + b.count <= offset);
+        self.index[start..].iter().map(|b| b.length as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::record::Record;
+    use crate::storage::backend::MemBackend;
+
+    fn rec(key: u64, bytes: usize) -> Record {
+        Record::new(key, key * 1000, vec![key as u8; bytes])
+    }
+
+    fn single(key: u64, bytes: usize) -> RecordBatch {
+        let mut b = RecordBatch::new();
+        b.push(rec(key, bytes));
+        b
+    }
+
+    #[test]
+    fn offsets_are_consecutive() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("faces-0", 1 << 20);
+        let mut batch = RecordBatch::new();
+        batch.push(rec(1, 10));
+        batch.push(rec(2, 10));
+        assert_eq!(log.append(&mut backend, &batch).unwrap(), 0);
+        assert_eq!(log.append(&mut backend, &single(3, 10)).unwrap(), 2);
+        assert_eq!(log.end_offset(), 3);
+    }
+
+    #[test]
+    fn read_back_in_order() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("faces-0", 1 << 20);
+        for k in 0..10 {
+            log.append(&mut backend, &single(k, 100)).unwrap();
+        }
+        let (batches, next) = log.read(&mut backend, 0, usize::MAX).unwrap();
+        let keys: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.records.iter().map(|r| r.key))
+            .collect();
+        assert_eq!(keys, (0..10).collect::<Vec<_>>());
+        assert_eq!(next, 10);
+    }
+
+    #[test]
+    fn read_from_middle_offset() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 1 << 20);
+        for k in 0..10 {
+            log.append(&mut backend, &single(k, 10)).unwrap();
+        }
+        let (batches, next) = log.read(&mut backend, 7, usize::MAX).unwrap();
+        let keys: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.records.iter().map(|r| r.key))
+            .collect();
+        assert_eq!(keys, vec![7, 8, 9]);
+        assert_eq!(next, 10);
+    }
+
+    #[test]
+    fn max_bytes_soft_limit() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 1 << 20);
+        for k in 0..5 {
+            log.append(&mut backend, &single(k, 1000)).unwrap();
+        }
+        // Tiny budget still returns one batch.
+        let (batches, next) = log.read(&mut backend, 0, 1).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(next, 1);
+        // Budget for ~2 batches returns 2 (may over-return by one).
+        let (batches, _) = log.read(&mut backend, 0, 2100).unwrap();
+        assert!(batches.len() >= 2 && batches.len() <= 3);
+    }
+
+    #[test]
+    fn segments_roll() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 2000);
+        for k in 0..10 {
+            log.append(&mut backend, &single(k, 900)).unwrap();
+        }
+        assert!(log.segments() > 1, "expected rolling, got 1 segment");
+        // Data still fully readable across segments.
+        let (batches, next) = log.read(&mut backend, 0, usize::MAX).unwrap();
+        assert_eq!(batches.len(), 10);
+        assert_eq!(next, 10);
+    }
+
+    #[test]
+    fn bytes_available_tracks_offset() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 1 << 20);
+        for k in 0..4 {
+            log.append(&mut backend, &single(k, 50)).unwrap();
+        }
+        let all = log.bytes_available_from(0);
+        let half = log.bytes_available_from(2);
+        assert!(all > half && half > 0);
+        assert_eq!(log.bytes_available_from(4), 0);
+    }
+
+    #[test]
+    fn empty_batch_rejected() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 1 << 20);
+        assert!(log.append(&mut backend, &RecordBatch::new()).is_err());
+    }
+
+    #[test]
+    fn read_past_end_is_empty() {
+        let mut backend = MemBackend::new();
+        let mut log = PartitionLog::new("p", 1 << 20);
+        log.append(&mut backend, &single(0, 10)).unwrap();
+        let (batches, next) = log.read(&mut backend, 99, usize::MAX).unwrap();
+        assert!(batches.is_empty());
+        assert_eq!(next, 99);
+    }
+
+    #[test]
+    fn fifo_order_property() {
+        crate::util::prop::check(50, |rng| {
+            let mut backend = MemBackend::new();
+            let mut log = PartitionLog::new("p", 1 + rng.below(5000));
+            let mut expected = Vec::new();
+            let n = 1 + rng.below(50);
+            let mut key = 0u64;
+            for _ in 0..n {
+                let mut b = RecordBatch::new();
+                for _ in 0..1 + rng.below(5) {
+                    b.push(rec(key, rng.below(200) as usize));
+                    expected.push(key);
+                    key += 1;
+                }
+                log.append(&mut backend, &b)
+                    .map_err(|e| format!("append: {e}"))?;
+            }
+            let (batches, _) = log
+                .read(&mut backend, 0, usize::MAX)
+                .map_err(|e| format!("read: {e}"))?;
+            let got: Vec<u64> = batches
+                .iter()
+                .flat_map(|b| b.records.iter().map(|r| r.key))
+                .collect();
+            crate::util::prop::assert_holds(got == expected, "per-partition FIFO order")
+        });
+    }
+}

@@ -1,0 +1,43 @@
+//! Kafka-like publish-subscribe broker substrate (§3.4).
+//!
+//! The paper's communication layer is Apache Kafka; every AI-tax finding
+//! about waiting time, batching, replication and storage pressure flows
+//! through its mechanisms. This module implements those mechanisms:
+//!
+//! * **topics** divided into **partitions** — open segment files — spread
+//!   across brokers ([`topic`], [`log`]);
+//! * partitions have a **leader** and replicated **followers**; producers
+//!   and consumers talk to the leader; `acks=all` semantics gate produce
+//!   completion on the in-sync replica set ([`partition`]);
+//! * **producers** batch records per partition with a linger timer and a
+//!   max batch size ([`producer`]);
+//! * **consumers** fetch with `fetch.min.bytes` / `fetch.max.wait`
+//!   semantics and are grouped: a partition has *at most one* consumer in
+//!   a group, so an application needs at least as many partitions as
+//!   consumers (§3.4) ([`consumer`], [`group`]);
+//! * a **controller** assigns partitions to brokers and fails leaders over
+//!   to followers when a broker dies ([`controller`]).
+//!
+//! The implementation is *real* — records are framed, checksummed, appended
+//! to segment logs through a [`crate::storage::StorageBackend`], and read
+//! back on fetch. The live pipeline (`coordinator`) runs it on threads with
+//! real files; unit tests run it in-memory; the DES models its timing with
+//! the same tuning parameters (`config::KafkaTuning`).
+
+pub mod consumer;
+pub mod controller;
+pub mod group;
+pub mod log;
+pub mod partition;
+pub mod producer;
+pub mod record;
+pub mod topic;
+
+pub use consumer::{Consumer, FetchResult};
+pub use controller::{BrokerId, Controller};
+pub use group::GroupCoordinator;
+pub use log::PartitionLog;
+pub use partition::Partition;
+pub use producer::Producer;
+pub use record::{Record, RecordBatch};
+pub use topic::{Topic, TopicPartition};

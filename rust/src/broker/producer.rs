@@ -1,0 +1,264 @@
+//! Producer client with linger batching.
+//!
+//! §5.5: "A message from a producer can be held in the producer for a
+//! small amount of time until a larger group of messages has been
+//! accumulated to be sent as a batch." That hold time is the *linger*; a
+//! batch is also shipped early when it reaches `batch_max_bytes`. Both
+//! behaviors are the first component of the paper's broker waiting time.
+//!
+//! The producer is time-driven (callers pass `now`) so the identical code
+//! serves the live runtime (wall-clock microseconds) and the DES (virtual
+//! microseconds).
+
+use crate::broker::record::{Record, RecordBatch};
+use crate::broker::topic::TopicPartition;
+use crate::config::KafkaTuning;
+
+/// A batch ready to ship to a partition leader.
+#[derive(Debug)]
+pub struct ReadyBatch {
+    pub tp: TopicPartition,
+    pub batch: RecordBatch,
+    /// When the oldest record in the batch was appended (for wait-time
+    /// accounting).
+    pub opened_at_us: u64,
+}
+
+struct Pending {
+    batch: RecordBatch,
+    opened_at_us: u64,
+}
+
+/// Partition-batching producer.
+pub struct Producer {
+    topic: String,
+    partitions: u32,
+    tuning: KafkaTuning,
+    /// Round-robin cursor for records without key affinity.
+    rr: u32,
+    pending: std::collections::HashMap<u32, Pending>,
+    pub records_sent: u64,
+    pub batches_sent: u64,
+    pub bytes_sent: u64,
+}
+
+impl Producer {
+    pub fn new(topic: impl Into<String>, partitions: u32, tuning: KafkaTuning) -> Self {
+        assert!(partitions > 0);
+        Producer {
+            topic: topic.into(),
+            partitions,
+            tuning,
+            rr: 0,
+            pending: Default::default(),
+            records_sent: 0,
+            batches_sent: 0,
+            bytes_sent: 0,
+        }
+    }
+
+    /// Choose a partition: sticky round-robin (Kafka's default partitioner
+    /// for unkeyed records spreads batches across partitions).
+    fn next_partition(&mut self) -> u32 {
+        let p = self.rr % self.partitions;
+        self.rr = self.rr.wrapping_add(1);
+        p
+    }
+
+    /// Append a record to its partition's open batch. Returns a batch if
+    /// this record filled one up (size-triggered send).
+    pub fn send(&mut self, record: Record, now: u64) -> Option<ReadyBatch> {
+        let p = self.next_partition();
+        let entry = self.pending.entry(p).or_insert_with(|| Pending {
+            batch: RecordBatch::new(),
+            opened_at_us: now,
+        });
+        if entry.batch.is_empty() {
+            entry.opened_at_us = now;
+        }
+        entry.batch.push(record);
+        if entry.batch.payload_bytes() >= self.tuning.batch_max_bytes {
+            return self.take(p);
+        }
+        None
+    }
+
+    /// Collect batches whose linger has expired.
+    pub fn poll(&mut self, now: u64) -> Vec<ReadyBatch> {
+        let expired: Vec<u32> = self
+            .pending
+            .iter()
+            .filter(|(_, pend)| {
+                !pend.batch.is_empty() && now >= pend.opened_at_us + self.tuning.linger_us
+            })
+            .map(|(&p, _)| p)
+            .collect();
+        expired.into_iter().filter_map(|p| self.take(p)).collect()
+    }
+
+    /// Flush everything regardless of linger (shutdown path).
+    pub fn flush(&mut self) -> Vec<ReadyBatch> {
+        let parts: Vec<u32> = self
+            .pending
+            .iter()
+            .filter(|(_, pend)| !pend.batch.is_empty())
+            .map(|(&p, _)| p)
+            .collect();
+        parts.into_iter().filter_map(|p| self.take(p)).collect()
+    }
+
+    /// Earliest deadline at which `poll` would release a batch.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.pending
+            .values()
+            .filter(|p| !p.batch.is_empty())
+            .map(|p| p.opened_at_us + self.tuning.linger_us)
+            .min()
+    }
+
+    fn take(&mut self, p: u32) -> Option<ReadyBatch> {
+        let pend = self.pending.remove(&p)?;
+        if pend.batch.is_empty() {
+            return None;
+        }
+        self.records_sent += pend.batch.len() as u64;
+        self.batches_sent += 1;
+        self.bytes_sent += pend.batch.wire_size() as u64;
+        Some(ReadyBatch {
+            tp: TopicPartition::new(self.topic.clone(), p),
+            batch: pend.batch,
+            opened_at_us: pend.opened_at_us,
+        })
+    }
+
+    pub fn pending_records(&self) -> usize {
+        self.pending.values().map(|p| p.batch.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuning(linger_us: u64, batch_max: usize) -> KafkaTuning {
+        KafkaTuning {
+            linger_us,
+            batch_max_bytes: batch_max,
+            ..KafkaTuning::default()
+        }
+    }
+
+    fn rec(bytes: usize) -> Record {
+        Record::new(0, 0, vec![0u8; bytes])
+    }
+
+    #[test]
+    fn linger_holds_then_releases() {
+        let mut p = Producer::new("faces", 1, tuning(10_000, usize::MAX));
+        assert!(p.send(rec(100), 0).is_none());
+        assert!(p.poll(5_000).is_empty(), "released before linger expired");
+        let ready = p.poll(10_000);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].batch.len(), 1);
+        assert_eq!(ready[0].opened_at_us, 0);
+    }
+
+    #[test]
+    fn size_trigger_sends_early() {
+        let mut p = Producer::new("faces", 1, tuning(1_000_000, 250));
+        assert!(p.send(rec(100), 0).is_none());
+        assert!(p.send(rec(100), 1).is_none());
+        let ready = p.send(rec(100), 2);
+        assert!(ready.is_some(), "300 bytes >= 250 threshold");
+        assert_eq!(ready.unwrap().batch.len(), 3);
+        assert_eq!(p.pending_records(), 0);
+    }
+
+    #[test]
+    fn round_robin_spreads_partitions() {
+        let mut p = Producer::new("faces", 4, tuning(0, usize::MAX));
+        for i in 0..8 {
+            p.send(rec(10), i);
+        }
+        let ready = p.poll(1_000_000);
+        assert_eq!(ready.len(), 4, "all four partitions got batches");
+        for r in &ready {
+            assert_eq!(r.batch.len(), 2);
+        }
+    }
+
+    #[test]
+    fn batch_accumulates_multiple_records() {
+        let mut p = Producer::new("faces", 1, tuning(50_000, usize::MAX));
+        for i in 0..10 {
+            assert!(p.send(rec(10), i * 1000).is_none());
+        }
+        let ready = p.poll(50_000);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].batch.len(), 10);
+        // Linger measured from the first record.
+        assert_eq!(ready[0].opened_at_us, 0);
+    }
+
+    #[test]
+    fn flush_releases_everything() {
+        let mut p = Producer::new("faces", 3, tuning(1_000_000, usize::MAX));
+        for i in 0..6 {
+            p.send(rec(10), i);
+        }
+        let flushed = p.flush();
+        let total: usize = flushed.iter().map(|b| b.batch.len()).sum();
+        assert_eq!(total, 6);
+        assert_eq!(p.pending_records(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut p = Producer::new("faces", 2, tuning(10_000, usize::MAX));
+        assert_eq!(p.next_deadline(), None);
+        p.send(rec(10), 500);
+        p.send(rec(10), 900);
+        assert_eq!(p.next_deadline(), Some(10_500));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut p = Producer::new("faces", 1, tuning(0, usize::MAX));
+        p.send(rec(100), 0);
+        p.poll(0);
+        assert_eq!(p.records_sent, 1);
+        assert_eq!(p.batches_sent, 1);
+        assert!(p.bytes_sent > 100);
+    }
+
+    #[test]
+    fn no_record_lost_property() {
+        crate::util::prop::check(100, |rng| {
+            let parts = 1 + rng.below(8) as u32;
+            let mut p = Producer::new(
+                "t",
+                parts,
+                tuning(rng.below(20_000), 1 + rng.below(4096) as usize),
+            );
+            let n = rng.below(200);
+            let mut released = 0usize;
+            let mut now = 0;
+            for _ in 0..n {
+                now += rng.below(1000);
+                if let Some(b) = p.send(rec(rng.below(512) as usize), now) {
+                    released += b.batch.len();
+                }
+                for b in p.poll(now) {
+                    released += b.batch.len();
+                }
+            }
+            for b in p.flush() {
+                released += b.batch.len();
+            }
+            crate::util::prop::assert_holds(
+                released == n as usize && p.pending_records() == 0,
+                &format!("released {released} != sent {n}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! Cluster deployment: node inventory, container placement, and the
+//! Kubernetes-role substrate (§3.2: "deployment of the various containers
+//! is managed using Kubernetes").
+
+pub mod placement;
+
+pub use placement::{ContainerKind, NodeAllocation, Placement};

@@ -1,0 +1,193 @@
+//! Container placement over data-center nodes.
+//!
+//! §4.2's deployment: "840 ingest/detect processes executing on 15 nodes
+//! (56 processes per node), 1680 identification processes executing on 30
+//! nodes (56 per node), and 3 brokers (each given its own node)". This
+//! module reproduces that bin-packing: containers request cores; nodes
+//! offer `NodeSpec::cores`; brokers are exclusive.
+
+use crate::config::hardware::NodeSpec;
+use crate::config::Deployment;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ContainerKind {
+    IngestDetect,
+    Identification,
+    Broker,
+    /// Object Detection stages.
+    ObjIngest,
+    ObjDetect,
+}
+
+impl ContainerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ContainerKind::IngestDetect => "ingest/detect",
+            ContainerKind::Identification => "identification",
+            ContainerKind::Broker => "broker",
+            ContainerKind::ObjIngest => "objdet-ingest",
+            ContainerKind::ObjDetect => "objdet-detect",
+        }
+    }
+}
+
+/// One node's allocation.
+#[derive(Clone, Debug)]
+pub struct NodeAllocation {
+    pub node_id: u32,
+    pub kind: ContainerKind,
+    pub containers: usize,
+    pub cores_per_container: usize,
+}
+
+/// A full placement plan.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub nodes: Vec<NodeAllocation>,
+}
+
+impl Placement {
+    /// Pack `containers` of `kind` at `cores_each` onto nodes with
+    /// `node.cores` cores, starting at node id `first_node`. Brokers are
+    /// exclusive (one per node, §4.2).
+    pub fn pack(
+        kind: ContainerKind,
+        containers: usize,
+        cores_each: usize,
+        node: &NodeSpec,
+        first_node: u32,
+    ) -> Placement {
+        assert!(cores_each >= 1);
+        let mut nodes = Vec::new();
+        if kind == ContainerKind::Broker {
+            for i in 0..containers {
+                nodes.push(NodeAllocation {
+                    node_id: first_node + i as u32,
+                    kind,
+                    containers: 1,
+                    cores_per_container: node.cores,
+                });
+            }
+            return Placement { nodes };
+        }
+        let per_node = (node.cores / cores_each).max(1);
+        let mut remaining = containers;
+        let mut id = first_node;
+        while remaining > 0 {
+            let here = remaining.min(per_node);
+            nodes.push(NodeAllocation {
+                node_id: id,
+                kind,
+                containers: here,
+                cores_per_container: cores_each,
+            });
+            remaining -= here;
+            id += 1;
+        }
+        Placement { nodes }
+    }
+
+    /// The paper's §4.2 Face Recognition placement for a given deployment.
+    pub fn facerec(d: &Deployment, node: &NodeSpec) -> Placement {
+        let mut p = Placement::pack(ContainerKind::IngestDetect, d.producers, 1, node, 0);
+        let next = p.node_count() as u32;
+        let c = Placement::pack(ContainerKind::Identification, d.consumers, 1, node, next);
+        let next2 = next + c.node_count() as u32;
+        let b = Placement::pack(ContainerKind::Broker, d.brokers, node.cores, node, next2);
+        p.nodes.extend(c.nodes);
+        p.nodes.extend(b.nodes);
+        p
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn container_count(&self, kind: ContainerKind) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == kind)
+            .map(|n| n.containers)
+            .sum()
+    }
+
+    pub fn nodes_of(&self, kind: ContainerKind) -> usize {
+        self.nodes.iter().filter(|n| n.kind == kind).count()
+    }
+
+    /// No node is over-committed.
+    pub fn validate(&self, node: &NodeSpec) -> bool {
+        self.nodes
+            .iter()
+            .all(|n| n.containers * n.cores_per_container <= node.cores)
+    }
+
+    /// Total cores in use across the cluster.
+    pub fn cores_used(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.containers * n.cores_per_container)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_42_deployment() {
+        // 840 producers + 1680 consumers at 1 core on 56-core nodes,
+        // 3 exclusive broker nodes: 15 + 30 + 3 = 48 nodes.
+        let d = Deployment::facerec_paper();
+        let node = NodeSpec::xeon_8176();
+        let p = Placement::facerec(&d, &node);
+        assert_eq!(p.nodes_of(ContainerKind::IngestDetect), 15);
+        assert_eq!(p.nodes_of(ContainerKind::Identification), 30);
+        assert_eq!(p.nodes_of(ContainerKind::Broker), 3);
+        assert_eq!(p.container_count(ContainerKind::IngestDetect), 840);
+        assert_eq!(p.container_count(ContainerKind::Identification), 1680);
+        assert!(p.validate(&node));
+        // "over 2200 processor cores spread across 40+ nodes"
+        assert!(p.node_count() >= 40);
+        let total_cores = p.node_count() * node.cores;
+        assert!(total_cores > 2200);
+    }
+
+    #[test]
+    fn objdet_14_core_packing() {
+        // §6.1: "allocate 14 cores per container; this allows us to
+        // instantiate 4 detection containers per server".
+        let node = NodeSpec::xeon_8176();
+        let p = Placement::pack(ContainerKind::ObjDetect, 96, 14, &node, 0);
+        assert_eq!(p.node_count(), 24); // 96 / 4 per node
+        assert!(p.validate(&node));
+        assert_eq!(p.nodes[0].containers, 4);
+    }
+
+    #[test]
+    fn brokers_are_exclusive() {
+        let node = NodeSpec::xeon_8176();
+        let p = Placement::pack(ContainerKind::Broker, 8, 1, &node, 100);
+        assert_eq!(p.node_count(), 8);
+        for n in &p.nodes {
+            assert_eq!(n.containers, 1);
+            assert_eq!(n.node_id >= 100, true);
+        }
+    }
+
+    #[test]
+    fn packing_never_overcommits_property() {
+        crate::util::prop::check(200, |rng| {
+            let node = NodeSpec::xeon_8176();
+            let containers = 1 + rng.below(3000) as usize;
+            let cores = 1 + rng.below(56) as usize;
+            let p = Placement::pack(ContainerKind::Identification, containers, cores, &node, 0);
+            crate::util::prop::assert_holds(
+                p.validate(&node)
+                    && p.container_count(ContainerKind::Identification) == containers,
+                "pack validity + completeness",
+            )
+        });
+    }
+}

@@ -1,0 +1,376 @@
+//! Calibration constants mapping the paper's measured behavior onto the
+//! simulator's device and cost models. Every constant lists its provenance.
+//!
+//! Two kinds of constants live here:
+//!
+//! 1. **Paper-reported values** (stage means, Fig-8 proportions, message
+//!    sizes) — taken verbatim from the text.
+//! 2. **Fitted constants** (storage small-write efficiency, broker-relief
+//!    exponent, producer send cost) — fitted so the simulator's emergent
+//!    behavior lands on the paper's reported saturation/unlock points, as
+//!    described in DESIGN.md §4. These are inputs a reader can re-fit; the
+//!    *mechanisms* (token-bucket storage, partition-pinned consumers,
+//!    linger/fetch timers) are what the reproduction claims.
+
+/// Per-stage compute-cost model for *Face Recognition* (§4.2-§4.3).
+#[derive(Clone, Debug)]
+pub struct StageCosts {
+    /// Mean ingestion time per frame, us (paper: 18.8 ms).
+    pub ingest_us: f64,
+    /// Mean face-detection time per frame, us (paper: 74.8 ms).
+    pub detect_us: f64,
+    /// Mean identification time per face, us (paper: 131.5 ms).
+    pub identify_us: f64,
+    /// AI fraction of detection compute (Fig 8b: 42%).
+    pub detect_ai_frac: f64,
+    /// AI fraction of identification compute (Fig 8c: 88%).
+    pub identify_ai_frac: f64,
+    /// AI fraction of ingestion (Fig 8a: none).
+    pub ingest_ai_frac: f64,
+    /// Kafka-client fraction of identification (Fig 8c: 8%) — stays at
+    /// native speed even under the §5.2 emulation protocol.
+    pub identify_kafka_frac: f64,
+    /// Coefficient of variation of the detection time's *body*
+    /// (log-normal).
+    pub detect_cv: f64,
+    /// Probability a detection lands on the slow path (GC pauses, frame
+    /// pyramid blowups, co-location contention).
+    pub detect_slow_prob: f64,
+    /// Slow-path multiplier. The §4.2 tail — detection p99 = 1.84 s vs a
+    /// 74.8 ms mean, a 24.6x ratio — cannot come from any log-normal with
+    /// a plausible cv (the p99/mean ratio of a log-normal maxes out around
+    /// 15x); it requires a bimodal slow path, which `slow_prob`/`slow_mult`
+    /// model. Fitted so p99 lands near the paper's 1.84 s while the mean
+    /// stays 74.8 ms.
+    pub detect_slow_mult: f64,
+    /// Extra detection time per face found in the frame, us (more faces =>
+    /// more pyramid/NMS/crop work).
+    pub detect_per_face_us: f64,
+    /// Coefficient of variation of identification time (mild).
+    pub identify_cv: f64,
+    /// Coefficient of variation of ingestion time (§4.2 p99 27 ms vs
+    /// 18.8 ms mean => cv ~= 0.2).
+    pub ingest_cv: f64,
+}
+
+impl Default for StageCosts {
+    fn default() -> Self {
+        StageCosts {
+            ingest_us: 18_800.0,
+            detect_us: 74_800.0,
+            identify_us: 131_500.0,
+            detect_ai_frac: 0.42,
+            identify_ai_frac: 0.88,
+            ingest_ai_frac: 0.0,
+            identify_kafka_frac: 0.08,
+            detect_cv: 0.7,
+            detect_slow_prob: 0.016,
+            detect_slow_mult: 45.0,
+            detect_per_face_us: 9_000.0,
+            identify_cv: 0.5,
+            ingest_cv: 0.2,
+        }
+    }
+}
+
+/// Fig-8 component-level CPU-time proportions (sum to 1.0 per stage).
+#[derive(Clone, Debug)]
+pub struct CpuBreakdown {
+    pub ingestion: &'static [(&'static str, f64)],
+    pub detection: &'static [(&'static str, f64)],
+    pub identification: &'static [(&'static str, f64)],
+}
+
+impl Default for CpuBreakdown {
+    fn default() -> Self {
+        CpuBreakdown {
+            // Fig 8a: "nearly even split between frame extraction and frame
+            // resizing", remainder = event logging + other (incl. IPC).
+            ingestion: &[
+                ("extract", 0.45),
+                ("resize", 0.45),
+                ("event logging", 0.05),
+                ("other", 0.05),
+            ],
+            // Fig 8b: 42% AI, 25% crop+resize, 6% TF support, 4% NumPy,
+            // 13% other, remainder event logging + IPC.
+            detection: &[
+                ("ai (tensorflow)", 0.42),
+                ("crop+resize", 0.25),
+                ("tf support", 0.06),
+                ("numpy", 0.04),
+                ("other", 0.13),
+                ("event logging + ipc", 0.10),
+            ],
+            // Fig 8c: 88% AI, 8% Kafka, remainder split.
+            identification: &[
+                ("ai (tensorflow)", 0.88),
+                ("kafka client", 0.08),
+                ("other", 0.04),
+            ],
+        }
+    }
+}
+
+/// Storage & broker saturation model (fitted; DESIGN.md §4).
+#[derive(Clone, Debug)]
+pub struct BrokerModel {
+    /// Effective fraction of spec write bandwidth reachable with Kafka's
+    /// many-small-appends pattern on one drive. Fitted to Fig 11b: the
+    /// paper calls 67% utilization "effectively saturated" (OS, filesystem,
+    /// small-request coordination overhead).
+    pub small_write_eff: f64,
+    /// Per-drive efficiency exponent: d drives yield `d^(1+alpha)` times
+    /// one drive's effective bandwidth (higher aggregate queue depth
+    /// amortizes the small-write overhead). Fitted to Fig 15a unlock points
+    /// (1 drive < 8x, 2 -> 12x, 3 -> 24x, 4 -> 32x).
+    pub drive_scale_alpha: f64,
+    /// Broker-count relief exponent: b brokers yield `(b/3)^relief` extra
+    /// per-broker effective capacity on top of the 1/b load split, modeling
+    /// the CPU/memory-bandwidth contention relief the paper infers in §7.1
+    /// ("brokers may also benefit from having additional compute capacity").
+    /// Fitted to Fig 15b unlock points (3 -> <8x, 4 -> 8x, 6 -> 16x,
+    /// 8 -> 32x).
+    pub broker_relief_exp: f64,
+    /// Fraction of consumer fetches served from the page cache (paper
+    /// §5.4: reads "use essentially none of the available bandwidth").
+    pub read_cache_hit: f64,
+}
+
+impl Default for BrokerModel {
+    fn default() -> Self {
+        BrokerModel {
+            small_write_eff: 0.70,
+            drive_scale_alpha: 0.17,
+            broker_relief_exp: 0.58,
+            read_cache_hit: 0.995,
+        }
+    }
+}
+
+/// Object Detection cost model (§6).
+#[derive(Clone, Debug)]
+pub struct ObjDetCosts {
+    /// Ingestion per frame, us (paper: 4.5 ms; rate-limited to 30 FPS).
+    pub ingest_us: f64,
+    /// Frame tick interval, us (30 FPS).
+    pub tick_us: u64,
+    /// Detection per frame at the experiment's 1-core allocation, us
+    /// (paper Fig 13: 687 ms).
+    pub detect_us: f64,
+    pub detect_cv: f64,
+    /// Whole-frame message bytes sent through Kafka (960x540 re-encoded
+    /// frame; fitted so broker storage nears saturation at ~12x, Fig 14).
+    pub frame_bytes: f64,
+    /// Producer-side cost to serialize + hand one frame to the Kafka
+    /// client, us. Fitted so the producer send path overruns the 33.3 ms
+    /// tick between 12x and 16x (Fig 14's "Delay" component).
+    pub send_frame_us: f64,
+    /// Batching amortization: with k frames per tick the effective per-
+    /// frame send cost is `send_frame_us * (1-batch_amort) +
+    /// send_frame_us * batch_amort / k` ("Kafka is well designed ... the
+    /// producers and the brokers manage to intelligently batch").
+    pub batch_amort: f64,
+    /// Detection AI fraction (stage is overwhelmingly the R-CNN; §6.1 "AI
+    /// compute is exclusively performed in this later stage").
+    pub detect_ai_frac: f64,
+    /// Consumer fetch tuning for Object Detection: the deployment is tuned
+    /// for throughput with a large `fetch.min.bytes` and a long max wait,
+    /// which makes the broker wait comparable to detection time (Fig 13's
+    /// 629 ms vs 687 ms) and keeps it roughly constant under acceleration
+    /// ("the broker time grows with the decrease in compute time to
+    /// improve batching", §5.5).
+    pub fetch_min_bytes: usize,
+    pub fetch_max_wait_us: u64,
+}
+
+impl Default for ObjDetCosts {
+    fn default() -> Self {
+        ObjDetCosts {
+            ingest_us: 4_500.0,
+            tick_us: 33_333,
+            detect_us: 687_000.0,
+            detect_cv: 0.30,
+            frame_bytes: 100_000.0,
+            send_frame_us: 4_300.0,
+            batch_amort: 0.45,
+            detect_ai_frac: 0.94,
+            fetch_min_bytes: 1_000_000,
+            fetch_max_wait_us: 550_000,
+        }
+    }
+}
+
+/// Core-scaling model constants (Figs 5 and 12):
+/// `latency(c) = serial + parallel/c + interference * (c - 1)`, normalized
+/// to latency(1) = 1. Fitted to the paper's quoted points: 2 cores give a
+/// 16% (ingest/detect) / 36% (identification) reduction, with an upturn at
+/// higher counts; Object Detection scales near-linearly.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreScaling {
+    pub serial: f64,
+    pub parallel: f64,
+    pub interference: f64,
+}
+
+impl CoreScaling {
+    pub fn ingest_detect() -> Self {
+        CoreScaling {
+            serial: 0.64,
+            parallel: 0.36,
+            interference: 0.02,
+        }
+    }
+
+    pub fn identification() -> Self {
+        CoreScaling {
+            serial: 0.22,
+            parallel: 0.78,
+            interference: 0.03,
+        }
+    }
+
+    pub fn objdet_detection() -> Self {
+        CoreScaling {
+            serial: 0.016,
+            parallel: 0.984,
+            interference: 0.0007,
+        }
+    }
+
+    /// Relative latency at `c` cores (1.0 at one core).
+    pub fn latency(&self, cores: usize) -> f64 {
+        assert!(cores >= 1);
+        self.serial + self.parallel / cores as f64 + self.interference * (cores as f64 - 1.0)
+    }
+}
+
+/// Face-arrival process for the synthetic video stream (§3.3: "our video
+/// yields zero to five faces and averages 0.64 faces per frame").
+#[derive(Clone, Debug)]
+pub struct FaceArrival {
+    /// Mean faces per frame.
+    pub mean_faces: f64,
+    /// Maximum faces in one frame.
+    pub max_faces: usize,
+    /// Probability of staying in the current burst state per frame (the
+    /// Markov modulation that creates Fig 7's surges) — used by the
+    /// per-producer `VideoSource` (live mode).
+    pub burst_persistence: f64,
+    /// Mean burst dwell time on the shared `BurstSchedule` timeline, us
+    /// (simulation mode; all producers replay the same video, §3.3).
+    pub burst_dwell_us: u64,
+    /// Mean faces per frame while in a burst.
+    pub burst_mean: f64,
+    /// Stationary probability of being in a burst.
+    pub burst_prob: f64,
+}
+
+impl Default for FaceArrival {
+    fn default() -> Self {
+        FaceArrival {
+            mean_faces: 0.64,
+            max_faces: 5,
+            burst_persistence: 0.995,
+            burst_dwell_us: 3_000_000,
+            burst_mean: 1.2,
+            burst_prob: 0.12,
+        }
+    }
+}
+
+/// Bundle of all calibration constants.
+#[derive(Clone, Debug, Default)]
+pub struct Calibration {
+    pub stages: StageCosts,
+    pub cpu_breakdown: CpuBreakdown,
+    pub broker: BrokerModel,
+    pub objdet: ObjDetCosts,
+    pub faces: FaceArrival,
+}
+
+impl Calibration {
+    /// Effective aggregate write bandwidth of a broker node with `drives`
+    /// drives and `brokers` total brokers in the cluster (bytes/s).
+    pub fn broker_write_capacity(
+        &self,
+        spec_write_bw: f64,
+        drives: usize,
+        brokers: usize,
+    ) -> f64 {
+        let d = drives as f64;
+        let relief = ((brokers as f64) / 3.0).powf(self.broker.broker_relief_exp);
+        spec_write_bw * self.broker.small_write_eff * d.powf(1.0 + self.broker.drive_scale_alpha)
+            * relief.max(1.0) // adding brokers never *hurts* a broker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_quoted_points() {
+        // "Doubling the core count from one to two yields only a 16%
+        //  reduction in latency in ingest/detect and a 36% reduction in
+        //  identification."
+        let id = CoreScaling::ingest_detect();
+        let ident = CoreScaling::identification();
+        assert!((id.latency(2) - 0.84).abs() < 0.01, "{}", id.latency(2));
+        assert!((ident.latency(2) - 0.64).abs() < 0.01, "{}", ident.latency(2));
+        // "At larger core counts, the computational latency actually
+        //  increases for both containers."
+        assert!(id.latency(16) > id.latency(4));
+        assert!(ident.latency(16) > ident.latency(4));
+    }
+
+    #[test]
+    fn fig12_near_linear() {
+        let od = CoreScaling::objdet_detection();
+        // 14 cores should give close to 14x speedup (>10x).
+        assert!(1.0 / od.latency(14) > 10.0);
+        // And still be monotone down to 14 cores.
+        for c in 1..14 {
+            assert!(od.latency(c + 1) < od.latency(c));
+        }
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let b = CpuBreakdown::default();
+        for stage in [b.ingestion, b.detection, b.identification] {
+            let sum: f64 = stage.iter().map(|(_, f)| f).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+        }
+    }
+
+    #[test]
+    fn capacity_monotone_in_drives_and_brokers() {
+        let c = Calibration::default();
+        let bw = 1.1e9;
+        let mut prev = 0.0;
+        for d in 1..=4 {
+            let cap = c.broker_write_capacity(bw, d, 3);
+            assert!(cap > prev);
+            prev = cap;
+        }
+        assert!(c.broker_write_capacity(bw, 1, 8) > c.broker_write_capacity(bw, 1, 3));
+    }
+
+    #[test]
+    fn one_drive_three_brokers_matches_fig11() {
+        // Effective capacity ~ 0.70 x 1.1 GB/s = 770 MB/s; the paper calls
+        // 67% of spec (737 MB/s) "effectively saturated".
+        let c = Calibration::default();
+        let cap = c.broker_write_capacity(1.1e9, 1, 3);
+        assert!((cap - 0.77e9).abs() < 1e7, "cap={cap}");
+    }
+
+    #[test]
+    fn stage_costs_match_fig6() {
+        let s = StageCosts::default();
+        assert_eq!(s.ingest_us, 18_800.0);
+        assert_eq!(s.detect_us, 74_800.0);
+        assert_eq!(s.identify_us, 131_500.0);
+    }
+}

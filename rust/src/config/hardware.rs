@@ -1,0 +1,121 @@
+//! Hardware specifications — the paper's Table 2 server, verbatim.
+
+/// Intel SSD DC P4510 1 TB (Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct NvmeSpec {
+    /// Sequential read bandwidth, bytes/s.
+    pub read_bw: f64,
+    /// Sequential write bandwidth, bytes/s.
+    pub write_bw: f64,
+    /// Read latency, microseconds.
+    pub read_latency_us: u64,
+    /// Write latency, microseconds.
+    pub write_latency_us: u64,
+    /// Capacity, bytes.
+    pub capacity: u64,
+}
+
+impl NvmeSpec {
+    pub fn p4510_1tb() -> Self {
+        NvmeSpec {
+            read_bw: 2.85e9,
+            write_bw: 1.1e9,
+            read_latency_us: 77,
+            write_latency_us: 18,
+            capacity: 1_000_000_000_000,
+        }
+    }
+
+    /// Intel Optane-class device (§7.1 mentions faster storage as one
+    /// mitigation; modeled after P5800X-era specs for the ablation bench).
+    pub fn optane() -> Self {
+        NvmeSpec {
+            read_bw: 7.2e9,
+            write_bw: 6.2e9,
+            read_latency_us: 6,
+            write_latency_us: 5,
+            capacity: 800_000_000_000,
+        }
+    }
+}
+
+/// A data-center node (Table 2: 2x Intel Xeon Platinum 8176).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub name: &'static str,
+    /// Physical cores per node (2 sockets x 28).
+    pub cores: usize,
+    pub base_ghz: f64,
+    pub turbo_ghz: f64,
+    pub smt: usize,
+    /// Last-level cache, bytes (per socket).
+    pub llc_bytes: u64,
+    /// Memory, bytes.
+    pub memory: u64,
+    pub nvme: NvmeSpec,
+    /// Network bandwidth, bytes/s (full duplex; this is each direction).
+    pub net_bw: f64,
+}
+
+impl NodeSpec {
+    /// Table 2 server.
+    pub fn xeon_8176() -> Self {
+        NodeSpec {
+            name: "2x Xeon Platinum 8176",
+            cores: 56,
+            base_ghz: 2.10,
+            turbo_ghz: 3.80,
+            smt: 2,
+            llc_bytes: 38_500_000,
+            memory: 384 * 1024 * 1024 * 1024,
+            nvme: NvmeSpec::p4510_1tb(),
+            net_bw: crate::util::units::gbps(100),
+        }
+    }
+
+    /// The purpose-built data center's broker node (Table 4: Xeon Bronze
+    /// 3104, 50 GbE, 4x NVMe).
+    pub fn broker_bronze() -> Self {
+        NodeSpec {
+            name: "2x Xeon Bronze 3104",
+            cores: 12,
+            base_ghz: 1.70,
+            turbo_ghz: 1.70,
+            smt: 1,
+            llc_bytes: 8_250_000,
+            memory: 384 * 1024 * 1024 * 1024,
+            nvme: NvmeSpec::p4510_1tb(),
+            net_bw: crate::util::units::gbps(50),
+        }
+    }
+
+    /// Purpose-built compute node: same CPUs, 10 GbE, no NVMe data drive.
+    pub fn compute_10g() -> Self {
+        let mut n = Self::xeon_8176();
+        n.net_bw = crate::util::units::gbps(10);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let n = NodeSpec::xeon_8176();
+        assert_eq!(n.cores, 56);
+        assert_eq!(n.nvme.write_bw, 1.1e9);
+        assert_eq!(n.nvme.read_bw, 2.85e9);
+        assert_eq!(n.nvme.read_latency_us, 77);
+        assert_eq!(n.nvme.write_latency_us, 18);
+        assert_eq!(n.net_bw, 12.5e9);
+    }
+
+    #[test]
+    fn purpose_built_nodes() {
+        assert_eq!(NodeSpec::broker_bronze().net_bw, crate::util::units::gbps(50));
+        assert_eq!(NodeSpec::compute_10g().net_bw, crate::util::units::gbps(10));
+        assert!(NvmeSpec::optane().write_bw > NvmeSpec::p4510_1tb().write_bw);
+    }
+}

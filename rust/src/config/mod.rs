@@ -1,0 +1,296 @@
+//! Typed configuration for deployments, hardware, and experiments.
+//!
+//! Defaults reproduce the paper's setup: Table 2 hardware, §4.2 deployment
+//! (840 producers / 1680 consumers / 3 brokers), §5.3 acceleration-emulation
+//! deployment, and the §6 *Object Detection* deployment. Everything can be
+//! overridden from JSON config files (see [`Config::from_json`]) or CLI
+//! flags, so the experiments are sweepable.
+
+pub mod calibration;
+pub mod hardware;
+
+use crate::util::json::Json;
+
+pub use calibration::Calibration;
+pub use hardware::{NodeSpec, NvmeSpec};
+
+/// Which of the paper's two measurement protocols the pipeline runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccelProtocol {
+    /// §5.1 / Fig 9: only the *AI share* of each stage is divided by the
+    /// acceleration factor (Amdahl's-law view).
+    AiShareOnly,
+    /// §5.2 / Figs 10-15: emulation — all stage compute is divided by the
+    /// factor; only Kafka-client code and basic loop control stay at native
+    /// speed (the paper's sleep-replacement emulation).
+    Emulation,
+}
+
+/// Deployment of a pipeline onto the (simulated or live) cluster.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub producers: usize,
+    pub consumers: usize,
+    pub brokers: usize,
+    /// NVMe drives per broker node (Fig 15a sweeps this).
+    pub drives_per_broker: usize,
+    /// Replication factor for every topic partition (paper: 3).
+    pub replication: usize,
+    /// Partitions for the "faces"/"frames" topic. Kafka requires at least
+    /// one partition per consumer for full parallelism; default = consumers.
+    pub partitions: usize,
+}
+
+impl Deployment {
+    /// §4.2 Face Recognition measurement deployment.
+    pub fn facerec_paper() -> Self {
+        Deployment {
+            producers: 840,
+            consumers: 1680,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 1680,
+        }
+    }
+
+    /// §5.3 acceleration-emulation deployment (one face per frame,
+    /// "fewer identification instances"). Producer/consumer counts are
+    /// calibrated so the 1x broker storage-write utilization lands at the
+    /// paper's ~10% (Fig 11b) and consumer utilization at ~0.9.
+    pub fn facerec_accel() -> Self {
+        Deployment {
+            producers: 300,
+            consumers: 455,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 455,
+        }
+    }
+
+    /// §6.3 Object Detection acceleration deployment: 21 producers on one
+    /// node, 36 consumer nodes x 56 = 2016 consumers, 3 brokers.
+    pub fn objdet_accel() -> Self {
+        Deployment {
+            producers: 21,
+            consumers: 2016,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 2016,
+        }
+    }
+
+    pub fn with_brokers(mut self, brokers: usize) -> Self {
+        self.brokers = brokers;
+        self
+    }
+
+    pub fn with_drives(mut self, drives: usize) -> Self {
+        self.drives_per_broker = drives;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.producers > 0, "need at least one producer");
+        anyhow::ensure!(self.consumers > 0, "need at least one consumer");
+        anyhow::ensure!(self.brokers > 0, "need at least one broker");
+        anyhow::ensure!(self.replication >= 1, "replication must be >= 1");
+        anyhow::ensure!(
+            self.replication <= self.brokers,
+            "replication factor {} exceeds broker count {}",
+            self.replication,
+            self.brokers
+        );
+        anyhow::ensure!(
+            self.partitions >= self.consumers,
+            "Kafka semantics: a partition has at most one consumer, so \
+             partitions ({}) must be >= consumers ({}) for full parallelism",
+            self.partitions,
+            self.consumers
+        );
+        anyhow::ensure!(self.drives_per_broker >= 1, "brokers need storage");
+        Ok(())
+    }
+}
+
+/// Kafka-style client/broker tuning parameters (§3.4, §5.5: "we have tuned
+/// these parameters to find settings that ensure good behavior").
+#[derive(Clone, Debug)]
+pub struct KafkaTuning {
+    /// Producer linger: how long a producer holds a batch open waiting for
+    /// more records before sending (microseconds).
+    pub linger_us: u64,
+    /// Producer max batch size in bytes; a batch is sent early when full.
+    pub batch_max_bytes: usize,
+    /// Consumer fetch: broker withholds a response until at least this many
+    /// bytes are available...
+    pub fetch_min_bytes: usize,
+    /// ...or this much time has elapsed (microseconds).
+    pub fetch_max_wait_us: u64,
+    /// Broker CPU cost to handle one produce/fetch request (microseconds).
+    pub request_cpu_us: f64,
+    /// Broker CPU cost per byte moved (serialization, checksumming), us/byte.
+    pub per_byte_cpu_us: f64,
+    /// Cores a broker dedicates to request handling (Kafka network +
+    /// I/O threads; the broker nodes have 56 cores, §3.2).
+    pub request_handler_cores: usize,
+}
+
+impl Default for KafkaTuning {
+    fn default() -> Self {
+        KafkaTuning {
+            linger_us: 30_000,
+            batch_max_bytes: 512 * 1024,
+            fetch_min_bytes: 40_000,
+            fetch_max_wait_us: 45_000,
+            request_cpu_us: 90.0,
+            per_byte_cpu_us: 0.0006,
+            request_handler_cores: 16,
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub deployment: Deployment,
+    pub tuning: KafkaTuning,
+    pub node: NodeSpec,
+    pub calibration: Calibration,
+    pub seed: u64,
+    /// Virtual experiment duration (microseconds of simulated time).
+    pub duration_us: u64,
+    /// Warmup fraction excluded from statistics.
+    pub warmup_frac: f64,
+    pub accel: f64,
+    pub protocol: AccelProtocol,
+    /// Mean face thumbnail bytes (paper: 37.3 kB). Fig 15c sweeps this.
+    pub face_bytes: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            deployment: Deployment::facerec_paper(),
+            tuning: KafkaTuning::default(),
+            node: NodeSpec::xeon_8176(),
+            calibration: Calibration::default(),
+            seed: 0xFACE,
+            duration_us: 60 * crate::util::units::SEC,
+            warmup_frac: 0.2,
+            accel: 1.0,
+            protocol: AccelProtocol::Emulation,
+            face_bytes: 37_300.0,
+        }
+    }
+}
+
+impl Config {
+    /// Overlay values from a JSON object; unknown keys are rejected so
+    /// config typos fail loudly.
+    pub fn from_json(mut self, j: &Json) -> anyhow::Result<Config> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config must be a JSON object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "producers" => self.deployment.producers = req_u64(v, k)? as usize,
+                "consumers" => self.deployment.consumers = req_u64(v, k)? as usize,
+                "brokers" => self.deployment.brokers = req_u64(v, k)? as usize,
+                "drives_per_broker" => {
+                    self.deployment.drives_per_broker = req_u64(v, k)? as usize
+                }
+                "replication" => self.deployment.replication = req_u64(v, k)? as usize,
+                "partitions" => self.deployment.partitions = req_u64(v, k)? as usize,
+                "linger_us" => self.tuning.linger_us = req_u64(v, k)?,
+                "batch_max_bytes" => self.tuning.batch_max_bytes = req_u64(v, k)? as usize,
+                "fetch_min_bytes" => self.tuning.fetch_min_bytes = req_u64(v, k)? as usize,
+                "fetch_max_wait_us" => self.tuning.fetch_max_wait_us = req_u64(v, k)?,
+                "seed" => self.seed = req_u64(v, k)?,
+                "duration_us" => self.duration_us = req_u64(v, k)?,
+                "warmup_frac" => self.warmup_frac = req_f64(v, k)?,
+                "accel" => self.accel = req_f64(v, k)?,
+                "face_bytes" => self.face_bytes = req_f64(v, k)?,
+                "protocol" => {
+                    self.protocol = match v.as_str() {
+                        Some("ai_share") => AccelProtocol::AiShareOnly,
+                        Some("emulation") => AccelProtocol::Emulation,
+                        other => anyhow::bail!("bad protocol: {:?}", other),
+                    }
+                }
+                other => anyhow::bail!("unknown config key: {other}"),
+            }
+        }
+        // Keep partition count consistent if consumers changed.
+        if self.deployment.partitions < self.deployment.consumers {
+            self.deployment.partitions = self.deployment.consumers;
+        }
+        Ok(self)
+    }
+
+    pub fn load_file(self, path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        self.from_json(&j)
+    }
+}
+
+fn req_u64(v: &Json, key: &str) -> anyhow::Result<u64> {
+    v.as_u64()
+        .ok_or_else(|| anyhow::anyhow!("config key {key} must be a non-negative integer"))
+}
+
+fn req_f64(v: &Json, key: &str) -> anyhow::Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("config key {key} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_deployments_validate() {
+        Deployment::facerec_paper().validate().unwrap();
+        Deployment::facerec_accel().validate().unwrap();
+        Deployment::objdet_accel().validate().unwrap();
+    }
+
+    #[test]
+    fn replication_cannot_exceed_brokers() {
+        let mut d = Deployment::facerec_paper();
+        d.brokers = 2;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn partitions_must_cover_consumers() {
+        let mut d = Deployment::facerec_paper();
+        d.partitions = d.consumers - 1;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn json_overlay() {
+        let j = Json::parse(r#"{"producers": 10, "accel": 4.0, "protocol": "ai_share"}"#).unwrap();
+        let c = Config::default().from_json(&j).unwrap();
+        assert_eq!(c.deployment.producers, 10);
+        assert_eq!(c.accel, 4.0);
+        assert_eq!(c.protocol, AccelProtocol::AiShareOnly);
+    }
+
+    #[test]
+    fn json_overlay_rejects_unknown_key() {
+        let j = Json::parse(r#"{"producrs": 10}"#).unwrap();
+        assert!(Config::default().from_json(&j).is_err());
+    }
+
+    #[test]
+    fn consumer_increase_bumps_partitions() {
+        let j = Json::parse(r#"{"consumers": 5000}"#).unwrap();
+        let c = Config::default().from_json(&j).unwrap();
+        assert!(c.deployment.partitions >= 5000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Live-mode coordination: the three-layer stack running for real.
+//!
+//! Threads stand in for the paper's containers: producer threads generate
+//! synthetic video frames and run *real* PJRT inference (preprocess +
+//! detect), publish face thumbnails through the real broker substrate
+//! (`broker::Controller` + linger-batching `Producer` clients, 3x
+//! replication, real segment files when a `FileBackend` is used), and
+//! consumer threads fetch with real `fetch.min.bytes` semantics and run
+//! identification inference. Python never runs.
+
+pub mod live;
+
+pub use live::{LiveConfig, LiveReport, LiveRunner};

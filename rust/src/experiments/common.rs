@@ -1,0 +1,87 @@
+//! Shared experiment plumbing.
+
+use crate::config::{Config, Deployment};
+use crate::util::units::SEC;
+
+/// Experiment fidelity: quick runs for CI/tests, full runs for benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    Quick,
+    Full,
+}
+
+impl Fidelity {
+    pub fn from_env() -> Fidelity {
+        if std::env::var("AITAX_QUICK").is_ok() {
+            Fidelity::Quick
+        } else {
+            Fidelity::Full
+        }
+    }
+
+    /// Simulation horizon in microseconds.
+    pub fn horizon_us(&self) -> u64 {
+        match self {
+            Fidelity::Quick => 20 * SEC,
+            Fidelity::Full => 30 * SEC,
+        }
+    }
+}
+
+/// Baseline §4.2 Face Recognition config.
+pub fn facerec_baseline(fidelity: Fidelity) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::facerec_paper();
+    cfg.duration_us = fidelity.horizon_us();
+    cfg.seed = 0xBEEF;
+    cfg
+}
+
+/// §5.3 acceleration-emulation config at factor `k`.
+pub fn facerec_accel(k: f64, fidelity: Fidelity) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::facerec_accel();
+    cfg.duration_us = fidelity.horizon_us();
+    cfg.accel = k;
+    cfg.seed = 0xACCE1;
+    cfg
+}
+
+/// §6.3 Object Detection config at factor `k`.
+pub fn objdet_accel(k: f64, fidelity: Fidelity) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::objdet_accel();
+    cfg.duration_us = fidelity.horizon_us();
+    cfg.accel = k;
+    cfg.seed = 0xD07;
+    cfg
+}
+
+/// Format an optional latency, `None` printing as the paper's "∞" bars.
+pub fn fmt_latency(lat: Option<u64>) -> String {
+    match lat {
+        Some(us) => crate::util::units::fmt_us(us),
+        None => "∞ (unstable)".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_validate() {
+        for f in [Fidelity::Quick, Fidelity::Full] {
+            facerec_baseline(f).deployment.validate().unwrap();
+            facerec_accel(8.0, f).deployment.validate().unwrap();
+            objdet_accel(4.0, f).deployment.validate().unwrap();
+        }
+        assert!(Fidelity::Quick.horizon_us() < Fidelity::Full.horizon_us());
+    }
+
+    #[test]
+    fn latency_formatting() {
+        assert_eq!(fmt_latency(None), "∞ (unstable)");
+        assert!(fmt_latency(Some(351_200)).contains("ms"));
+    }
+}

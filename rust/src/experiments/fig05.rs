@@ -1,0 +1,57 @@
+//! Fig 5: relative computational latency of Face Recognition containers
+//! with core scaling.
+//!
+//! Paper: "Doubling the core count from one to two yields only a 16%
+//! reduction in latency in ingest/detect and a 36% reduction in
+//! identification. At larger core counts, the computational latency
+//! actually increases for both containers."
+
+use crate::config::calibration::CoreScaling;
+use crate::pipeline::scaling::{sweep, throughput_optimal_cores, ScalingPoint};
+
+pub struct Fig05 {
+    pub ingest_detect: Vec<ScalingPoint>,
+    pub identification: Vec<ScalingPoint>,
+    pub best_throughput_cores: usize,
+}
+
+pub fn run(max_cores: usize) -> Fig05 {
+    Fig05 {
+        ingest_detect: sweep(&CoreScaling::ingest_detect(), max_cores),
+        identification: sweep(&CoreScaling::identification(), max_cores),
+        best_throughput_cores: throughput_optimal_cores(&CoreScaling::identification(), 56),
+    }
+}
+
+pub fn print(r: &Fig05) {
+    println!("\nFig 5 — FR container core scaling (relative latency, 1.0 = one core)");
+    println!(
+        "  {:>6} {:>16} {:>16}   paper: 2 cores -> 0.84 / 0.64",
+        "cores", "ingest/detect", "identification"
+    );
+    for (a, b) in r.ingest_detect.iter().zip(&r.identification) {
+        println!(
+            "  {:>6} {:>16.3} {:>16.3}",
+            a.cores, a.relative_latency, b.relative_latency
+        );
+    }
+    println!(
+        "  throughput-optimal allocation: {} core(s)/container (paper §3.5: 1)",
+        r.best_throughput_cores
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoted_points_and_upturn() {
+        let r = run(16);
+        assert!((r.ingest_detect[1].relative_latency - 0.84).abs() < 0.01);
+        assert!((r.identification[1].relative_latency - 0.64).abs() < 0.01);
+        // The upturn: 16 cores worse than 4.
+        assert!(r.ingest_detect[15].relative_latency > r.ingest_detect[3].relative_latency);
+        assert_eq!(r.best_throughput_cores, 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig 8: per-process CPU-time breakdowns.
+//!
+//! Paper: ingestion splits ~evenly between extraction and resizing;
+//! detection is only 42% AI (25% crop/resize, 13% "other", ...);
+//! identification is 88% AI with 8% Kafka client. These proportions are
+//! both an *input* to the stage cost models (calibration) and an *output*
+//! of the live run: with artifacts present, the live three-layer pipeline
+//! measures its own AI-vs-support split for comparison.
+
+use crate::config::calibration::CpuBreakdown;
+
+pub struct StageRows {
+    pub stage: &'static str,
+    pub rows: Vec<(&'static str, f64)>,
+    pub ai_fraction: f64,
+}
+
+pub fn run() -> Vec<StageRows> {
+    let b = CpuBreakdown::default();
+    let ai_of = |rows: &[(&str, f64)]| {
+        rows.iter()
+            .filter(|(n, _)| n.starts_with("ai"))
+            .map(|(_, f)| f)
+            .sum()
+    };
+    vec![
+        StageRows {
+            stage: "ingestion",
+            rows: b.ingestion.to_vec(),
+            ai_fraction: ai_of(b.ingestion),
+        },
+        StageRows {
+            stage: "detection",
+            rows: b.detection.to_vec(),
+            ai_fraction: ai_of(b.detection),
+        },
+        StageRows {
+            stage: "identification",
+            rows: b.identification.to_vec(),
+            ai_fraction: ai_of(b.identification),
+        },
+    ]
+}
+
+/// End-to-end cycle accounting (§4.3): AI constitutes 55.2% of cycles.
+pub fn end_to_end_ai_share() -> f64 {
+    // Weight each stage's AI share by its share of total compute cycles
+    // (per-frame: ingest 18.8 + detect 74.8 + identify 0.64*131.5).
+    let ingest = 18_800.0;
+    let detect = 74_800.0;
+    let identify = 0.64 * 131_500.0;
+    let total = ingest + detect + identify;
+    (0.0 * ingest + 0.42 * detect + 0.88 * identify) / total
+}
+
+pub fn print(stages: &[StageRows]) {
+    println!("\nFig 8 — per-process CPU-time breakdowns");
+    for s in stages {
+        println!("  {} (AI share {:.0}%):", s.stage, 100.0 * s.ai_fraction);
+        for (name, frac) in &s.rows {
+            println!("    {:<24} {:>5.1}%", name, frac * 100.0);
+        }
+    }
+    println!(
+        "  end-to-end AI share: {:.1}% (paper §4.3: 55.2%)",
+        100.0 * end_to_end_ai_share()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ai_shares() {
+        let stages = run();
+        assert_eq!(stages[0].ai_fraction, 0.0);
+        assert!((stages[1].ai_fraction - 0.42).abs() < 1e-9);
+        assert!((stages[2].ai_fraction - 0.88).abs() < 1e-9);
+    }
+
+    #[test]
+    fn end_to_end_share_near_paper() {
+        // Paper: 55.2% of end-to-end cycles are AI. Our stage-weighted
+        // estimate lands slightly higher because the paper's denominator
+        // also counts cycles outside the three stage means (networking
+        // 9.0%, Kafka processing 3.6%, tensor prep 5.2% — §4.3).
+        let s = end_to_end_ai_share();
+        assert!((0.50..0.65).contains(&s), "share={s}");
+        assert!(s > 0.5, "AI is the majority but far from all of it");
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig 9: Amdahl's-law projected speedups of individual processes under
+//! AI-only acceleration.
+
+use crate::accel::amdahl::AmdahlCurve;
+
+pub const FACTORS: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 24.0, 32.0];
+
+pub struct Fig09 {
+    pub curves: Vec<(AmdahlCurve, Vec<(f64, f64)>)>,
+}
+
+pub fn run() -> Fig09 {
+    Fig09 {
+        curves: AmdahlCurve::facerec()
+            .into_iter()
+            .map(|c| {
+                let sweep = c.sweep(&FACTORS);
+                (c, sweep)
+            })
+            .collect(),
+    }
+}
+
+pub fn print(r: &Fig09) {
+    println!("\nFig 9 — Amdahl projections (overall stage speedup at AI speedup k)");
+    print!("  {:>16}", "k");
+    for k in FACTORS {
+        print!(" {:>8.0}", k);
+    }
+    println!(" {:>10}", "asymptote");
+    for (curve, sweep) in &r.curves {
+        print!("  {:>16}", curve.stage);
+        for (_, s) in sweep {
+            print!(" {:>8.2}", s);
+        }
+        if curve.asymptote().is_finite() {
+            println!(" {:>10.2}", curve.asymptote());
+        } else {
+            println!(" {:>10}", "∞");
+        }
+    }
+    println!("  paper: detection 1.59x@8x, 1.66x@16x (asym 1.74); identification 5.6x@16x, 6.6x@32x (asym 8.3)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_cover_all_three_stages() {
+        let r = run();
+        assert_eq!(r.curves.len(), 3);
+        let det = &r.curves[1];
+        // k=8 is index 3.
+        assert!((det.1[3].1 - 1.59).abs() < 0.02);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig 10 + §5.5: Face Recognition latency/throughput under increasing
+//! AI acceleration (emulation protocol, 1 face/frame).
+//!
+//! Paper: latency falls and throughput rises through 6×; at 8× "latency
+//! tending toward infinity — an unstable system in queueing theory".
+//! §5.5: the waiting-time share grows 64.6% → 66.4% → 68.0% → 79.1%
+//! (1×, 2×, 4×, 6×).
+
+use crate::experiments::common::{facerec_accel, Fidelity};
+use crate::pipeline::facerec::{FaceRecSim, SimReport};
+use crate::util::units::fmt_us;
+
+pub const FACTORS: [f64; 5] = [1.0, 2.0, 4.0, 6.0, 8.0];
+
+pub struct Fig10 {
+    pub reports: Vec<SimReport>,
+}
+
+pub fn run(fidelity: Fidelity) -> Fig10 {
+    Fig10 {
+        reports: FACTORS
+            .iter()
+            .map(|&k| FaceRecSim::new(facerec_accel(k, fidelity)).run())
+            .collect(),
+    }
+}
+
+pub fn print(r: &Fig10) {
+    println!("\nFig 10 — FR latency & throughput under AI acceleration (1 face/frame)");
+    println!(
+        "  {:>5} {:>16} {:>14} {:>12} {:>10}",
+        "k", "mean latency", "throughput", "wait share", "stable?"
+    );
+    for rep in &r.reports {
+        let lat = rep.verdict.latency_or_inf(rep.e2e_mean_us as u64);
+        println!(
+            "  {:>5} {:>16} {:>11.0} f/s {:>11.1}% {:>10}",
+            rep.accel,
+            crate::experiments::common::fmt_latency(lat),
+            rep.throughput_fps,
+            100.0 * rep.wait_fraction,
+            if rep.verdict.stable { "yes" } else { "NO" }
+        );
+    }
+    println!("  paper: stable through 6x; ∞ at 8x; wait share 64.6/66.4/68.0/79.1%");
+    let one = &r.reports[0];
+    println!(
+        "  1x reference: e2e {} (higher than Fig 6's 351 ms — 1 face/frame, §5.3)",
+        fmt_us(one.e2e_mean_us as u64)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_instability_at_8x() {
+        let r = run(Fidelity::Quick);
+        // Stable through 6x, unstable at 8x — the paper's headline.
+        for rep in &r.reports[..4] {
+            assert!(rep.verdict.stable, "{}x should be stable", rep.accel);
+        }
+        assert!(!r.reports[4].verdict.stable, "8x should be unstable");
+    }
+
+    #[test]
+    fn throughput_scales_until_saturation() {
+        let r = run(Fidelity::Quick);
+        let t1 = r.reports[0].throughput_fps;
+        let t4 = r.reports[2].throughput_fps;
+        assert!(t4 > 3.0 * t1, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn wait_share_grows_with_acceleration() {
+        let r = run(Fidelity::Quick);
+        // §5.5's monotone trend over the stable region.
+        let shares: Vec<f64> = r.reports[..4].iter().map(|x| x.wait_fraction).collect();
+        assert!(
+            shares.windows(2).all(|w| w[1] > w[0] - 0.02),
+            "wait shares not rising: {shares:?}"
+        );
+        assert!(shares[0] > 0.5 && shares[3] > shares[0]);
+    }
+
+    #[test]
+    fn latency_decreases_while_stable() {
+        let r = run(Fidelity::Quick);
+        assert!(r.reports[2].e2e_mean_us < r.reports[0].e2e_mean_us);
+    }
+}

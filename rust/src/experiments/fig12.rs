@@ -1,0 +1,47 @@
+//! Fig 12: Object Detection core scaling — near-linear, unlike FR.
+//!
+//! Paper: "the detection stage of Object Detection shows near linear
+//! speedups with increasing core count. Through testing, we determined to
+//! allocate 14 cores per container."
+
+use crate::config::calibration::CoreScaling;
+use crate::pipeline::scaling::{best_cores, sweep, ScalingPoint};
+
+pub struct Fig12 {
+    pub detection: Vec<ScalingPoint>,
+    pub best_cores: usize,
+}
+
+pub fn run(max_cores: usize) -> Fig12 {
+    Fig12 {
+        detection: sweep(&CoreScaling::objdet_detection(), max_cores),
+        best_cores: best_cores(&CoreScaling::objdet_detection(), max_cores),
+    }
+}
+
+pub fn print(r: &Fig12) {
+    println!("\nFig 12 — Object Detection core scaling (relative latency)");
+    println!("  {:>6} {:>16} {:>10}", "cores", "rel latency", "speedup");
+    for p in &r.detection {
+        println!("  {:>6} {:>16.3} {:>10.2}", p.cores, p.relative_latency, p.speedup);
+    }
+    println!(
+        "  latency-optimal cores (within 28): {} (paper allocates 14/container)",
+        r.best_cores
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_linear_scaling() {
+        let r = run(14);
+        // ≥10x speedup at 14 cores and monotone improvement throughout.
+        assert!(r.detection[13].speedup > 10.0, "{}", r.detection[13].speedup);
+        for w in r.detection.windows(2) {
+            assert!(w[1].relative_latency < w[0].relative_latency);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Fig 14: Object Detection under acceleration.
+//!
+//! Paper: throughput 630 FPS at 1×, "scales pretty well up to 8×, but it
+//! falls short of what is expected at 12× and the system saturates by
+//! 16×"; a new "Delay" component appears as the producer send path
+//! overruns the 33.3 ms tick.
+
+use crate::experiments::common::{objdet_accel, Fidelity};
+use crate::pipeline::objdet::{ObjDetReport, ObjDetSim};
+
+pub const FACTORS: [f64; 6] = [1.0, 2.0, 4.0, 8.0, 12.0, 16.0];
+
+pub struct Fig14 {
+    pub reports: Vec<ObjDetReport>,
+}
+
+pub fn run(fidelity: Fidelity) -> Fig14 {
+    Fig14 {
+        reports: FACTORS
+            .iter()
+            .map(|&k| ObjDetSim::new(objdet_accel(k, fidelity)).run())
+            .collect(),
+    }
+}
+
+pub fn print(r: &Fig14) {
+    println!("\nFig 14 — Object Detection latency & throughput under acceleration");
+    println!(
+        "  {:>5} {:>12} {:>12} {:>12} {:>12} {:>10} {:>8}",
+        "k", "delay", "wait", "detect", "e2e", "FPS", "stable?"
+    );
+    for rep in &r.reports {
+        let e2e = rep.verdict.latency_or_inf(rep.e2e_mean_us as u64);
+        println!(
+            "  {:>5} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>12} {:>10.0} {:>8}",
+            rep.accel,
+            rep.delay_mean_us / 1000.0,
+            rep.wait_mean_us / 1000.0,
+            rep.detect_mean_us / 1000.0,
+            crate::experiments::common::fmt_latency(e2e),
+            rep.throughput_fps,
+            if rep.verdict.stable { "yes" } else { "NO" }
+        );
+    }
+    println!("  paper: 630 FPS at 1x; scales to 8x; falls short at 12x; saturates >=16x;");
+    println!("         the Delay component appears when the send path overruns the tick");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_scaling_shape() {
+        let r = run(Fidelity::Quick);
+        let fps: Vec<f64> = r.reports.iter().map(|x| x.throughput_fps).collect();
+        // ~630 at 1x (within 10%).
+        assert!((fps[0] - 630.0).abs() < 63.0, "{}", fps[0]);
+        // Scales well to 8x...
+        assert!(fps[3] > 0.85 * 8.0 * 630.0, "8x fps {}", fps[3]);
+        // ...saturates by 16x (well short of 16x the baseline).
+        assert!(fps[5] < 0.85 * 16.0 * 630.0, "16x fps {}", fps[5]);
+    }
+
+    #[test]
+    fn sixteen_x_unstable_with_delay() {
+        let r = run(Fidelity::Quick);
+        let k16 = &r.reports[5];
+        assert!(!k16.verdict.stable || k16.delay_mean_us > 30_000.0);
+        assert!(k16.producer_send_util > 0.9, "{}", k16.producer_send_util);
+        // Stable through 8x.
+        for rep in &r.reports[..4] {
+            assert!(rep.verdict.stable, "{}x unstable", rep.accel);
+        }
+    }
+}

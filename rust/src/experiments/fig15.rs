@@ -1,0 +1,168 @@
+//! Fig 15: unlocking higher speedups — the three §7.1 mitigations.
+//!
+//! (a) more NVMe drives per broker: 1 drive < 8×; 2 → 12×; 3 → 24×;
+//!     4 → 32×.
+//! (b) more brokers: 3 → <8×; 4 → 8×; 6 → 16×; 8 → 32×.
+//! (c) smaller thumbnails: ÷2, ÷4, ÷8 raise the supportable factor
+//!     proportionally.
+
+use crate::experiments::common::{facerec_accel, Fidelity};
+use crate::pipeline::facerec::FaceRecSim;
+
+pub const FACTORS: [f64; 5] = [8.0, 12.0, 16.0, 24.0, 32.0];
+
+/// One sweep cell: is the system stable at this (variant, k)?
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub k: f64,
+    pub stable: bool,
+    pub latency_us: Option<u64>,
+    pub storage_write_util: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub label: String,
+    pub cells: Vec<Cell>,
+    /// Highest stable factor ("unlocked speedup").
+    pub unlocked: Option<f64>,
+}
+
+fn sweep_variant(label: String, fidelity: Fidelity, mutate: impl Fn(&mut crate::config::Config)) -> Variant {
+    let mut cells = Vec::new();
+    for &k in &FACTORS {
+        let mut cfg = facerec_accel(k, fidelity);
+        mutate(&mut cfg);
+        let r = FaceRecSim::new(cfg).run();
+        cells.push(Cell {
+            k,
+            stable: r.verdict.stable,
+            latency_us: r.verdict.latency_or_inf(r.e2e_mean_us as u64),
+            storage_write_util: r.storage_write_util,
+        });
+    }
+    let unlocked = cells.iter().filter(|c| c.stable).map(|c| c.k).fold(None, |m: Option<f64>, k| {
+        Some(m.map_or(k, |m| m.max(k)))
+    });
+    Variant {
+        label,
+        cells,
+        unlocked,
+    }
+}
+
+pub struct Fig15 {
+    pub drives: Vec<Variant>,
+    pub brokers: Vec<Variant>,
+    pub sizes: Vec<Variant>,
+}
+
+pub fn run(fidelity: Fidelity) -> Fig15 {
+    let drives = [1usize, 2, 3, 4]
+        .iter()
+        .map(|&d| {
+            sweep_variant(format!("{d} drive(s)/broker"), fidelity, move |cfg| {
+                cfg.deployment.drives_per_broker = d;
+            })
+        })
+        .collect();
+    let brokers = [3usize, 4, 6, 8]
+        .iter()
+        .map(|&b| {
+            sweep_variant(format!("{b} brokers"), fidelity, move |cfg| {
+                cfg.deployment.brokers = b;
+            })
+        })
+        .collect();
+    let sizes = [1.0f64, 0.5, 0.25, 0.125]
+        .iter()
+        .map(|&s| {
+            sweep_variant(format!("{:.0}% thumbnails", s * 100.0), fidelity, move |cfg| {
+                cfg.face_bytes = 37_300.0 * s;
+            })
+        })
+        .collect();
+    Fig15 {
+        drives,
+        brokers,
+        sizes,
+    }
+}
+
+fn print_block(title: &str, variants: &[Variant], paper: &str) {
+    println!("\n{title}");
+    print!("  {:<22}", "");
+    for k in FACTORS {
+        print!(" {:>9}", format!("{k}x"));
+    }
+    println!(" {:>10}", "unlocked");
+    for v in variants {
+        print!("  {:<22}", v.label);
+        for c in &v.cells {
+            print!(
+                " {:>9}",
+                if c.stable {
+                    format!("{:.0}ms", c.latency_us.unwrap_or(0) as f64 / 1000.0)
+                } else {
+                    "∞".to_string()
+                }
+            );
+        }
+        println!(
+            " {:>10}",
+            v.unlocked
+                .map(|k| format!("{k}x"))
+                .unwrap_or_else(|| "<8x".into())
+        );
+    }
+    println!("  paper: {paper}");
+}
+
+pub fn print(r: &Fig15) {
+    print_block(
+        "Fig 15a — additional storage drives per broker",
+        &r.drives,
+        "1 drive <8x; 2 drives ->12x; 3 ->24x; 4 ->32x",
+    );
+    print_block(
+        "Fig 15b — additional brokers",
+        &r.brokers,
+        "3 <8x; 4 ->8x; 6 ->16x; 8 ->32x",
+    );
+    print_block(
+        "Fig 15c — smaller face thumbnails",
+        &r.sizes,
+        "halving sizes raises the supportable factor proportionally",
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One focused test per mitigation keeps test time manageable; the
+    // full grid runs in the bench.
+
+    #[test]
+    fn drives_unlock_higher_factors() {
+        let f = Fidelity::Quick;
+        let one = sweep_variant("1".into(), f, |c| c.deployment.drives_per_broker = 1);
+        let four = sweep_variant("4".into(), f, |c| c.deployment.drives_per_broker = 4);
+        assert_eq!(one.unlocked, None, "1 drive should fail at 8x: {:?}", one.cells);
+        assert_eq!(four.unlocked, Some(32.0), "{:?}", four.cells);
+    }
+
+    #[test]
+    fn brokers_unlock_higher_factors() {
+        let f = Fidelity::Quick;
+        let eight = sweep_variant("8".into(), f, |c| c.deployment.brokers = 8);
+        assert_eq!(eight.unlocked, Some(32.0), "{:?}", eight.cells);
+    }
+
+    #[test]
+    fn smaller_thumbs_unlock_higher_factors() {
+        let f = Fidelity::Quick;
+        let eighth = sweep_variant("1/8".into(), f, |c| c.face_bytes = 37_300.0 / 8.0);
+        assert_eq!(eighth.unlocked, Some(32.0), "{:?}", eighth.cells);
+    }
+}

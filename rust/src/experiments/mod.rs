@@ -1,0 +1,21 @@
+//! Experiment drivers: one module per figure/table of the paper.
+//!
+//! Each module exposes a `run(...)` returning structured results and a
+//! `print_*` helper producing the same rows/series the paper reports with
+//! the paper's values side by side. The `cargo bench` targets and the
+//! `aitax experiment <id>` CLI both call into these.
+
+pub mod ablation;
+pub mod common;
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod table34;

@@ -1,0 +1,89 @@
+//! Tables 3 & 4 + §7.2–§7.3: equipment bills and the TCO comparison.
+//!
+//! Paper: homogeneous 1024-node DC equipment $33,577,760; purpose-built
+//! $27,878,431; yearly TCO $12.9M vs $10.8M — 16.6% lower (abstract: 15%).
+
+use crate::tco::catalog::Catalog;
+use crate::tco::designs::{
+    homogeneous_1024, homogeneous_1024_upgraded, purpose_built, savings_fraction, summarize,
+    DataCenterDesign, TcoSummary,
+};
+use crate::tco::power::PowerModel;
+
+pub struct Table34 {
+    pub homogeneous: DataCenterDesign,
+    pub homogeneous_upgraded: DataCenterDesign,
+    pub purpose_built: DataCenterDesign,
+    pub homo_tco: TcoSummary,
+    pub homo_up_tco: TcoSummary,
+    pub pb_tco: TcoSummary,
+    pub savings: f64,
+}
+
+pub fn run() -> Table34 {
+    let catalog = Catalog::default();
+    let power = PowerModel::default();
+    let homogeneous = homogeneous_1024(&catalog);
+    let homogeneous_upgraded = homogeneous_1024_upgraded(&catalog);
+    let purpose = purpose_built(&catalog);
+    Table34 {
+        homo_tco: summarize(&homogeneous, &power),
+        homo_up_tco: summarize(&homogeneous_upgraded, &power),
+        pb_tco: summarize(&purpose, &power),
+        savings: savings_fraction(&power, &catalog),
+        homogeneous,
+        homogeneous_upgraded,
+        purpose_built: purpose,
+    }
+}
+
+fn print_design(d: &DataCenterDesign, t: &TcoSummary) {
+    println!("\n  {} data center:", d.name);
+    for item in &d.items {
+        println!(
+            "    {:<56} ${:>12.0}  x{}",
+            item.name,
+            item.unit_price,
+            item.quantity
+        );
+    }
+    println!("    {:<56} ${:>12.0}", "TOTAL EQUIPMENT", d.equipment_cost());
+    println!(
+        "    yearly: equipment ${:.2}M + power ${:.2}M + facilities ${:.2}M = ${:.2}M",
+        t.yearly_equipment / 1e6,
+        t.yearly_power / 1e6,
+        t.yearly_facilities / 1e6,
+        t.yearly_total / 1e6
+    );
+}
+
+pub fn print(r: &Table34) {
+    println!("\nTables 3 & 4 — data-center designs and TCO");
+    print_design(&r.homogeneous, &r.homo_tco);
+    println!("    paper Table 3 total: $33,577,760; yearly ~$12.9M");
+    print_design(&r.purpose_built, &r.pb_tco);
+    println!("    paper Table 4 total: $27,878,431; yearly ~$10.8M");
+    println!(
+        "\n  purpose-built saves {:.1}% yearly vs the 32x-ready homogeneous design",
+        100.0 * r.savings
+    );
+    println!("  (paper §7.3: 16.6% lower; abstract: >15%)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equipment_totals_match_paper_exactly() {
+        let r = run();
+        assert_eq!(r.homogeneous.equipment_cost(), 33_577_760.0);
+        assert_eq!(r.purpose_built.equipment_cost(), 27_878_431.0);
+    }
+
+    #[test]
+    fn savings_in_paper_band() {
+        let r = run();
+        assert!((0.14..0.19).contains(&r.savings), "{}", r.savings);
+    }
+}

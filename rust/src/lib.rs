@@ -1,0 +1,44 @@
+//! # aitax
+//!
+//! End-to-end reproduction of *AI Tax: The Hidden Cost of AI Data Center
+//! Applications* (Richins et al.).
+//!
+//! The crate implements the paper's full system as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the data-center coordination substrate: a
+//!   Kafka-like broker ([`broker`]), storage and network device models
+//!   ([`storage`], [`net`]), a discrete-event simulator ([`sim`]), the
+//!   *Face Recognition* and *Object Detection* pipelines ([`pipeline`]),
+//!   acceleration emulation ([`accel`]), cluster deployment ([`cluster`]),
+//!   instrumentation ([`metrics`]), the TCO model ([`tco`]), and the
+//!   experiment drivers that regenerate every figure and table of the paper
+//!   ([`experiments`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX face pipeline models
+//!   (detect / embed / classify / preprocess), AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (conv2d, matmul,
+//!   bilinear resize) the Layer-2 models are built from.
+//!
+//! At run time only Rust executes: [`runtime`] loads the AOT artifacts via
+//! PJRT and [`coordinator`] drives live, threaded deployments where real
+//! bytes flow through the broker substrate and real inference runs on the
+//! consumer hot path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod accel;
+pub mod broker;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod tco;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,194 @@
+//! `aitax` — CLI for the AI-Tax reproduction.
+//!
+//! Subcommands:
+//!   run         live three-layer pipeline (PJRT inference + real broker)
+//!   experiment  regenerate a paper figure/table: fig5..fig15, tco, all
+//!   sim         one Face Recognition simulation with overrides
+//!   amdahl      Fig-9 analytic projections
+//!   artifacts   check/describe the AOT artifacts
+
+use aitax::coordinator::live::{LiveConfig, LiveRunner};
+use aitax::experiments as ex;
+use aitax::experiments::common::Fidelity;
+use aitax::pipeline::facerec::FaceRecSim;
+use aitax::util::cli::Args;
+use aitax::util::units::fmt_us;
+
+const USAGE: &str = "\
+aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Applications'
+
+USAGE:
+  aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
+            [--file-backed] [--batched]
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|all>
+            [--quick]
+  aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
+            [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
+  aitax amdahl
+  aitax artifacts
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("amdahl") => {
+            ex::fig09::print(&ex::fig09::run());
+            Ok(())
+        }
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = LiveConfig {
+        producers: args.get_u64("producers", 2) as usize,
+        consumers: args.get_u64("consumers", 4) as usize,
+        partitions: args.get_u64("partitions", 8) as u32,
+        duration: std::time::Duration::from_secs(args.get_u64("secs", 10)),
+        fps_limit: args.get_f64("fps", 0.0),
+        file_backed: args.flag("file-backed"),
+        batched_identify: args.flag("batched"),
+        ..LiveConfig::default()
+    };
+    println!(
+        "live run: {} producers, {} consumers, {} brokers, {:?} ...",
+        cfg.producers, cfg.consumers, cfg.brokers, cfg.duration
+    );
+    let report = LiveRunner::new(cfg).run()?;
+    print!("{}", report.breakdown.render("live latency breakdown"));
+    println!(
+        "frames {} | faces {} -> identified {} | {:.1} FPS | broker logs {}",
+        report.frames,
+        report.faces_produced,
+        report.faces_identified,
+        report.throughput_fps,
+        aitax::util::units::fmt_bytes(report.broker_log_bytes as f64),
+    );
+    if !report.identities.is_empty() {
+        let top: Vec<String> = report
+            .identities
+            .iter()
+            .take(6)
+            .map(|(p, n)| format!("#{p}x{n}"))
+            .collect();
+        println!("identities seen: {}", top.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let run_one = |name: &str| -> anyhow::Result<()> {
+        match name {
+            "fig5" => ex::fig05::print(&ex::fig05::run(16)),
+            "fig6" => ex::fig06::print(&ex::fig06::run(fidelity)),
+            "fig7" => ex::fig07::print(&ex::fig07::run(fidelity)),
+            "fig8" => ex::fig08::print(&ex::fig08::run()),
+            "fig9" => ex::fig09::print(&ex::fig09::run()),
+            "fig10" => ex::fig10::print(&ex::fig10::run(fidelity)),
+            "fig11" => ex::fig11::print(&ex::fig11::run(fidelity)),
+            "fig12" => ex::fig12::print(&ex::fig12::run(14)),
+            "fig13" => ex::fig13::print(&ex::fig13::run(fidelity)),
+            "fig14" => ex::fig14::print(&ex::fig14::run(fidelity)),
+            "fig15" => ex::fig15::print(&ex::fig15::run(fidelity)),
+            "tco" | "table3" | "table4" => ex::table34::print(&ex::table34::run()),
+            other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+            "fig15", "tco",
+        ] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = aitax::config::Config::default();
+    if let Some(path) = args.get("config") {
+        cfg = cfg.load_file(path)?;
+    }
+    if args.get("accel").is_some() {
+        cfg.deployment = aitax::config::Deployment::facerec_accel();
+        cfg.accel = args.get_f64("accel", 1.0);
+    }
+    cfg.deployment.producers = args.get_u64("producers", cfg.deployment.producers as u64) as usize;
+    cfg.deployment.consumers = args.get_u64("consumers", cfg.deployment.consumers as u64) as usize;
+    cfg.deployment.brokers = args.get_u64("brokers", cfg.deployment.brokers as u64) as usize;
+    cfg.deployment.drives_per_broker =
+        args.get_u64("drives", cfg.deployment.drives_per_broker as u64) as usize;
+    cfg.deployment.partitions = cfg.deployment.partitions.max(cfg.deployment.consumers);
+    cfg.face_bytes = args.get_f64("face-bytes", cfg.face_bytes);
+    cfg.duration_us = args.get_u64("secs", cfg.duration_us / 1_000_000) * 1_000_000;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.deployment.validate()?;
+    println!(
+        "sim: {}p/{}c/{}b x{} drives, accel {}x, {}s, {} faces",
+        cfg.deployment.producers,
+        cfg.deployment.consumers,
+        cfg.deployment.brokers,
+        cfg.deployment.drives_per_broker,
+        cfg.accel,
+        cfg.duration_us / 1_000_000,
+        aitax::util::units::fmt_bytes(cfg.face_bytes),
+    );
+    let r = FaceRecSim::new(cfg).run();
+    println!(
+        "  ingest {} | detect {} | wait {} | identify {} | e2e {} (p99 {})",
+        fmt_us(r.ingest_mean_us as u64),
+        fmt_us(r.detect_mean_us as u64),
+        fmt_us(r.wait_mean_us as u64),
+        fmt_us(r.identify_mean_us as u64),
+        fmt_us(r.e2e_mean_us as u64),
+        fmt_us(r.e2e_p99_us),
+    );
+    println!(
+        "  throughput {:.0} faces/s | wait share {:.1}% | storage write {:.1}% | {}",
+        r.throughput_fps,
+        100.0 * r.wait_fraction,
+        100.0 * r.storage_write_util,
+        if r.verdict.stable {
+            "stable".to_string()
+        } else {
+            format!("UNSTABLE (+{:.0} faces/s)", r.verdict.growth_per_sec)
+        }
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let dir = aitax::runtime::Manifest::default_dir();
+    let manifest = aitax::runtime::Manifest::load(&dir)?;
+    println!("artifacts at {}:", dir.display());
+    for (name, e) in &manifest.entries {
+        let size = std::fs::metadata(&e.file).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "  {:<16} in {:?} -> out {:?}  ({})",
+            name,
+            e.input_shapes,
+            e.output_shapes,
+            aitax::util::units::fmt_bytes(size as f64)
+        );
+    }
+    let engine = aitax::runtime::Engine::load(&dir)?;
+    println!("compiled OK on {}", engine.platform());
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Byte meters for the Fig-11 bandwidth-utilization breakdowns.
+//!
+//! The paper plots, per container class (producer / consumer / broker) and
+//! direction (read / write), network and storage bandwidth as a fraction of
+//! capacity. A [`BandwidthMeter`] accumulates bytes per (class, channel,
+//! direction) tuple and converts to utilization given the elapsed virtual
+//! time and the per-node capacity.
+
+use std::collections::BTreeMap;
+
+/// Node class, matching the paper's container classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Class {
+    Producer,
+    Consumer,
+    Broker,
+}
+
+impl Class {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Class::Producer => "producer",
+            Class::Consumer => "consumer",
+            Class::Broker => "broker",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Channel {
+    Network,
+    Storage,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Accumulates bytes by (class, channel, direction).
+#[derive(Clone, Debug, Default)]
+pub struct BandwidthMeter {
+    bytes: BTreeMap<(Class, Channel, Dir), f64>,
+    /// Node count per class, to report *per-node* utilization like Fig 11.
+    nodes: BTreeMap<Class, usize>,
+}
+
+impl BandwidthMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_nodes(&mut self, class: Class, count: usize) {
+        self.nodes.insert(class, count.max(1));
+    }
+
+    #[inline]
+    pub fn add(&mut self, class: Class, channel: Channel, dir: Dir, bytes: f64) {
+        *self.bytes.entry((class, channel, dir)).or_insert(0.0) += bytes;
+    }
+
+    pub fn total(&self, class: Class, channel: Channel, dir: Dir) -> f64 {
+        self.bytes.get(&(class, channel, dir)).copied().unwrap_or(0.0)
+    }
+
+    /// Mean per-node bandwidth in bytes/s over `[0, elapsed_us]`.
+    pub fn per_node_bw(&self, class: Class, channel: Channel, dir: Dir, elapsed_us: u64) -> f64 {
+        if elapsed_us == 0 {
+            return 0.0;
+        }
+        let nodes = *self.nodes.get(&class).unwrap_or(&1) as f64;
+        self.total(class, channel, dir) * 1e6 / (elapsed_us as f64 * nodes)
+    }
+
+    /// Per-node utilization as a fraction of `capacity_bytes_per_sec`.
+    pub fn utilization(
+        &self,
+        class: Class,
+        channel: Channel,
+        dir: Dir,
+        elapsed_us: u64,
+        capacity: f64,
+    ) -> f64 {
+        if capacity <= 0.0 {
+            return 0.0;
+        }
+        self.per_node_bw(class, channel, dir, elapsed_us) / capacity
+    }
+
+    /// Render the Fig-11-style table.
+    pub fn render(&self, elapsed_us: u64, net_capacity: f64, storage_capacity: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "  {:<10} {:<8} {:>14} {:>14} {:>12}\n",
+            "class", "channel", "read", "write", "unit"
+        ));
+        for class in [Class::Producer, Class::Consumer, Class::Broker] {
+            for (channel, cap) in [(Channel::Network, net_capacity), (Channel::Storage, storage_capacity)] {
+                let r = self.utilization(class, channel, Dir::Read, elapsed_us, cap);
+                let w = self.utilization(class, channel, Dir::Write, elapsed_us, cap);
+                if r == 0.0 && w == 0.0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "  {:<10} {:<8} {:>13.2}% {:>13.2}% {:>12}\n",
+                    class.name(),
+                    match channel {
+                        Channel::Network => "net",
+                        Channel::Storage => "disk",
+                    },
+                    r * 100.0,
+                    w * 100.0,
+                    "of capacity"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_utilize() {
+        let mut m = BandwidthMeter::new();
+        m.set_nodes(Class::Broker, 3);
+        // 3 brokers write 330 MB total over 1s -> 110 MB/s per node ->
+        // 10% of 1.1 GB/s (the paper's 1x Fig-11b point).
+        m.add(Class::Broker, Channel::Storage, Dir::Write, 330e6);
+        let u = m.utilization(Class::Broker, Channel::Storage, Dir::Write, 1_000_000, 1.1e9);
+        assert!((u - 0.10).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn missing_entries_are_zero() {
+        let m = BandwidthMeter::new();
+        assert_eq!(m.total(Class::Producer, Channel::Network, Dir::Read), 0.0);
+        assert_eq!(
+            m.utilization(Class::Producer, Channel::Network, Dir::Read, 100, 1e9),
+            0.0
+        );
+    }
+
+    #[test]
+    fn render_skips_empty_rows() {
+        let mut m = BandwidthMeter::new();
+        m.set_nodes(Class::Broker, 1);
+        m.add(Class::Broker, Channel::Network, Dir::Read, 1e6);
+        let text = m.render(1_000_000, 12.5e9, 1.1e9);
+        assert!(text.contains("broker"));
+        assert!(!text.contains("producer"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Stage-latency breakdowns (Figs 6, 13) and tail summaries (§4.2).
+
+use crate::metrics::event::{EventKind, EventLog};
+use crate::util::stats::Histogram;
+use crate::util::units::fmt_us;
+
+/// Aggregated stats for one pipeline stage.
+#[derive(Clone, Debug)]
+pub struct StageStat {
+    pub kind: EventKind,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub count: u64,
+}
+
+/// A full end-to-end latency breakdown.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub stages: Vec<StageStat>,
+    /// Per-frame end-to-end latency (sum over that frame's stage events).
+    pub e2e_mean_us: f64,
+    pub e2e_p99_us: u64,
+    pub frames: u64,
+}
+
+impl Breakdown {
+    /// Compute the breakdown from an event log. End-to-end latency per
+    /// frame is the sum of that frame's serial stage durations (the paper's
+    /// "total time of a frame progressing serially from ingestion through
+    /// identification").
+    pub fn from_log(log: &EventLog, kinds: &[EventKind]) -> Breakdown {
+        let mut stages = Vec::new();
+        for &kind in kinds {
+            let mut hist = Histogram::new();
+            for e in log.events().filter(|e| e.kind == kind) {
+                hist.record(e.compute_us.max(1));
+            }
+            stages.push(StageStat {
+                kind,
+                mean_us: hist.mean(),
+                p50_us: hist.p50(),
+                p99_us: hist.p99(),
+                max_us: hist.max() as u64,
+                count: hist.count(),
+            });
+        }
+
+        // Per-frame end-to-end totals.
+        let mut per_frame: std::collections::HashMap<u64, u64> = Default::default();
+        for e in log.events() {
+            if kinds.contains(&e.kind) {
+                *per_frame.entry(e.frame_id).or_insert(0) += e.compute_us;
+            }
+        }
+        let mut e2e = Histogram::new();
+        for (_, total) in per_frame.iter() {
+            e2e.record((*total).max(1));
+        }
+        Breakdown {
+            stages,
+            e2e_mean_us: e2e.mean(),
+            e2e_p99_us: e2e.p99(),
+            frames: e2e.count(),
+        }
+    }
+
+    /// Mean of one stage.
+    pub fn stage_mean(&self, kind: EventKind) -> f64 {
+        self.stages
+            .iter()
+            .find(|s| s.kind == kind)
+            .map(|s| s.mean_us)
+            .unwrap_or(0.0)
+    }
+
+    /// Fraction of the mean end-to-end latency spent in `kind` (the §4.2 /
+    /// §5.5 "waiting time constitutes X% of total latency" metric).
+    pub fn fraction(&self, kind: EventKind) -> f64 {
+        let total: f64 = self.stages.iter().map(|s| s.mean_us).sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.stage_mean(kind) / total
+        }
+    }
+
+    /// Sum of per-stage means — the Fig-6 bar total.
+    pub fn total_mean_us(&self) -> f64 {
+        self.stages.iter().map(|s| s.mean_us).sum()
+    }
+
+    /// Render as an aligned text table (what the benches print).
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("{title}\n");
+        out.push_str(&format!(
+            "  {:<16} {:>12} {:>12} {:>12} {:>8} {:>8}\n",
+            "stage", "mean", "p50", "p99", "count", "share"
+        ));
+        let total = self.total_mean_us();
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  {:<16} {:>12} {:>12} {:>12} {:>8} {:>7.1}%\n",
+                s.kind.name(),
+                fmt_us(s.mean_us as u64),
+                fmt_us(s.p50_us),
+                fmt_us(s.p99_us),
+                s.count,
+                if total > 0.0 { 100.0 * s.mean_us / total } else { 0.0 },
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<16} {:>12} {:>12} {:>12} {:>8}\n",
+            "end-to-end",
+            fmt_us(self.e2e_mean_us as u64),
+            "",
+            fmt_us(self.e2e_p99_us),
+            self.frames
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::event::Event;
+
+    fn ev(kind: EventKind, frame: u64, dur: u64) -> Event {
+        Event {
+            kind,
+            frame_id: frame,
+            start_us: 10,
+            compute_us: dur,
+            face_count: 1,
+            data_bytes: 0,
+        }
+    }
+
+    const FR: &[EventKind] = &[
+        EventKind::Ingestion,
+        EventKind::FaceDetection,
+        EventKind::BrokerWait,
+        EventKind::Identification,
+    ];
+
+    #[test]
+    fn breakdown_sums_and_fractions() {
+        let mut log = EventLog::new();
+        for f in 0..10 {
+            log.log(ev(EventKind::Ingestion, f, 18_800));
+            log.log(ev(EventKind::FaceDetection, f, 74_800));
+            log.log(ev(EventKind::BrokerWait, f, 126_100));
+            log.log(ev(EventKind::Identification, f, 131_500));
+        }
+        let b = Breakdown::from_log(&log, FR);
+        assert!((b.total_mean_us() - 351_200.0).abs() < 1.0);
+        // "over a third of the end-to-end latency is spent waiting"
+        let wait_frac = b.fraction(EventKind::BrokerWait);
+        assert!((wait_frac - 126_100.0 / 351_200.0).abs() < 1e-6);
+        assert!(wait_frac > 1.0 / 3.0);
+        assert_eq!(b.frames, 10);
+        assert!((b.e2e_mean_us - 351_200.0).abs() < 400.0); // histogram precision
+    }
+
+    #[test]
+    fn missing_stage_is_zero() {
+        let mut log = EventLog::new();
+        log.log(ev(EventKind::Ingestion, 0, 100));
+        let b = Breakdown::from_log(&log, FR);
+        assert_eq!(b.stage_mean(EventKind::Identification), 0.0);
+        assert_eq!(b.fraction(EventKind::Ingestion), 1.0);
+    }
+
+    #[test]
+    fn render_contains_all_stages() {
+        let mut log = EventLog::new();
+        log.log(ev(EventKind::Ingestion, 0, 100));
+        log.log(ev(EventKind::BrokerWait, 0, 300));
+        let b = Breakdown::from_log(&log, FR);
+        let text = b.render("test");
+        assert!(text.contains("ingestion"));
+        assert!(text.contains("broker wait"));
+        assert!(text.contains("end-to-end"));
+    }
+}

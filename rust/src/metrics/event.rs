@@ -1,0 +1,152 @@
+//! Event log: the paper's Listing-1 instrumentation.
+//!
+//! "We term the units of application progress 'events'; these are
+//! high-level steps in the application ... We capture high-level event
+//! information, such as the execution time of detect_faces, the number of
+//! faces found, and the size of the face data." (§4.1)
+//!
+//! The log is append-only and cheap (a Vec push), matching the paper's
+//! "negligible overhead" claim; aggregation happens after the run.
+
+/// Which pipeline step an event describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    Ingestion,
+    FaceDetection,
+    BrokerWait,
+    Identification,
+    /// Object Detection's pre-send delay (Fig 14's "Delay" component).
+    IngestDelay,
+    /// Object Detection's R-CNN stage.
+    ObjDetection,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Ingestion => "ingestion",
+            EventKind::FaceDetection => "face detection",
+            EventKind::BrokerWait => "broker wait",
+            EventKind::Identification => "identification",
+            EventKind::IngestDelay => "delay",
+            EventKind::ObjDetection => "detection",
+        }
+    }
+}
+
+/// One logged event (Listing 1's `logging.info` payload).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Frame this event belongs to.
+    pub frame_id: u64,
+    /// Virtual time the step started (us).
+    pub start_us: u64,
+    /// Step duration (us) — Listing 1's `compute_time`.
+    pub compute_us: u64,
+    /// Faces involved — Listing 1's `face_count`.
+    pub face_count: u32,
+    /// Payload bytes — Listing 1's `data_size`.
+    pub data_bytes: u64,
+}
+
+/// Append-only event log with a warmup cutoff.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+    /// Events with `start_us` before this are excluded from aggregation
+    /// (simulation warmup).
+    pub warmup_us: u64,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_warmup(warmup_us: u64) -> Self {
+        EventLog {
+            events: Vec::new(),
+            warmup_us,
+        }
+    }
+
+    #[inline]
+    pub fn log(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Post-warmup events.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        let w = self.warmup_us;
+        self.events.iter().filter(move |e| e.start_us >= w)
+    }
+
+    pub fn all_events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Mean duration of a given kind (us).
+    pub fn mean_us(&self, kind: EventKind) -> f64 {
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        for e in self.events().filter(|e| e.kind == kind) {
+            sum += e.compute_us;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.events().filter(|e| e.kind == kind).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, start: u64, dur: u64) -> Event {
+        Event {
+            kind,
+            frame_id: 0,
+            start_us: start,
+            compute_us: dur,
+            face_count: 1,
+            data_bytes: 37_300,
+        }
+    }
+
+    #[test]
+    fn mean_per_kind() {
+        let mut log = EventLog::new();
+        log.log(ev(EventKind::Ingestion, 0, 10));
+        log.log(ev(EventKind::Ingestion, 0, 30));
+        log.log(ev(EventKind::BrokerWait, 0, 100));
+        assert_eq!(log.mean_us(EventKind::Ingestion), 20.0);
+        assert_eq!(log.mean_us(EventKind::BrokerWait), 100.0);
+        assert_eq!(log.mean_us(EventKind::Identification), 0.0);
+        assert_eq!(log.count(EventKind::Ingestion), 2);
+    }
+
+    #[test]
+    fn warmup_excluded() {
+        let mut log = EventLog::with_warmup(1000);
+        log.log(ev(EventKind::Ingestion, 500, 999_999));
+        log.log(ev(EventKind::Ingestion, 1500, 10));
+        assert_eq!(log.mean_us(EventKind::Ingestion), 10.0);
+        assert_eq!(log.len(), 2); // raw log keeps everything
+    }
+}

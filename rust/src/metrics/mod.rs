@@ -1,0 +1,18 @@
+//! Instrumentation: the paper's event-based measurement methodology
+//! (Listing 1 + §4.1) implemented in-process.
+//!
+//! * [`event`] — high-level per-frame events (ingest, detect, broker wait,
+//!   identify) with compute time, face count and payload size, exactly the
+//!   fields the paper logs to Elasticsearch.
+//! * [`breakdown`] — aggregates events into the Fig-6/Fig-13 stage-latency
+//!   breakdowns and §4.2 tail-latency summaries.
+//! * [`bandwidth`] — per-class byte meters producing Fig 11.
+
+pub mod bandwidth;
+pub mod query;
+pub mod breakdown;
+pub mod event;
+
+pub use bandwidth::BandwidthMeter;
+pub use breakdown::{Breakdown, StageStat};
+pub use event::{Event, EventKind, EventLog};

@@ -1,0 +1,222 @@
+//! Event-log queries: the Elasticsearch/Logstash half of the paper's
+//! instrumentation stack (§4.1 logs events to ES "running on a separate
+//! server" and aggregates offline).
+//!
+//! [`Query`] is a small filter → group-by → aggregate pipeline over an
+//! [`EventLog`], enough to reproduce every aggregation the paper performs
+//! (per-stage means, per-frame sums, percentiles by window, face-count
+//! conditioned latency).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::event::{Event, EventKind, EventLog};
+use crate::util::stats::Histogram;
+
+/// A filtered view over an event log.
+#[derive(Clone, Copy)]
+pub struct Query<'a> {
+    log: &'a EventLog,
+    kind: Option<EventKind>,
+    time_range: Option<(u64, u64)>,
+    min_faces: Option<u32>,
+    frame_range: Option<(u64, u64)>,
+}
+
+impl<'a> Query<'a> {
+    pub fn over(log: &'a EventLog) -> Query<'a> {
+        Query {
+            log,
+            kind: None,
+            time_range: None,
+            min_faces: None,
+            frame_range: None,
+        }
+    }
+
+    pub fn kind(mut self, kind: EventKind) -> Self {
+        self.kind = Some(kind);
+        self
+    }
+
+    /// Keep events whose start time is in `[from, to)`.
+    pub fn between(mut self, from: u64, to: u64) -> Self {
+        self.time_range = Some((from, to));
+        self
+    }
+
+    /// Keep events with at least this many faces (Fig-7-style surge
+    /// conditioning).
+    pub fn min_faces(mut self, n: u32) -> Self {
+        self.min_faces = Some(n);
+        self
+    }
+
+    pub fn frames(mut self, from: u64, to: u64) -> Self {
+        self.frame_range = Some((from, to));
+        self
+    }
+
+    fn matches(&self, e: &Event) -> bool {
+        if let Some(k) = self.kind {
+            if e.kind != k {
+                return false;
+            }
+        }
+        if let Some((a, b)) = self.time_range {
+            if e.start_us < a || e.start_us >= b {
+                return false;
+            }
+        }
+        if let Some(n) = self.min_faces {
+            if e.face_count < n {
+                return false;
+            }
+        }
+        if let Some((a, b)) = self.frame_range {
+            if e.frame_id < a || e.frame_id >= b {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &'a Event> + '_ {
+        self.log.events().filter(move |e| self.matches(e))
+    }
+
+    pub fn count(&self) -> usize {
+        self.iter().count()
+    }
+
+    /// Mean of `compute_us`.
+    pub fn mean_us(&self) -> f64 {
+        let (mut sum, mut n) = (0u64, 0u64);
+        for e in self.iter() {
+            sum += e.compute_us;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    /// Percentile of `compute_us`.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let mut h = Histogram::new();
+        for e in self.iter() {
+            h.record(e.compute_us.max(1));
+        }
+        h.quantile(q)
+    }
+
+    /// Total payload bytes (the Listing-1 `data_size` aggregation that
+    /// yields the 37.3 kB mean face size).
+    pub fn total_bytes(&self) -> u64 {
+        self.iter().map(|e| e.data_bytes).sum()
+    }
+
+    /// Group by time buckets of `width_us`, returning per-bucket means —
+    /// the timeseries behind Fig 7.
+    pub fn mean_by_time(&self, width_us: u64) -> BTreeMap<u64, f64> {
+        let mut sums: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        for e in self.iter() {
+            let bucket = e.start_us / width_us * width_us;
+            let s = sums.entry(bucket).or_insert((0, 0));
+            s.0 += e.compute_us;
+            s.1 += 1;
+        }
+        sums.into_iter()
+            .map(|(b, (sum, n))| (b, sum as f64 / n as f64))
+            .collect()
+    }
+
+    /// Group by frame id, summing durations — per-frame end-to-end
+    /// latency when applied over all stage kinds.
+    pub fn sum_by_frame(&self) -> BTreeMap<u64, u64> {
+        let mut out: BTreeMap<u64, u64> = BTreeMap::new();
+        for e in self.iter() {
+            *out.entry(e.frame_id).or_insert(0) += e.compute_us;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> EventLog {
+        let mut log = EventLog::new();
+        for f in 0..100u64 {
+            log.log(Event {
+                kind: EventKind::FaceDetection,
+                frame_id: f,
+                start_us: f * 1000,
+                compute_us: 70_000 + (f % 10) * 1000,
+                face_count: (f % 4) as u32,
+                data_bytes: 37_300 * (f % 4),
+            });
+            log.log(Event {
+                kind: EventKind::Identification,
+                frame_id: f,
+                start_us: f * 1000 + 500,
+                compute_us: 130_000,
+                face_count: 1,
+                data_bytes: 0,
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn filter_by_kind_and_time() {
+        let log = log();
+        let q = Query::over(&log).kind(EventKind::FaceDetection);
+        assert_eq!(q.count(), 100);
+        let windowed = q.between(10_000, 20_000);
+        assert_eq!(windowed.count(), 10);
+        assert!(windowed.mean_us() > 70_000.0);
+    }
+
+    #[test]
+    fn face_count_conditioning() {
+        let log = log();
+        let crowded = Query::over(&log)
+            .kind(EventKind::FaceDetection)
+            .min_faces(2);
+        assert_eq!(crowded.count(), 50); // f % 4 in {2, 3}
+    }
+
+    #[test]
+    fn per_frame_sums_give_e2e() {
+        let log = log();
+        let sums = Query::over(&log).sum_by_frame();
+        assert_eq!(sums.len(), 100);
+        // detect + identify per frame.
+        assert!(sums[&0] >= 200_000);
+    }
+
+    #[test]
+    fn time_bucketing() {
+        let log = log();
+        let buckets = Query::over(&log)
+            .kind(EventKind::Identification)
+            .mean_by_time(25_000);
+        assert_eq!(buckets.len(), 4);
+        for v in buckets.values() {
+            assert_eq!(*v, 130_000.0);
+        }
+    }
+
+    #[test]
+    fn quantiles_and_bytes() {
+        let log = log();
+        let q = Query::over(&log).kind(EventKind::FaceDetection);
+        assert!(q.quantile_us(0.99) >= q.quantile_us(0.5));
+        // Mean face payload: total / faces — the paper's 37.3 kB stat.
+        let faces: u64 = q.iter().map(|e| e.face_count as u64).sum();
+        assert_eq!(q.total_bytes() / faces.max(1), 37_300);
+    }
+}

@@ -1,0 +1,21 @@
+//! Network substrate: fat-tree topology, NIC/link bandwidth accounting and
+//! splitter-cable configurations.
+//!
+//! Two roles in the reproduction:
+//!
+//! * In the DES, each node's NIC directions are FIFO rate servers
+//!   ([`nic::Nic`]); per-class byte counters produce the Fig-11a bandwidth
+//!   series. The paper shows network utilization never exceeds ~6% of the
+//!   100 Gbps links — our model confirms the same headroom, and it also
+//!   models the purpose-built data center's 10/50 Gbps links where the
+//!   margin shrinks.
+//! * For the TCO study (§7), [`topology`] builds and validates fat-trees —
+//!   the 1024-node three-level homogeneous tree of Table 3 and the
+//!   splitter-cable two-level design of Figure 16 — counting switches,
+//!   cables and ports, which feed the `tco` price book.
+
+pub mod nic;
+pub mod topology;
+
+pub use nic::{Direction, Nic};
+pub use topology::{FatTree, SplitterPlan};

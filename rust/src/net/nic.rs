@@ -1,0 +1,108 @@
+//! Per-node NIC model: full-duplex, each direction an independent FIFO rate
+//! server, with per-class byte accounting for the Fig-11a breakdown
+//! (producer read/write, consumer read/write, broker read/write).
+
+use crate::sim::resource::FifoServer;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Into the node (receive).
+    Rx,
+    /// Out of the node (transmit).
+    Tx,
+}
+
+/// A full-duplex NIC with byte accounting.
+#[derive(Clone, Debug)]
+pub struct Nic {
+    rx: FifoServer,
+    tx: FifoServer,
+    bw: f64,
+    /// One-way propagation + switching latency within the data center
+    /// (fat-tree, a few switch hops).
+    pub transit_us: u64,
+}
+
+impl Nic {
+    pub fn new(bandwidth_bytes_per_sec: f64) -> Self {
+        Nic {
+            rx: FifoServer::new(bandwidth_bytes_per_sec, 0),
+            tx: FifoServer::new(bandwidth_bytes_per_sec, 0),
+            bw: bandwidth_bytes_per_sec,
+            transit_us: 30,
+        }
+    }
+
+    /// Submit a transfer in `dir` at `now`; returns the time the last byte
+    /// has left (Tx) or arrived (Rx), including transit latency.
+    pub fn transfer(&mut self, now: u64, dir: Direction, bytes: f64) -> u64 {
+        let srv = match dir {
+            Direction::Rx => &mut self.rx,
+            Direction::Tx => &mut self.tx,
+        };
+        srv.submit(now, bytes) + self.transit_us
+    }
+
+    /// Utilization of a direction over `[0, now]` as a fraction of link
+    /// rate (the Fig-11a y-axis).
+    pub fn utilization(&self, now: u64, dir: Direction) -> f64 {
+        match dir {
+            Direction::Rx => self.rx.utilization(now),
+            Direction::Tx => self.tx.utilization(now),
+        }
+    }
+
+    /// Average achieved bandwidth in bytes/s over `[0, now]`.
+    pub fn throughput(&self, now: u64, dir: Direction) -> f64 {
+        match dir {
+            Direction::Rx => self.rx.throughput(now),
+            Direction::Tx => self.tx.throughput(now),
+        }
+    }
+
+    pub fn bandwidth(&self) -> f64 {
+        self.bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gbps;
+
+    #[test]
+    fn full_duplex_independence() {
+        let mut n = Nic::new(gbps(100));
+        let rx_done = n.transfer(0, Direction::Rx, 12.5e9); // 1 second
+        let tx_done = n.transfer(0, Direction::Tx, 12.5e9); // concurrent
+        assert_eq!(rx_done, tx_done);
+        assert!((rx_done as i64 - 1_000_030).abs() <= 1);
+    }
+
+    #[test]
+    fn same_direction_serializes() {
+        let mut n = Nic::new(gbps(100));
+        let a = n.transfer(0, Direction::Tx, 12.5e9);
+        let b = n.transfer(0, Direction::Tx, 12.5e9);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn utilization_matches_fig11a_scale() {
+        // 6 Gbps of traffic on a 100 Gbps NIC over 1 s = 6% (the paper's
+        // peak broker network utilization at 8x).
+        let mut n = Nic::new(gbps(100));
+        for i in 0..100 {
+            n.transfer(i * 10_000, Direction::Rx, 7.5e6);
+        }
+        let u = n.utilization(1_000_000, Direction::Rx);
+        assert!((u - 0.06).abs() < 0.005, "u={u}");
+    }
+
+    #[test]
+    fn transit_latency_applied() {
+        let mut n = Nic::new(gbps(100));
+        let done = n.transfer(0, Direction::Tx, 12_500.0); // 1 us wire time
+        assert_eq!(done, 1 + 30);
+    }
+}

@@ -1,0 +1,206 @@
+//! Fat-tree topology designer.
+//!
+//! Produces switch/cable bills-of-materials for the two data centers the
+//! paper costs out:
+//!
+//! * [`FatTree::three_level`] — the homogeneous design (Table 3): a
+//!   three-level non-blocking fat-tree of 32-port 100 GbE switches for 1024
+//!   nodes → 160 switches, 3072 cables.
+//! * [`SplitterPlan::purpose_built`] — the Figure-16 design: brokers share
+//!   100 GbE ports via 2×50 G splitters; producer/consumer nodes hang off
+//!   40 GbE switches via 4×10 G splitters; a two-level 100 GbE core ties it
+//!   together → 28 100 G switches, 14 40 G switches and the Table-4 cable
+//!   counts.
+
+/// Bill of materials for a three-level fat tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FatTree {
+    pub nodes: usize,
+    pub ports_per_switch: usize,
+    pub edge_switches: usize,
+    pub agg_switches: usize,
+    pub core_switches: usize,
+    /// Node-to-edge cables.
+    pub node_cables: usize,
+    /// Switch-to-switch cables (edge-agg + agg-core).
+    pub fabric_cables: usize,
+}
+
+impl FatTree {
+    /// Non-blocking three-level fat tree: every switch uses half its ports
+    /// downward and half upward (except core, all downward).
+    pub fn three_level(nodes: usize, ports_per_switch: usize) -> FatTree {
+        assert!(ports_per_switch >= 2 && ports_per_switch % 2 == 0);
+        let half = ports_per_switch / 2;
+        let edge = nodes.div_ceil(half);
+        let agg = edge; // one agg per edge in this balanced layout
+        let agg_uplinks = agg * half;
+        let core = agg_uplinks.div_ceil(ports_per_switch);
+        FatTree {
+            nodes,
+            ports_per_switch,
+            edge_switches: edge,
+            agg_switches: agg,
+            core_switches: core,
+            node_cables: nodes,
+            fabric_cables: edge * half + agg * half,
+        }
+    }
+
+    pub fn total_switches(&self) -> usize {
+        self.edge_switches + self.agg_switches + self.core_switches
+    }
+
+    pub fn total_cables(&self) -> usize {
+        self.node_cables + self.fabric_cables
+    }
+
+    /// Non-blocking check: aggregate uplink capacity at each level covers
+    /// the downlink capacity.
+    pub fn is_nonblocking(&self) -> bool {
+        let half = self.ports_per_switch / 2;
+        self.edge_switches * half >= self.nodes
+            && self.core_switches * self.ports_per_switch >= self.agg_switches * half
+    }
+}
+
+/// Bill of materials for the purpose-built (Fig 16) network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitterPlan {
+    pub broker_nodes: usize,
+    pub compute_nodes: usize,
+    /// 100 GbE switches (edge + core).
+    pub switches_100g: usize,
+    pub edge_100g: usize,
+    pub core_100g: usize,
+    /// 40 GbE switches fronting the compute nodes.
+    pub switches_40g: usize,
+    /// 100 G → 2×50 G copper splitters (brokers, two per cable).
+    pub copper_splitters_50g: usize,
+    /// 40 G → 4×10 G copper splitters (compute, four per cable).
+    pub copper_splitters_10g: usize,
+    /// 100 G → 2×50 G optical splitters (feeding 40 G switches).
+    pub optical_splitters_50g: usize,
+    /// 100 G optical interconnects (edge-core fabric).
+    pub optical_interconnects: usize,
+}
+
+impl SplitterPlan {
+    /// Figure-16 design rules:
+    /// * two brokers share one 100 G edge port via a 2×50 G copper splitter;
+    /// * four compute nodes share one 40 G switch port via a 4×10 G copper
+    ///   splitter; a 40 G switch dedicates 16 ports downward;
+    /// * each pair of 40 G switches is fed from 100 G edge ports through
+    ///   2×50 G optical splitters (full 800 Gbps feed per switch);
+    /// * a two-level 100 GbE fat tree (16 uplinks per edge switch, one core
+    ///   port per edge switch) carries the fabric.
+    pub fn purpose_built(broker_nodes: usize, compute_nodes: usize) -> SplitterPlan {
+        let copper_splitters_50g = broker_nodes.div_ceil(2);
+        let copper_splitters_10g = compute_nodes.div_ceil(4);
+        let switches_40g = copper_splitters_10g.div_ceil(16);
+        let optical_splitters_50g = switches_40g.div_ceil(2);
+
+        // 100G edge layer: 16 down-ports per edge switch.
+        let edge_for_brokers = copper_splitters_50g.div_ceil(16);
+        let edge_for_40g = switches_40g.div_ceil(2);
+        let edge_100g = edge_for_brokers + edge_for_40g;
+        // Two-level fat tree: each edge switch runs 16 uplinks, one to each
+        // of 16 core switches.
+        let uplinks_per_edge = 16;
+        let core_100g = uplinks_per_edge;
+        let optical_interconnects = edge_100g * uplinks_per_edge;
+
+        SplitterPlan {
+            broker_nodes,
+            compute_nodes,
+            switches_100g: edge_100g + core_100g,
+            edge_100g,
+            core_100g,
+            switches_40g,
+            copper_splitters_50g,
+            copper_splitters_10g,
+            optical_splitters_50g,
+            optical_interconnects,
+        }
+    }
+
+    /// Bandwidth delivered to each node class (bytes/s), for validating the
+    /// design against the application's measured needs (§7.2: producers and
+    /// consumers need ~4 Gbps, brokers ~24 Gbps).
+    pub fn broker_bw(&self) -> f64 {
+        crate::util::units::gbps(50)
+    }
+
+    pub fn compute_bw(&self) -> f64 {
+        crate::util::units::gbps(10)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_homogeneous_tree() {
+        // "The nodes are connected in a three-level fat-tree topology using
+        //  32-port Mellanox Ethernet switches": 1024 nodes -> 160 switches,
+        //  3072 cables (Table 3 quantities).
+        let t = FatTree::three_level(1024, 32);
+        assert_eq!(t.edge_switches, 64);
+        assert_eq!(t.agg_switches, 64);
+        assert_eq!(t.core_switches, 32);
+        assert_eq!(t.total_switches(), 160);
+        assert_eq!(t.total_cables(), 3072);
+        assert!(t.is_nonblocking());
+    }
+
+    #[test]
+    fn small_tree_sane() {
+        let t = FatTree::three_level(40, 32);
+        assert!(t.total_switches() >= 3);
+        assert!(t.is_nonblocking());
+        assert_eq!(t.node_cables, 40);
+    }
+
+    #[test]
+    fn table4_purpose_built_counts() {
+        // Table 4 quantities: 157 brokers, 867 compute ->
+        // 28x 100G switches, 14x 40G switches, 79 copper 2x50G, 217 copper
+        // 4x10G, 7 optical 2x50G, 192 optical interconnects.
+        let p = SplitterPlan::purpose_built(157, 867);
+        assert_eq!(p.copper_splitters_50g, 79);
+        assert_eq!(p.copper_splitters_10g, 217);
+        assert_eq!(p.switches_40g, 14);
+        assert_eq!(p.optical_splitters_50g, 7);
+        assert_eq!(p.edge_100g, 12);
+        assert_eq!(p.core_100g, 16);
+        assert_eq!(p.switches_100g, 28);
+        assert_eq!(p.optical_interconnects, 192);
+    }
+
+    #[test]
+    fn purpose_built_bandwidth_covers_measured_needs() {
+        let p = SplitterPlan::purpose_built(157, 867);
+        // §7.2: broker needs ~24 Gbps, compute ~4 Gbps; the design doubles
+        // both (50 and 10 Gbps).
+        assert!(p.broker_bw() >= 2.0 * crate::util::units::gbps(24));
+        assert!(p.compute_bw() >= 2.0 * crate::util::units::gbps(4));
+    }
+
+    #[test]
+    fn scaling_monotone_property() {
+        crate::util::prop::check(100, |rng| {
+            let n1 = 1 + rng.below(2000) as usize;
+            let n2 = n1 + 1 + rng.below(500) as usize;
+            let t1 = FatTree::three_level(n1, 32);
+            let t2 = FatTree::three_level(n2, 32);
+            crate::util::prop::assert_holds(
+                t2.total_switches() >= t1.total_switches()
+                    && t2.total_cables() > t1.total_cables()
+                    && t1.is_nonblocking()
+                    && t2.is_nonblocking(),
+                "fat tree scales monotonically and stays non-blocking",
+            )
+        });
+    }
+}

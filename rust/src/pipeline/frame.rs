@@ -1,0 +1,186 @@
+//! Pipeline data types: frames, faces and identities.
+//!
+//! In live mode these carry real pixel buffers that flow through the
+//! broker and into PJRT inference; in the DES only their sizes matter
+//! (the paper's §5.2 emulation move: "rather than sending face thumbnails
+//! to brokers, we send meaningless data whose size matches").
+
+/// A video frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub id: u64,
+    pub stream: u32,
+    /// Capture timestamp (us).
+    pub ts_us: u64,
+    pub width: u32,
+    pub height: u32,
+    /// Interleaved RGB f32 pixels (live mode) or empty (simulation).
+    pub pixels: Vec<f32>,
+}
+
+impl Frame {
+    /// Synthesize a frame with `faces` bright square "faces" on a dark
+    /// background — enough signal for the AOT detector to find them.
+    pub fn synthetic(id: u64, stream: u32, ts_us: u64, side: u32, faces: &[(u32, u32)]) -> Frame {
+        let mut pixels = vec![0.1f32; (side * side * 3) as usize];
+        let fs = side / 8; // face side
+        for &(cx, cy) in faces {
+            for dy in 0..fs {
+                for dx in 0..fs {
+                    let x = (cx + dx).min(side - 1);
+                    let y = (cy + dy).min(side - 1);
+                    let base = ((y * side + x) * 3) as usize;
+                    // A bright blob with a darker "eye line" to give the
+                    // conv features something non-uniform.
+                    let v = if dy == fs / 3 { 0.4 } else { 0.9 };
+                    pixels[base] = v;
+                    pixels[base + 1] = v * 0.8;
+                    pixels[base + 2] = v * 0.7;
+                }
+            }
+        }
+        Frame {
+            id,
+            stream,
+            ts_us,
+            width: side,
+            height: side,
+            pixels,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.pixels.len() * 4
+    }
+}
+
+/// A detected face thumbnail (what flows through the "faces" topic).
+#[derive(Clone, Debug)]
+pub struct Face {
+    pub frame_id: u64,
+    pub stream: u32,
+    /// Time face detection finished for this face (broker-wait epoch).
+    pub detected_at_us: u64,
+    /// Thumbnail pixels (live) — 160x160x3 in the paper, smaller here.
+    pub thumbnail: Vec<f32>,
+    /// Size on the wire (sim mode uses this; live mode uses thumbnail).
+    pub wire_bytes: u32,
+}
+
+impl Face {
+    pub fn payload_bytes(&self) -> usize {
+        if self.thumbnail.is_empty() {
+            self.wire_bytes as usize
+        } else {
+            self.thumbnail.len() * 4
+        }
+    }
+
+    /// Serialize for the broker (live mode): header + f32 pixels.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.thumbnail.len() * 4);
+        out.extend_from_slice(&self.frame_id.to_le_bytes());
+        out.extend_from_slice(&self.stream.to_le_bytes());
+        out.extend_from_slice(&self.detected_at_us.to_le_bytes());
+        out.extend_from_slice(&(self.thumbnail.len() as u32).to_le_bytes());
+        for px in &self.thumbnail {
+            out.extend_from_slice(&px.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Face> {
+        anyhow::ensure!(buf.len() >= 24, "face header truncated");
+        let frame_id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let stream = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let detected_at_us = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+        let n = u32::from_le_bytes(buf[20..24].try_into().unwrap()) as usize;
+        anyhow::ensure!(buf.len() == 24 + n * 4, "face payload truncated");
+        let mut thumbnail = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = 24 + i * 4;
+            thumbnail.push(f32::from_le_bytes(buf[o..o + 4].try_into().unwrap()));
+        }
+        Ok(Face {
+            frame_id,
+            stream,
+            detected_at_us,
+            wire_bytes: (24 + n * 4) as u32,
+            thumbnail,
+        })
+    }
+}
+
+/// Final output: who was in the frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Identity {
+    pub frame_id: u64,
+    pub stream: u32,
+    /// Index into the known-faces gallery.
+    pub person: u32,
+    /// SVM decision score.
+    pub score: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_frame_has_faces() {
+        let f = Frame::synthetic(1, 0, 0, 64, &[(8, 8), (40, 40)]);
+        assert_eq!(f.pixels.len(), 64 * 64 * 3);
+        let bright = f.pixels.iter().filter(|&&p| p > 0.5).count();
+        assert!(bright > 50, "faces should add bright pixels: {bright}");
+    }
+
+    #[test]
+    fn empty_frame_is_dark() {
+        let f = Frame::synthetic(1, 0, 0, 64, &[]);
+        assert!(f.pixels.iter().all(|&p| p < 0.2));
+    }
+
+    #[test]
+    fn face_encode_decode_roundtrip() {
+        let face = Face {
+            frame_id: 42,
+            stream: 3,
+            detected_at_us: 123_456,
+            thumbnail: vec![0.25, 0.5, 0.75],
+            wire_bytes: 0,
+        };
+        let wire = face.encode();
+        let d = Face::decode(&wire).unwrap();
+        assert_eq!(d.frame_id, 42);
+        assert_eq!(d.stream, 3);
+        assert_eq!(d.detected_at_us, 123_456);
+        assert_eq!(d.thumbnail, face.thumbnail);
+        assert_eq!(d.wire_bytes as usize, wire.len());
+    }
+
+    #[test]
+    fn face_decode_rejects_garbage() {
+        assert!(Face::decode(&[0u8; 5]).is_err());
+        let face = Face {
+            frame_id: 1,
+            stream: 0,
+            detected_at_us: 0,
+            thumbnail: vec![1.0; 4],
+            wire_bytes: 0,
+        };
+        let wire = face.encode();
+        assert!(Face::decode(&wire[..wire.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn sim_face_uses_wire_bytes() {
+        let face = Face {
+            frame_id: 0,
+            stream: 0,
+            detected_at_us: 0,
+            thumbnail: vec![],
+            wire_bytes: 37_300,
+        };
+        assert_eq!(face.payload_bytes(), 37_300);
+    }
+}

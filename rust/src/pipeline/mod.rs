@@ -1,0 +1,27 @@
+//! The paper's applications: *Face Recognition* (§3) and *Object
+//! Detection* (§6), plus the models they are built from.
+//!
+//! * [`frame`] — frames, faces, identities (the data the pipeline moves).
+//! * [`video`] — the synthetic video-stream source: 0–5 faces per frame,
+//!   0.64 mean, Markov-modulated bursts (§3.3's measured distribution).
+//! * [`stage`] — per-stage compute-cost models with AI/support splits
+//!   (Fig 8) and acceleration protocols (§5.1 vs §5.2).
+//! * [`scaling`] — the Fig-5/Fig-12 container core-scaling curves.
+//! * [`facerec`] — the Face Recognition data-center simulation: producers →
+//!   Kafka-style brokers (batching, replication, storage) → consumers, in
+//!   virtual time. Regenerates Figs 6, 7, 10, 11, 15.
+//! * [`objdet`] — the Object Detection simulation (Figs 13, 14).
+
+pub mod fabric;
+pub mod facerec;
+pub mod frame;
+pub mod objdet;
+pub mod scaling;
+pub mod stage;
+pub mod video;
+
+pub use facerec::{FaceRecSim, SimReport};
+pub use frame::{Face, Frame, Identity};
+pub use objdet::{ObjDetReport, ObjDetSim};
+pub use stage::StageModel;
+pub use video::VideoSource;

@@ -1,0 +1,98 @@
+//! Container core-scaling curves (Figs 5 and 12).
+//!
+//! The model (`config::calibration::CoreScaling`) is
+//! `latency(c) = serial + parallel/c + interference·(c−1)`; this module
+//! wraps it with the sweep + reporting used by the Fig-5/Fig-12 benches and
+//! the deployment advisor (how many cores to give each container, §3.5's
+//! conclusion: one core per FR container, 14 per ObjDet container).
+
+use crate::config::calibration::CoreScaling;
+
+/// One row of a core-scaling sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    pub cores: usize,
+    /// Latency relative to 1 core.
+    pub relative_latency: f64,
+    pub speedup: f64,
+}
+
+/// Sweep a scaling curve over core counts.
+pub fn sweep(curve: &CoreScaling, max_cores: usize) -> Vec<ScalingPoint> {
+    (1..=max_cores)
+        .map(|c| {
+            let rel = curve.latency(c) / curve.latency(1);
+            ScalingPoint {
+                cores: c,
+                relative_latency: rel,
+                speedup: 1.0 / rel,
+            }
+        })
+        .collect()
+}
+
+/// The core count minimizing latency.
+pub fn best_cores(curve: &CoreScaling, max_cores: usize) -> usize {
+    sweep(curve, max_cores)
+        .iter()
+        .min_by(|a, b| a.relative_latency.total_cmp(&b.relative_latency))
+        .map(|p| p.cores)
+        .unwrap_or(1)
+}
+
+/// Throughput-optimal allocation: cores_per_container × containers is
+/// fixed at `total_cores`; pick the allocation maximizing aggregate
+/// throughput = containers / latency(cores). For curves with poor scaling
+/// this lands on 1 core per container — §3.5's choice for FR.
+pub fn throughput_optimal_cores(curve: &CoreScaling, total_cores: usize) -> usize {
+    (1..=total_cores)
+        .max_by(|&a, &b| {
+            let ta = (total_cores / a) as f64 / curve.latency(a);
+            let tb = (total_cores / b) as f64 / curve.latency(b);
+            ta.total_cmp(&tb)
+        })
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_fr_containers_prefer_one_core_for_throughput() {
+        // §3.5: "we optimize for throughput by assigning a single core to
+        // each container".
+        assert_eq!(
+            throughput_optimal_cores(&CoreScaling::ingest_detect(), 56),
+            1
+        );
+        assert_eq!(
+            throughput_optimal_cores(&CoreScaling::identification(), 56),
+            1
+        );
+    }
+
+    #[test]
+    fn fig12_objdet_prefers_many_cores() {
+        // §6.1: near-linear scaling; latency keeps dropping to 14 cores, so
+        // the latency-optimal allocation is large.
+        let best = best_cores(&CoreScaling::objdet_detection(), 28);
+        assert!(best >= 14, "best={best}");
+    }
+
+    #[test]
+    fn fr_latency_upturn_detected() {
+        let pts = sweep(&CoreScaling::identification(), 16);
+        let best = best_cores(&CoreScaling::identification(), 16);
+        // Latency at 16 cores is worse than at the optimum — Fig 5's
+        // "computational latency actually increases".
+        assert!(pts[15].relative_latency > pts[best - 1].relative_latency);
+    }
+
+    #[test]
+    fn speedup_is_inverse_latency() {
+        for p in sweep(&CoreScaling::objdet_detection(), 8) {
+            assert!((p.speedup * p.relative_latency - 1.0).abs() < 1e-12);
+        }
+    }
+}

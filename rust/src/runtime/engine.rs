@@ -1,0 +1,323 @@
+//! PJRT engine: compile-once, execute-many wrapper over the `xla` crate.
+//!
+//! `Engine::load` reads every entry in the artifact manifest, parses the
+//! HLO text (`HloModuleProto::from_text_file`) and compiles it on the CPU
+//! PJRT client. [`FacePipeline`] layers the Face Recognition call
+//! signatures on top (preprocess → detect → identify), including the
+//! thumbnail cropping that sits *between* AI stages — the paper's point
+//! that pre/post-processing is inseparable from the AI (§4.3).
+//!
+//! PJRT handles are not `Send`; live-mode worker threads each build their
+//! own `Engine` (compilation takes ~100 ms per entry, once per thread).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::Tensor;
+
+/// Compiled artifact set.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        Self::load_subset(dir, None)
+    }
+
+    /// Load and compile only the named entries (or all when `None`).
+    /// Worker threads use this to skip executables they never call —
+    /// compilation is the dominant startup cost.
+    pub fn load_subset(dir: impl AsRef<Path>, only: Option<&[&str]>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            if let Some(filter) = only {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parsing HLO for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            client,
+            executables,
+            manifest,
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(Manifest::default_dir())
+    }
+
+    /// The producer-side subset (ingest/detect container).
+    pub fn load_producer_side() -> Result<Engine> {
+        Self::load_subset(Manifest::default_dir(), Some(&["preprocess", "detect"]))
+    }
+
+    /// The consumer-side subset (identification container).
+    pub fn load_consumer_side() -> Result<Engine> {
+        Self::load_subset(
+            Manifest::default_dir(),
+            Some(&["identify", "identify_batch"]),
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.executables.keys().map(String::as_str).collect()
+    }
+
+    /// Execute an entry point. Inputs are f32 tensors matching the
+    /// manifest shapes; outputs are the untupled results.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("no executable {name}"))?;
+        let meta = self.manifest.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == meta.input_shapes.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.input_shapes.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            anyhow::ensure!(
+                &t.shape == s,
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.shape,
+                s
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// A detected face box in detector-map coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct Detection {
+    pub row: usize,
+    pub col: usize,
+    pub prob: f32,
+}
+
+/// Face Recognition pipeline over a compiled [`Engine`].
+pub struct FacePipeline {
+    pub engine: Engine,
+    /// Detector probability threshold.
+    pub threshold: f32,
+}
+
+impl FacePipeline {
+    pub fn new(engine: Engine) -> FacePipeline {
+        FacePipeline {
+            engine,
+            threshold: 0.7,
+        }
+    }
+
+    /// Ingestion resize: full frame -> detector input.
+    pub fn preprocess(&self, frame: &Tensor) -> Result<Tensor> {
+        Ok(self.engine.run("preprocess", std::slice::from_ref(frame))?.remove(0))
+    }
+
+    /// Run the detector and extract above-threshold peaks with simple
+    /// non-max suppression (the paper's Fig-8b "other" code: bounding box
+    /// calculation, NMS — classic post-processing on the CPU).
+    pub fn detect(&self, image: &Tensor) -> Result<Vec<Detection>> {
+        let outs = self.engine.run("detect", std::slice::from_ref(image))?;
+        let prob = &outs[0];
+        let (h, w) = (prob.shape[0], prob.shape[1]);
+        let mut dets = Vec::new();
+        let suppress = self.engine.manifest.thumb_side / 4; // NMS radius
+        for i in 0..h {
+            for j in 0..w {
+                let p = prob.at2(i, j);
+                if p < self.threshold {
+                    continue;
+                }
+                // Local maximum within the suppression window.
+                let mut is_peak = true;
+                'nms: for di in i.saturating_sub(suppress)..(i + suppress + 1).min(h) {
+                    for dj in j.saturating_sub(suppress)..(j + suppress + 1).min(w) {
+                        let q = prob.at2(di, dj);
+                        if q > p || (q == p && (di, dj) < (i, j)) {
+                            is_peak = false;
+                            break 'nms;
+                        }
+                    }
+                }
+                if is_peak {
+                    dets.push(Detection {
+                        row: i,
+                        col: j,
+                        prob: p,
+                    });
+                }
+            }
+        }
+        Ok(dets)
+    }
+
+    /// Crop a thumbnail around a detection from the detector-scale image
+    /// (support code between the two AI stages; Fig 8b's 25% crop+resize).
+    pub fn crop_thumb(&self, image: &Tensor, det: &Detection) -> Tensor {
+        let side = self.engine.manifest.thumb_side;
+        let (h, w, c) = (image.shape[0], image.shape[1], image.shape[2]);
+        // The detector map is offset by the conv halo; center the crop on
+        // the detection and clamp to the image.
+        let r0 = (det.row + 2).saturating_sub(side / 2).min(h - side);
+        let c0 = (det.col + 2).saturating_sub(side / 2).min(w - side);
+        let mut out = Tensor::zeros(vec![side, side, c]);
+        for i in 0..side {
+            for j in 0..side {
+                for k in 0..c {
+                    out.data[(i * side + j) * c + k] = image.at3(r0 + i, c0 + j, k);
+                }
+            }
+        }
+        out
+    }
+
+    /// Identification: thumbnail -> (embedding, identity, score).
+    pub fn identify(&self, thumb: &Tensor) -> Result<(Tensor, usize, f32)> {
+        let mut outs = self.engine.run("identify", std::slice::from_ref(thumb))?;
+        let scores = outs.remove(1);
+        let emb = outs.remove(0);
+        let person = scores.argmax();
+        let score = scores.data[person];
+        Ok((emb, person, score))
+    }
+
+    /// Batched identification for the dynamic batcher (pads to the
+    /// compiled batch size).
+    pub fn identify_batch(&self, thumbs: &[Tensor]) -> Result<Vec<(usize, f32)>> {
+        let b = self.engine.manifest.batch;
+        let side = self.engine.manifest.thumb_side;
+        anyhow::ensure!(!thumbs.is_empty() && thumbs.len() <= b, "batch size 1..={b}");
+        let mut data = vec![0.0f32; b * side * side * 3];
+        for (i, t) in thumbs.iter().enumerate() {
+            data[i * t.len()..(i + 1) * t.len()].copy_from_slice(&t.data);
+        }
+        let batch = Tensor::new(vec![b, side, side, 3], data);
+        let outs = self.engine.run("identify_batch", &[batch])?;
+        let scores = &outs[1];
+        let g = scores.shape[1];
+        Ok((0..thumbs.len())
+            .map(|i| {
+                let row = &scores.data[i * g..(i + 1) * g];
+                let (person, &score) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap();
+                (person, score)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::frame::Frame;
+
+    fn engine() -> Option<Engine> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load_default().expect("engine"))
+    }
+
+    fn frame_tensor(faces: &[(u32, u32)]) -> Tensor {
+        let f = Frame::synthetic(0, 0, 0, 128, faces);
+        Tensor::new(vec![128, 128, 3], f.pixels)
+    }
+
+    #[test]
+    fn full_pipeline_finds_planted_faces() {
+        let Some(engine) = engine() else { return };
+        let pipe = FacePipeline::new(engine);
+        let frame = frame_tensor(&[(24, 24), (88, 88)]);
+        let image = pipe.preprocess(&frame).unwrap();
+        assert_eq!(image.shape, vec![64, 64, 3]);
+        let dets = pipe.detect(&image).unwrap();
+        assert_eq!(dets.len(), 2, "expected both planted faces: {dets:?}");
+        for det in &dets {
+            let thumb = pipe.crop_thumb(&image, det);
+            let (emb, person, _score) = pipe.identify(&thumb).unwrap();
+            assert_eq!(emb.shape, vec![128]);
+            assert!(person < pipe.engine.manifest.gallery);
+        }
+    }
+
+    #[test]
+    fn empty_frame_detects_nothing() {
+        let Some(engine) = engine() else { return };
+        let pipe = FacePipeline::new(engine);
+        let image = pipe.preprocess(&frame_tensor(&[])).unwrap();
+        assert!(pipe.detect(&image).unwrap().is_empty());
+    }
+
+    #[test]
+    fn identify_is_deterministic() {
+        let Some(engine) = engine() else { return };
+        let pipe = FacePipeline::new(engine);
+        let image = pipe.preprocess(&frame_tensor(&[(40, 40)])).unwrap();
+        let det = pipe.detect(&image).unwrap()[0];
+        let thumb = pipe.crop_thumb(&image, &det);
+        let a = pipe.identify(&thumb).unwrap();
+        let b = pipe.identify(&thumb).unwrap();
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn batch_matches_unbatched() {
+        let Some(engine) = engine() else { return };
+        let pipe = FacePipeline::new(engine);
+        let image = pipe.preprocess(&frame_tensor(&[(24, 24), (88, 24)])).unwrap();
+        let dets = pipe.detect(&image).unwrap();
+        let thumbs: Vec<Tensor> = dets.iter().map(|d| pipe.crop_thumb(&image, d)).collect();
+        let batched = pipe.identify_batch(&thumbs).unwrap();
+        for (thumb, (bp, bs)) in thumbs.iter().zip(&batched) {
+            let (_, p, s) = pipe.identify(thumb).unwrap();
+            assert_eq!(p, *bp);
+            assert!((s - bs).abs() < 1e-3, "{s} vs {bs}");
+        }
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let Some(engine) = engine() else { return };
+        let bad = Tensor::zeros(vec![10, 10, 3]);
+        assert!(engine.run("detect", &[bad]).is_err());
+        assert!(engine.run("nonexistent", &[]).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! `artifacts/manifest.json` — the build-time handshake between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shapes of one exported entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub frame_side: usize,
+    pub detect_side: usize,
+    pub thumb_side: usize,
+    pub embed_dim: usize,
+    pub gallery: usize,
+    pub batch: usize,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+fn shapes_of(v: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .context("missing shape list")?
+        .iter()
+        .map(|e| {
+            e.get("shape")
+                .and_then(Json::as_arr)
+                .context("missing shape")?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).context("bad dim"))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first (python/compile/aot.py)",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        let mut entries = BTreeMap::new();
+        for (name, e) in j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .context("manifest missing entries")?
+        {
+            entries.insert(
+                name.clone(),
+                EntryMeta {
+                    name: name.clone(),
+                    file: dir.join(
+                        e.get("file")
+                            .and_then(Json::as_str)
+                            .context("entry missing file")?,
+                    ),
+                    input_shapes: shapes_of(e, "inputs")?,
+                    output_shapes: shapes_of(e, "outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            frame_side: get_usize("frame_side")?,
+            detect_side: get_usize("detect_side")?,
+            thumb_side: get_usize("thumb_side")?,
+            embed_dim: get_usize("embed_dim")?,
+            gallery: get_usize("gallery")?,
+            batch: get_usize("batch")?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no such entry point: {name}"))
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Works from the repo root and from target/ test/bench cwds.
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert_eq!(m.embed_dim, 128);
+        assert!(m.entries.contains_key("detect"));
+        assert!(m.entries.contains_key("identify"));
+        let det = m.entry("detect").unwrap();
+        assert_eq!(det.input_shapes, vec![vec![64, 64, 3]]);
+        assert!(det.file.exists());
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("aitax-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"frame_side":128,"detect_side":64,"thumb_side":32,"embed_dim":128,
+                "gallery":32,"batch":8,"entries":{
+                "x":{"file":"x.hlo.txt","inputs":[{"shape":[2,2],"dtype":"float32"}],
+                     "outputs":[{"shape":[2],"dtype":"float32"}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entry("x").unwrap().output_shapes, vec![vec![2]]);
+        assert!(m.entry("missing").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them on the CPU PJRT client from the Rust hot path.
+//!
+//! Python is build-time only; after `make artifacts` the Rust binary is
+//! self-contained. HLO *text* is the interchange format (see
+//! `python/compile/aot.py` for why not serialized protos).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, FacePipeline};
+pub use manifest::{EntryMeta, Manifest};
+pub use tensor::Tensor;

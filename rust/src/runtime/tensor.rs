@@ -1,0 +1,104 @@
+//! Host-side tensors and Literal conversion.
+
+use anyhow::Result;
+
+/// A simple row-major f32 tensor (host side of the PJRT boundary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 2-D index helper (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// 3-D index helper (row-major HWC).
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(i * self.shape[1] + j) * self.shape[2] + k]
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.argmax(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn at3_hwc() {
+        let t = Tensor::new(vec![2, 2, 3], (0..12).map(|x| x as f32).collect());
+        assert_eq!(t.at3(1, 0, 2), 8.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates a 45-node cluster; we reproduce its deployments at
+//! full logical scale (840 producers, 1680 consumers, 3+ brokers) by running
+//! the same pipeline + broker logic in *virtual time*. This is the paper's
+//! own §5.2 emulation argument taken one step further: the paper replaces
+//! compute with wall-clock sleeps of the measured durations; we replace the
+//! sleeps with virtual-time delays, which is indistinguishable to the
+//! brokers, the network model and the storage model, and lets a one-hour
+//! cluster run finish in seconds.
+//!
+//! * [`engine`] — the event queue and virtual clock.
+//! * [`resource`] — FIFO rate servers (storage write path, NICs, broker
+//!   request CPU) with utilization accounting.
+//! * [`queue`] — time-weighted population tracking (faces in system,
+//!   Fig 7) and the §5.3 instability detector.
+
+pub mod engine;
+pub mod queue;
+pub mod resource;
+
+pub use engine::{EventQueue, Scheduled};
+pub use queue::{InstabilityVerdict, Population};
+pub use resource::{FifoServer, ServerPool};

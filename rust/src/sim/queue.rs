@@ -1,0 +1,221 @@
+//! Population tracking and the instability detector.
+//!
+//! [`Population`] tracks a time-weighted count (faces in the system, queue
+//! depths) and produces the Fig-7 timeseries. [`InstabilityVerdict`] is the
+//! paper's §5.3 queueing-theory criterion made operational: a run is
+//! *unstable* ("latency tends toward infinity — the longer the experiment
+//! runs, the larger the latency grows") when the in-system population has a
+//! clearly positive trend over the back half of the run.
+
+use crate::util::stats::linear_fit;
+
+/// Time-weighted population counter with periodic sampling.
+#[derive(Clone, Debug)]
+pub struct Population {
+    count: i64,
+    last_change_us: u64,
+    weighted_area: f64,
+    peak: i64,
+    /// (time_us, count) samples captured on every change, downsampled.
+    samples: Vec<(u64, i64)>,
+    sample_every_us: u64,
+    last_sample_us: u64,
+}
+
+impl Population {
+    pub fn new(sample_every_us: u64) -> Self {
+        Population {
+            count: 0,
+            last_change_us: 0,
+            weighted_area: 0.0,
+            peak: 0,
+            samples: vec![(0, 0)],
+            sample_every_us,
+            last_sample_us: 0,
+        }
+    }
+
+    fn advance(&mut self, now: u64) {
+        // Callers may report changes slightly out of order (e.g. a face
+        // "enters" at its future detect-end time while another exits at an
+        // earlier completion time). Clamp to keep the time-weighted area
+        // consistent; the bounded reordering error is negligible at the
+        // horizon scale.
+        let now = now.max(self.last_change_us);
+        self.weighted_area += self.count as f64 * (now - self.last_change_us) as f64;
+        self.last_change_us = now;
+        if now >= self.last_sample_us + self.sample_every_us {
+            self.samples.push((now, self.count));
+            self.last_sample_us = now;
+        }
+    }
+
+    pub fn enter(&mut self, now: u64) {
+        self.advance(now);
+        self.count += 1;
+        self.peak = self.peak.max(self.count);
+    }
+
+    pub fn exit(&mut self, now: u64) {
+        self.advance(now);
+        self.count -= 1;
+        debug_assert!(self.count >= 0, "population went negative");
+    }
+
+    pub fn current(&self) -> i64 {
+        self.count
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.peak
+    }
+
+    /// Time-averaged population over `[0, now]`.
+    pub fn mean(&self, now: u64) -> f64 {
+        if now == 0 {
+            return self.count as f64;
+        }
+        let area = self.weighted_area + self.count as f64 * (now - self.last_change_us) as f64;
+        area / now as f64
+    }
+
+    /// The sampled timeseries (for Fig 7).
+    pub fn samples(&self) -> &[(u64, i64)] {
+        &self.samples
+    }
+
+    /// Judge stability from the back half of the run.
+    pub fn verdict(&self, end_us: u64) -> InstabilityVerdict {
+        let half = end_us / 2;
+        let back: Vec<(f64, f64)> = self
+            .samples
+            .iter()
+            .filter(|(t, _)| *t >= half)
+            .map(|(t, c)| (*t as f64 / 1e6, *c as f64))
+            .collect();
+        if back.len() < 4 {
+            return InstabilityVerdict {
+                stable: true,
+                growth_per_sec: 0.0,
+                mean_back_half: self.mean(end_us),
+            };
+        }
+        let (slope, _) = linear_fit(&back);
+        let mean_back = back.iter().map(|p| p.1).sum::<f64>() / back.len() as f64;
+        // Unstable when the population grows by a meaningful fraction of
+        // its own level every second (ρ > 1 ⇒ linear growth), with an
+        // absolute floor so tiny systems don't flap.
+        let relative = if mean_back > 1.0 { slope / mean_back } else { slope };
+        InstabilityVerdict {
+            stable: !(relative > 0.02 && slope > 0.5),
+            growth_per_sec: slope,
+            mean_back_half: mean_back,
+        }
+    }
+}
+
+/// Result of the stability analysis for one run.
+#[derive(Clone, Copy, Debug)]
+pub struct InstabilityVerdict {
+    pub stable: bool,
+    /// Fitted population growth in items/second over the back half.
+    pub growth_per_sec: f64,
+    pub mean_back_half: f64,
+}
+
+impl InstabilityVerdict {
+    /// Display-friendly latency for sweep tables: `None` means "∞"
+    /// (the paper draws these bars extending beyond the chart).
+    pub fn latency_or_inf(&self, measured_us: u64) -> Option<u64> {
+        if self.stable {
+            Some(measured_us)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_constant_population() {
+        let mut p = Population::new(1000);
+        p.enter(0);
+        p.enter(0);
+        assert!((p.mean(1_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_weights_by_time() {
+        let mut p = Population::new(1000);
+        p.enter(0); // 1 from 0..500ms
+        p.enter(500_000); // 2 from 500ms..1s
+        assert!((p.mean(1_000_000) - 1.5).abs() < 1e-9);
+        assert_eq!(p.peak(), 2);
+    }
+
+    #[test]
+    fn stable_system_verdict() {
+        let mut p = Population::new(10_000);
+        // Oscillate between 0 and 5 for 10 seconds.
+        let mut t = 0;
+        for i in 0..1000 {
+            t = i * 10_000;
+            if i % 2 == 0 {
+                p.enter(t);
+            } else {
+                p.exit(t);
+            }
+        }
+        let v = p.verdict(t);
+        assert!(v.stable, "growth={}", v.growth_per_sec);
+    }
+
+    #[test]
+    fn unbounded_growth_detected() {
+        let mut p = Population::new(10_000);
+        // Net +1 every 10ms for 20 seconds -> 100/sec growth.
+        for i in 0..2000u64 {
+            p.enter(i * 10_000);
+        }
+        let v = p.verdict(20_000_000);
+        assert!(!v.stable, "growth={}", v.growth_per_sec);
+        assert!(v.growth_per_sec > 50.0);
+        assert_eq!(v.latency_or_inf(123), None);
+    }
+
+    #[test]
+    fn exit_balances_enter() {
+        let mut p = Population::new(1000);
+        for i in 0..100 {
+            p.enter(i * 100);
+        }
+        for i in 0..100 {
+            p.exit(10_000 + i * 100);
+        }
+        assert_eq!(p.current(), 0);
+    }
+
+    #[test]
+    fn samples_are_time_ordered_property() {
+        crate::util::prop::check(100, |rng| {
+            let mut p = Population::new(500);
+            let mut t = 0u64;
+            let mut pop = 0i64;
+            for _ in 0..500 {
+                t += rng.below(2000);
+                if pop > 0 && rng.chance(0.5) {
+                    p.exit(t);
+                    pop -= 1;
+                } else {
+                    p.enter(t);
+                    pop += 1;
+                }
+            }
+            let ok = p.samples().windows(2).all(|w| w[0].0 <= w[1].0);
+            crate::util::prop::assert_holds(ok, "samples time-ordered")
+        });
+    }
+}

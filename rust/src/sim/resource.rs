@@ -1,0 +1,283 @@
+//! Rate-based FIFO resource servers.
+//!
+//! A [`FifoServer`] models a device that serves work at a fixed rate with a
+//! single FIFO queue — the NVMe write path, a NIC direction, a broker's
+//! request-handling CPU. Callers ask "I have `work` units arriving at
+//! `now`; when does it finish?" and the server answers while tracking busy
+//! time and queue depth, from which utilization (Fig 11) falls out.
+//!
+//! [`ServerPool`] models `c` identical servers with a shared FIFO queue
+//! (used for multi-drive broker storage in Fig 15a).
+
+/// Single-queue, single-server, deterministic service at `rate` units/sec.
+///
+/// The server is *work-conserving and order-relaxed*: submissions may
+/// arrive slightly out of virtual-time order (the pipeline simulators
+/// compute multi-hop paths whose intermediate times jitter relative to the
+/// event clock). Rather than reserving a slot at the literal submission
+/// time — which would leave phantom dead time whenever a future-time
+/// submission precedes an earlier one, and amplify under feedback (the
+/// replication mesh) — the server tracks a backlog that drains at `rate`
+/// and credits idle time between observations. Out-of-order arrivals see
+/// an error bounded by the submission-time spread, with no accumulation.
+#[derive(Clone, Debug)]
+pub struct FifoServer {
+    /// Service rate in units per second (e.g. bytes/s).
+    rate: f64,
+    /// Fixed per-request latency added before service (device latency).
+    latency_us: u64,
+    /// Latest observation time.
+    last_us: u64,
+    /// Outstanding work at `last_us`, in microseconds of service.
+    backlog: u64,
+    /// Accumulated busy time (us).
+    busy_us: u64,
+    /// Total work served (units).
+    served: f64,
+    /// Requests served.
+    requests: u64,
+}
+
+impl FifoServer {
+    pub fn new(rate_per_sec: f64, latency_us: u64) -> Self {
+        assert!(rate_per_sec > 0.0, "server rate must be positive");
+        FifoServer {
+            rate: rate_per_sec,
+            latency_us,
+            last_us: 0,
+            backlog: 0,
+            busy_us: 0,
+            served: 0.0,
+            requests: 0,
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn set_rate(&mut self, rate_per_sec: f64) {
+        assert!(rate_per_sec > 0.0);
+        self.rate = rate_per_sec;
+    }
+
+    /// Credit idle drain up to `now`.
+    fn observe(&mut self, now: u64) {
+        if now > self.last_us {
+            let idle = now - self.last_us;
+            self.backlog = self.backlog.saturating_sub(idle);
+            self.last_us = now;
+        }
+    }
+
+    /// Submit `work` units at time `now`; returns the completion time.
+    /// The fixed per-request latency is *pipelined* (NVMe queue depth,
+    /// NIC store-and-forward): it delays the completion but does not
+    /// occupy the server.
+    pub fn submit(&mut self, now: u64, work: f64) -> u64 {
+        let service_us = (work / self.rate * 1e6).ceil() as u64;
+        self.observe(now);
+        self.backlog += service_us;
+        self.busy_us += service_us;
+        self.served += work;
+        self.requests += 1;
+        self.last_us + self.backlog + self.latency_us
+    }
+
+    /// Current queueing delay a new arrival at `now` would see before
+    /// service begins (us).
+    pub fn backlog_us(&self, now: u64) -> u64 {
+        let drained = now.saturating_sub(self.last_us);
+        self.backlog.saturating_sub(drained)
+    }
+
+    /// Fraction of `[0, now]` this server was busy.
+    pub fn utilization(&self, now: u64) -> f64 {
+        if now == 0 {
+            return 0.0;
+        }
+        // busy_us can exceed `now` when the queue extends beyond the
+        // horizon (overload); report offered utilization unclamped so
+        // saturation is visible (>1.0 means unstable).
+        self.busy_us as f64 / now as f64
+    }
+
+    /// Total units served.
+    pub fn served(&self) -> f64 {
+        self.served
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Average achieved throughput over `[0, now]`, units/sec.
+    pub fn throughput(&self, now: u64) -> f64 {
+        if now == 0 {
+            return 0.0;
+        }
+        self.served * 1e6 / now as f64
+    }
+}
+
+/// `c` identical rate servers fed by one FIFO queue (M/G/c-style). Jobs are
+/// dispatched to the earliest-free server.
+#[derive(Clone, Debug)]
+pub struct ServerPool {
+    free_at: Vec<u64>,
+    rate: f64,
+    latency_us: u64,
+    busy_us: u64,
+    served: f64,
+}
+
+impl ServerPool {
+    pub fn new(servers: usize, rate_per_sec: f64, latency_us: u64) -> Self {
+        assert!(servers > 0);
+        assert!(rate_per_sec > 0.0);
+        ServerPool {
+            free_at: vec![0; servers],
+            rate: rate_per_sec,
+            latency_us,
+            busy_us: 0,
+            served: 0.0,
+        }
+    }
+
+    pub fn servers(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Submit `work` at `now`; dispatch to the earliest-free server.
+    pub fn submit(&mut self, now: u64, work: f64) -> u64 {
+        let (idx, &free) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &f)| f)
+            .unwrap();
+        let service_us = (work / self.rate * 1e6).ceil() as u64 + self.latency_us;
+        let start = now.max(free);
+        let done = start + service_us;
+        self.free_at[idx] = done;
+        self.busy_us += service_us;
+        self.served += work;
+        done
+    }
+
+    /// Aggregate utilization across servers over `[0, now]` (can exceed 1
+    /// under overload; divide-by-c normalized).
+    pub fn utilization(&self, now: u64) -> f64 {
+        if now == 0 {
+            return 0.0;
+        }
+        self.busy_us as f64 / (now as f64 * self.free_at.len() as f64)
+    }
+
+    pub fn served(&self) -> f64 {
+        self.served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_service_no_overlap() {
+        // 1000 units/s, two 500-unit jobs at t=0 -> finish at 0.5s and 1.0s.
+        let mut s = FifoServer::new(1000.0, 0);
+        assert_eq!(s.submit(0, 500.0), 500_000);
+        assert_eq!(s.submit(0, 500.0), 1_000_000);
+        assert_eq!(s.backlog_us(0), 1_000_000);
+    }
+
+    #[test]
+    fn idle_gap_not_counted_busy() {
+        let mut s = FifoServer::new(1000.0, 0);
+        s.submit(0, 100.0); // busy [0, 100ms]
+        s.submit(500_000, 100.0); // busy [500ms, 600ms]
+        assert_eq!(s.utilization(1_000_000), 0.2);
+    }
+
+    #[test]
+    fn latency_added_per_request() {
+        let mut s = FifoServer::new(1e9, 18);
+        let done = s.submit(0, 1000.0); // 1us transfer + 18us latency
+        assert_eq!(done, 19);
+    }
+
+    #[test]
+    fn overload_shows_utilization_above_one() {
+        let mut s = FifoServer::new(100.0, 0);
+        for _ in 0..20 {
+            s.submit(0, 100.0); // 20s of work submitted at t=0
+        }
+        assert!(s.utilization(1_000_000) > 1.0);
+        assert!(s.backlog_us(1_000_000) > 0);
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let mut s = FifoServer::new(2_000.0, 0);
+        s.submit(0, 1000.0);
+        assert_eq!(s.served(), 1000.0);
+        assert!((s.throughput(1_000_000) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_parallelism() {
+        // 2 servers at 1000/s: two 500-unit jobs at t=0 overlap.
+        let mut p = ServerPool::new(2, 1000.0, 0);
+        assert_eq!(p.submit(0, 500.0), 500_000);
+        assert_eq!(p.submit(0, 500.0), 500_000);
+        // Third job waits for the earliest-free server.
+        assert_eq!(p.submit(0, 500.0), 1_000_000);
+        assert!((p.utilization(1_000_000) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_completion_monotone_property() {
+        crate::util::prop::check(300, |rng| {
+            let mut s = FifoServer::new(1e6, rng.below(100));
+            let mut now = 0u64;
+            let mut last_done = 0u64;
+            for _ in 0..50 {
+                now += rng.below(10_000);
+                let done = s.submit(now, rng.uniform(1.0, 1e5));
+                if done < last_done {
+                    return Err(format!("FIFO violated: {done} < {last_done}"));
+                }
+                if done < now {
+                    return Err("completion before submission".into());
+                }
+                last_done = done;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pool_work_conservation_property() {
+        crate::util::prop::check(100, |rng| {
+            let servers = 1 + rng.below(8) as usize;
+            let rate = 1e6;
+            let mut p = ServerPool::new(servers, rate, 0);
+            let mut total = 0.0;
+            let mut max_done = 0u64;
+            for _ in 0..100 {
+                let w = rng.uniform(1.0, 1e5);
+                total += w;
+                max_done = max_done.max(p.submit(0, w));
+            }
+            // All work must finish no earlier than total/(rate*servers) and
+            // no later than total/rate (+rounding).
+            let lower = (total / (rate * servers as f64) * 1e6) as u64;
+            let upper = (total / rate * 1e6) as u64 + 200;
+            crate::util::prop::assert_holds(
+                max_done >= lower && max_done <= upper,
+                &format!("makespan {max_done} outside [{lower}, {upper}]"),
+            )
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Live-mode log storage backends.
+//!
+//! The broker's partition logs (see `broker::log`) write through a
+//! [`StorageBackend`]: [`FileBackend`] appends to real segment files on the
+//! local filesystem (what the live pipeline and the storage micro-bench
+//! use), [`MemBackend`] keeps bytes in memory (unit tests, and brokers in
+//! pure-simulation runs where durability is modeled by `device` instead).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// Append-only byte storage with positional reads, per named segment.
+pub trait StorageBackend: Send {
+    /// Append `data` to `segment`, returning the segment byte offset at
+    /// which the write landed.
+    fn append(&mut self, segment: &str, data: &[u8]) -> Result<u64>;
+    /// Read `len` bytes from `segment` starting at `offset`.
+    fn read(&mut self, segment: &str, offset: u64, len: usize) -> Result<Vec<u8>>;
+    /// Flush durability (fsync for files).
+    fn sync(&mut self, segment: &str) -> Result<()>;
+    /// Current size of a segment in bytes.
+    fn len(&mut self, segment: &str) -> Result<u64>;
+}
+
+/// In-memory backend.
+#[derive(Default)]
+pub struct MemBackend {
+    segments: std::collections::HashMap<String, Vec<u8>>,
+}
+
+impl MemBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StorageBackend for MemBackend {
+    fn append(&mut self, segment: &str, data: &[u8]) -> Result<u64> {
+        let seg = self.segments.entry(segment.to_string()).or_default();
+        let off = seg.len() as u64;
+        seg.extend_from_slice(data);
+        Ok(off)
+    }
+
+    fn read(&mut self, segment: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let seg = self
+            .segments
+            .get(segment)
+            .with_context(|| format!("no such segment: {segment}"))?;
+        let start = offset as usize;
+        anyhow::ensure!(
+            start + len <= seg.len(),
+            "read past end of segment {segment}: {}+{} > {}",
+            start,
+            len,
+            seg.len()
+        );
+        Ok(seg[start..start + len].to_vec())
+    }
+
+    fn sync(&mut self, _segment: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn len(&mut self, segment: &str) -> Result<u64> {
+        Ok(self.segments.get(segment).map(|s| s.len() as u64).unwrap_or(0))
+    }
+}
+
+/// Real-file backend rooted at a directory. One file per segment.
+pub struct FileBackend {
+    root: PathBuf,
+    open: std::collections::HashMap<String, File>,
+}
+
+impl FileBackend {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating log dir {}", root.display()))?;
+        Ok(FileBackend {
+            root,
+            open: Default::default(),
+        })
+    }
+
+    fn file(&mut self, segment: &str) -> Result<&mut File> {
+        anyhow::ensure!(
+            !segment.contains('/') && !segment.contains(".."),
+            "segment names must be flat: {segment}"
+        );
+        if !self.open.contains_key(segment) {
+            let path = self.root.join(segment);
+            let f = OpenOptions::new()
+                .create(true)
+                .read(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening segment {}", path.display()))?;
+            self.open.insert(segment.to_string(), f);
+        }
+        Ok(self.open.get_mut(segment).unwrap())
+    }
+}
+
+impl StorageBackend for FileBackend {
+    fn append(&mut self, segment: &str, data: &[u8]) -> Result<u64> {
+        let f = self.file(segment)?;
+        let off = f.seek(SeekFrom::End(0))?;
+        f.write_all(data)?;
+        Ok(off)
+    }
+
+    fn read(&mut self, segment: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let f = self.file(segment)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("reading {len}B at {offset} from {segment}"))?;
+        Ok(buf)
+    }
+
+    fn sync(&mut self, segment: &str) -> Result<()> {
+        self.file(segment)?.sync_data()?;
+        Ok(())
+    }
+
+    fn len(&mut self, segment: &str) -> Result<u64> {
+        Ok(self.file(segment)?.seek(SeekFrom::End(0))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(backend: &mut dyn StorageBackend) {
+        let off1 = backend.append("seg-0", b"hello ").unwrap();
+        let off2 = backend.append("seg-0", b"world").unwrap();
+        assert_eq!(off1, 0);
+        assert_eq!(off2, 6);
+        assert_eq!(backend.read("seg-0", 0, 11).unwrap(), b"hello world");
+        assert_eq!(backend.read("seg-0", 6, 5).unwrap(), b"world");
+        assert_eq!(backend.len("seg-0").unwrap(), 11);
+        backend.sync("seg-0").unwrap();
+    }
+
+    #[test]
+    fn mem_roundtrip() {
+        roundtrip(&mut MemBackend::new());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("aitax-log-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut b = FileBackend::new(&dir).unwrap();
+        roundtrip(&mut b);
+        // Separate segments are independent files.
+        b.append("seg-1", b"x").unwrap();
+        assert_eq!(b.len("seg-1").unwrap(), 1);
+        assert_eq!(b.len("seg-0").unwrap(), 11);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mem_read_past_end_errors() {
+        let mut b = MemBackend::new();
+        b.append("s", b"abc").unwrap();
+        assert!(b.read("s", 2, 5).is_err());
+        assert!(b.read("missing", 0, 1).is_err());
+    }
+
+    #[test]
+    fn file_rejects_path_traversal() {
+        let dir = std::env::temp_dir().join(format!("aitax-log-trav-{}", std::process::id()));
+        let mut b = FileBackend::new(&dir).unwrap();
+        assert!(b.append("../evil", b"x").is_err());
+        assert!(b.append("a/b", b"x").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

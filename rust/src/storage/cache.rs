@@ -1,0 +1,145 @@
+//! OS page-cache model.
+//!
+//! The paper's §5.4 explanation for why broker *reads* never stress the
+//! device: "brokers are tasked with ensuring data reliability, so they must
+//! write producer data to storage, but the operating system can also cache
+//! the data in memory, allowing reads directly from memory and bypassing
+//! the storage read path."
+//!
+//! We model a FIFO window of recently-written byte ranges bounded by the
+//! node's memory budget. Streaming consumers read data shortly after it is
+//! produced, so in a healthy system virtually all fetches hit; only a
+//! consumer lagging by more than the cache window touches the device.
+
+use std::collections::VecDeque;
+
+/// Tracks which log offsets are still memory-resident.
+#[derive(Clone, Debug)]
+pub struct PageCache {
+    /// Cache capacity in bytes (a slice of node RAM given to the page
+    /// cache; brokers do little else with their 384 GB).
+    capacity: f64,
+    /// (end_offset, bytes) of cached appends per partition-group, FIFO.
+    window: VecDeque<(u64, f64)>,
+    cached_bytes: f64,
+    /// Monotone logical offset of all bytes ever appended.
+    appended: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PageCache {
+    pub fn new(capacity_bytes: f64) -> Self {
+        PageCache {
+            capacity: capacity_bytes,
+            window: VecDeque::new(),
+            cached_bytes: 0.0,
+            appended: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Record an append of `bytes`; evicts the oldest entries past
+    /// capacity. Returns the new end offset.
+    pub fn append(&mut self, bytes: f64) -> u64 {
+        self.appended += bytes as u64;
+        self.window.push_back((self.appended, bytes));
+        self.cached_bytes += bytes;
+        while self.cached_bytes > self.capacity {
+            if let Some((_, b)) = self.window.pop_front() {
+                self.cached_bytes -= b;
+            } else {
+                break;
+            }
+        }
+        self.appended
+    }
+
+    /// Oldest still-cached offset.
+    pub fn oldest_cached(&self) -> u64 {
+        self.window
+            .front()
+            .map(|(end, b)| end.saturating_sub(*b as u64))
+            .unwrap_or(self.appended)
+    }
+
+    /// Would a read ending at `offset` be served from memory? The data
+    /// ending at `offset` is cached iff it lies strictly inside the cached
+    /// window (the byte range `(oldest_cached, appended]`).
+    pub fn lookup(&mut self, offset: u64) -> bool {
+        let hit = offset > self.oldest_cached() && offset <= self.appended;
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        hit
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_data_hits() {
+        let mut c = PageCache::new(1e6);
+        let end = c.append(1000.0);
+        assert!(c.lookup(end));
+        assert_eq!(c.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn evicted_data_misses() {
+        let mut c = PageCache::new(10_000.0);
+        let first_end = c.append(8_000.0);
+        c.append(8_000.0); // evicts the first entry
+        assert!(!c.lookup(first_end));
+        assert!(c.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn streaming_reader_always_hits() {
+        // Consumer reads right behind the appender: hits forever.
+        let mut c = PageCache::new(100_000.0);
+        for _ in 0..1000 {
+            let end = c.append(5_000.0);
+            assert!(c.lookup(end));
+        }
+    }
+
+    #[test]
+    fn deeply_lagging_reader_misses() {
+        let mut c = PageCache::new(50_000.0);
+        let early = c.append(1_000.0);
+        for _ in 0..100 {
+            c.append(5_000.0);
+        }
+        assert!(!c.lookup(early));
+    }
+
+    #[test]
+    fn cache_never_exceeds_capacity_property() {
+        crate::util::prop::check(100, |rng| {
+            let cap = rng.uniform(1e4, 1e6);
+            let mut c = PageCache::new(cap);
+            for _ in 0..200 {
+                c.append(rng.uniform(1.0, 5e4));
+                if c.cached_bytes > cap + 5e4 {
+                    return Err(format!("cache overflow: {} > {}", c.cached_bytes, cap));
+                }
+            }
+            Ok(())
+        });
+    }
+}

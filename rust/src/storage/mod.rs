@@ -1,0 +1,22 @@
+//! Storage substrate.
+//!
+//! Two halves, matching the crate's two execution modes:
+//!
+//! * [`device`] — the *simulated* NVMe write/read path used by the DES:
+//!   Table-2 P4510 bandwidth/latency plus the small-write efficiency model
+//!   that makes the paper's "67% utilization is effectively saturated"
+//!   observation (§5.4) emergent.
+//! * [`cache`] — the OS page-cache model: the paper observes consumer reads
+//!   are served from memory ("reads use essentially none of the available
+//!   bandwidth"), which is why only the *write* path saturates.
+//! * [`backend`] — the *live-mode* log storage: a real-file backend (the
+//!   broker's segment files hit the local filesystem) and an in-memory
+//!   backend for tests.
+
+pub mod backend;
+pub mod cache;
+pub mod device;
+
+pub use backend::{FileBackend, MemBackend, StorageBackend};
+pub use cache::PageCache;
+pub use device::StorageDevice;

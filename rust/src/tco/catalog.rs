@@ -1,0 +1,90 @@
+//! Equipment price book — Tables 3 and 4, verbatim.
+
+/// One bill-of-materials line.
+#[derive(Clone, Debug)]
+pub struct LineItem {
+    pub name: &'static str,
+    pub unit_price: f64,
+    pub quantity: usize,
+}
+
+impl LineItem {
+    pub fn total(&self) -> f64 {
+        self.unit_price * self.quantity as f64
+    }
+}
+
+/// Catalog of unit prices used by both designs.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    /// Dell PowerEdge R740xd with 2x Xeon Platinum 8176 + 384 GB.
+    pub compute_server: f64,
+    /// Dell PowerEdge R740xd with 2x Xeon Bronze 3104 + 384 GB.
+    pub broker_server: f64,
+    /// Intel SSD DC P4510 1 TB.
+    pub nvme: f64,
+    /// Mellanox MCX415A 100 GbE adapter.
+    pub adapter_100g: f64,
+    /// Mellanox MCX413A 50 GbE adapter.
+    pub adapter_50g: f64,
+    /// Mellanox MCX411A 10 GbE adapter.
+    pub adapter_10g: f64,
+    /// Mellanox MSN2700-CS2F 32-port 100 GbE switch.
+    pub switch_100g: f64,
+    /// Mellanox MSN2700-BS2F 32-port 40 GbE switch.
+    pub switch_40g: f64,
+    /// Mellanox MCP1600 100 GbE copper cable.
+    pub cable_100g: f64,
+    /// Mellanox MFA1A00-C030 100 GbE optical interconnect.
+    pub optical_100g: f64,
+    /// Mellanox MFA7A20-C010 optical splitter 100 GbE -> 2x50.
+    pub optical_splitter_50g: f64,
+    /// Mellanox MCP7H00-G002R copper splitter 100 GbE -> 2x50.
+    pub copper_splitter_50g: f64,
+    /// Mellanox MC2609130-003 copper splitter 40 GbE -> 4x10.
+    pub copper_splitter_10g: f64,
+}
+
+impl Default for Catalog {
+    fn default() -> Self {
+        Catalog {
+            compute_server: 28_731.0,
+            broker_server: 11_016.0,
+            nvme: 399.0,
+            adapter_100g: 660.0,
+            adapter_50g: 395.0,
+            adapter_10g: 180.0,
+            switch_100g: 17_285.0,
+            switch_40g: 10_635.0,
+            cable_100g: 100.0,
+            optical_100g: 515.0,
+            optical_splitter_50g: 1_165.0,
+            copper_splitter_50g: 140.0,
+            copper_splitter_10g: 90.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_item_math() {
+        let li = LineItem {
+            name: "switch",
+            unit_price: 17_285.0,
+            quantity: 160,
+        };
+        assert_eq!(li.total(), 2_765_600.0);
+    }
+
+    #[test]
+    fn table_prices() {
+        let c = Catalog::default();
+        assert_eq!(c.compute_server, 28_731.0);
+        assert_eq!(c.broker_server, 11_016.0);
+        assert_eq!(c.nvme, 399.0);
+        assert_eq!(c.switch_100g, 17_285.0);
+    }
+}

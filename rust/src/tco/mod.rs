@@ -1,0 +1,15 @@
+//! Total-cost-of-ownership model (§7.2–§7.3, Tables 3–4).
+//!
+//! Reimplements the paper's Coolan-style TCO accounting: an equipment
+//! price book ([`catalog`]), a power model with the paper's assumptions
+//! (cooling ≈ compute power, $0.10/kWh) ([`power`]), and the two data
+//! center designs — homogeneous and purpose-built — with three-year
+//! amortization ([`designs`]).
+
+pub mod catalog;
+pub mod designs;
+pub mod power;
+
+pub use catalog::{Catalog, LineItem};
+pub use designs::{homogeneous_1024, purpose_built, DataCenterDesign, TcoSummary};
+pub use power::PowerModel;

@@ -1,0 +1,99 @@
+//! Power and cooling model (§7.2).
+//!
+//! "Each of the servers ... is equipped with a 750 watt power supply,
+//! while Mellanox reports that its routers can consume a maximum of 398
+//! watts. ... Cooling is estimated to require approximately as much power
+//! as the compute resources. ... Assuming US$0.10 per kilowatt hour."
+
+/// Per-device wattage assumptions.
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    pub compute_server_w: f64,
+    /// Broker servers in the purpose-built design use far smaller CPUs
+    /// (2x Xeon Bronze 3104, 85 W TDP vs 165 W).
+    pub broker_server_w: f64,
+    pub switch_100g_w: f64,
+    pub switch_40g_w: f64,
+    /// Cooling power as a multiple of IT power (paper: 1.0 — "as much
+    /// power as the compute resources").
+    pub cooling_factor: f64,
+    /// Dollars per kWh (paper: $0.10).
+    pub usd_per_kwh: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            compute_server_w: 750.0,
+            broker_server_w: 500.0,
+            switch_100g_w: 398.0,
+            switch_40g_w: 231.0,
+            cooling_factor: 1.0,
+            usd_per_kwh: 0.10,
+        }
+    }
+}
+
+impl PowerModel {
+    /// IT power in watts for a device mix.
+    pub fn it_watts(
+        &self,
+        compute_servers: usize,
+        broker_servers: usize,
+        switches_100g: usize,
+        switches_40g: usize,
+    ) -> f64 {
+        compute_servers as f64 * self.compute_server_w
+            + broker_servers as f64 * self.broker_server_w
+            + switches_100g as f64 * self.switch_100g_w
+            + switches_40g as f64 * self.switch_40g_w
+    }
+
+    /// Total facility watts including cooling.
+    pub fn total_watts(&self, it_watts: f64) -> f64 {
+        it_watts * (1.0 + self.cooling_factor)
+    }
+
+    /// Yearly electricity cost in dollars at maximum load.
+    pub fn yearly_cost(&self, it_watts: f64) -> f64 {
+        let kw = self.total_watts(it_watts) / 1000.0;
+        kw * self.usd_per_kwh * 24.0 * 365.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_homogeneous_power_numbers() {
+        // 1024 x 750 W servers + 160 switches: the paper rounds to 921 kW
+        // of IT power; component math gives ~832 kW — we verify our model
+        // is in that band and the cost chain matches the paper's method.
+        let p = PowerModel::default();
+        let it = p.it_watts(1024, 0, 160, 0);
+        assert!((it - 831_680.0).abs() < 1.0, "it={it}");
+        // Cooling doubles it; $0.10/kWh.
+        let total = p.total_watts(it);
+        assert!((total - 1_663_360.0).abs() < 1.0);
+        let yearly = p.yearly_cost(it);
+        // Paper quotes US$184/hour ≈ US$1.61M/year for its 921 kW figure;
+        // our component-exact 832 kW gives ~$1.46M.
+        assert!((1.3e6..1.7e6).contains(&yearly), "yearly={yearly}");
+    }
+
+    #[test]
+    fn cooling_factor_scales() {
+        let mut p = PowerModel::default();
+        p.cooling_factor = 0.5;
+        assert_eq!(p.total_watts(1000.0), 1500.0);
+    }
+
+    #[test]
+    fn purpose_built_uses_less_power() {
+        let p = PowerModel::default();
+        let homo = p.it_watts(1024, 0, 160, 0);
+        let pb = p.it_watts(867, 157, 28, 14);
+        assert!(pb < homo, "purpose-built should draw less: {pb} vs {homo}");
+    }
+}

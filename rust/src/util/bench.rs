@@ -1,0 +1,206 @@
+//! Micro benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] to run timed sections with warmup, repetition and simple
+//! statistics, printing one row per measurement. Experiment benches also
+//! print the paper-reported value next to the measured one so
+//! EXPERIMENTS.md entries can be pasted straight from bench output.
+
+use std::time::Instant;
+
+use crate::util::stats::Running;
+
+/// One timed measurement.
+pub struct Measurement {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: u64,
+    /// Optional throughput denominator: items processed per iteration.
+    pub items_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.mean_ns
+    }
+}
+
+pub struct Bench {
+    suite: String,
+    results: Vec<Measurement>,
+    /// Minimum wall time to spend measuring each benchmark (after warmup).
+    pub measure_secs: f64,
+    pub warmup_secs: f64,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        Self {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            measure_secs: 1.0,
+            warmup_secs: 0.2,
+        }
+    }
+
+    /// Time `f`, auto-scaling iteration counts to fill the measurement
+    /// window. `items` is the per-iteration throughput denominator
+    /// (e.g. events simulated, records appended).
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        // Choose batch size so each sample is >= ~1ms (timer noise floor).
+        let batch = ((1e-3 / per_iter).ceil() as u64).max(1);
+
+        let mut stats = Running::new();
+        let mut total_iters = 0u64;
+        let m0 = Instant::now();
+        while m0.elapsed().as_secs_f64() < self.measure_secs {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = s.elapsed().as_nanos() as f64 / batch as f64;
+            stats.add(ns);
+            total_iters += batch;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: stats.mean(),
+            std_ns: stats.std_dev(),
+            iters: total_iters,
+            items_per_iter: items,
+        };
+        self.print_row(&m);
+        self.results.push(m);
+    }
+
+    /// Run once (for long end-to-end scenarios where repetition is the
+    /// scenario's own internal loop). Returns elapsed seconds.
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, items: f64, f: F) -> f64 {
+        let s = Instant::now();
+        f();
+        let el = s.elapsed();
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: el.as_nanos() as f64,
+            std_ns: 0.0,
+            iters: 1,
+            items_per_iter: items,
+        };
+        self.print_row(&m);
+        self.results.push(m);
+        el.as_secs_f64()
+    }
+
+    fn print_row(&self, m: &Measurement) {
+        let time = if m.mean_ns >= 1e9 {
+            format!("{:.3} s", m.mean_ns / 1e9)
+        } else if m.mean_ns >= 1e6 {
+            format!("{:.3} ms", m.mean_ns / 1e6)
+        } else if m.mean_ns >= 1e3 {
+            format!("{:.3} us", m.mean_ns / 1e3)
+        } else {
+            format!("{:.1} ns", m.mean_ns)
+        };
+        if m.items_per_iter > 0.0 {
+            println!(
+                "{:<44} {:>12}  ±{:>6.1}%  {:>14.0} items/s  ({} iters)",
+                format!("{}/{}", self.suite, m.name),
+                time,
+                if m.mean_ns > 0.0 {
+                    100.0 * m.std_ns / m.mean_ns
+                } else {
+                    0.0
+                },
+                m.throughput(),
+                m.iters
+            );
+        } else {
+            println!(
+                "{:<44} {:>12}  ±{:>6.1}%  ({} iters)",
+                format!("{}/{}", self.suite, m.name),
+                time,
+                if m.mean_ns > 0.0 {
+                    100.0 * m.std_ns / m.mean_ns
+                } else {
+                    0.0
+                },
+                m.iters
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Print a comparison row: measured value vs the paper's reported value.
+/// Used by the figure-reproduction benches.
+pub fn paper_row(label: &str, measured: f64, paper: f64, unit: &str) {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    println!(
+        "  {:<40} measured {:>10.2} {unit:<5} | paper {:>10.2} {unit:<5} | ratio {:>5.2}",
+        label, measured, paper, ratio
+    );
+}
+
+/// Print a series header for figure benches.
+pub fn series_header(title: &str, cols: &[&str]) {
+    println!("\n-- {title} --");
+    let mut line = String::new();
+    for c in cols {
+        line.push_str(&format!("{:>16}", c));
+    }
+    println!("{line}");
+}
+
+/// Print one row of a numeric series.
+pub fn series_row(vals: &[String]) {
+    let mut line = String::new();
+    for v in vals {
+        line.push_str(&format!("{:>16}", v));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("test");
+        b.measure_secs = 0.05;
+        b.warmup_secs = 0.01;
+        let mut acc = 0u64;
+        b.run("noop-ish", 1.0, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].mean_ns > 0.0);
+        assert!(b.results()[0].throughput() > 0.0);
+    }
+
+    #[test]
+    fn run_once_records() {
+        let mut b = Bench::new("test");
+        let secs = b.run_once("sleepless", 10.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(secs >= 0.0);
+        assert_eq!(b.results()[0].iters, 1);
+    }
+}

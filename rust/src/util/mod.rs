@@ -1,0 +1,18 @@
+//! Self-contained utility layer.
+//!
+//! The build environment is fully offline and the usual ecosystem crates
+//! (serde, clap, rand, criterion, proptest) are unavailable, so this module
+//! provides the small, dependency-free versions of what the rest of the
+//! crate needs: a JSON parser/writer ([`json`]), deterministic RNGs
+//! ([`rng`]), streaming statistics and histograms ([`stats`]), a CLI
+//! argument parser ([`cli`]), unit helpers ([`units`]), a micro
+//! property-testing framework ([`prop`]) and a micro benchmark harness
+//! ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod units;

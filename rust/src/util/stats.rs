@@ -1,0 +1,368 @@
+//! Streaming statistics, histograms and small regression helpers.
+//!
+//! The paper reports means, p99 tail latencies (§4.2) and trend lines
+//! (Fig 7); this module provides the measurement machinery: a Welford
+//! mean/variance accumulator, an HDR-style log-bucketed histogram with
+//! percentile queries, a fixed-capacity reservoir, time-series helpers, and
+//! least-squares slope estimation (used by the simulator's stability
+//! detector, §5.3's "latency tends to infinity" criterion).
+
+/// Welford online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.n as f64
+    }
+
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed histogram (HDR-histogram style) for latency percentiles.
+///
+/// Values are bucketed with ~1% relative precision across a dynamic range of
+/// `[1, 2^60)` in whatever unit the caller uses (we use microseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// 64 "octaves" × `SUB` linear sub-buckets each.
+    counts: Vec<u64>,
+    total: u64,
+    running: Running,
+}
+
+const SUB_BITS: u32 = 7; // 128 sub-buckets per octave -> <1% error
+const SUB: usize = 1 << SUB_BITS;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; 64 * SUB],
+            total: 0,
+            running: Running::new(),
+        }
+    }
+
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let msb = 63 - v.leading_zeros(); // position of highest set bit
+        if msb < SUB_BITS {
+            v as usize
+        } else {
+            let shift = msb - SUB_BITS;
+            let sub = ((v >> shift) as usize) & (SUB - 1);
+            ((msb - SUB_BITS + 1) as usize) * SUB + sub
+        }
+    }
+
+    fn bucket_value(index: usize) -> u64 {
+        let octave = index / SUB;
+        let sub = index % SUB;
+        if octave == 0 {
+            sub as u64
+        } else {
+            let shift = (octave - 1) as u32;
+            ((SUB + sub) as u64) << shift
+        }
+    }
+
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.running.add(value as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.running.mean()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.running.max()
+    }
+
+    /// Value at quantile `q` in `[0, 1]`. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(i);
+            }
+        }
+        self.running.max() as u64
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.running.merge(&other.running);
+    }
+}
+
+/// Ordinary least squares over `(x, y)` points: returns `(slope, intercept)`.
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return (0.0, points.first().map(|p| p.1).unwrap_or(0.0));
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Pearson correlation coefficient (used to verify the Fig-7 claim that
+/// latency tracks the number of faces in the system).
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_mean_var() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.add(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn running_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0 + 20.0).collect();
+        let mut all = Running::new();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.add(x);
+            if i % 2 == 0 {
+                a.add(x)
+            } else {
+                b.add(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn histogram_percentiles_uniform() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        // ~1% bucket error allowed
+        let p50 = h.p50() as f64;
+        let p99 = h.p99() as f64;
+        assert!((p50 - 5_000.0).abs() / 5_000.0 < 0.02, "p50={p50}");
+        assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.02, "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_huge() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(1 << 40);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= (1 << 40) * 99 / 100);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..5000 {
+            h.record(rng.below(1_000_000) + 1);
+        }
+        let qs = [0.0, 0.1, 0.5, 0.9, 0.99, 1.0];
+        for w in qs.windows(2) {
+            assert!(h.quantile(w[0]) <= h.quantile(w[1]));
+        }
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_histograms() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=100u64 {
+            a.record(v);
+            b.record(v * 10);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.quantile(1.0) >= 990);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 * i as f64 + 2.0)).collect();
+        let (m, b) = linear_fit(&pts);
+        assert!((m - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_degenerate() {
+        assert_eq!(linear_fit(&[]), (0.0, 0.0));
+        assert_eq!(linear_fit(&[(1.0, 5.0)]), (0.0, 5.0));
+        let (m, _) = linear_fit(&[(2.0, 1.0), (2.0, 3.0)]);
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn correlation_signs() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((correlation(&xs, &ys) - 1.0).abs() < 1e-9);
+        assert!((correlation(&xs, &zs) + 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,76 @@
+//! Unit helpers. The simulator's base time unit is the **microsecond**
+//! (`u64`), matching the precision the paper reports (storage latencies of
+//! 18–77 µs, stage latencies of milliseconds). Bandwidths are bytes/second.
+
+/// Microseconds per second.
+pub const SEC: u64 = 1_000_000;
+/// Microseconds per millisecond.
+pub const MS: u64 = 1_000;
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+
+/// Gigabits per second → bytes per second.
+pub const fn gbps(x: u64) -> f64 {
+    (x * 1_000_000_000 / 8) as f64
+}
+
+pub fn ms_to_us(ms: f64) -> u64 {
+    (ms * 1_000.0).round() as u64
+}
+
+pub fn us_to_ms(us: u64) -> f64 {
+    us as f64 / 1_000.0
+}
+
+pub fn secs(us: u64) -> f64 {
+    us as f64 / SEC as f64
+}
+
+/// Format a microsecond duration human-readably ("351.2 ms", "2.21 s").
+pub fn fmt_us(us: u64) -> String {
+    let f = us as f64;
+    if f >= SEC as f64 {
+        format!("{:.2} s", f / SEC as f64)
+    } else if f >= MS as f64 {
+        format!("{:.1} ms", f / MS as f64)
+    } else {
+        format!("{} us", us)
+    }
+}
+
+/// Format a byte count ("37.3 kB", "1.10 GB/s" when paired with "/s").
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= GB as f64 {
+        format!("{:.2} GB", b / GB as f64)
+    } else if b >= MB as f64 {
+        format!("{:.1} MB", b / MB as f64)
+    } else if b >= KB as f64 {
+        format!("{:.1} kB", b / KB as f64)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ms_to_us(1.5), 1_500);
+        assert_eq!(us_to_ms(2_500), 2.5);
+        assert_eq!(gbps(100), 12_500_000_000.0);
+        assert_eq!(secs(1_500_000), 1.5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_us(500), "500 us");
+        assert_eq!(fmt_us(351_200), "351.2 ms");
+        assert_eq!(fmt_us(2_210_000), "2.21 s");
+        assert_eq!(fmt_bytes(37_300.0), "37.3 kB");
+        assert_eq!(fmt_bytes(1_100_000_000.0), "1.10 GB");
+    }
+}
