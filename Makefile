@@ -1,0 +1,34 @@
+# AI-Tax reproduction — build orchestration.
+#
+# `make artifacts` runs the Layer-2/Layer-1 Python AOT export that the Rust
+# runtime loads at startup (see rust/src/runtime/). The Rust side is pure
+# cargo; `make build` / `make test` mirror the tier-1 verify commands.
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts build test bench fmt clippy clean
+
+# AOT-lower the JAX face-pipeline models to HLO text + manifest. Python
+# (jax + the Pallas kernels) is required only for this step; everything
+# else is Rust-only.
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS_DIR)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+fmt:
+	cd rust && cargo fmt --all --check
+
+clippy:
+	cd rust && cargo clippy --all-targets
+
+clean:
+	cd rust && cargo clean
+	rm -rf $(ARTIFACTS_DIR)

@@ -1,0 +1,58 @@
+//! Mixed tenancy: Face Recognition and Object Detection sharing one
+//! broker fabric — the scenario the `sim::world` component kernel exists
+//! to enable. Sweeps the objdet fleet share and shows the cross-tenant
+//! AI tax: facerec's broker wait grows although facerec itself never
+//! changes.
+//!
+//!     cargo run --release --example mixed_tenancy [-- --quick]
+//!     cargo run --release --example mixed_tenancy -- --fr-accel 4 --od-accel 8 --od-share 1.0
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::mixed as exmixed;
+use aitax::pipeline::mixed::MixedSim;
+use aitax::util::cli::Args;
+use aitax::util::units::fmt_us;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    println!("== Mixed tenancy: two AI pipelines, one broker substrate ==");
+
+    if args.get("fr-accel").is_some() || args.get("od-accel").is_some() || args.get("od-share").is_some()
+    {
+        // Single custom point instead of the sweep.
+        let share = args.get_f64("od-share", 1.0);
+        let mut cfg = exmixed::mix_config(share, fidelity);
+        cfg.facerec.accel = args.get_f64("fr-accel", exmixed::ACCEL_FACEREC);
+        cfg.objdet.accel = args.get_f64("od-accel", exmixed::ACCEL_OBJDET);
+        let r = MixedSim::new(cfg).run();
+        println!(
+            "facerec: wait {} | e2e p99 {} | {} faces | {}",
+            fmt_us(r.facerec.wait_mean_us as u64),
+            fmt_us(r.facerec.e2e_p99_us),
+            r.facerec.faces_completed,
+            if r.facerec.verdict.stable { "stable" } else { "UNSTABLE" },
+        );
+        println!(
+            "objdet:  wait {} | e2e p99 {} | {} frames | {}",
+            fmt_us(r.objdet.wait_mean_us as u64),
+            fmt_us(r.objdet.e2e_p99_us),
+            r.objdet.frames_detected,
+            if r.objdet.verdict.stable { "stable" } else { "UNSTABLE" },
+        );
+        println!(
+            "shared brokers: nvme write {:.1}% | nic rx {:.2}% | req cpu {:.2}% | {} events",
+            100.0 * r.broker_storage_write_util,
+            100.0 * r.broker_net_rx_util,
+            100.0 * r.broker_cpu_util,
+            r.events,
+        );
+        return;
+    }
+
+    exmixed::print(&exmixed::run(fidelity));
+}

@@ -1,0 +1,22 @@
+//! Bench: the mixed-tenancy interference sweep (facerec + objdet on one
+//! shared broker fabric — the scenario the component kernel enables).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::mixed;
+use aitax::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("mixed_tenancy");
+    let mut out = None;
+    b.run_once("facerec+objdet mix sweep", mixed::MIX_SHARES.len() as f64, || {
+        out = Some(mixed::run(Fidelity::from_env()));
+    });
+    let sweep = out.unwrap();
+    mixed::print(&sweep);
+    let solo = sweep.baseline.storage_write_util;
+    let full = sweep.points.last().unwrap().report.broker_storage_write_util;
+    println!(
+        "interference: broker nvme write {:.1}% alone -> {:.1}% with the full objdet fleet",
+        100.0 * solo,
+        100.0 * full
+    );
+}

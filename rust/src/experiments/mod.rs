@@ -1,4 +1,6 @@
-//! Experiment drivers: one module per figure/table of the paper.
+//! Experiment drivers: one module per figure/table of the paper, plus
+//! extensions the component kernel enables ([`mixed`] — the cross-tenant
+//! interference sweep).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -18,4 +20,5 @@ pub mod fig12;
 pub mod fig13;
 pub mod fig14;
 pub mod fig15;
+pub mod mixed;
 pub mod table34;

@@ -20,7 +20,7 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|all>
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
@@ -104,6 +104,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             "fig14" => ex::fig14::print(&ex::fig14::run(fidelity)),
             "fig15" => ex::fig15::print(&ex::fig15::run(fidelity)),
             "tco" | "table3" | "table4" => ex::table34::print(&ex::table34::run()),
+            "mixed" => ex::mixed::print(&ex::mixed::run(fidelity)),
             other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
         }
         Ok(())
@@ -111,7 +112,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     if which == "all" {
         for name in [
             "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-            "fig15", "tco",
+            "fig15", "tco", "mixed",
         ] {
             run_one(name)?;
         }

@@ -1,0 +1,1086 @@
+//! The data-center deployment layer: reusable [`sim::world`] components.
+//!
+//! Face Recognition and Object Detection used to be two hand-rolled
+//! ~500-LoC event loops that duplicated the producer/partition/consumer
+//! machinery. This module factors that machinery into components on the
+//! [`World`](crate::sim::world::World) kernel:
+//!
+//! * [`ProducerClient`] — one per tenant; runs every producer container's
+//!   frame/tick cycle, the client-side linger/batch hold, and the dispatch
+//!   through the producer NIC into the fabric.
+//! * [`PartitionQueue`] — leader routing + consumer pinning + the
+//!   committed-record queue for one topic partition (stored in the shared
+//!   [`DcState`] because producers, the fabric, and consumers all touch
+//!   partitions at the same virtual instant).
+//! * [`ConsumerPoller`] — one per tenant; poll scheduling,
+//!   `fetch.min.bytes`/`fetch.max.wait` withholding, the fetch path, and
+//!   serial busy-until service on each 1-core consumer container.
+//! * [`FabricHub`] — the existing event-driven broker
+//!   [`Fabric`](crate::pipeline::fabric::Fabric) wrapped as a component:
+//!   fabric hop events route here and commit notifications fan back out
+//!   to partitions and consumer wakeups.
+//!
+//! A **tenant** is one workload (Face Recognition or Object Detection)
+//! with its own producers, consumers, partitions, and metrics. Tenants
+//! share the broker fabric, the storage devices, and the byte meters —
+//! which is exactly what lets `pipeline::mixed` run both applications on
+//! one substrate and measure cross-tenant interference, something the
+//! per-workload monoliths could not express.
+//!
+//! Fidelity contract: for a single-tenant world this module reproduces
+//! the legacy simulators *event for event* — same event queue insertion
+//! order, same RNG draw order, same metric updates — so reports are
+//! bit-identical for a given seed (`tests/golden_reports.rs` holds the
+//! legacy loops as a differential reference).
+
+use std::collections::VecDeque;
+
+use crate::config::calibration::ObjDetCosts;
+use crate::config::{AccelProtocol, Config, KafkaTuning};
+use crate::config::hardware::NvmeSpec;
+use crate::metrics::bandwidth::{BandwidthMeter, Class};
+use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut, WIRE_US};
+use crate::pipeline::stage::StageModel;
+use crate::pipeline::video::BurstSchedule;
+use crate::sim::queue::Population;
+use crate::sim::resource::FifoServer;
+use crate::sim::world::{CompId, Component, Ctx, World};
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// Framing overhead per Face Recognition record on the wire (batch header
+/// amortized + record header; see `broker::record`).
+pub const FACEREC_RECORD_OVERHEAD: f64 = 32.0;
+/// Object Detection framing overhead, folded into the item bytes at
+/// production time (the legacy simulator did the same).
+pub const OBJDET_RECORD_OVERHEAD: f64 = 64.0;
+
+/// Sentinel partition meaning "choose at dispatch time" (Face Recognition
+/// picks the partition when the record leaves the client, consuming the
+/// producer's RNG at that moment).
+pub const PARTITION_UNROUTED: u32 = u32::MAX;
+
+/// Population sampling period (0.25 s), the Fig-7 resolution.
+const POPULATION_SAMPLE_US: u64 = 250_000;
+
+/// Which workload a tenant runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    FaceRec,
+    ObjDet,
+}
+
+/// A record in flight (sizes + timestamps only — the §5.2 emulation
+/// argument: brokers can't tell payloads from garbage of the same size).
+/// Face Recognition items are faces; Object Detection items are frames.
+#[derive(Clone, Copy, Debug)]
+pub struct Item {
+    /// When the work entered the pipeline (frame start / tick epoch).
+    pub created_us: u64,
+    /// When the producer finished local processing (detect end / send
+    /// done) — the epoch broker wait is measured from.
+    pub ready_us: u64,
+    /// When the record became visible to consumers (commit time).
+    pub visible_us: u64,
+    pub bytes: f64,
+}
+
+/// Events routed between data-center components.
+#[derive(Debug)]
+pub enum DcEvent {
+    /// Producer `p` (tenant-local index) begins its next frame/tick cycle.
+    Produce(u32),
+    /// A record leaves producer `p`'s client toward `partition`
+    /// ([`PARTITION_UNROUTED`] = pick at dispatch).
+    Dispatch { producer: u32, partition: u32, item: Item },
+    /// Broker-fabric hop (routed to [`FabricHub`]).
+    Fabric(FabricEv),
+    /// Consumer `c` (tenant-local index) polls its partitions.
+    Poll(u32),
+}
+
+/// One topic partition: leader broker, pinned consumer, committed queue.
+#[derive(Debug)]
+pub struct PartitionQueue {
+    pub tenant: u8,
+    /// Leader broker index in the shared fabric.
+    pub leader: u32,
+    /// Tenant-local index of the pinned consumer.
+    pub consumer: u32,
+    pub queue: VecDeque<Item>,
+}
+
+/// Token pool for records traversing the fabric.
+#[derive(Debug, Default)]
+pub struct ItemPool {
+    in_flight: Vec<Item>,
+    free: Vec<u64>,
+}
+
+impl ItemPool {
+    pub fn alloc(&mut self, item: Item) -> u64 {
+        match self.free.pop() {
+            Some(token) => {
+                self.in_flight[token as usize] = item;
+                token
+            }
+            None => {
+                self.in_flight.push(item);
+                (self.in_flight.len() - 1) as u64
+            }
+        }
+    }
+
+    pub fn release(&mut self, token: u64) -> Item {
+        self.free.push(token);
+        self.in_flight[token as usize]
+    }
+}
+
+/// Consumer-side fetch tuning + wire framing for one tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct FetchTuning {
+    /// Per-record overhead added on the wire and in fetch accounting
+    /// (zero when the overhead is folded into item bytes at production).
+    pub record_overhead: f64,
+    pub fetch_min_bytes: usize,
+    pub fetch_max_wait_us: u64,
+}
+
+/// Cross-component per-consumer scheduling state (the "mailbox" the
+/// fabric commit path uses to wake a pinned consumer).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConsumerGate {
+    pub poll_scheduled: bool,
+    pub busy_until: u64,
+}
+
+/// Everything measured for one tenant.
+#[derive(Debug)]
+pub struct TenantMetrics {
+    /// Ingestion stage durations.
+    pub hist_ingest: Histogram,
+    /// Face Recognition: detection; Object Detection: tick-start delay.
+    pub hist_prep: Histogram,
+    /// Broker wait (ready -> service start).
+    pub hist_wait: Histogram,
+    /// Consumer-side service (identify / R-CNN detect).
+    pub hist_service: Histogram,
+    pub hist_e2e: Histogram,
+    /// Items in system (Fig 7).
+    pub population: Population,
+    /// Dense per-second e2e latency aggregation, bucketed by *arrival*
+    /// second (a face arriving during a surge experiences the congestion
+    /// wherever its completion lands).
+    pub lat_sum: Vec<u64>,
+    pub lat_n: Vec<u64>,
+    /// Producer cycles completed (frames for FR, ticks for OD).
+    pub frames_total: u64,
+    /// Post-warmup producer cycles (FR's `frames_ingested`).
+    pub frames_measured: u64,
+    /// Producer→broker bytes this tenant put on the wire. The shared
+    /// [`BandwidthMeter`] only has class-wide totals, which in a mixed
+    /// world blend tenants; per-tenant NIC figures come from here.
+    pub net_tx_bytes: f64,
+    /// Broker→consumer bytes this tenant fetched.
+    pub net_rx_bytes: f64,
+    /// Items sent into the fabric (faces produced / frames sent).
+    pub produced: u64,
+    pub completed: u64,
+    /// Completions inside the measurement window (throughput numerator).
+    pub completed_in_window: u64,
+}
+
+impl TenantMetrics {
+    fn new(horizon_us: u64) -> Self {
+        let n_secs = (horizon_us / 1_000_000 + 2) as usize;
+        TenantMetrics {
+            hist_ingest: Histogram::new(),
+            hist_prep: Histogram::new(),
+            hist_wait: Histogram::new(),
+            hist_service: Histogram::new(),
+            hist_e2e: Histogram::new(),
+            population: Population::new(POPULATION_SAMPLE_US),
+            lat_sum: vec![0; n_secs],
+            lat_n: vec![0; n_secs],
+            frames_total: 0,
+            frames_measured: 0,
+            net_tx_bytes: 0.0,
+            net_rx_bytes: 0.0,
+            produced: 0,
+            completed: 0,
+            completed_in_window: 0,
+        }
+    }
+
+    /// Mean per-node NIC utilization over `[0, elapsed]` for one tenant
+    /// (same formula as `BandwidthMeter::utilization`, computed from the
+    /// tenant's own byte totals and fleet size).
+    pub fn per_node_net_util(bytes: f64, elapsed_us: u64, nodes: usize, capacity: f64) -> f64 {
+        if elapsed_us == 0 || capacity <= 0.0 {
+            return 0.0;
+        }
+        bytes * 1e6 / (elapsed_us as f64 * nodes.max(1) as f64) / capacity
+    }
+
+    /// The Fig-7 (time, mean e2e) series from the per-second buckets.
+    pub fn latency_series(&self) -> Vec<(u64, u64)> {
+        self.lat_sum
+            .iter()
+            .zip(&self.lat_n)
+            .enumerate()
+            .filter(|(_, (_, &n))| n > 0)
+            .map(|(sec, (&sum, &n))| (sec as u64 * 1_000_000, sum / n))
+            .collect()
+    }
+}
+
+/// Per-tenant shared state: fetch tuning, consumer gates, partition
+/// slice, metrics, and the component ids events route to.
+#[derive(Debug)]
+pub struct TenantState {
+    pub kind: WorkloadKind,
+    pub fetch: FetchTuning,
+    pub gates: Vec<ConsumerGate>,
+    pub metrics: TenantMetrics,
+    /// This tenant's slice of the global partition index space.
+    pub part_base: u32,
+    pub part_count: u32,
+    pub warmup_us: u64,
+    pub producer_comp: CompId,
+    pub poller_comp: CompId,
+}
+
+/// The shared substrate every component can reach through [`Ctx`].
+pub struct DcState {
+    pub fabric: Fabric,
+    pub meter: BandwidthMeter,
+    pub partitions: Vec<PartitionQueue>,
+    pub items: ItemPool,
+    pub fabric_out: Vec<FabricOut>,
+    pub tenants: Vec<TenantState>,
+    pub fabric_comp: CompId,
+    pub horizon_us: u64,
+}
+
+/// Route buffered fabric outputs: schedule hop events to the
+/// [`FabricHub`]; on commit, make the record visible on its partition and
+/// wake the pinned consumer through its gate.
+pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
+    let mut i = 0;
+    while i < ctx.shared.fabric_out.len() {
+        let o = ctx.shared.fabric_out[i];
+        i += 1;
+        match o {
+            FabricOut::Schedule(t, fev) => {
+                let dst = ctx.shared.fabric_comp;
+                let t = t.max(ctx.now());
+                ctx.at(t, dst, DcEvent::Fabric(fev));
+            }
+            FabricOut::Committed { token, partition, at } => {
+                let (wake, dst, consumer) = {
+                    let s = &mut *ctx.shared;
+                    let mut item = s.items.release(token);
+                    item.visible_us = at;
+                    let part = &mut s.partitions[partition as usize];
+                    let tenant = part.tenant as usize;
+                    let consumer = part.consumer;
+                    part.queue.push_back(item);
+                    let ts = &mut s.tenants[tenant];
+                    let gate = &mut ts.gates[consumer as usize];
+                    if gate.poll_scheduled {
+                        continue;
+                    }
+                    gate.poll_scheduled = true;
+                    (at.max(gate.busy_until), ts.poller_comp, consumer)
+                };
+                let wake = wake.max(ctx.now());
+                ctx.at(wake, dst, DcEvent::Poll(consumer));
+            }
+        }
+    }
+    ctx.shared.fabric_out.clear();
+}
+
+// ---------------------------------------------------------------------------
+// FabricHub
+// ---------------------------------------------------------------------------
+
+/// The broker fabric wrapped as a component: hop events land here, the
+/// device state itself lives in [`DcState`] so producers (send) and
+/// consumers (fetch) can drive it synchronously at the same instant.
+pub struct FabricHub;
+
+impl Component<DcEvent, DcState> for FabricHub {
+    fn on_event(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, ev: DcEvent) {
+        let DcEvent::Fabric(fev) = ev else {
+            debug_assert!(false, "non-fabric event routed to FabricHub");
+            return;
+        };
+        let now = ctx.now();
+        {
+            let s = &mut *ctx.shared;
+            s.fabric.handle(now, fev, &mut s.meter, &mut s.fabric_out);
+        }
+        drain_fabric(ctx);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProducerClient
+// ---------------------------------------------------------------------------
+
+/// Workload-specific producer behavior.
+pub enum ProducerKind {
+    /// §3/§4: ingest + detect on a 1-core pipelined container; each face
+    /// is its own record held for the client linger before dispatch.
+    FaceRec {
+        stages: StageModel,
+        /// Global burst timeline (None = the §5.3 one-face-per-frame
+        /// acceleration deployments).
+        schedule: Option<BurstSchedule>,
+        linger_us: u64,
+        face_bytes: f64,
+    },
+    /// §6: 30 FPS ticks; under k× acceleration each tick sends k frames
+    /// whose send path may overrun the tick (Fig 14's "Delay").
+    ObjDet {
+        ingest_us: f64,
+        send_us_per_frame: f64,
+        frames_per_tick: usize,
+        tick_us: u64,
+        frame_bytes: f64,
+    },
+}
+
+/// Per-producer container state.
+pub struct ProducerUnit {
+    pub rng: Rng,
+    pub nic: FifoServer,
+    /// Send-path server (serialization + Kafka client), us of work.
+    /// Exercised by Object Detection; idle for Face Recognition.
+    pub send: FifoServer,
+    /// Frames (FR) / ticks (OD) started.
+    pub cycles: u64,
+}
+
+/// One tenant's producer fleet: frame/tick cycles, linger, dispatch.
+pub struct ProducerClient {
+    tenant: u8,
+    kind: ProducerKind,
+    units: Vec<ProducerUnit>,
+}
+
+impl ProducerClient {
+    /// Max producer send-path utilization over `[0, elapsed]` (the Fig-14
+    /// "Delay" culprit).
+    pub fn max_send_util(&self, elapsed_us: u64) -> f64 {
+        self.units
+            .iter()
+            .map(|u| u.send.utilization(elapsed_us))
+            .fold(0.0, f64::max)
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, p: u32) {
+        let now = ctx.now();
+        let t = self.tenant as usize;
+        let horizon = ctx.shared.horizon_us;
+        let pid = p as usize;
+        match &mut self.kind {
+            ProducerKind::FaceRec { stages, schedule, linger_us, face_bytes } => {
+                let u = &mut self.units[pid];
+                let faces = match schedule {
+                    Some(sched) => sched.faces_at(now, &mut u.rng),
+                    None => 1,
+                };
+                let ingest_us = stages.ingest(&mut u.rng);
+                let detect_us = stages.detect(&mut u.rng, faces);
+                let detect_end = now + ingest_us + detect_us;
+                u.cycles += 1;
+                {
+                    let ts = &mut ctx.shared.tenants[t];
+                    ts.metrics.frames_total += 1;
+                    if now >= ts.warmup_us {
+                        ts.metrics.frames_measured += 1;
+                        ts.metrics.hist_ingest.record(ingest_us.max(1));
+                        ts.metrics.hist_prep.record(detect_us.max(1));
+                    }
+                }
+                // Each face is its own record; the 2020-era Kafka default
+                // partitioner round-robins unkeyed records, so a frame's
+                // faces scatter across partitions (chosen at dispatch).
+                // The linger is the client-side hold before shipping.
+                for _ in 0..faces {
+                    let bytes = u.rng.lognormal_mean_cv(*face_bytes, 0.25).max(1024.0);
+                    let item = Item {
+                        created_us: now,
+                        ready_us: detect_end,
+                        visible_us: 0,
+                        bytes,
+                    };
+                    {
+                        let ts = &mut ctx.shared.tenants[t];
+                        ts.metrics.produced += 1;
+                        ts.metrics.population.enter(detect_end.min(horizon));
+                    }
+                    ctx.at_self(
+                        detect_end + *linger_us,
+                        DcEvent::Dispatch { producer: p, partition: PARTITION_UNROUTED, item },
+                    );
+                }
+                // Pipelined single-core container: next frame starts when
+                // this one's ingest+detect completes.
+                ctx.at_self(detect_end.max(now + 1), DcEvent::Produce(p));
+            }
+            ProducerKind::ObjDet {
+                ingest_us,
+                send_us_per_frame,
+                frames_per_tick,
+                tick_us,
+                frame_bytes,
+            } => {
+                let (part_base, part_count) = {
+                    let ts = &ctx.shared.tenants[t];
+                    (ts.part_base, ts.part_count)
+                };
+                {
+                    let ts = &mut ctx.shared.tenants[t];
+                    ts.metrics.frames_total += 1;
+                    if now >= ts.warmup_us {
+                        ts.metrics.frames_measured += 1;
+                    }
+                }
+                let u = &mut self.units[pid];
+                u.cycles += 1;
+                // Fig 14's Delay: the send server may still be draining
+                // the previous set; the new set starts late.
+                let delay = u.send.backlog_us(now);
+                let start = now + delay;
+                for _ in 0..*frames_per_tick {
+                    let ing = u
+                        .rng
+                        .lognormal_mean_cv(ingest_us.max(1.0), 0.15)
+                        .round()
+                        .max(1.0) as u64;
+                    let t_ing = start + ing;
+                    let t_sent = u.send.submit(t_ing, *send_us_per_frame);
+                    let bytes = *frame_bytes + OBJDET_RECORD_OVERHEAD;
+                    {
+                        let ts = &mut ctx.shared.tenants[t];
+                        ts.metrics.produced += 1;
+                        if now >= ts.warmup_us {
+                            ts.metrics.hist_ingest.record(ing.max(1));
+                            ts.metrics.hist_prep.record(delay.max(1));
+                        }
+                        ts.metrics.population.enter(t_sent.min(horizon));
+                    }
+                    // Each frame goes to a different partition so the
+                    // brokers can fully load-balance (§6.3). Random choice
+                    // — deterministic rotation across same-cadence
+                    // producers would convoy the consumers.
+                    let partition = part_base + u.rng.below(part_count as u64) as u32;
+                    let item = Item {
+                        created_us: now,
+                        ready_us: t_sent,
+                        visible_us: 0,
+                        bytes,
+                    };
+                    ctx.at_self(
+                        t_sent + WIRE_US,
+                        DcEvent::Dispatch { producer: p, partition, item },
+                    );
+                }
+                ctx.at_self(now + *tick_us, DcEvent::Produce(p));
+            }
+        }
+    }
+
+    fn dispatch(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, p: u32, partition: u32, item: Item) {
+        let now = ctx.now();
+        let t = self.tenant as usize;
+        let pid = p as usize;
+        let partition = if partition == PARTITION_UNROUTED {
+            // Random rotation at dispatch time: deterministic lockstep
+            // rotation across same-cadence producers would convoy
+            // consumers.
+            let (base, count) = {
+                let ts = &ctx.shared.tenants[t];
+                (ts.part_base, ts.part_count)
+            };
+            base + self.units[pid].rng.below(count as u64) as u32
+        } else {
+            partition
+        };
+        let overhead = ctx.shared.tenants[t].fetch.record_overhead;
+        {
+            let s = &mut *ctx.shared;
+            let token = s.items.alloc(item);
+            let leader = s.partitions[partition as usize].leader;
+            let bytes = item.bytes + overhead;
+            s.tenants[t].metrics.net_tx_bytes += bytes;
+            s.fabric.send(
+                now,
+                partition,
+                leader,
+                bytes,
+                token,
+                &mut s.meter,
+                &mut self.units[pid].nic,
+                &mut s.fabric_out,
+            );
+        }
+        drain_fabric(ctx);
+    }
+}
+
+impl Component<DcEvent, DcState> for ProducerClient {
+    fn on_event(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, ev: DcEvent) {
+        match ev {
+            DcEvent::Produce(p) => self.produce(ctx, p),
+            DcEvent::Dispatch { producer, partition, item } => {
+                self.dispatch(ctx, producer, partition, item)
+            }
+            _ => debug_assert!(false, "unexpected event for ProducerClient"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ConsumerPoller
+// ---------------------------------------------------------------------------
+
+/// Consumer-side service-time model.
+pub enum ServiceModel {
+    /// Identification on a 1-core container.
+    FaceRec(StageModel),
+    /// R-CNN detection (already divided by the acceleration factor).
+    ObjDet { mean_us: f64, cv: f64 },
+}
+
+/// Per-consumer container state.
+pub struct ConsumerUnit {
+    pub rng: Rng,
+    pub nic_rx: FifoServer,
+    pub done: u64,
+}
+
+/// One tenant's consumer fleet: poll scheduling, fetch, serial service.
+pub struct ConsumerPoller {
+    tenant: u8,
+    service: ServiceModel,
+    units: Vec<ConsumerUnit>,
+    /// Global partition ids owned by each tenant-local consumer.
+    owned: Vec<Vec<u32>>,
+}
+
+impl ConsumerPoller {
+    /// Consumers that have completed at least one item (debug telemetry).
+    pub fn active_units(&self) -> usize {
+        self.units.iter().filter(|u| u.done > 0).count()
+    }
+
+    fn poll(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, c: u32) {
+        let now = ctx.now();
+        let t = self.tenant as usize;
+        let cid = c as usize;
+        {
+            let gate = &mut ctx.shared.tenants[t].gates[cid];
+            gate.poll_scheduled = false;
+            if now < gate.busy_until {
+                gate.poll_scheduled = true;
+                let busy = gate.busy_until;
+                ctx.at_self(busy, DcEvent::Poll(c));
+                return;
+            }
+        }
+        let fetch = ctx.shared.tenants[t].fetch;
+        // Gather visible records across owned partitions.
+        let mut avail_bytes = 0.0;
+        let mut oldest_visible = u64::MAX;
+        for &pi in &self.owned[cid] {
+            for it in ctx.shared.partitions[pi as usize].queue.iter() {
+                if it.visible_us <= now {
+                    avail_bytes += it.bytes + fetch.record_overhead;
+                    oldest_visible = oldest_visible.min(it.visible_us);
+                } else {
+                    break;
+                }
+            }
+        }
+        if avail_bytes == 0.0 {
+            return; // a commit will wake us through the gate
+        }
+        // fetch.min.bytes / fetch.max.wait withholding (§5.5).
+        if (avail_bytes as usize) < fetch.fetch_min_bytes {
+            let deadline = oldest_visible + fetch.fetch_max_wait_us;
+            if now < deadline {
+                ctx.shared.tenants[t].gates[cid].poll_scheduled = true;
+                ctx.at_self(deadline, DcEvent::Poll(c));
+                return;
+            }
+        }
+        // Fetch all visible records per owned partition.
+        let mut fetched: Vec<Item> = Vec::new();
+        let mut deliver_at = now;
+        for &pi in &self.owned[cid] {
+            let mut part_bytes = 0.0;
+            let mut any = false;
+            let leader;
+            {
+                let part = &mut ctx.shared.partitions[pi as usize];
+                leader = part.leader;
+                while let Some(it) = part.queue.front() {
+                    if it.visible_us <= now {
+                        part_bytes += it.bytes + fetch.record_overhead;
+                        fetched.push(*it);
+                        part.queue.pop_front();
+                        any = true;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if any {
+                let s = &mut *ctx.shared;
+                s.tenants[t].metrics.net_rx_bytes += part_bytes;
+                let done = s.fabric.fetch(
+                    now,
+                    leader,
+                    part_bytes,
+                    &mut self.units[cid].nic_rx,
+                    &mut s.meter,
+                );
+                deliver_at = deliver_at.max(done);
+            }
+        }
+        if fetched.is_empty() {
+            return;
+        }
+        // Serve each record serially on the 1-core container, oldest
+        // producer-ready first.
+        fetched.sort_by_key(|it| it.ready_us);
+        let horizon = ctx.shared.horizon_us;
+        let mut busy = ctx.shared.tenants[t].gates[cid].busy_until.max(deliver_at);
+        for it in fetched {
+            let start = busy;
+            let wait_us = start.saturating_sub(it.ready_us);
+            let dur = match &self.service {
+                ServiceModel::FaceRec(stages) => stages.identify(&mut self.units[cid].rng),
+                ServiceModel::ObjDet { mean_us, cv } => self.units[cid]
+                    .rng
+                    .lognormal_mean_cv(*mean_us, *cv)
+                    .round()
+                    .max(1.0) as u64,
+            };
+            busy = start + dur;
+            self.units[cid].done += 1;
+            let is_facerec = matches!(self.service, ServiceModel::FaceRec(_));
+            let ts = &mut ctx.shared.tenants[t];
+            ts.metrics.population.exit(busy.min(horizon));
+            ts.metrics.completed += 1;
+            if busy >= ts.warmup_us && busy <= horizon {
+                ts.metrics.completed_in_window += 1;
+            }
+            if it.created_us >= ts.warmup_us && busy <= horizon {
+                ts.metrics.hist_wait.record(wait_us.max(1));
+                if is_facerec {
+                    ts.metrics.hist_service.record(dur.max(1));
+                } else {
+                    ts.metrics.hist_service.record(dur);
+                }
+                let e2e = busy - it.created_us;
+                ts.metrics.hist_e2e.record(e2e.max(1));
+                let sec = (it.created_us / 1_000_000) as usize;
+                if sec < ts.metrics.lat_sum.len() {
+                    ts.metrics.lat_sum[sec] += e2e;
+                    ts.metrics.lat_n[sec] += 1;
+                }
+            }
+        }
+        {
+            let gate = &mut ctx.shared.tenants[t].gates[cid];
+            gate.busy_until = busy;
+            gate.poll_scheduled = true;
+        }
+        // Immediately look for more work when we free up.
+        ctx.at_self(busy, DcEvent::Poll(c));
+    }
+}
+
+impl Component<DcEvent, DcState> for ConsumerPoller {
+    fn on_event(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, ev: DcEvent) {
+        match ev {
+            DcEvent::Poll(c) => self.poll(ctx, c),
+            _ => debug_assert!(false, "unexpected event for ConsumerPoller"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// World assembly
+// ---------------------------------------------------------------------------
+
+/// The shared broker substrate for a world (one per simulation, even with
+/// multiple tenants).
+#[derive(Clone, Debug)]
+pub struct FabricSpec {
+    pub brokers: usize,
+    pub drives_per_broker: usize,
+    pub replication: usize,
+    pub nvme: NvmeSpec,
+    pub effective_write_bw: f64,
+    pub net_bw: f64,
+    pub tuning: KafkaTuning,
+}
+
+impl FabricSpec {
+    /// Derive the fabric of a single-tenant run from its config.
+    pub fn from_config(cfg: &Config) -> FabricSpec {
+        let d = &cfg.deployment;
+        FabricSpec {
+            brokers: d.brokers,
+            drives_per_broker: d.drives_per_broker,
+            replication: d.replication,
+            nvme: cfg.node.nvme,
+            effective_write_bw: cfg.calibration.broker_write_capacity(
+                cfg.node.nvme.write_bw,
+                d.drives_per_broker,
+                d.brokers,
+            ),
+            net_bw: cfg.node.net_bw,
+            tuning: cfg.tuning.clone(),
+        }
+    }
+
+    fn build(&self) -> Fabric {
+        Fabric::new(
+            self.brokers,
+            self.drives_per_broker,
+            self.replication,
+            self.nvme,
+            self.effective_write_bw,
+            self.net_bw,
+            self.tuning.clone(),
+        )
+    }
+}
+
+/// One tenant's workload definition for [`build`].
+pub struct TenantSpec<'a> {
+    pub kind: WorkloadKind,
+    pub cfg: &'a Config,
+}
+
+/// Assemble a world: shared fabric + per-tenant producer/poller
+/// components, partitions, gates, and initial events.
+///
+/// Tenants are built strictly in order, each from its own master RNG
+/// (seeded exactly as the legacy simulators did), so a single-tenant
+/// world reproduces the legacy event and RNG sequences verbatim.
+pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -> World<DcEvent, DcState> {
+    let mut meter = BandwidthMeter::new();
+    meter.set_nodes(
+        Class::Producer,
+        tenants.iter().map(|t| t.cfg.deployment.producers).sum(),
+    );
+    meter.set_nodes(
+        Class::Consumer,
+        tenants.iter().map(|t| t.cfg.deployment.consumers).sum(),
+    );
+    meter.set_nodes(Class::Broker, fabric.brokers);
+
+    let mut partitions: Vec<PartitionQueue> = Vec::new();
+    let mut tenant_states: Vec<TenantState> = Vec::new();
+    for (tenant, spec) in tenants.iter().enumerate() {
+        let d = &spec.cfg.deployment;
+        let part_base = partitions.len() as u32;
+        for p in 0..d.partitions {
+            partitions.push(PartitionQueue {
+                tenant: tenant as u8,
+                leader: (p % fabric.brokers) as u32,
+                consumer: (p % d.consumers) as u32,
+                queue: VecDeque::new(),
+            });
+        }
+        let fetch = match spec.kind {
+            WorkloadKind::FaceRec => FetchTuning {
+                record_overhead: FACEREC_RECORD_OVERHEAD,
+                fetch_min_bytes: spec.cfg.tuning.fetch_min_bytes,
+                fetch_max_wait_us: spec.cfg.tuning.fetch_max_wait_us,
+            },
+            WorkloadKind::ObjDet => {
+                let od = &spec.cfg.calibration.objdet;
+                FetchTuning {
+                    record_overhead: 0.0,
+                    fetch_min_bytes: od.fetch_min_bytes,
+                    fetch_max_wait_us: od.fetch_max_wait_us,
+                }
+            }
+        };
+        tenant_states.push(TenantState {
+            kind: spec.kind,
+            fetch,
+            gates: vec![ConsumerGate::default(); d.consumers],
+            metrics: TenantMetrics::new(horizon_us),
+            part_base,
+            part_count: d.partitions as u32,
+            warmup_us: (horizon_us as f64 * spec.cfg.warmup_frac) as u64,
+            producer_comp: CompId::INVALID,
+            poller_comp: CompId::INVALID,
+        });
+    }
+
+    let state = DcState {
+        fabric: fabric.build(),
+        meter,
+        partitions,
+        items: ItemPool::default(),
+        fabric_out: Vec::new(),
+        tenants: tenant_states,
+        fabric_comp: CompId::INVALID,
+        horizon_us,
+    };
+    let mut world = World::new(state);
+
+    for (tenant, spec) in tenants.iter().enumerate() {
+        let cfg = spec.cfg;
+        let d = &cfg.deployment;
+        match spec.kind {
+            WorkloadKind::FaceRec => {
+                let stages =
+                    StageModel::new(cfg.calibration.stages.clone(), cfg.accel, cfg.protocol);
+                let mut master = Rng::new(cfg.seed);
+                // Acceleration-emulation runs use 1 face/frame (§5.3);
+                // otherwise every producer replays the same video, so face
+                // surges come from one shared burst timeline (§3.3, Fig 7).
+                let one_face = matches!(cfg.protocol, AccelProtocol::Emulation)
+                    && d.producers == crate::config::Deployment::facerec_accel().producers;
+                let schedule = (!one_face).then(|| {
+                    BurstSchedule::new(
+                        cfg.calibration.faces.clone(),
+                        horizon_us + crate::util::units::SEC,
+                        &mut master,
+                    )
+                });
+                let units = producer_units(&mut master, d.producers, cfg.node.net_bw);
+                let consumers = consumer_units(&mut master, d.consumers, cfg.node.net_bw);
+
+                let cycle =
+                    stages.producer_cycle_mean_us(cfg.calibration.faces.mean_faces) as u64;
+                let producer = world.add(Box::new(ProducerClient {
+                    tenant: tenant as u8,
+                    kind: ProducerKind::FaceRec {
+                        stages: stages.clone(),
+                        schedule,
+                        linger_us: cfg.tuning.linger_us,
+                        face_bytes: cfg.face_bytes,
+                    },
+                    units,
+                }));
+                let owned = owned_partitions(&world.shared, tenant);
+                let poller = world.add(Box::new(ConsumerPoller {
+                    tenant: tenant as u8,
+                    service: ServiceModel::FaceRec(stages),
+                    units: consumers,
+                    owned,
+                }));
+                world.shared.tenants[tenant].producer_comp = producer;
+                world.shared.tenants[tenant].poller_comp = poller;
+                for p in 0..d.producers {
+                    // Stagger starts across one mean cycle to avoid a herd.
+                    let jitter = (p as u64 * cycle.max(1)) / d.producers as u64;
+                    world.schedule(jitter, producer, DcEvent::Produce(p as u32));
+                }
+            }
+            WorkloadKind::ObjDet => {
+                let od: &ObjDetCosts = &cfg.calibration.objdet;
+                let k = cfg.accel;
+                let mut master = Rng::new(cfg.seed ^ 0x0BDE7);
+                let units = producer_units(&mut master, d.producers, cfg.node.net_bw);
+                let consumers = consumer_units(&mut master, d.consumers, cfg.node.net_bw);
+                // Effective per-frame send cost with Kafka's batching
+                // amortization (§6.3: "producers and the brokers manage to
+                // intelligently batch").
+                let send_us_per_frame = od.send_frame_us * (1.0 - od.batch_amort)
+                    + od.send_frame_us * od.batch_amort / k;
+                let producer = world.add(Box::new(ProducerClient {
+                    tenant: tenant as u8,
+                    kind: ProducerKind::ObjDet {
+                        // Emulation protocol: ingestion and detection
+                        // compute divide by k.
+                        ingest_us: od.ingest_us / k,
+                        send_us_per_frame,
+                        frames_per_tick: k.round().max(1.0) as usize,
+                        tick_us: od.tick_us,
+                        frame_bytes: od.frame_bytes,
+                    },
+                    units,
+                }));
+                let owned = owned_partitions(&world.shared, tenant);
+                let poller = world.add(Box::new(ConsumerPoller {
+                    tenant: tenant as u8,
+                    service: ServiceModel::ObjDet {
+                        mean_us: od.detect_us / k,
+                        cv: od.detect_cv,
+                    },
+                    units: consumers,
+                    owned,
+                }));
+                world.shared.tenants[tenant].producer_comp = producer;
+                world.shared.tenants[tenant].poller_comp = poller;
+                for p in 0..d.producers {
+                    let jitter = (p as u64 * od.tick_us) / d.producers as u64;
+                    world.schedule(jitter, producer, DcEvent::Produce(p as u32));
+                }
+            }
+        }
+    }
+
+    let fabric_comp = world.add(Box::new(FabricHub));
+    world.shared.fabric_comp = fabric_comp;
+    world
+}
+
+fn producer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ProducerUnit> {
+    (0..count)
+        .map(|_| ProducerUnit {
+            rng: master.fork(),
+            nic: FifoServer::new(net_bw, 0),
+            send: FifoServer::new(1e6, 0),
+            cycles: 0,
+        })
+        .collect()
+}
+
+fn consumer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ConsumerUnit> {
+    (0..count)
+        .map(|_| ConsumerUnit {
+            rng: master.fork(),
+            nic_rx: FifoServer::new(net_bw, 0),
+            done: 0,
+        })
+        .collect()
+}
+
+/// Consumer -> owned global partition ids for one tenant (avoids scanning
+/// all partitions on every poll).
+fn owned_partitions(state: &DcState, tenant: usize) -> Vec<Vec<u32>> {
+    let ts = &state.tenants[tenant];
+    let mut owned: Vec<Vec<u32>> = vec![Vec::new(); ts.gates.len()];
+    for idx in ts.part_base..ts.part_base + ts.part_count {
+        let part = &state.partitions[idx as usize];
+        owned[part.consumer as usize].push(idx);
+    }
+    owned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+
+    fn tiny_facerec() -> Config {
+        let mut cfg = Config::default();
+        cfg.deployment = Deployment {
+            producers: 8,
+            consumers: 12,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 12,
+        };
+        cfg.duration_us = 5 * crate::util::units::SEC;
+        cfg.seed = 0x51;
+        cfg
+    }
+
+    #[test]
+    fn partition_mapping_round_robins_leaders_and_consumers() {
+        let cfg = tiny_facerec();
+        let spec = FabricSpec::from_config(&cfg);
+        let world = build(
+            &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        let parts = &world.shared.partitions;
+        assert_eq!(parts.len(), 12);
+        assert_eq!(parts[0].leader, 0);
+        assert_eq!(parts[1].leader, 1);
+        assert_eq!(parts[3].leader, 0);
+        assert_eq!(parts[5].consumer, 5);
+        // 3 components: producer client, consumer poller, fabric hub.
+        assert_eq!(world.component_count(), 3);
+    }
+
+    #[test]
+    fn single_tenant_world_moves_items_end_to_end() {
+        let cfg = tiny_facerec();
+        let spec = FabricSpec::from_config(&cfg);
+        let mut world = build(
+            &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        world.run_until(cfg.duration_us);
+        let m = &world.shared.tenants[0].metrics;
+        assert!(m.frames_total > 100, "frames={}", m.frames_total);
+        assert!(m.produced > 0, "no faces produced");
+        assert!(m.completed > 0, "no faces identified");
+        assert!(m.completed <= m.produced);
+    }
+
+    #[test]
+    fn two_tenant_world_keeps_partition_spaces_disjoint() {
+        let fr = tiny_facerec();
+        let mut od = Config::default();
+        od.deployment = Deployment {
+            producers: 2,
+            consumers: 20,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 20,
+        };
+        od.duration_us = fr.duration_us;
+        od.seed = 0xD07;
+        let spec = FabricSpec::from_config(&fr);
+        let mut world = build(
+            &[
+                TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr },
+                TenantSpec { kind: WorkloadKind::ObjDet, cfg: &od },
+            ],
+            &spec,
+            fr.duration_us,
+        );
+        assert_eq!(world.shared.tenants[0].part_base, 0);
+        assert_eq!(world.shared.tenants[1].part_base, 12);
+        assert_eq!(world.shared.partitions.len(), 32);
+        world.run_until(fr.duration_us);
+        for t in 0..2 {
+            let m = &world.shared.tenants[t].metrics;
+            assert!(m.produced > 0, "tenant {t} produced nothing");
+            assert!(m.completed > 0, "tenant {t} completed nothing");
+        }
+        // Items stayed inside their tenant: every queued leftover belongs
+        // to the partition's own tenant slice.
+        for (i, p) in world.shared.partitions.iter().enumerate() {
+            let ts = &world.shared.tenants[p.tenant as usize];
+            assert!(
+                (i as u32) >= ts.part_base && (i as u32) < ts.part_base + ts.part_count
+            );
+        }
+    }
+}

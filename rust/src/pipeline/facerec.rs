@@ -1,13 +1,12 @@
 //! The *Face Recognition* data-center simulation.
 //!
 //! This is the crate's centerpiece: the paper's deployment (Fig 4) run at
-//! full logical scale in virtual time. Producers (ingest/detect
-//! containers) parse synthetic video streams and emit face thumbnails
-//! through a Kafka-style client; records flow through the event-driven
-//! broker [`fabric`](crate::pipeline::fabric) (leader NIC → request CPU →
-//! NVMe write → 2 follower replications → `acks=all` commit); partition-
-//! pinned consumers (identification containers) fetch and process faces
-//! serially.
+//! full logical scale in virtual time. Since the `sim::world` refactor the
+//! file is a thin *workload definition*: the producer/partition/consumer
+//! machinery lives in the reusable component layer
+//! ([`pipeline::dc`](crate::pipeline::dc)), and this module contributes
+//! only what is Face-Recognition-specific — the frame source and stage
+//! costs (wired up in `dc::build`), and the [`SimReport`] assembly below.
 //!
 //! Everything the paper measures is emergent here:
 //! * the Fig-6 latency breakdown and §4.2 tails,
@@ -18,64 +17,10 @@
 //! * the Fig-15 mitigation sweeps (drives, brokers, thumbnail size),
 //! * §5.5's growing broker-wait fraction.
 
-use std::collections::VecDeque;
-
-use crate::config::{AccelProtocol, Config};
-use crate::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
-use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut};
-use crate::pipeline::stage::StageModel;
-use crate::pipeline::video::BurstSchedule;
-use crate::sim::engine::EventQueue;
-use crate::sim::queue::{InstabilityVerdict, Population};
-use crate::sim::resource::FifoServer;
-use crate::util::rng::Rng;
-use crate::util::stats::Histogram;
-
-/// Framing overhead per record on the wire (batch header amortized +
-/// record header; see `broker::record`).
-const RECORD_OVERHEAD: f64 = 32.0;
-
-#[derive(Debug)]
-enum Ev {
-    /// Producer `p` begins its next frame cycle.
-    Frame(u32),
-    /// Producer `p`'s record leaves the client (post-linger).
-    Dispatch(u32, SimFace),
-    /// Broker-fabric hop.
-    Fabric(FabricEv),
-    /// Consumer `c` polls its partitions.
-    Poll(u32),
-}
-
-/// A face record in flight (sizes + timestamps only — the §5.2 emulation
-/// argument: brokers can't tell payloads from garbage of the same size).
-#[derive(Clone, Copy, Debug)]
-struct SimFace {
-    frame_start_us: u64,
-    detect_end_us: u64,
-    visible_us: u64,
-    bytes: f64,
-}
-
-struct ProducerState {
-    rng: Rng,
-    nic: FifoServer, // tx direction only is exercised
-    frames: u64,
-}
-
-struct PartitionState {
-    leader: u32,
-    queue: VecDeque<SimFace>,
-    consumer: u32,
-}
-
-struct ConsumerState {
-    rng: Rng,
-    nic_rx: FifoServer,
-    busy_until: u64,
-    poll_scheduled: bool,
-    faces_done: u64,
-}
+use crate::config::Config;
+use crate::pipeline::dc::{self, DcEvent, DcState, TenantMetrics};
+use crate::sim::queue::InstabilityVerdict;
+use crate::sim::world::World;
 
 /// Simulation results for one run.
 #[derive(Clone, Debug)]
@@ -123,7 +68,78 @@ impl SimReport {
     }
 }
 
-/// The simulator.
+/// Assemble a [`SimReport`] for the Face Recognition tenant `tenant` of a
+/// finished world. Shared with `pipeline::mixed`, whose per-tenant
+/// breakdowns are exactly this report computed over a shared fabric.
+///
+/// Stage latencies, counters, and the producer/consumer NIC figures are
+/// *per-tenant* (the NIC utilizations come from the tenant's own byte
+/// totals). The broker/fabric figures are *substrate-wide*: in a mixed
+/// world they include the other tenants' traffic, which is the
+/// cross-tenant interference the mixed scenario exists to measure.
+pub fn report_for_tenant(world: &World<DcEvent, DcState>, cfg: &Config, tenant: usize) -> SimReport {
+    let s = &world.shared;
+    let ts = &s.tenants[tenant];
+    let m = &ts.metrics;
+    let elapsed = s.horizon_us;
+    let warmup = ts.warmup_us;
+
+    let wait_mean = m.hist_wait.mean();
+    let total = m.hist_ingest.mean() + m.hist_prep.mean() + wait_mean + m.hist_service.mean();
+    let measured_window = elapsed.saturating_sub(warmup);
+    let mean_faces = if m.frames_total == 0 {
+        0.0
+    } else {
+        m.produced as f64 / m.frames_total as f64
+    };
+
+    SimReport {
+        accel: cfg.accel,
+        elapsed_us: elapsed,
+        ingest_mean_us: m.hist_ingest.mean(),
+        detect_mean_us: m.hist_prep.mean(),
+        wait_mean_us: wait_mean,
+        identify_mean_us: m.hist_service.mean(),
+        e2e_mean_us: m.hist_e2e.mean(),
+        e2e_p99_us: m.hist_e2e.p99(),
+        ingest_p99_us: m.hist_ingest.p99(),
+        detect_p99_us: m.hist_prep.p99(),
+        wait_p99_us: m.hist_wait.p99(),
+        identify_p99_us: m.hist_service.p99(),
+        wait_fraction: if total > 0.0 { wait_mean / total } else { 0.0 },
+        frames_ingested: m.frames_measured,
+        faces_produced: m.produced,
+        faces_completed: m.completed,
+        throughput_fps: if measured_window > 0 {
+            m.completed_in_window as f64 * 1e6 / measured_window as f64
+        } else {
+            0.0
+        },
+        mean_faces_per_frame: mean_faces,
+        verdict: m.population.verdict(elapsed),
+        storage_write_util: s.fabric.max_storage_write_util(elapsed),
+        storage_read_util: s.fabric.max_storage_read_util(elapsed),
+        broker_net_rx_util: s.fabric.max_nic_rx_util(elapsed),
+        broker_net_tx_util: s.fabric.max_nic_tx_util(elapsed),
+        broker_cpu_util: s.fabric.max_cpu_util(elapsed),
+        producer_net_tx_util: TenantMetrics::per_node_net_util(
+            m.net_tx_bytes,
+            elapsed,
+            cfg.deployment.producers,
+            cfg.node.net_bw,
+        ),
+        consumer_net_rx_util: TenantMetrics::per_node_net_util(
+            m.net_rx_bytes,
+            elapsed,
+            cfg.deployment.consumers,
+            cfg.node.net_bw,
+        ),
+        population: m.population.samples().to_vec(),
+        latency_series: m.latency_series(),
+    }
+}
+
+/// The simulator: one Face Recognition tenant on a dedicated world.
 pub struct FaceRecSim {
     cfg: Config,
 }
@@ -137,389 +153,30 @@ impl FaceRecSim {
     /// Run to the configured horizon and report.
     pub fn run(&self) -> SimReport {
         let cfg = &self.cfg;
-        let d = &cfg.deployment;
-        let stages = StageModel::new(cfg.calibration.stages.clone(), cfg.accel, cfg.protocol);
-        let mut master = Rng::new(cfg.seed);
-        let horizon = cfg.duration_us;
-        let warmup = (horizon as f64 * cfg.warmup_frac) as u64;
-
-        // ---- build the world ----
-        // Acceleration-emulation runs use 1 face/frame (§5.3); otherwise
-        // every producer replays the same video, so face surges come from
-        // a single shared burst timeline (§3.3, Fig 7).
-        let one_face = matches!(cfg.protocol, AccelProtocol::Emulation)
-            && d.producers == crate::config::Deployment::facerec_accel().producers;
-        let schedule = (!one_face).then(|| {
-            BurstSchedule::new(
-                cfg.calibration.faces.clone(),
-                horizon + crate::util::units::SEC,
-                &mut master,
-            )
-        });
-        let mut producers: Vec<ProducerState> = (0..d.producers)
-            .map(|_| ProducerState {
-                rng: master.fork(),
-                nic: FifoServer::new(cfg.node.net_bw, 0),
-                frames: 0,
-            })
-            .collect();
-
-        let write_cap = cfg.calibration.broker_write_capacity(
-            cfg.node.nvme.write_bw,
-            d.drives_per_broker,
-            d.brokers,
+        let spec = dc::FabricSpec::from_config(cfg);
+        let mut world = dc::build(
+            &[dc::TenantSpec { kind: dc::WorkloadKind::FaceRec, cfg }],
+            &spec,
+            cfg.duration_us,
         );
-        let mut fabric = Fabric::new(
-            d.brokers,
-            d.drives_per_broker,
-            d.replication,
-            cfg.node.nvme,
-            write_cap,
-            cfg.node.net_bw,
-            cfg.tuning.clone(),
-        );
-
-        let mut partitions: Vec<PartitionState> = (0..d.partitions)
-            .map(|p| PartitionState {
-                leader: (p % d.brokers) as u32,
-                queue: VecDeque::new(),
-                consumer: (p % d.consumers) as u32,
-            })
-            .collect();
-
-        let mut consumers: Vec<ConsumerState> = (0..d.consumers)
-            .map(|_| ConsumerState {
-                rng: master.fork(),
-                nic_rx: FifoServer::new(cfg.node.net_bw, 0),
-                busy_until: 0,
-                poll_scheduled: false,
-                faces_done: 0,
-            })
-            .collect();
-
-        // Consumer index per partition list (owned partitions), to avoid
-        // scanning all partitions on every poll.
-        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); d.consumers];
-        for (idx, part) in partitions.iter().enumerate() {
-            owned[part.consumer as usize].push(idx as u32);
-        }
-
-        let mut meter = BandwidthMeter::new();
-        meter.set_nodes(Class::Producer, d.producers);
-        meter.set_nodes(Class::Consumer, d.consumers);
-        meter.set_nodes(Class::Broker, d.brokers);
-
-        let mut hist_ingest = Histogram::new();
-        let mut hist_detect = Histogram::new();
-        let mut hist_wait = Histogram::new();
-        let mut hist_identify = Histogram::new();
-        let mut hist_e2e = Histogram::new();
-        let mut population = Population::new(250_000); // 0.25 s sampling
-        // Dense per-second latency aggregation for the Fig-7 series.
-        let n_secs = (horizon / 1_000_000 + 2) as usize;
-        let mut lat_sum = vec![0u64; n_secs];
-        let mut lat_n = vec![0u64; n_secs];
-        let mut faces_produced = 0u64;
-        let mut faces_completed = 0u64;
-        let mut completed_in_window = 0u64;
-        let mut frames_ingested = 0u64;
-
-        // In-flight faces keyed by fabric token.
-        let mut in_flight: Vec<SimFace> = Vec::new();
-        let mut free_tokens: Vec<u64> = Vec::new();
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let cycle = stages.producer_cycle_mean_us(cfg.calibration.faces.mean_faces) as u64;
-        for p in 0..d.producers {
-            // Stagger starts across one mean cycle to avoid a herd.
-            let jitter = (p as u64 * cycle.max(1)) / d.producers as u64;
-            q.at(jitter, Ev::Frame(p as u32));
-        }
-
-        let linger = cfg.tuning.linger_us;
-        let mut fabric_out: Vec<FabricOut> = Vec::new();
-
-        while let Some((now, ev)) = q.pop() {
-            if now > horizon {
-                break;
-            }
-            match ev {
-                Ev::Frame(p) => {
-                    let pid = p as usize;
-                    let faces = match &schedule {
-                        Some(sched) => sched.faces_at(now, &mut producers[pid].rng),
-                        None => 1,
-                    };
-                    let ingest_us = stages.ingest(&mut producers[pid].rng);
-                    let detect_us = stages.detect(&mut producers[pid].rng, faces);
-                    let detect_end = now + ingest_us + detect_us;
-                    producers[pid].frames += 1;
-                    if now >= warmup {
-                        frames_ingested += 1;
-                        hist_ingest.record(ingest_us.max(1));
-                        hist_detect.record(detect_us.max(1));
-                    }
-                    // Each face is its own record; the 2020-era Kafka
-                    // default partitioner round-robins unkeyed records, so
-                    // a frame's faces scatter across partitions. The linger
-                    // is the client-side hold before the record ships.
-                    for _ in 0..faces {
-                        let bytes = producers[pid]
-                            .rng
-                            .lognormal_mean_cv(cfg.face_bytes, 0.25)
-                            .max(1024.0);
-                        let face = SimFace {
-                            frame_start_us: now,
-                            detect_end_us: detect_end,
-                            visible_us: 0,
-                            bytes,
-                        };
-                        faces_produced += 1;
-                        population.enter(detect_end.min(horizon));
-                        q.at(detect_end + linger, Ev::Dispatch(p, face));
-                    }
-                    // Pipelined single-core container: next frame starts
-                    // when this one's ingest+detect completes.
-                    q.at(detect_end.max(now + 1), Ev::Frame(p));
-                }
-                Ev::Dispatch(p, face) => {
-                    let pid = p as usize;
-                    // Random rotation: deterministic lockstep rotation
-                    // across same-cadence producers would convoy consumers.
-                    let part = producers[pid].rng.below(partitions.len() as u64) as u32;
-                    let token = free_tokens.pop().unwrap_or_else(|| {
-                        in_flight.push(face);
-                        (in_flight.len() - 1) as u64
-                    });
-                    in_flight[token as usize] = face;
-                    let leader = partitions[part as usize].leader;
-                    let bytes = face.bytes + RECORD_OVERHEAD;
-                    let nic = &mut producers[pid].nic;
-                    fabric.send(now, part, leader, bytes, token, &mut meter, nic, &mut fabric_out);
-                    drain_fabric(
-                        &mut fabric_out,
-                        &mut q,
-                        &mut partitions,
-                        &mut consumers,
-                        &in_flight,
-                        &mut free_tokens,
-                    );
-                }
-                Ev::Fabric(fev) => {
-                    fabric.handle(now, fev, &mut meter, &mut fabric_out);
-                    drain_fabric(
-                        &mut fabric_out,
-                        &mut q,
-                        &mut partitions,
-                        &mut consumers,
-                        &in_flight,
-                        &mut free_tokens,
-                    );
-                }
-                Ev::Poll(c) => {
-                    let cid = c as usize;
-                    consumers[cid].poll_scheduled = false;
-                    if now < consumers[cid].busy_until {
-                        consumers[cid].poll_scheduled = true;
-                        let t = consumers[cid].busy_until;
-                        q.at(t, Ev::Poll(c));
-                        continue;
-                    }
-                    // Gather visible records across owned partitions.
-                    let mut avail_bytes = 0.0;
-                    let mut oldest_visible = u64::MAX;
-                    for &pi in &owned[cid] {
-                        for f in partitions[pi as usize].queue.iter() {
-                            if f.visible_us <= now {
-                                avail_bytes += f.bytes + RECORD_OVERHEAD;
-                                oldest_visible = oldest_visible.min(f.visible_us);
-                            } else {
-                                break;
-                            }
-                        }
-                    }
-                    if avail_bytes == 0.0 {
-                        continue; // a commit Deliver will wake us
-                    }
-                    if (avail_bytes as usize) < cfg.tuning.fetch_min_bytes {
-                        let deadline = oldest_visible + cfg.tuning.fetch_max_wait_us;
-                        if now < deadline {
-                            consumers[cid].poll_scheduled = true;
-                            q.at(deadline, Ev::Poll(c));
-                            continue;
-                        }
-                    }
-                    // Fetch all visible records per owned partition.
-                    let mut fetched: Vec<SimFace> = Vec::new();
-                    let mut deliver_at = now;
-                    for &pi in &owned[cid] {
-                        let part = &mut partitions[pi as usize];
-                        let mut part_bytes = 0.0;
-                        let mut any = false;
-                        while let Some(f) = part.queue.front() {
-                            if f.visible_us <= now {
-                                part_bytes += f.bytes + RECORD_OVERHEAD;
-                                fetched.push(*f);
-                                part.queue.pop_front();
-                                any = true;
-                            } else {
-                                break;
-                            }
-                        }
-                        if any {
-                            let t = fabric.fetch(
-                                now,
-                                part.leader,
-                                part_bytes,
-                                &mut consumers[cid].nic_rx,
-                                &mut meter,
-                            );
-                            deliver_at = deliver_at.max(t);
-                        }
-                    }
-                    // Identify each face serially on the 1-core container.
-                    fetched.sort_by_key(|f| f.detect_end_us);
-                    let mut busy = consumers[cid].busy_until.max(deliver_at);
-                    for f in fetched {
-                        let start = busy;
-                        let wait_us = start.saturating_sub(f.detect_end_us);
-                        let dur = stages.identify(&mut consumers[cid].rng);
-                        busy = start + dur;
-                        consumers[cid].faces_done += 1;
-                        population.exit(busy.min(horizon));
-                        faces_completed += 1;
-                        if busy >= warmup && busy <= horizon {
-                            completed_in_window += 1;
-                        }
-                        if f.frame_start_us >= warmup && busy <= horizon {
-                            hist_wait.record(wait_us.max(1));
-                            hist_identify.record(dur.max(1));
-                            let e2e = busy - f.frame_start_us;
-                            hist_e2e.record(e2e.max(1));
-                            // Bucket by *arrival* time: a face arriving
-                            // during a surge experiences the congestion,
-                            // wherever its completion lands (Fig 7).
-                            let sec = (f.frame_start_us / 1_000_000) as usize;
-                            if sec < lat_sum.len() {
-                                lat_sum[sec] += e2e;
-                                lat_n[sec] += 1;
-                            }
-                        }
-                    }
-                    consumers[cid].busy_until = busy;
-                    // Immediately look for more work when we free up.
-                    consumers[cid].poll_scheduled = true;
-                    q.at(busy, Ev::Poll(c));
-                }
-            }
-        }
-
-        // ---- aggregate ----
+        world.run_until(cfg.duration_us);
         if std::env::var("AITAX_SIM_DEBUG").is_ok() {
-            let active = consumers.iter().filter(|c| c.faces_done > 0).count();
-            let qtot: usize = partitions.iter().map(|p| p.queue.len()).sum();
+            let s = &world.shared;
+            let ts = &s.tenants[0];
+            let active = world
+                .component::<dc::ConsumerPoller>(ts.poller_comp)
+                .map(|p| p.active_units())
+                .unwrap_or(0);
+            let qtot: usize = s.partitions.iter().map(|p| p.queue.len()).sum();
             eprintln!(
                 "[sim-debug] active_consumers={active}/{} qtot={qtot} events={} cpu_util={:.2} storage_util={:.2}",
-                consumers.len(),
-                q.processed(),
-                fabric.max_cpu_util(horizon),
-                fabric.max_storage_write_util(horizon),
+                ts.gates.len(),
+                world.processed(),
+                s.fabric.max_cpu_util(cfg.duration_us),
+                s.fabric.max_storage_write_util(cfg.duration_us),
             );
         }
-        let elapsed = horizon;
-        let wait_mean = hist_wait.mean();
-        let total = hist_ingest.mean() + hist_detect.mean() + wait_mean + hist_identify.mean();
-        let measured_window = elapsed.saturating_sub(warmup);
-        let mean_faces = {
-            let total_frames: u64 = producers.iter().map(|p| p.frames).sum();
-            if total_frames == 0 {
-                0.0
-            } else {
-                faces_produced as f64 / total_frames as f64
-            }
-        };
-
-        SimReport {
-            accel: cfg.accel,
-            elapsed_us: elapsed,
-            ingest_mean_us: hist_ingest.mean(),
-            detect_mean_us: hist_detect.mean(),
-            wait_mean_us: wait_mean,
-            identify_mean_us: hist_identify.mean(),
-            e2e_mean_us: hist_e2e.mean(),
-            e2e_p99_us: hist_e2e.p99(),
-            ingest_p99_us: hist_ingest.p99(),
-            detect_p99_us: hist_detect.p99(),
-            wait_p99_us: hist_wait.p99(),
-            identify_p99_us: hist_identify.p99(),
-            wait_fraction: if total > 0.0 { wait_mean / total } else { 0.0 },
-            frames_ingested,
-            faces_produced,
-            faces_completed,
-            throughput_fps: if measured_window > 0 {
-                completed_in_window as f64 * 1e6 / measured_window as f64
-            } else {
-                0.0
-            },
-            mean_faces_per_frame: mean_faces,
-            verdict: population.verdict(elapsed),
-            storage_write_util: fabric.max_storage_write_util(elapsed),
-            storage_read_util: fabric.max_storage_read_util(elapsed),
-            broker_net_rx_util: fabric.max_nic_rx_util(elapsed),
-            broker_net_tx_util: fabric.max_nic_tx_util(elapsed),
-            broker_cpu_util: fabric.max_cpu_util(elapsed),
-            producer_net_tx_util: meter.utilization(
-                Class::Producer,
-                Channel::Network,
-                Dir::Write,
-                elapsed,
-                cfg.node.net_bw,
-            ),
-            consumer_net_rx_util: meter.utilization(
-                Class::Consumer,
-                Channel::Network,
-                Dir::Read,
-                elapsed,
-                cfg.node.net_bw,
-            ),
-            population: population.samples().to_vec(),
-            latency_series: lat_sum
-                .iter()
-                .zip(&lat_n)
-                .enumerate()
-                .filter(|(_, (_, &n))| n > 0)
-                .map(|(sec, (&sum, &n))| (sec as u64 * 1_000_000, sum / n))
-                .collect(),
-        }
-    }
-}
-
-/// Route fabric outputs: schedule hop events; on commit, make the record
-/// visible on its partition and wake the owning consumer.
-fn drain_fabric(
-    out: &mut Vec<FabricOut>,
-    q: &mut EventQueue<Ev>,
-    partitions: &mut [PartitionState],
-    consumers: &mut [ConsumerState],
-    in_flight: &[SimFace],
-    free_tokens: &mut Vec<u64>,
-) {
-    for o in out.drain(..) {
-        match o {
-            FabricOut::Schedule(t, fev) => q.at(t.max(q.now()), Ev::Fabric(fev)),
-            FabricOut::Committed { token, partition, at } => {
-                let mut face = in_flight[token as usize];
-                free_tokens.push(token);
-                face.visible_us = at;
-                let part = &mut partitions[partition as usize];
-                part.queue.push_back(face);
-                let cs = &mut consumers[part.consumer as usize];
-                if !cs.poll_scheduled {
-                    cs.poll_scheduled = true;
-                    q.at(at.max(q.now()).max(cs.busy_until), Ev::Poll(part.consumer));
-                }
-            }
-        }
+        report_for_tenant(&world, cfg, 0)
     }
 }
 

@@ -1,0 +1,215 @@
+//! Mixed tenancy: Face Recognition *and* Object Detection sharing one
+//! broker fabric and storage.
+//!
+//! The paper measures each application on a dedicated cluster; the
+//! `sim::world` component kernel lets us go one step further and ask the
+//! question a real AI data center faces: what happens when heterogeneous
+//! AI pipelines share the coordination substrate? Both tenants keep their
+//! own producers, consumers, and topic partitions, but every produce and
+//! fetch contends for the same broker NICs, request CPUs, and NVMe write
+//! path — so one tenant's acceleration becomes the other tenant's broker
+//! wait. This was structurally impossible with the per-workload
+//! monolithic simulators (one event enum, one state machine each).
+//!
+//! [`MixedReport`] carries the two per-tenant reports (same fields as the
+//! dedicated runs, so all existing analyses apply) plus the shared-broker
+//! view; `experiments::mixed` sweeps the facerec:objdet mix Fig-11/15
+//! style.
+
+use crate::config::Config;
+use crate::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
+use crate::pipeline::facerec::{self, SimReport};
+use crate::pipeline::objdet::{self, ObjDetReport};
+
+/// Configuration of a two-tenant deployment on one shared fabric.
+///
+/// Each tenant keeps its own workload config (deployment sizes, accel,
+/// seeds, calibration); the *fabric* — brokers, drives, replication,
+/// device specs, Kafka tuning — is taken from `fabric`, because there is
+/// only one broker fleet in a mixed world.
+#[derive(Clone, Debug)]
+pub struct MixedConfig {
+    pub facerec: Config,
+    pub objdet: Config,
+    /// Fabric-defining config (brokers / drives / replication / node
+    /// hardware / tuning). Defaults to the Face Recognition config.
+    pub fabric: Config,
+    /// Shared virtual horizon (both tenants must run the same clock).
+    pub duration_us: u64,
+}
+
+impl MixedConfig {
+    /// The §5.3 + §6.3 acceleration deployments side by side on the
+    /// paper's 3-broker fabric.
+    pub fn paper_accel(facerec_accel: f64, objdet_accel: f64) -> Self {
+        let mut fr = Config::default();
+        fr.deployment = crate::config::Deployment::facerec_accel();
+        fr.accel = facerec_accel;
+        fr.seed = 0xACCE1;
+        let mut od = Config::default();
+        od.deployment = crate::config::Deployment::objdet_accel();
+        od.accel = objdet_accel;
+        od.seed = 0xD07;
+        let duration_us = fr.duration_us;
+        MixedConfig {
+            fabric: fr.clone(),
+            facerec: fr,
+            objdet: od,
+            duration_us,
+        }
+    }
+
+    pub fn with_duration(mut self, duration_us: u64) -> Self {
+        self.duration_us = duration_us;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.facerec.deployment.validate()?;
+        self.objdet.deployment.validate()?;
+        anyhow::ensure!(self.duration_us > 0, "mixed run needs a horizon");
+        Ok(())
+    }
+}
+
+/// Results of one mixed-tenancy run.
+#[derive(Clone, Debug)]
+pub struct MixedReport {
+    /// Per-tenant breakdowns, same shape as the dedicated simulators'.
+    /// Broker-side utilization fields inside them are substrate-wide.
+    pub facerec: SimReport,
+    pub objdet: ObjDetReport,
+    /// Shared-broker view (max across brokers, like Fig 11).
+    pub broker_storage_write_util: f64,
+    pub broker_storage_read_util: f64,
+    pub broker_net_rx_util: f64,
+    pub broker_net_tx_util: f64,
+    pub broker_cpu_util: f64,
+    /// Events dispatched by the world (DES throughput numerator).
+    pub events: u64,
+}
+
+impl MixedReport {
+    /// True when both tenants' populations are stable.
+    pub fn stable(&self) -> bool {
+        self.facerec.verdict.stable && self.objdet.verdict.stable
+    }
+}
+
+/// The mixed-tenancy simulator: two tenants, one world, one fabric.
+pub struct MixedSim {
+    cfg: MixedConfig,
+}
+
+impl MixedSim {
+    pub fn new(cfg: MixedConfig) -> Self {
+        cfg.validate().expect("invalid mixed deployment");
+        MixedSim { cfg }
+    }
+
+    pub fn run(&self) -> MixedReport {
+        let c = &self.cfg;
+        // One fabric for everyone, sized by the fabric config.
+        let spec = FabricSpec::from_config(&c.fabric);
+        let mut world = dc::build(
+            &[
+                TenantSpec { kind: WorkloadKind::FaceRec, cfg: &c.facerec },
+                TenantSpec { kind: WorkloadKind::ObjDet, cfg: &c.objdet },
+            ],
+            &spec,
+            c.duration_us,
+        );
+        world.run_until(c.duration_us);
+
+        let elapsed = c.duration_us;
+        let s = &world.shared;
+        MixedReport {
+            broker_storage_write_util: s.fabric.max_storage_write_util(elapsed),
+            broker_storage_read_util: s.fabric.max_storage_read_util(elapsed),
+            broker_net_rx_util: s.fabric.max_nic_rx_util(elapsed),
+            broker_net_tx_util: s.fabric.max_nic_tx_util(elapsed),
+            broker_cpu_util: s.fabric.max_cpu_util(elapsed),
+            events: world.processed(),
+            facerec: facerec::report_for_tenant(&world, &c.facerec, 0),
+            objdet: objdet::report_for_tenant(&world, &c.objdet, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+    use crate::util::units::SEC;
+
+    /// Scaled-down tenants so the test world stays fast.
+    fn small_mixed(fr_accel: f64, od_accel: f64) -> MixedConfig {
+        let mut cfg = MixedConfig::paper_accel(fr_accel, od_accel);
+        cfg.facerec.deployment = Deployment {
+            producers: 75,
+            consumers: 114,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 114,
+        };
+        cfg.objdet.deployment = Deployment {
+            producers: 5,
+            consumers: 480,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 480,
+        };
+        cfg.fabric = cfg.facerec.clone();
+        cfg.with_duration(20 * SEC)
+    }
+
+    #[test]
+    fn both_tenants_make_progress_on_a_shared_fabric() {
+        let r = MixedSim::new(small_mixed(1.0, 1.0)).run();
+        assert!(r.facerec.faces_completed > 0, "facerec starved");
+        assert!(r.objdet.frames_detected > 0, "objdet starved");
+        assert!(r.stable(), "small mixed load should be stable");
+        assert!(r.events > 10_000, "events={}", r.events);
+    }
+
+    #[test]
+    fn shared_broker_carries_both_tenants_load() {
+        // The shared-broker write utilization must at least match what the
+        // busier tenant would drive alone: tenants add load, never shed it.
+        let mixed = MixedSim::new(small_mixed(1.0, 1.0)).run();
+        let mut fr_alone = small_mixed(1.0, 1.0).facerec;
+        fr_alone.duration_us = 20 * SEC;
+        let solo = crate::pipeline::facerec::FaceRecSim::new(fr_alone).run();
+        assert!(
+            mixed.broker_storage_write_util > solo.storage_write_util,
+            "mixed {} <= solo {}",
+            mixed.broker_storage_write_util,
+            solo.storage_write_util
+        );
+    }
+
+    #[test]
+    fn accelerating_one_tenant_taxes_the_other() {
+        // Cross-tenant interference: pushing Object Detection harder must
+        // raise the shared storage-write pressure Face Recognition sees.
+        let calm = MixedSim::new(small_mixed(1.0, 1.0)).run();
+        let noisy = MixedSim::new(small_mixed(1.0, 6.0)).run();
+        assert!(
+            noisy.broker_storage_write_util > 1.2 * calm.broker_storage_write_util,
+            "calm {} noisy {}",
+            calm.broker_storage_write_util,
+            noisy.broker_storage_write_util
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let a = MixedSim::new(small_mixed(2.0, 2.0)).run();
+        let b = MixedSim::new(small_mixed(2.0, 2.0)).run();
+        assert_eq!(a.facerec.faces_completed, b.facerec.faces_completed);
+        assert_eq!(a.objdet.frames_detected, b.objdet.frames_detected);
+        assert_eq!(a.events, b.events);
+    }
+}

@@ -1,5 +1,8 @@
 //! The paper's applications: *Face Recognition* (§3) and *Object
-//! Detection* (§6), plus the models they are built from.
+//! Detection* (§6), plus the models and the shared deployment layer they
+//! are built from.
+//!
+//! Layering (bottom to top):
 //!
 //! * [`frame`] — frames, faces, identities (the data the pipeline moves).
 //! * [`video`] — the synthetic video-stream source: 0–5 faces per frame,
@@ -7,14 +10,25 @@
 //! * [`stage`] — per-stage compute-cost models with AI/support splits
 //!   (Fig 8) and acceleration protocols (§5.1 vs §5.2).
 //! * [`scaling`] — the Fig-5/Fig-12 container core-scaling curves.
-//! * [`facerec`] — the Face Recognition data-center simulation: producers →
-//!   Kafka-style brokers (batching, replication, storage) → consumers, in
-//!   virtual time. Regenerates Figs 6, 7, 10, 11, 15.
-//! * [`objdet`] — the Object Detection simulation (Figs 13, 14).
+//! * [`fabric`] — the event-driven broker substrate (leader NIC → request
+//!   CPU → NVMe write → replication → `acks=all` commit).
+//! * [`dc`] — the deployment layer on the [`sim::world`](crate::sim::world)
+//!   kernel: `ProducerClient`, `PartitionQueue`, `ConsumerPoller`, and the
+//!   fabric wrapped as a component. Both applications (and any future
+//!   workload) are expressed as *tenants* of this one machine.
+//! * [`facerec`] — Face Recognition as a thin workload definition: frame
+//!   source + stage costs + report assembly. Regenerates Figs 6, 7, 10,
+//!   11, 15.
+//! * [`objdet`] — Object Detection likewise (Figs 13, 14).
+//! * [`mixed`] — the mixed-tenancy scenario the component kernel makes
+//!   possible: both applications sharing one broker fabric and storage,
+//!   with per-tenant latency breakdowns and cross-tenant interference.
 
+pub mod dc;
 pub mod fabric;
 pub mod facerec;
 pub mod frame;
+pub mod mixed;
 pub mod objdet;
 pub mod scaling;
 pub mod stage;
@@ -22,6 +36,7 @@ pub mod video;
 
 pub use facerec::{FaceRecSim, SimReport};
 pub use frame::{Face, Frame, Identity};
+pub use mixed::{MixedConfig, MixedReport, MixedSim};
 pub use objdet::{ObjDetReport, ObjDetSim};
 pub use stage::StageModel;
 pub use video::VideoSource;

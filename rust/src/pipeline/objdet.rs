@@ -1,6 +1,8 @@
 //! The *Object Detection* data-center simulation (§6).
 //!
-//! Structure mirrors Face Recognition with the §6 differences:
+//! A thin workload definition over the component layer
+//! ([`pipeline::dc`](crate::pipeline::dc)), keeping only what is §6
+//! specific:
 //!
 //! * two stages — ingestion (no AI) and R-CNN detection (all the AI);
 //! * every frame is always sent through Kafka (no face-count variability);
@@ -11,61 +13,10 @@
 //!   set *should* start processing and when it actually does, caused by
 //!   the producer send path overrunning the 33.3 ms tick (Fig 14).
 
-use std::collections::VecDeque;
-
 use crate::config::Config;
-use crate::metrics::bandwidth::{BandwidthMeter, Class};
-use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut, WIRE_US};
-use crate::sim::engine::EventQueue;
-use crate::sim::queue::{InstabilityVerdict, Population};
-use crate::sim::resource::FifoServer;
-use crate::util::rng::Rng;
-use crate::util::stats::Histogram;
-
-const RECORD_OVERHEAD: f64 = 64.0;
-
-#[derive(Debug)]
-enum Ev {
-    /// Producer `p` hits its next 30 FPS tick.
-    Tick(u32),
-    /// A frame leaves producer `.0`'s send path toward partition `.1`.
-    Dispatch(u32, u32, SimFrame),
-    /// Broker-fabric hop.
-    Fabric(FabricEv),
-    /// Consumer `c` polls.
-    Poll(u32),
-}
-
-#[derive(Clone, Copy, Debug)]
-struct SimFrame {
-    /// When the frame's tick was *scheduled* (delay epoch).
-    scheduled_us: u64,
-    /// When ingestion + send finished (broker-wait epoch).
-    sent_done_us: u64,
-    visible_us: u64,
-    bytes: f64,
-}
-
-struct ProducerState {
-    rng: Rng,
-    /// Send-path server (serialization + Kafka client), in us of work.
-    send: FifoServer,
-    nic: FifoServer,
-    ticks: u64,
-}
-
-struct PartitionState {
-    leader: u32,
-    queue: VecDeque<SimFrame>,
-    consumer: u32,
-}
-
-struct ConsumerState {
-    rng: Rng,
-    nic_rx: FifoServer,
-    busy_until: u64,
-    poll_scheduled: bool,
-}
+use crate::pipeline::dc::{self, DcEvent, DcState, ProducerClient};
+use crate::sim::queue::InstabilityVerdict;
+use crate::sim::world::World;
 
 /// Results of one Object Detection run.
 #[derive(Clone, Debug)]
@@ -92,7 +43,46 @@ impl ObjDetReport {
     }
 }
 
-/// The Object Detection simulator.
+/// Assemble an [`ObjDetReport`] for the Object Detection tenant `tenant`
+/// of a finished world (shared with `pipeline::mixed`; the storage figure
+/// is substrate-wide, which is the point of the mixed scenario).
+pub fn report_for_tenant(
+    world: &World<DcEvent, DcState>,
+    cfg: &Config,
+    tenant: usize,
+) -> ObjDetReport {
+    let s = &world.shared;
+    let ts = &s.tenants[tenant];
+    let m = &ts.metrics;
+    let elapsed = s.horizon_us;
+    let measured = elapsed.saturating_sub(ts.warmup_us);
+    let producer_send_util = world
+        .component::<ProducerClient>(ts.producer_comp)
+        .expect("objdet tenant has a ProducerClient")
+        .max_send_util(elapsed);
+
+    ObjDetReport {
+        accel: cfg.accel,
+        ingest_mean_us: m.hist_ingest.mean(),
+        delay_mean_us: m.hist_prep.mean(),
+        wait_mean_us: m.hist_wait.mean(),
+        detect_mean_us: m.hist_service.mean(),
+        e2e_mean_us: m.hist_e2e.mean(),
+        e2e_p99_us: m.hist_e2e.p99(),
+        frames_sent: m.produced,
+        frames_detected: m.completed,
+        throughput_fps: if measured > 0 {
+            m.completed_in_window as f64 * 1e6 / measured as f64
+        } else {
+            0.0
+        },
+        verdict: m.population.verdict(elapsed),
+        storage_write_util: s.fabric.max_storage_write_util(elapsed),
+        producer_send_util,
+    }
+}
+
+/// The Object Detection simulator: one tenant on a dedicated world.
 pub struct ObjDetSim {
     cfg: Config,
 }
@@ -105,309 +95,14 @@ impl ObjDetSim {
 
     pub fn run(&self) -> ObjDetReport {
         let cfg = &self.cfg;
-        let d = &cfg.deployment;
-        let od = &cfg.calibration.objdet;
-        let k = cfg.accel;
-        let horizon = cfg.duration_us;
-        let warmup = (horizon as f64 * cfg.warmup_frac) as u64;
-        let mut master = Rng::new(cfg.seed ^ 0x0BDE7);
-
-        // Effective per-frame send cost with Kafka's batching amortization
-        // (§6.3: "producers and the brokers manage to intelligently batch").
-        let send_us_per_frame =
-            od.send_frame_us * (1.0 - od.batch_amort) + od.send_frame_us * od.batch_amort / k;
-        // Emulation protocol: ingestion and detection compute divide by k.
-        let ingest_us = od.ingest_us / k;
-        let detect_mean_us = od.detect_us / k;
-        let frames_per_tick = k.round().max(1.0) as usize;
-
-        let mut producers: Vec<ProducerState> = (0..d.producers)
-            .map(|_| ProducerState {
-                rng: master.fork(),
-                send: FifoServer::new(1e6, 0),
-                nic: FifoServer::new(cfg.node.net_bw, 0),
-                ticks: 0,
-            })
-            .collect();
-        let write_cap = cfg.calibration.broker_write_capacity(
-            cfg.node.nvme.write_bw,
-            d.drives_per_broker,
-            d.brokers,
+        let spec = dc::FabricSpec::from_config(cfg);
+        let mut world = dc::build(
+            &[dc::TenantSpec { kind: dc::WorkloadKind::ObjDet, cfg }],
+            &spec,
+            cfg.duration_us,
         );
-        let mut fabric = Fabric::new(
-            d.brokers,
-            d.drives_per_broker,
-            d.replication,
-            cfg.node.nvme,
-            write_cap,
-            cfg.node.net_bw,
-            cfg.tuning.clone(),
-        );
-        let mut partitions: Vec<PartitionState> = (0..d.partitions)
-            .map(|p| PartitionState {
-                leader: (p % d.brokers) as u32,
-                queue: VecDeque::new(),
-                consumer: (p % d.consumers) as u32,
-            })
-            .collect();
-        let mut consumers: Vec<ConsumerState> = (0..d.consumers)
-            .map(|_| ConsumerState {
-                rng: master.fork(),
-                nic_rx: FifoServer::new(cfg.node.net_bw, 0),
-                busy_until: 0,
-                poll_scheduled: false,
-            })
-            .collect();
-        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); d.consumers];
-        for (idx, part) in partitions.iter().enumerate() {
-            owned[part.consumer as usize].push(idx as u32);
-        }
-
-        let mut meter = BandwidthMeter::new();
-        meter.set_nodes(Class::Producer, d.producers);
-        meter.set_nodes(Class::Consumer, d.consumers);
-        meter.set_nodes(Class::Broker, d.brokers);
-
-        let mut hist_ingest = Histogram::new();
-        let mut hist_delay = Histogram::new();
-        let mut hist_wait = Histogram::new();
-        let mut hist_detect = Histogram::new();
-        let mut hist_e2e = Histogram::new();
-        let mut population = Population::new(250_000);
-        let mut frames_sent = 0u64;
-        let mut frames_detected = 0u64;
-        let mut completed_in_window = 0u64;
-
-        let mut in_flight: Vec<SimFrame> = Vec::new();
-        let mut free_tokens: Vec<u64> = Vec::new();
-        let mut fabric_out: Vec<FabricOut> = Vec::new();
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        for p in 0..d.producers {
-            let jitter = (p as u64 * od.tick_us) / d.producers as u64;
-            q.at(jitter, Ev::Tick(p as u32));
-        }
-
-        while let Some((now, ev)) = q.pop() {
-            if now > horizon {
-                break;
-            }
-            match ev {
-                Ev::Tick(p) => {
-                    let pid = p as usize;
-                    producers[pid].ticks += 1;
-                    // Fig 14's Delay: the send server may still be draining
-                    // the previous set; the new set starts late.
-                    let delay = producers[pid].send.backlog_us(now);
-                    let start = now + delay;
-                    for _ in 0..frames_per_tick {
-                        let ing = producers[pid]
-                            .rng
-                            .lognormal_mean_cv(ingest_us.max(1.0), 0.15)
-                            .round()
-                            .max(1.0) as u64;
-                        let t_ing = start + ing;
-                        let t_sent = producers[pid].send.submit(t_ing, send_us_per_frame);
-                        let bytes = od.frame_bytes + RECORD_OVERHEAD;
-                        frames_sent += 1;
-                        if now >= warmup {
-                            hist_ingest.record(ing.max(1));
-                            hist_delay.record(delay.max(1));
-                        }
-                        population.enter(t_sent.min(horizon));
-                        // Each frame goes to a different partition so the
-                        // brokers can fully load-balance (§6.3). Random
-                        // choice — a deterministic rotation across 21
-                        // same-cadence producers convoys the consumers.
-                        let part_idx =
-                            producers[pid].rng.below(partitions.len() as u64) as u32;
-                        let frame = SimFrame {
-                            scheduled_us: now,
-                            sent_done_us: t_sent,
-                            visible_us: 0,
-                            bytes,
-                        };
-                        q.at(t_sent + WIRE_US, Ev::Dispatch(p, part_idx, frame));
-                    }
-                    q.at(now + od.tick_us, Ev::Tick(p));
-                }
-                Ev::Dispatch(p, part_idx, frame) => {
-                    let pid = p as usize;
-                    let token = free_tokens.pop().unwrap_or_else(|| {
-                        in_flight.push(frame);
-                        (in_flight.len() - 1) as u64
-                    });
-                    in_flight[token as usize] = frame;
-                    let leader = partitions[part_idx as usize].leader;
-                    let nic = &mut producers[pid].nic;
-                    fabric.send(now, part_idx, leader, frame.bytes, token, &mut meter, nic, &mut fabric_out);
-                    drain_fabric(
-                        &mut fabric_out,
-                        &mut q,
-                        &mut partitions,
-                        &mut consumers,
-                        &in_flight,
-                        &mut free_tokens,
-                    );
-                }
-                Ev::Fabric(fev) => {
-                    fabric.handle(now, fev, &mut meter, &mut fabric_out);
-                    drain_fabric(
-                        &mut fabric_out,
-                        &mut q,
-                        &mut partitions,
-                        &mut consumers,
-                        &in_flight,
-                        &mut free_tokens,
-                    );
-                }
-                Ev::Poll(c) => {
-                    let cid = c as usize;
-                    consumers[cid].poll_scheduled = false;
-                    if now < consumers[cid].busy_until {
-                        consumers[cid].poll_scheduled = true;
-                        let t = consumers[cid].busy_until;
-                        q.at(t, Ev::Poll(c));
-                        continue;
-                    }
-                    // fetch.min.bytes / fetch.max.wait withholding (§5.5),
-                    // with Object Detection's throughput-oriented tuning.
-                    let mut avail_bytes = 0.0;
-                    let mut oldest_visible = u64::MAX;
-                    for &pi in &owned[cid] {
-                        for f in partitions[pi as usize].queue.iter() {
-                            if f.visible_us <= now {
-                                avail_bytes += f.bytes;
-                                oldest_visible = oldest_visible.min(f.visible_us);
-                            } else {
-                                break;
-                            }
-                        }
-                    }
-                    if avail_bytes == 0.0 {
-                        continue; // a commit Deliver will wake us
-                    }
-                    if (avail_bytes as usize) < od.fetch_min_bytes {
-                        let deadline = oldest_visible + od.fetch_max_wait_us;
-                        if now < deadline {
-                            consumers[cid].poll_scheduled = true;
-                            q.at(deadline, Ev::Poll(c));
-                            continue;
-                        }
-                    }
-                    let mut fetched: Vec<SimFrame> = Vec::new();
-                    let mut deliver_at = now;
-                    for &pi in &owned[cid] {
-                        let part = &mut partitions[pi as usize];
-                        let mut part_bytes = 0.0;
-                        let mut any = false;
-                        while let Some(f) = part.queue.front() {
-                            if f.visible_us <= now {
-                                part_bytes += f.bytes;
-                                fetched.push(*f);
-                                part.queue.pop_front();
-                                any = true;
-                            } else {
-                                break;
-                            }
-                        }
-                        if any {
-                            let t = fabric.fetch(
-                                now,
-                                part.leader,
-                                part_bytes,
-                                &mut consumers[cid].nic_rx,
-                                &mut meter,
-                            );
-                            deliver_at = deliver_at.max(t);
-                        }
-                    }
-                    if fetched.is_empty() {
-                        continue;
-                    }
-                    fetched.sort_by_key(|f| f.sent_done_us);
-                    let mut busy = consumers[cid].busy_until.max(deliver_at);
-                    for f in fetched {
-                        let start = busy;
-                        let wait = start.saturating_sub(f.sent_done_us);
-                        let dur = consumers[cid]
-                            .rng
-                            .lognormal_mean_cv(detect_mean_us, od.detect_cv)
-                            .round()
-                            .max(1.0) as u64;
-                        busy = start + dur;
-                        population.exit(busy.min(horizon));
-                        frames_detected += 1;
-                        if busy >= warmup && busy <= horizon {
-                            completed_in_window += 1;
-                        }
-                        if f.scheduled_us >= warmup && busy <= horizon {
-                            hist_wait.record(wait.max(1));
-                            hist_detect.record(dur);
-                            hist_e2e.record((busy - f.scheduled_us).max(1));
-                        }
-                    }
-                    consumers[cid].busy_until = busy;
-                    consumers[cid].poll_scheduled = true;
-                    q.at(busy, Ev::Poll(c));
-                }
-            }
-        }
-
-        let elapsed = horizon;
-        let measured = elapsed.saturating_sub(warmup);
-        let producer_send_util = producers
-            .iter()
-            .map(|p| p.send.utilization(elapsed))
-            .fold(0.0, f64::max);
-
-        ObjDetReport {
-            accel: k,
-            ingest_mean_us: hist_ingest.mean(),
-            delay_mean_us: hist_delay.mean(),
-            wait_mean_us: hist_wait.mean(),
-            detect_mean_us: hist_detect.mean(),
-            e2e_mean_us: hist_e2e.mean(),
-            e2e_p99_us: hist_e2e.p99(),
-            frames_sent,
-            frames_detected,
-            throughput_fps: if measured > 0 {
-                completed_in_window as f64 * 1e6 / measured as f64
-            } else {
-                0.0
-            },
-            verdict: population.verdict(elapsed),
-            storage_write_util: fabric.max_storage_write_util(elapsed),
-            producer_send_util,
-        }
-    }
-}
-
-/// Route fabric outputs (same pattern as `facerec::drain_fabric`).
-fn drain_fabric(
-    out: &mut Vec<FabricOut>,
-    q: &mut EventQueue<Ev>,
-    partitions: &mut [PartitionState],
-    consumers: &mut [ConsumerState],
-    in_flight: &[SimFrame],
-    free_tokens: &mut Vec<u64>,
-) {
-    for o in out.drain(..) {
-        match o {
-            FabricOut::Schedule(t, fev) => q.at(t.max(q.now()), Ev::Fabric(fev)),
-            FabricOut::Committed { token, partition, at } => {
-                let mut frame = in_flight[token as usize];
-                free_tokens.push(token);
-                frame.visible_us = at;
-                let part = &mut partitions[partition as usize];
-                part.queue.push_back(frame);
-                let cs = &mut consumers[part.consumer as usize];
-                if !cs.poll_scheduled {
-                    cs.poll_scheduled = true;
-                    q.at(at.max(q.now()).max(cs.busy_until), Ev::Poll(part.consumer));
-                }
-            }
-        }
+        world.run_until(cfg.duration_us);
+        report_for_tenant(&world, cfg, 0)
     }
 }
 

@@ -9,16 +9,27 @@
 //! brokers, the network model and the storage model, and lets a one-hour
 //! cluster run finish in seconds.
 //!
-//! * [`engine`] — the event queue and virtual clock.
+//! Layering (bottom to top):
+//!
+//! * [`engine`] — the event queue and virtual clock: a deterministic
+//!   `(time, seq)` min-heap every higher layer schedules into.
 //! * [`resource`] — FIFO rate servers (storage write path, NICs, broker
 //!   request CPU) with utilization accounting.
 //! * [`queue`] — time-weighted population tracking (faces in system,
 //!   Fig 7) and the §5.3 instability detector.
+//! * [`world`] — the component kernel: typed components with ids, a
+//!   [`world::World`] that owns the event queue plus a shared substrate
+//!   state, and event routing to [`world::Component::on_event`]. The
+//!   data-center deployments (`pipeline::dc`) are built from components
+//!   registered here, which is what lets Face Recognition, Object
+//!   Detection, and mixed-tenancy scenarios share one simulation core.
 
 pub mod engine;
 pub mod queue;
 pub mod resource;
+pub mod world;
 
 pub use engine::{EventQueue, Scheduled};
 pub use queue::{InstabilityVerdict, Population};
 pub use resource::{FifoServer, ServerPool};
+pub use world::{CompId, Component, Ctx, World};

@@ -1,0 +1,324 @@
+//! Component-based simulation kernel.
+//!
+//! [`World`] is the generic discrete-event substrate the data-center
+//! simulations run on: it owns the [`EventQueue`], a registry of typed
+//! components, and a shared state value `S` that models the substrate
+//! every component can touch synchronously (broker fabric, partition
+//! queues, meters). Events are addressed `(CompId, E)`; the run loop pops
+//! them in deterministic `(time, seq)` order and routes each to its
+//! destination's [`Component::on_event`].
+//!
+//! Design notes (why this shape and not a pure actor model):
+//!
+//! * **Single queue, global tie-break.** Determinism comes from the
+//!   `EventQueue`'s insertion-order tie-breaker. One queue for all
+//!   components keeps a run reproducible from its seed no matter how many
+//!   tenants share the world.
+//! * **Shared state instead of synchronous messages.** The workloads need
+//!   same-timestamp interactions (a consumer poll walks partition queues,
+//!   a produce drives the fabric *and* the producer NIC). Routing those
+//!   through events would add queue hops that change virtual timing;
+//!   instead cross-component state lives in `S` and is reachable through
+//!   [`Ctx::shared`] while private per-component state stays inside the
+//!   component. This mirrors DSLab's `SimulationContext` split.
+//! * **Components are taken out while handling.** During dispatch the
+//!   destination component is moved out of the registry, so a component
+//!   can freely mutate the queue and shared state without aliasing
+//!   itself. Components therefore cannot call each other directly — they
+//!   communicate via events or via `S`, which is the point.
+
+use crate::sim::engine::EventQueue;
+
+/// Identifies a registered component within a [`World`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CompId(pub u32);
+
+impl CompId {
+    /// Placeholder id for build phases where the real id is not yet known.
+    /// Routing to it panics, so it must be overwritten before `run`.
+    pub const INVALID: CompId = CompId(u32::MAX);
+}
+
+/// A simulation component: owns private state, reacts to events.
+pub trait Component<E, S> {
+    /// Handle one event addressed to this component. `ctx` gives the
+    /// virtual clock, scheduling, and the world's shared state.
+    fn on_event(&mut self, ctx: &mut Ctx<'_, E, S>, ev: E);
+
+    /// Downcast hook so a finished world can be inspected for
+    /// component-private measurements (e.g. producer send-path
+    /// utilization). Implement as `fn as_any(&self) -> &dyn Any { self }`.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Per-dispatch view of the world handed to [`Component::on_event`].
+pub struct Ctx<'a, E, S> {
+    queue: &'a mut EventQueue<(CompId, E)>,
+    /// Shared substrate state (fabric, partitions, meters, metrics).
+    pub shared: &'a mut S,
+    /// The component currently handling an event.
+    pub self_id: CompId,
+}
+
+impl<'a, E, S> Ctx<'a, E, S> {
+    /// Current virtual time in microseconds.
+    pub fn now(&self) -> u64 {
+        self.queue.now()
+    }
+
+    /// Schedule `ev` for `dst` at absolute virtual time `time` (clamped
+    /// to now, like [`EventQueue::at`]).
+    pub fn at(&mut self, time: u64, dst: CompId, ev: E) {
+        self.queue.at(time.max(self.queue.now()), (dst, ev));
+    }
+
+    /// Schedule `ev` for `dst` after a relative delay.
+    pub fn after(&mut self, delay: u64, dst: CompId, ev: E) {
+        self.queue.after(delay, (dst, ev));
+    }
+
+    /// Schedule an event back to the handling component itself.
+    pub fn at_self(&mut self, time: u64, ev: E) {
+        let dst = self.self_id;
+        self.at(time, dst, ev);
+    }
+}
+
+/// The simulation world: event queue + component registry + shared state.
+pub struct World<E, S> {
+    queue: EventQueue<(CompId, E)>,
+    components: Vec<Option<Box<dyn Component<E, S>>>>,
+    pub shared: S,
+}
+
+impl<E, S> World<E, S> {
+    pub fn new(shared: S) -> Self {
+        World {
+            queue: EventQueue::new(),
+            components: Vec::new(),
+            shared,
+        }
+    }
+
+    /// Register a component; its id is its registration order.
+    pub fn add(&mut self, component: Box<dyn Component<E, S>>) -> CompId {
+        self.components.push(Some(component));
+        CompId((self.components.len() - 1) as u32)
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Current virtual time in microseconds.
+    pub fn now(&self) -> u64 {
+        self.queue.now()
+    }
+
+    /// Events dispatched so far (the DES throughput numerator).
+    pub fn processed(&self) -> u64 {
+        self.queue.processed()
+    }
+
+    /// Schedule an event from outside any component (world setup).
+    pub fn schedule(&mut self, time: u64, dst: CompId, ev: E) {
+        self.queue.at(time, (dst, ev));
+    }
+
+    /// Dispatch one event if any remain at or before `horizon`.
+    /// Returns `false` when the queue is exhausted or the next event lies
+    /// beyond the horizon (that event is consumed, matching the classic
+    /// `while pop { if now > horizon break }` loop shape).
+    pub fn step(&mut self, horizon: u64) -> bool {
+        let Some((now, (dst, ev))) = self.queue.pop() else {
+            return false;
+        };
+        if now > horizon {
+            return false;
+        }
+        let idx = dst.0 as usize;
+        let mut component = self.components[idx]
+            .take()
+            .unwrap_or_else(|| panic!("event routed to unknown component {dst:?}"));
+        let mut ctx = Ctx {
+            queue: &mut self.queue,
+            shared: &mut self.shared,
+            self_id: dst,
+        };
+        component.on_event(&mut ctx, ev);
+        self.components[idx] = Some(component);
+        true
+    }
+
+    /// Run until the queue drains or virtual time passes `horizon`.
+    pub fn run_until(&mut self, horizon: u64) {
+        while self.step(horizon) {}
+    }
+
+    /// Borrow a registered component as its concrete type (post-run
+    /// inspection of component-private state).
+    pub fn component<T: 'static>(&self, id: CompId) -> Option<&T> {
+        self.components
+            .get(id.0 as usize)?
+            .as_ref()?
+            .as_any()
+            .downcast_ref::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Msg {
+        Ping(u32),
+        Pong(u32),
+    }
+
+    #[derive(Default)]
+    struct Log {
+        entries: Vec<(u64, String)>,
+    }
+
+    /// Sends `Ping(n-1)` to a peer until n reaches zero.
+    struct Pinger {
+        peer: CompId,
+    }
+
+    impl Component<Msg, Log> for Pinger {
+        fn on_event(&mut self, ctx: &mut Ctx<'_, Msg, Log>, ev: Msg) {
+            if let Msg::Pong(n) = ev {
+                ctx.shared.entries.push((ctx.now(), format!("pong {n}")));
+                if n > 0 {
+                    let peer = self.peer;
+                    ctx.at(ctx.now() + 10, peer, Msg::Ping(n - 1));
+                }
+            }
+        }
+
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+    }
+
+    /// Replies to every Ping with a Pong after 5us.
+    struct Ponger {
+        peer: CompId,
+    }
+
+    impl Component<Msg, Log> for Ponger {
+        fn on_event(&mut self, ctx: &mut Ctx<'_, Msg, Log>, ev: Msg) {
+            if let Msg::Ping(n) = ev {
+                ctx.shared.entries.push((ctx.now(), format!("ping {n}")));
+                let peer = self.peer;
+                ctx.after(5, peer, Msg::Pong(n));
+            }
+        }
+
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+    }
+
+    #[test]
+    fn registration_assigns_sequential_ids() {
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let a = w.add(Box::new(Pinger { peer: CompId(1) }));
+        let b = w.add(Box::new(Ponger { peer: CompId(0) }));
+        assert_eq!(a, CompId(0));
+        assert_eq!(b, CompId(1));
+        assert_eq!(w.component_count(), 2);
+    }
+
+    #[test]
+    fn events_route_between_components() {
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let pinger = w.add(Box::new(Pinger { peer: CompId(1) }));
+        let ponger = w.add(Box::new(Ponger { peer: pinger }));
+        w.schedule(0, ponger, Msg::Ping(2));
+        w.run_until(u64::MAX);
+        // ping 2 @0, pong 2 @5, ping 1 @15, pong 1 @20, ping 0 @30, pong 0 @35
+        let got: Vec<(u64, &str)> = w
+            .shared
+            .entries
+            .iter()
+            .map(|(t, s)| (*t, s.as_str()))
+            .collect();
+        assert_eq!(
+            got,
+            vec![
+                (0, "ping 2"),
+                (5, "pong 2"),
+                (15, "ping 1"),
+                (20, "pong 1"),
+                (30, "ping 0"),
+                (35, "pong 0"),
+            ]
+        );
+        assert_eq!(w.processed(), 6);
+        assert_eq!(w.now(), 35);
+    }
+
+    #[test]
+    fn horizon_stops_the_run() {
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let pinger = w.add(Box::new(Pinger { peer: CompId(1) }));
+        let ponger = w.add(Box::new(Ponger { peer: pinger }));
+        w.schedule(0, ponger, Msg::Ping(100));
+        w.run_until(31);
+        // The @35 pong is past the horizon: popped but not dispatched.
+        assert_eq!(w.shared.entries.len(), 5);
+    }
+
+    #[test]
+    fn same_time_events_dispatch_in_insertion_order() {
+        struct Recorder {
+            tag: &'static str,
+        }
+        impl Component<Msg, Log> for Recorder {
+            fn on_event(&mut self, ctx: &mut Ctx<'_, Msg, Log>, _ev: Msg) {
+                ctx.shared.entries.push((ctx.now(), self.tag.to_string()));
+            }
+
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let a = w.add(Box::new(Recorder { tag: "a" }));
+        let b = w.add(Box::new(Recorder { tag: "b" }));
+        w.schedule(7, b, Msg::Ping(0));
+        w.schedule(7, a, Msg::Ping(0));
+        w.schedule(7, b, Msg::Ping(0));
+        w.run_until(10);
+        let tags: Vec<&str> = w.shared.entries.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(tags, vec!["b", "a", "b"]);
+    }
+
+    #[test]
+    fn self_scheduling_component() {
+        struct Counter {
+            left: u32,
+        }
+        impl Component<Msg, Log> for Counter {
+            fn on_event(&mut self, ctx: &mut Ctx<'_, Msg, Log>, _ev: Msg) {
+                ctx.shared.entries.push((ctx.now(), "tick".into()));
+                if self.left > 0 {
+                    self.left -= 1;
+                    ctx.at_self(ctx.now() + 100, Msg::Ping(0));
+                }
+            }
+
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let c = w.add(Box::new(Counter { left: 4 }));
+        w.schedule(0, c, Msg::Ping(0));
+        w.run_until(u64::MAX);
+        assert_eq!(w.shared.entries.len(), 5);
+        assert_eq!(w.now(), 400);
+    }
+}

@@ -1,0 +1,846 @@
+//! Refactor-fidelity golden tests.
+//!
+//! The `sim::world` refactor replaced the two monolithic DES loops
+//! (`pipeline/facerec.rs`, `pipeline/objdet.rs`) with components on a
+//! shared kernel. The contract was *bit-identical behavior*: same seed →
+//! same event order → same RNG draws → same report, to the last float.
+//!
+//! This file keeps the pre-refactor loops alive as a differential
+//! reference (`legacy_facerec`, `legacy_objdet` below are the seed
+//! implementations, lightly adapted to the crate's public API) and
+//! asserts the component-based simulators reproduce them exactly.
+
+use std::collections::VecDeque;
+
+use aitax::config::{AccelProtocol, Config, Deployment};
+use aitax::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
+use aitax::pipeline::fabric::{Fabric, FabricEv, FabricOut, WIRE_US};
+use aitax::pipeline::facerec::FaceRecSim;
+use aitax::pipeline::objdet::ObjDetSim;
+use aitax::pipeline::stage::StageModel;
+use aitax::pipeline::video::BurstSchedule;
+use aitax::sim::engine::EventQueue;
+use aitax::sim::queue::Population;
+use aitax::sim::resource::FifoServer;
+use aitax::util::rng::Rng;
+use aitax::util::stats::Histogram;
+
+const SEC: u64 = 1_000_000;
+
+// ---------------------------------------------------------------------------
+// Legacy Face Recognition loop (pre-refactor reference)
+// ---------------------------------------------------------------------------
+
+const FR_RECORD_OVERHEAD: f64 = 32.0;
+
+#[derive(Debug)]
+enum FrEv {
+    Frame(u32),
+    Dispatch(u32, SimFace),
+    Fabric(FabricEv),
+    Poll(u32),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SimFace {
+    frame_start_us: u64,
+    detect_end_us: u64,
+    visible_us: u64,
+    bytes: f64,
+}
+
+struct FrProducer {
+    rng: Rng,
+    nic: FifoServer,
+    frames: u64,
+}
+
+struct FrPartition {
+    leader: u32,
+    queue: VecDeque<SimFace>,
+    consumer: u32,
+}
+
+struct FrConsumer {
+    rng: Rng,
+    nic_rx: FifoServer,
+    busy_until: u64,
+    poll_scheduled: bool,
+    faces_done: u64,
+}
+
+/// The figures compared between legacy and component implementations.
+#[derive(Debug)]
+struct FrGolden {
+    frames_ingested: u64,
+    faces_produced: u64,
+    faces_completed: u64,
+    ingest_mean_us: f64,
+    detect_mean_us: f64,
+    wait_mean_us: f64,
+    identify_mean_us: f64,
+    e2e_mean_us: f64,
+    e2e_p99_us: u64,
+    wait_p99_us: u64,
+    storage_write_util: f64,
+    broker_net_rx_util: f64,
+    broker_cpu_util: f64,
+    producer_net_tx_util: f64,
+    consumer_net_rx_util: f64,
+    population: Vec<(u64, i64)>,
+    mean_faces_per_frame: f64,
+}
+
+fn fr_drain_fabric(
+    out: &mut Vec<FabricOut>,
+    q: &mut EventQueue<FrEv>,
+    partitions: &mut [FrPartition],
+    consumers: &mut [FrConsumer],
+    in_flight: &[SimFace],
+    free_tokens: &mut Vec<u64>,
+) {
+    for o in out.drain(..) {
+        match o {
+            FabricOut::Schedule(t, fev) => q.at(t.max(q.now()), FrEv::Fabric(fev)),
+            FabricOut::Committed { token, partition, at } => {
+                let mut face = in_flight[token as usize];
+                free_tokens.push(token);
+                face.visible_us = at;
+                let part = &mut partitions[partition as usize];
+                part.queue.push_back(face);
+                let cs = &mut consumers[part.consumer as usize];
+                if !cs.poll_scheduled {
+                    cs.poll_scheduled = true;
+                    q.at(at.max(q.now()).max(cs.busy_until), FrEv::Poll(part.consumer));
+                }
+            }
+        }
+    }
+}
+
+/// The seed repository's `FaceRecSim::run`, verbatim modulo visibility.
+fn legacy_facerec(cfg: &Config) -> FrGolden {
+    let d = &cfg.deployment;
+    let stages = StageModel::new(cfg.calibration.stages.clone(), cfg.accel, cfg.protocol);
+    let mut master = Rng::new(cfg.seed);
+    let horizon = cfg.duration_us;
+    let warmup = (horizon as f64 * cfg.warmup_frac) as u64;
+
+    let one_face = matches!(cfg.protocol, AccelProtocol::Emulation)
+        && d.producers == Deployment::facerec_accel().producers;
+    let schedule = (!one_face).then(|| {
+        BurstSchedule::new(cfg.calibration.faces.clone(), horizon + SEC, &mut master)
+    });
+    let mut producers: Vec<FrProducer> = (0..d.producers)
+        .map(|_| FrProducer {
+            rng: master.fork(),
+            nic: FifoServer::new(cfg.node.net_bw, 0),
+            frames: 0,
+        })
+        .collect();
+
+    let write_cap = cfg.calibration.broker_write_capacity(
+        cfg.node.nvme.write_bw,
+        d.drives_per_broker,
+        d.brokers,
+    );
+    let mut fabric = Fabric::new(
+        d.brokers,
+        d.drives_per_broker,
+        d.replication,
+        cfg.node.nvme,
+        write_cap,
+        cfg.node.net_bw,
+        cfg.tuning.clone(),
+    );
+
+    let mut partitions: Vec<FrPartition> = (0..d.partitions)
+        .map(|p| FrPartition {
+            leader: (p % d.brokers) as u32,
+            queue: VecDeque::new(),
+            consumer: (p % d.consumers) as u32,
+        })
+        .collect();
+
+    let mut consumers: Vec<FrConsumer> = (0..d.consumers)
+        .map(|_| FrConsumer {
+            rng: master.fork(),
+            nic_rx: FifoServer::new(cfg.node.net_bw, 0),
+            busy_until: 0,
+            poll_scheduled: false,
+            faces_done: 0,
+        })
+        .collect();
+
+    let mut owned: Vec<Vec<u32>> = vec![Vec::new(); d.consumers];
+    for (idx, part) in partitions.iter().enumerate() {
+        owned[part.consumer as usize].push(idx as u32);
+    }
+
+    let mut meter = BandwidthMeter::new();
+    meter.set_nodes(Class::Producer, d.producers);
+    meter.set_nodes(Class::Consumer, d.consumers);
+    meter.set_nodes(Class::Broker, d.brokers);
+
+    let mut hist_ingest = Histogram::new();
+    let mut hist_detect = Histogram::new();
+    let mut hist_wait = Histogram::new();
+    let mut hist_identify = Histogram::new();
+    let mut hist_e2e = Histogram::new();
+    let mut population = Population::new(250_000);
+    let mut faces_produced = 0u64;
+    let mut faces_completed = 0u64;
+    let mut completed_in_window = 0u64;
+    let mut frames_ingested = 0u64;
+    let _ = completed_in_window;
+
+    let mut in_flight: Vec<SimFace> = Vec::new();
+    let mut free_tokens: Vec<u64> = Vec::new();
+
+    let mut q: EventQueue<FrEv> = EventQueue::new();
+    let cycle = stages.producer_cycle_mean_us(cfg.calibration.faces.mean_faces) as u64;
+    for p in 0..d.producers {
+        let jitter = (p as u64 * cycle.max(1)) / d.producers as u64;
+        q.at(jitter, FrEv::Frame(p as u32));
+    }
+
+    let linger = cfg.tuning.linger_us;
+    let mut fabric_out: Vec<FabricOut> = Vec::new();
+
+    while let Some((now, ev)) = q.pop() {
+        if now > horizon {
+            break;
+        }
+        match ev {
+            FrEv::Frame(p) => {
+                let pid = p as usize;
+                let faces = match &schedule {
+                    Some(sched) => sched.faces_at(now, &mut producers[pid].rng),
+                    None => 1,
+                };
+                let ingest_us = stages.ingest(&mut producers[pid].rng);
+                let detect_us = stages.detect(&mut producers[pid].rng, faces);
+                let detect_end = now + ingest_us + detect_us;
+                producers[pid].frames += 1;
+                if now >= warmup {
+                    frames_ingested += 1;
+                    hist_ingest.record(ingest_us.max(1));
+                    hist_detect.record(detect_us.max(1));
+                }
+                for _ in 0..faces {
+                    let bytes = producers[pid]
+                        .rng
+                        .lognormal_mean_cv(cfg.face_bytes, 0.25)
+                        .max(1024.0);
+                    let face = SimFace {
+                        frame_start_us: now,
+                        detect_end_us: detect_end,
+                        visible_us: 0,
+                        bytes,
+                    };
+                    faces_produced += 1;
+                    population.enter(detect_end.min(horizon));
+                    q.at(detect_end + linger, FrEv::Dispatch(p, face));
+                }
+                q.at(detect_end.max(now + 1), FrEv::Frame(p));
+            }
+            FrEv::Dispatch(p, face) => {
+                let pid = p as usize;
+                let part = producers[pid].rng.below(partitions.len() as u64) as u32;
+                let token = free_tokens.pop().unwrap_or_else(|| {
+                    in_flight.push(face);
+                    (in_flight.len() - 1) as u64
+                });
+                in_flight[token as usize] = face;
+                let leader = partitions[part as usize].leader;
+                let bytes = face.bytes + FR_RECORD_OVERHEAD;
+                let nic = &mut producers[pid].nic;
+                fabric.send(now, part, leader, bytes, token, &mut meter, nic, &mut fabric_out);
+                fr_drain_fabric(
+                    &mut fabric_out,
+                    &mut q,
+                    &mut partitions,
+                    &mut consumers,
+                    &in_flight,
+                    &mut free_tokens,
+                );
+            }
+            FrEv::Fabric(fev) => {
+                fabric.handle(now, fev, &mut meter, &mut fabric_out);
+                fr_drain_fabric(
+                    &mut fabric_out,
+                    &mut q,
+                    &mut partitions,
+                    &mut consumers,
+                    &in_flight,
+                    &mut free_tokens,
+                );
+            }
+            FrEv::Poll(c) => {
+                let cid = c as usize;
+                consumers[cid].poll_scheduled = false;
+                if now < consumers[cid].busy_until {
+                    consumers[cid].poll_scheduled = true;
+                    let t = consumers[cid].busy_until;
+                    q.at(t, FrEv::Poll(c));
+                    continue;
+                }
+                let mut avail_bytes = 0.0;
+                let mut oldest_visible = u64::MAX;
+                for &pi in &owned[cid] {
+                    for f in partitions[pi as usize].queue.iter() {
+                        if f.visible_us <= now {
+                            avail_bytes += f.bytes + FR_RECORD_OVERHEAD;
+                            oldest_visible = oldest_visible.min(f.visible_us);
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                if avail_bytes == 0.0 {
+                    continue;
+                }
+                if (avail_bytes as usize) < cfg.tuning.fetch_min_bytes {
+                    let deadline = oldest_visible + cfg.tuning.fetch_max_wait_us;
+                    if now < deadline {
+                        consumers[cid].poll_scheduled = true;
+                        q.at(deadline, FrEv::Poll(c));
+                        continue;
+                    }
+                }
+                let mut fetched: Vec<SimFace> = Vec::new();
+                let mut deliver_at = now;
+                for &pi in &owned[cid] {
+                    let part = &mut partitions[pi as usize];
+                    let mut part_bytes = 0.0;
+                    let mut any = false;
+                    while let Some(f) = part.queue.front() {
+                        if f.visible_us <= now {
+                            part_bytes += f.bytes + FR_RECORD_OVERHEAD;
+                            fetched.push(*f);
+                            part.queue.pop_front();
+                            any = true;
+                        } else {
+                            break;
+                        }
+                    }
+                    if any {
+                        let t = fabric.fetch(
+                            now,
+                            part.leader,
+                            part_bytes,
+                            &mut consumers[cid].nic_rx,
+                            &mut meter,
+                        );
+                        deliver_at = deliver_at.max(t);
+                    }
+                }
+                fetched.sort_by_key(|f| f.detect_end_us);
+                let mut busy = consumers[cid].busy_until.max(deliver_at);
+                for f in fetched {
+                    let start = busy;
+                    let wait_us = start.saturating_sub(f.detect_end_us);
+                    let dur = stages.identify(&mut consumers[cid].rng);
+                    busy = start + dur;
+                    consumers[cid].faces_done += 1;
+                    population.exit(busy.min(horizon));
+                    faces_completed += 1;
+                    if busy >= warmup && busy <= horizon {
+                        completed_in_window += 1;
+                    }
+                    if f.frame_start_us >= warmup && busy <= horizon {
+                        hist_wait.record(wait_us.max(1));
+                        hist_identify.record(dur.max(1));
+                        let e2e = busy - f.frame_start_us;
+                        hist_e2e.record(e2e.max(1));
+                    }
+                }
+                consumers[cid].busy_until = busy;
+                consumers[cid].poll_scheduled = true;
+                q.at(busy, FrEv::Poll(c));
+            }
+        }
+    }
+
+    let elapsed = horizon;
+    let total_frames: u64 = producers.iter().map(|p| p.frames).sum();
+    FrGolden {
+        frames_ingested,
+        faces_produced,
+        faces_completed,
+        ingest_mean_us: hist_ingest.mean(),
+        detect_mean_us: hist_detect.mean(),
+        wait_mean_us: hist_wait.mean(),
+        identify_mean_us: hist_identify.mean(),
+        e2e_mean_us: hist_e2e.mean(),
+        e2e_p99_us: hist_e2e.p99(),
+        wait_p99_us: hist_wait.p99(),
+        storage_write_util: fabric.max_storage_write_util(elapsed),
+        broker_net_rx_util: fabric.max_nic_rx_util(elapsed),
+        broker_cpu_util: fabric.max_cpu_util(elapsed),
+        producer_net_tx_util: meter.utilization(
+            Class::Producer,
+            Channel::Network,
+            Dir::Write,
+            elapsed,
+            cfg.node.net_bw,
+        ),
+        consumer_net_rx_util: meter.utilization(
+            Class::Consumer,
+            Channel::Network,
+            Dir::Read,
+            elapsed,
+            cfg.node.net_bw,
+        ),
+        population: population.samples().to_vec(),
+        mean_faces_per_frame: if total_frames == 0 {
+            0.0
+        } else {
+            faces_produced as f64 / total_frames as f64
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Legacy Object Detection loop (pre-refactor reference)
+// ---------------------------------------------------------------------------
+
+const OD_RECORD_OVERHEAD: f64 = 64.0;
+
+#[derive(Debug)]
+enum OdEv {
+    Tick(u32),
+    Dispatch(u32, u32, SimFrame),
+    Fabric(FabricEv),
+    Poll(u32),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SimFrame {
+    scheduled_us: u64,
+    sent_done_us: u64,
+    visible_us: u64,
+    bytes: f64,
+}
+
+struct OdProducer {
+    rng: Rng,
+    send: FifoServer,
+    nic: FifoServer,
+    ticks: u64,
+}
+
+struct OdPartition {
+    leader: u32,
+    queue: VecDeque<SimFrame>,
+    consumer: u32,
+}
+
+struct OdConsumer {
+    rng: Rng,
+    nic_rx: FifoServer,
+    busy_until: u64,
+    poll_scheduled: bool,
+}
+
+#[derive(Debug)]
+struct OdGolden {
+    frames_sent: u64,
+    frames_detected: u64,
+    ingest_mean_us: f64,
+    delay_mean_us: f64,
+    wait_mean_us: f64,
+    detect_mean_us: f64,
+    e2e_mean_us: f64,
+    e2e_p99_us: u64,
+    storage_write_util: f64,
+    producer_send_util: f64,
+}
+
+fn od_drain_fabric(
+    out: &mut Vec<FabricOut>,
+    q: &mut EventQueue<OdEv>,
+    partitions: &mut [OdPartition],
+    consumers: &mut [OdConsumer],
+    in_flight: &[SimFrame],
+    free_tokens: &mut Vec<u64>,
+) {
+    for o in out.drain(..) {
+        match o {
+            FabricOut::Schedule(t, fev) => q.at(t.max(q.now()), OdEv::Fabric(fev)),
+            FabricOut::Committed { token, partition, at } => {
+                let mut frame = in_flight[token as usize];
+                free_tokens.push(token);
+                frame.visible_us = at;
+                let part = &mut partitions[partition as usize];
+                part.queue.push_back(frame);
+                let cs = &mut consumers[part.consumer as usize];
+                if !cs.poll_scheduled {
+                    cs.poll_scheduled = true;
+                    q.at(at.max(q.now()).max(cs.busy_until), OdEv::Poll(part.consumer));
+                }
+            }
+        }
+    }
+}
+
+/// The seed repository's `ObjDetSim::run`, verbatim modulo visibility.
+fn legacy_objdet(cfg: &Config) -> OdGolden {
+    let d = &cfg.deployment;
+    let od = &cfg.calibration.objdet;
+    let k = cfg.accel;
+    let horizon = cfg.duration_us;
+    let warmup = (horizon as f64 * cfg.warmup_frac) as u64;
+    let mut master = Rng::new(cfg.seed ^ 0x0BDE7);
+
+    let send_us_per_frame =
+        od.send_frame_us * (1.0 - od.batch_amort) + od.send_frame_us * od.batch_amort / k;
+    let ingest_us = od.ingest_us / k;
+    let detect_mean_us = od.detect_us / k;
+    let frames_per_tick = k.round().max(1.0) as usize;
+
+    let mut producers: Vec<OdProducer> = (0..d.producers)
+        .map(|_| OdProducer {
+            rng: master.fork(),
+            send: FifoServer::new(1e6, 0),
+            nic: FifoServer::new(cfg.node.net_bw, 0),
+            ticks: 0,
+        })
+        .collect();
+    let write_cap = cfg.calibration.broker_write_capacity(
+        cfg.node.nvme.write_bw,
+        d.drives_per_broker,
+        d.brokers,
+    );
+    let mut fabric = Fabric::new(
+        d.brokers,
+        d.drives_per_broker,
+        d.replication,
+        cfg.node.nvme,
+        write_cap,
+        cfg.node.net_bw,
+        cfg.tuning.clone(),
+    );
+    let mut partitions: Vec<OdPartition> = (0..d.partitions)
+        .map(|p| OdPartition {
+            leader: (p % d.brokers) as u32,
+            queue: VecDeque::new(),
+            consumer: (p % d.consumers) as u32,
+        })
+        .collect();
+    let mut consumers: Vec<OdConsumer> = (0..d.consumers)
+        .map(|_| OdConsumer {
+            rng: master.fork(),
+            nic_rx: FifoServer::new(cfg.node.net_bw, 0),
+            busy_until: 0,
+            poll_scheduled: false,
+        })
+        .collect();
+    let mut owned: Vec<Vec<u32>> = vec![Vec::new(); d.consumers];
+    for (idx, part) in partitions.iter().enumerate() {
+        owned[part.consumer as usize].push(idx as u32);
+    }
+
+    let mut meter = BandwidthMeter::new();
+    meter.set_nodes(Class::Producer, d.producers);
+    meter.set_nodes(Class::Consumer, d.consumers);
+    meter.set_nodes(Class::Broker, d.brokers);
+
+    let mut hist_ingest = Histogram::new();
+    let mut hist_delay = Histogram::new();
+    let mut hist_wait = Histogram::new();
+    let mut hist_detect = Histogram::new();
+    let mut hist_e2e = Histogram::new();
+    let mut population = Population::new(250_000);
+    let mut frames_sent = 0u64;
+    let mut frames_detected = 0u64;
+
+    let mut in_flight: Vec<SimFrame> = Vec::new();
+    let mut free_tokens: Vec<u64> = Vec::new();
+    let mut fabric_out: Vec<FabricOut> = Vec::new();
+
+    let mut q: EventQueue<OdEv> = EventQueue::new();
+    for p in 0..d.producers {
+        let jitter = (p as u64 * od.tick_us) / d.producers as u64;
+        q.at(jitter, OdEv::Tick(p as u32));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        if now > horizon {
+            break;
+        }
+        match ev {
+            OdEv::Tick(p) => {
+                let pid = p as usize;
+                producers[pid].ticks += 1;
+                let delay = producers[pid].send.backlog_us(now);
+                let start = now + delay;
+                for _ in 0..frames_per_tick {
+                    let ing = producers[pid]
+                        .rng
+                        .lognormal_mean_cv(ingest_us.max(1.0), 0.15)
+                        .round()
+                        .max(1.0) as u64;
+                    let t_ing = start + ing;
+                    let t_sent = producers[pid].send.submit(t_ing, send_us_per_frame);
+                    let bytes = od.frame_bytes + OD_RECORD_OVERHEAD;
+                    frames_sent += 1;
+                    if now >= warmup {
+                        hist_ingest.record(ing.max(1));
+                        hist_delay.record(delay.max(1));
+                    }
+                    population.enter(t_sent.min(horizon));
+                    let part_idx = producers[pid].rng.below(partitions.len() as u64) as u32;
+                    let frame = SimFrame {
+                        scheduled_us: now,
+                        sent_done_us: t_sent,
+                        visible_us: 0,
+                        bytes,
+                    };
+                    q.at(t_sent + WIRE_US, OdEv::Dispatch(p, part_idx, frame));
+                }
+                q.at(now + od.tick_us, OdEv::Tick(p));
+            }
+            OdEv::Dispatch(p, part_idx, frame) => {
+                let pid = p as usize;
+                let token = free_tokens.pop().unwrap_or_else(|| {
+                    in_flight.push(frame);
+                    (in_flight.len() - 1) as u64
+                });
+                in_flight[token as usize] = frame;
+                let leader = partitions[part_idx as usize].leader;
+                let nic = &mut producers[pid].nic;
+                fabric.send(now, part_idx, leader, frame.bytes, token, &mut meter, nic, &mut fabric_out);
+                od_drain_fabric(
+                    &mut fabric_out,
+                    &mut q,
+                    &mut partitions,
+                    &mut consumers,
+                    &in_flight,
+                    &mut free_tokens,
+                );
+            }
+            OdEv::Fabric(fev) => {
+                fabric.handle(now, fev, &mut meter, &mut fabric_out);
+                od_drain_fabric(
+                    &mut fabric_out,
+                    &mut q,
+                    &mut partitions,
+                    &mut consumers,
+                    &in_flight,
+                    &mut free_tokens,
+                );
+            }
+            OdEv::Poll(c) => {
+                let cid = c as usize;
+                consumers[cid].poll_scheduled = false;
+                if now < consumers[cid].busy_until {
+                    consumers[cid].poll_scheduled = true;
+                    let t = consumers[cid].busy_until;
+                    q.at(t, OdEv::Poll(c));
+                    continue;
+                }
+                let mut avail_bytes = 0.0;
+                let mut oldest_visible = u64::MAX;
+                for &pi in &owned[cid] {
+                    for f in partitions[pi as usize].queue.iter() {
+                        if f.visible_us <= now {
+                            avail_bytes += f.bytes;
+                            oldest_visible = oldest_visible.min(f.visible_us);
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                if avail_bytes == 0.0 {
+                    continue;
+                }
+                if (avail_bytes as usize) < od.fetch_min_bytes {
+                    let deadline = oldest_visible + od.fetch_max_wait_us;
+                    if now < deadline {
+                        consumers[cid].poll_scheduled = true;
+                        q.at(deadline, OdEv::Poll(c));
+                        continue;
+                    }
+                }
+                let mut fetched: Vec<SimFrame> = Vec::new();
+                let mut deliver_at = now;
+                for &pi in &owned[cid] {
+                    let part = &mut partitions[pi as usize];
+                    let mut part_bytes = 0.0;
+                    let mut any = false;
+                    while let Some(f) = part.queue.front() {
+                        if f.visible_us <= now {
+                            part_bytes += f.bytes;
+                            fetched.push(*f);
+                            part.queue.pop_front();
+                            any = true;
+                        } else {
+                            break;
+                        }
+                    }
+                    if any {
+                        let t = fabric.fetch(
+                            now,
+                            part.leader,
+                            part_bytes,
+                            &mut consumers[cid].nic_rx,
+                            &mut meter,
+                        );
+                        deliver_at = deliver_at.max(t);
+                    }
+                }
+                if fetched.is_empty() {
+                    continue;
+                }
+                fetched.sort_by_key(|f| f.sent_done_us);
+                let mut busy = consumers[cid].busy_until.max(deliver_at);
+                for f in fetched {
+                    let start = busy;
+                    let wait = start.saturating_sub(f.sent_done_us);
+                    let dur = consumers[cid]
+                        .rng
+                        .lognormal_mean_cv(detect_mean_us, od.detect_cv)
+                        .round()
+                        .max(1.0) as u64;
+                    busy = start + dur;
+                    population.exit(busy.min(horizon));
+                    frames_detected += 1;
+                    if f.scheduled_us >= warmup && busy <= horizon {
+                        hist_wait.record(wait.max(1));
+                        hist_detect.record(dur);
+                        hist_e2e.record((busy - f.scheduled_us).max(1));
+                    }
+                }
+                consumers[cid].busy_until = busy;
+                consumers[cid].poll_scheduled = true;
+                q.at(busy, OdEv::Poll(c));
+            }
+        }
+    }
+
+    let elapsed = horizon;
+    let producer_send_util = producers
+        .iter()
+        .map(|p| p.send.utilization(elapsed))
+        .fold(0.0, f64::max);
+    let total_ticks: u64 = producers.iter().map(|p| p.ticks).sum();
+    assert!(total_ticks > 0);
+
+    OdGolden {
+        frames_sent,
+        frames_detected,
+        ingest_mean_us: hist_ingest.mean(),
+        delay_mean_us: hist_delay.mean(),
+        wait_mean_us: hist_wait.mean(),
+        detect_mean_us: hist_detect.mean(),
+        e2e_mean_us: hist_e2e.mean(),
+        e2e_p99_us: hist_e2e.p99(),
+        storage_write_util: fabric.max_storage_write_util(elapsed),
+        producer_send_util,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Differential assertions
+// ---------------------------------------------------------------------------
+
+/// Exact float equality: the refactor must not change a single operation.
+fn same_f64(a: f64, b: f64, what: &str) {
+    assert!(
+        a == b || (a - b).abs() <= 1e-12 * a.abs().max(b.abs()),
+        "{what}: legacy {a} vs kernel {b}"
+    );
+}
+
+fn fr_config(deployment: Deployment, accel: f64, seed: u64, secs: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = deployment;
+    cfg.duration_us = secs * SEC;
+    cfg.accel = accel;
+    cfg.seed = seed;
+    cfg
+}
+
+fn assert_facerec_matches(cfg: &Config) {
+    let legacy = legacy_facerec(cfg);
+    let new = FaceRecSim::new(cfg.clone()).run();
+    assert_eq!(legacy.frames_ingested, new.frames_ingested, "frames_ingested");
+    assert_eq!(legacy.faces_produced, new.faces_produced, "faces_produced");
+    assert_eq!(legacy.faces_completed, new.faces_completed, "faces_completed");
+    assert_eq!(legacy.e2e_p99_us, new.e2e_p99_us, "e2e_p99_us");
+    assert_eq!(legacy.wait_p99_us, new.wait_p99_us, "wait_p99_us");
+    same_f64(legacy.ingest_mean_us, new.ingest_mean_us, "ingest_mean_us");
+    same_f64(legacy.detect_mean_us, new.detect_mean_us, "detect_mean_us");
+    same_f64(legacy.wait_mean_us, new.wait_mean_us, "wait_mean_us");
+    same_f64(legacy.identify_mean_us, new.identify_mean_us, "identify_mean_us");
+    same_f64(legacy.e2e_mean_us, new.e2e_mean_us, "e2e_mean_us");
+    same_f64(legacy.storage_write_util, new.storage_write_util, "storage_write_util");
+    same_f64(legacy.broker_net_rx_util, new.broker_net_rx_util, "broker_net_rx_util");
+    same_f64(legacy.broker_cpu_util, new.broker_cpu_util, "broker_cpu_util");
+    same_f64(legacy.producer_net_tx_util, new.producer_net_tx_util, "producer_net_tx_util");
+    same_f64(legacy.consumer_net_rx_util, new.consumer_net_rx_util, "consumer_net_rx_util");
+    same_f64(legacy.mean_faces_per_frame, new.mean_faces_per_frame, "mean_faces_per_frame");
+    assert_eq!(legacy.population, new.population, "population samples");
+}
+
+#[test]
+fn facerec_paper_deployment_is_seed_identical() {
+    // §4.2 deployment (bursty shared video timeline) at 1x.
+    let cfg = fr_config(Deployment::facerec_paper(), 1.0, 0xBEEF, 10);
+    assert_facerec_matches(&cfg);
+}
+
+#[test]
+fn facerec_accel_deployment_is_seed_identical() {
+    // §5.3 deployment (one face per frame) at 4x — exercises the
+    // emulation protocol and heavier broker load.
+    let cfg = fr_config(Deployment::facerec_accel(), 4.0, 0xACCE1, 15);
+    assert_facerec_matches(&cfg);
+}
+
+#[test]
+fn facerec_mitigation_config_is_seed_identical() {
+    // A Fig-15-style mitigation shape: more brokers and drives.
+    let mut cfg = fr_config(Deployment::facerec_accel(), 8.0, 0x5EED, 10);
+    cfg.deployment.brokers = 8;
+    cfg.deployment.drives_per_broker = 2;
+    assert_facerec_matches(&cfg);
+}
+
+#[test]
+fn objdet_is_seed_identical() {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::objdet_accel();
+    cfg.duration_us = 15 * SEC;
+    cfg.accel = 2.0;
+    cfg.seed = 0xD07;
+    let legacy = legacy_objdet(&cfg);
+    let new = ObjDetSim::new(cfg.clone()).run();
+    assert_eq!(legacy.frames_sent, new.frames_sent, "frames_sent");
+    assert_eq!(legacy.frames_detected, new.frames_detected, "frames_detected");
+    assert_eq!(legacy.e2e_p99_us, new.e2e_p99_us, "e2e_p99_us");
+    same_f64(legacy.ingest_mean_us, new.ingest_mean_us, "ingest_mean_us");
+    same_f64(legacy.delay_mean_us, new.delay_mean_us, "delay_mean_us");
+    same_f64(legacy.wait_mean_us, new.wait_mean_us, "wait_mean_us");
+    same_f64(legacy.detect_mean_us, new.detect_mean_us, "detect_mean_us");
+    same_f64(legacy.e2e_mean_us, new.e2e_mean_us, "e2e_mean_us");
+    same_f64(legacy.storage_write_util, new.storage_write_util, "storage_write_util");
+    same_f64(legacy.producer_send_util, new.producer_send_util, "producer_send_util");
+}
+
+#[test]
+fn objdet_overload_is_seed_identical() {
+    // 16x: send path saturates, Delay dominates (Fig 14's cliff).
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment::objdet_accel();
+    cfg.duration_us = 10 * SEC;
+    cfg.accel = 16.0;
+    cfg.seed = 0xD07;
+    let legacy = legacy_objdet(&cfg);
+    let new = ObjDetSim::new(cfg.clone()).run();
+    assert_eq!(legacy.frames_sent, new.frames_sent);
+    assert_eq!(legacy.frames_detected, new.frames_detected);
+    same_f64(legacy.delay_mean_us, new.delay_mean_us, "delay_mean_us");
+    same_f64(legacy.producer_send_util, new.producer_send_util, "producer_send_util");
+}
