@@ -6,7 +6,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench fmt clippy clean
+.PHONY: artifacts build test bench doc fmt clippy clean
 
 # AOT-lower the JAX face-pipeline models to HLO text + manifest. Python
 # (jax + the Pallas kernels) is required only for this step; everything
@@ -22,6 +22,10 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# Rustdoc with warnings denied (what CI enforces) + the doctests.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps && cargo test --doc -q
 
 fmt:
 	cd rust && cargo fmt --all --check

@@ -1,0 +1,61 @@
+//! Broker QoS: per-tenant scheduling classes + topic quotas turning a
+//! multi-tenant SLO violation into isolation — the Sec.-8 mitigation
+//! view for colocation. Four tenants (facerec 4x, objdet 6x, training
+//! ingest, rpc) share one 3-broker fabric; the sweep grows the bulk
+//! tenants' share and reports the rpc tenant's p99 against its SLO with
+//! QoS off and on.
+//!
+//!     cargo run --release --example qos_isolation [-- --quick]
+//!     cargo run --release --example qos_isolation -- --share 1.0
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::qos as exqos;
+use aitax::pipeline::mixed::MultiTenantSim;
+use aitax::util::cli::Args;
+use aitax::util::units::fmt_us;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    println!("== Broker QoS: N tenants, one substrate, one SLO ==");
+
+    if args.get("share").is_some() {
+        // One colocation point, off vs on, with per-tenant detail.
+        let share = args.get_f64("share", 1.0);
+        let slo = aitax::config::Config::default().calibration.rpc.slo_p99_us;
+        for qos_on in [false, true] {
+            let r = MultiTenantSim::new(exqos::registry(share, qos_on, fidelity)).run();
+            println!(
+                "\nshare {:.0}%, qos {}: nvme write {:.1}% | req cpu {:.2}% | {} events",
+                100.0 * share,
+                if qos_on { "on" } else { "off" },
+                100.0 * r.broker_storage_write_util,
+                100.0 * r.broker_cpu_util,
+                r.events,
+            );
+            for t in &r.tenants {
+                let slo_note = if t.name == "rpc" {
+                    if t.e2e_p99_us <= slo { "  [slo met]" } else { "  [SLO MISSED]" }
+                } else {
+                    ""
+                };
+                println!(
+                    "  {:<13} wait {:>10} | e2e p99 {:>10} | {:>9} done | {}{}",
+                    t.name,
+                    fmt_us(t.wait_mean_us as u64),
+                    fmt_us(t.e2e_p99_us),
+                    t.completed,
+                    if t.stable { "stable" } else { "UNSTABLE" },
+                    slo_note,
+                );
+            }
+        }
+        return;
+    }
+
+    exqos::print(&exqos::run(fidelity));
+}

@@ -1,0 +1,27 @@
+//! Bench: the broker-QoS SLO sweep (scheduling classes + topic quotas
+//! protecting the rpc tenant's p99 under N-tenant colocation).
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::qos;
+use aitax::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("qos_isolation");
+    let mut out = None;
+    b.run_once(
+        "4-tenant p99-vs-share sweep (off+on)",
+        2.0 * qos::QOS_SHARES.len() as f64,
+        || {
+            out = Some(qos::run(Fidelity::from_env()));
+        },
+    );
+    let sweep = out.unwrap();
+    qos::print(&sweep);
+    if let (Some(off), Some(on)) = sweep.pair(1.0) {
+        println!(
+            "isolation: rpc p99 {} without QoS -> {} with QoS (slo {})",
+            aitax::util::units::fmt_us(aitax::experiments::qos::QosSweep::rpc_p99(off)),
+            aitax::util::units::fmt_us(aitax::experiments::qos::QosSweep::rpc_p99(on)),
+            aitax::util::units::fmt_us(sweep.slo_p99_us),
+        );
+    }
+}

@@ -16,7 +16,13 @@
 //!   a group, so an application needs at least as many partitions as
 //!   consumers (§3.4) ([`consumer`], [`group`]);
 //! * a **controller** assigns partitions to brokers and fails leaders over
-//!   to followers when a broker dies ([`controller`]).
+//!   to followers when a broker dies ([`controller`]);
+//! * per-tenant **QoS** — request-CPU scheduling classes and topic-level
+//!   byte-rate quotas with Kafka-style mute-the-channel backpressure —
+//!   lives in [`qos`]. The DES broker fabric enforces it on the virtual
+//!   clock; the controller exposes the same bucket semantics wall-clock
+//!   via `produce_throttled` (not yet wired into the live coordinator's
+//!   produce path).
 //!
 //! The implementation is *real* — records are framed, checksummed, appended
 //! to segment logs through a [`crate::storage::StorageBackend`], and read
@@ -30,6 +36,7 @@ pub mod group;
 pub mod log;
 pub mod partition;
 pub mod producer;
+pub mod qos;
 pub mod record;
 pub mod topic;
 
@@ -39,5 +46,6 @@ pub use group::GroupCoordinator;
 pub use log::PartitionLog;
 pub use partition::Partition;
 pub use producer::Producer;
+pub use qos::{QosPolicy, TenantQuota, TokenBucket, WeightedCpuScheduler};
 pub use record::{Record, RecordBatch};
 pub use topic::{Topic, TopicPartition};

@@ -1,0 +1,401 @@
+//! Per-tenant broker QoS: scheduling classes and topic quotas (§8).
+//!
+//! The paper's mitigation discussion (Sec. 8 / Fig. 15) adds hardware —
+//! drives and brokers — to push the saturation point out. This module adds
+//! the *software* mitigation a real multi-tenant deployment reaches for
+//! first: isolation at the broker, so that one tenant's acceleration does
+//! not become every other tenant's broker wait. Two mechanisms, mirroring
+//! Kafka's own request-quota machinery:
+//!
+//! * **Scheduling classes** ([`WeightedCpuScheduler`]) — the broker's
+//!   request-handling CPU stops being a single FIFO and becomes a
+//!   weighted queue: each tenant maps to a class with a weight, and under
+//!   contention class `i` receives a `w_i / Σw` share of the request
+//!   CPU. The implementation is the fluid (generalized-processor-sharing)
+//!   limit of deficit-weighted round robin: backlogs drain concurrently
+//!   in proportion to weight, with idle classes' shares redistributed to
+//!   the busy ones, so the scheduler stays work-conserving.
+//! * **Topic quotas** ([`TokenBucket`]) — per-tenant produce and fetch
+//!   byte-rate caps, enforced Kafka-style: a request is never rejected,
+//!   it is *admitted and the channel muted* for the time it takes the
+//!   bucket to pay the debt back (`charge` returns that throttle delay).
+//!   Producers see it as delayed dispatch, consumers as a muted poll
+//!   loop — backpressure, not loss.
+//!
+//! [`QosPolicy`] bundles both per tenant. The policy is strictly opt-in:
+//! with no policy installed the broker fabric and the deployment layer
+//! behave bit-for-bit as before (the FIFO request CPU, no buckets), which
+//! `tests/qos_regression.rs` pins.
+//!
+//! The DES ([`crate::pipeline::fabric`], [`crate::pipeline::dc`]) uses
+//! these types on the virtual clock; the in-process broker
+//! ([`crate::broker::controller`]) reuses [`TokenBucket`] for its
+//! wall-clock topic quotas.
+
+/// Throttle delay returned when a bucket can never admit the request
+/// (zero or negative quota rate). Far beyond any simulation horizon but
+/// small enough that `now + NEVER_US` cannot overflow `u64`.
+pub const NEVER_US: u64 = u64::MAX / 8;
+
+/// Byte-rate token bucket with Kafka's debt semantics.
+///
+/// `charge(now, bytes)` always admits the request, decrementing the
+/// token balance (possibly below zero), and returns how long the caller
+/// must stay muted until the balance would return to zero. Steady-state
+/// throughput therefore equals the configured rate regardless of burst
+/// size, and a single oversized request cannot starve forever — it just
+/// pays a proportional delay.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    /// Sustained rate in bytes per second; `<= 0` admits nothing.
+    rate: f64,
+    /// Maximum accumulated credit (bytes).
+    burst: f64,
+    /// Current balance; negative means debt being paid down at `rate`.
+    tokens: f64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_bytes_per_sec: f64, burst_bytes: f64) -> Self {
+        let burst = burst_bytes.max(0.0);
+        TokenBucket {
+            rate: rate_bytes_per_sec,
+            burst,
+            tokens: burst,
+            last_us: 0,
+        }
+    }
+
+    /// Bucket with the default burst of 200 ms worth of rate.
+    pub fn with_default_burst(rate_bytes_per_sec: f64) -> Self {
+        Self::new(rate_bytes_per_sec, (rate_bytes_per_sec * 0.2).max(0.0))
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    fn refill(&mut self, now: u64) {
+        if now > self.last_us {
+            if self.rate > 0.0 {
+                let credit = (now - self.last_us) as f64 * self.rate / 1e6;
+                self.tokens = (self.tokens + credit).min(self.burst);
+            }
+            self.last_us = now;
+        }
+    }
+
+    /// Admit `bytes` at `now`; returns the throttle delay in µs (0 when
+    /// within quota). [`NEVER_US`] when the rate is non-positive.
+    pub fn charge(&mut self, now: u64, bytes: f64) -> u64 {
+        self.refill(now);
+        if self.rate <= 0.0 {
+            return NEVER_US;
+        }
+        self.tokens -= bytes;
+        if self.tokens >= 0.0 {
+            0
+        } else {
+            ((-self.tokens) / self.rate * 1e6).ceil() as u64
+        }
+    }
+
+    /// Current balance (diagnostics; negative = debt in bytes).
+    pub fn balance(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Work-conserving weighted scheduler for the broker request CPU — the
+/// fluid limit of a deficit-weighted round-robin queue.
+///
+/// Per-class backlogs (µs-of-work units, like
+/// [`FifoServer`](crate::sim::resource::FifoServer)) drain concurrently:
+/// while classes `A = {i : backlog_i > 0}` are active, class `i` drains
+/// at `rate · w_i / Σ_{j∈A} w_j`. A submission's completion time is the
+/// instant its class's backlog reaches zero assuming no further arrivals
+/// — the same open-loop approximation `FifoServer` makes, so the two are
+/// directly substitutable in the fabric.
+#[derive(Clone, Debug)]
+pub struct WeightedCpuScheduler {
+    /// Service rate in units per second.
+    rate: f64,
+    weights: Vec<f64>,
+    /// Outstanding service units per class at `last_us`.
+    backlog: Vec<f64>,
+    /// Scratch copy of `backlog` for the completion-time forward
+    /// simulation (avoids a per-request allocation on the hot path).
+    scratch: Vec<f64>,
+    last_us: u64,
+    /// Accumulated service time for utilization reporting (µs).
+    busy_us: f64,
+}
+
+impl WeightedCpuScheduler {
+    pub fn new(rate_per_sec: f64, weights: &[f64]) -> Self {
+        assert!(rate_per_sec > 0.0, "scheduler rate must be positive");
+        assert!(!weights.is_empty(), "need at least one class");
+        assert!(
+            weights.iter().all(|w| *w > 0.0),
+            "class weights must be positive"
+        );
+        WeightedCpuScheduler {
+            rate: rate_per_sec,
+            weights: weights.to_vec(),
+            backlog: vec![0.0; weights.len()],
+            scratch: vec![0.0; weights.len()],
+            last_us: 0,
+            busy_us: 0.0,
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Drain backlogs with the capacity accrued since the last
+    /// observation, redistributing shares as classes empty.
+    fn drain_to(&mut self, now: u64) {
+        if now <= self.last_us {
+            return;
+        }
+        let mut capacity = (now - self.last_us) as f64 * self.rate / 1e6;
+        self.last_us = now;
+        loop {
+            let wsum: f64 = self
+                .weights
+                .iter()
+                .zip(&self.backlog)
+                .filter(|(_, b)| **b > 0.0)
+                .map(|(w, _)| *w)
+                .sum();
+            if wsum <= 0.0 || capacity <= 0.0 {
+                break;
+            }
+            // Capacity spent when the first active class empties under
+            // proportional sharing.
+            let need = self
+                .backlog
+                .iter()
+                .zip(&self.weights)
+                .filter(|(b, _)| **b > 0.0)
+                .map(|(b, w)| b * wsum / w)
+                .fold(f64::INFINITY, f64::min);
+            if need >= capacity {
+                for (b, w) in self.backlog.iter_mut().zip(&self.weights) {
+                    if *b > 0.0 {
+                        *b = (*b - capacity * w / wsum).max(0.0);
+                    }
+                }
+                break;
+            }
+            for (b, w) in self.backlog.iter_mut().zip(&self.weights) {
+                if *b > 0.0 {
+                    *b = (*b - need * w / wsum).max(0.0);
+                }
+            }
+            capacity -= need;
+        }
+    }
+
+    /// Submit `work` units of class `class` at `now`; returns the
+    /// completion time in µs. Classes out of range share the last class.
+    pub fn submit(&mut self, now: u64, class: usize, work: f64) -> u64 {
+        self.drain_to(now);
+        let class = class.min(self.weights.len() - 1);
+        self.busy_us += work / self.rate * 1e6;
+        self.backlog[class] += work;
+
+        // Fluid forward-simulation: when does `class` empty?
+        self.scratch.clone_from(&self.backlog);
+        let bl = &mut self.scratch;
+        let mut t = 0.0; // seconds from now
+        loop {
+            let wsum: f64 = self
+                .weights
+                .iter()
+                .zip(bl.iter())
+                .filter(|(_, b)| **b > 0.0)
+                .map(|(w, _)| *w)
+                .sum();
+            debug_assert!(wsum > 0.0, "target class backlog vanished early");
+            if wsum <= 0.0 {
+                break;
+            }
+            let t_class = bl[class] * wsum / (self.rate * self.weights[class]);
+            let t_first = bl
+                .iter()
+                .zip(&self.weights)
+                .filter(|(b, _)| **b > 0.0)
+                .map(|(b, w)| b * wsum / (self.rate * w))
+                .fold(f64::INFINITY, f64::min);
+            if t_class <= t_first + 1e-12 {
+                t += t_class;
+                break;
+            }
+            for (b, w) in bl.iter_mut().zip(&self.weights) {
+                if *b > 0.0 {
+                    *b = (*b - t_first * self.rate * w / wsum).max(0.0);
+                }
+            }
+            t += t_first;
+        }
+        now + (t * 1e6).ceil() as u64
+    }
+
+    /// Fraction of `[0, now]` the scheduler was busy (unclamped; >1 under
+    /// overload, matching `FifoServer::utilization`).
+    pub fn utilization(&self, now: u64) -> f64 {
+        if now == 0 {
+            return 0.0;
+        }
+        self.busy_us / now as f64
+    }
+}
+
+/// Per-tenant quota settings (all optional; `None` = uncapped).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantQuota {
+    /// Produce-side byte-rate cap (producer → broker), bytes/sec.
+    pub produce_bytes_per_sec: Option<f64>,
+    /// Fetch-side byte-rate cap (broker → consumer), bytes/sec.
+    pub fetch_bytes_per_sec: Option<f64>,
+    /// Token-bucket burst; defaults to 200 ms of the rate.
+    pub burst_bytes: Option<f64>,
+}
+
+impl TenantQuota {
+    fn bucket(rate: Option<f64>, burst: Option<f64>) -> Option<TokenBucket> {
+        rate.map(|r| match burst {
+            Some(b) => TokenBucket::new(r, b),
+            None => TokenBucket::with_default_burst(r),
+        })
+    }
+
+    pub fn produce_bucket(&self) -> Option<TokenBucket> {
+        Self::bucket(self.produce_bytes_per_sec, self.burst_bytes)
+    }
+
+    pub fn fetch_bucket(&self) -> Option<TokenBucket> {
+        Self::bucket(self.fetch_bytes_per_sec, self.burst_bytes)
+    }
+}
+
+/// The broker QoS policy for one multi-tenant world. Class `i` governs
+/// tenant `i` (registration order in the tenant registry).
+#[derive(Clone, Debug, Default)]
+pub struct QosPolicy {
+    /// Request-CPU scheduling-class weights, one per tenant. `None`
+    /// keeps the FIFO request CPU (quotas can still apply).
+    pub cpu_weights: Option<Vec<f64>>,
+    /// Per-tenant quotas, one per tenant (missing entries = uncapped).
+    pub quotas: Vec<TenantQuota>,
+}
+
+impl QosPolicy {
+    /// Quota for tenant `t` (default uncapped when not listed).
+    pub fn quota(&self, t: usize) -> TenantQuota {
+        self.quotas.get(t).copied().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_admits_within_rate() {
+        let mut b = TokenBucket::new(1_000_000.0, 100_000.0); // 1 MB/s
+        assert_eq!(b.charge(0, 50_000.0), 0);
+        // Burst exhausted: 100 kB more at t=0 puts us 50 kB in debt
+        // → 50 ms to pay back at 1 MB/s.
+        let d = b.charge(0, 100_000.0);
+        assert_eq!(d, 50_000);
+        // After the debt is paid the bucket admits again.
+        assert_eq!(b.charge(60_000, 10_000.0), 0);
+    }
+
+    #[test]
+    fn bucket_steady_state_rate_is_the_quota() {
+        // Offer 10× the quota for one virtual second; the cumulative
+        // throttle of the last charge must defer it to ~10 s.
+        let mut b = TokenBucket::new(1_000_000.0, 0.0);
+        let mut last_delay = 0;
+        for i in 0..100u64 {
+            last_delay = b.charge(i * 10_000, 100_000.0);
+        }
+        let done = 99 * 10_000 + last_delay;
+        assert!(
+            (9_000_000..=11_000_000).contains(&done),
+            "10 MB through a 1 MB/s bucket must take ~10 s, got {done}"
+        );
+    }
+
+    #[test]
+    fn zero_rate_never_admits() {
+        let mut b = TokenBucket::new(0.0, 0.0);
+        assert_eq!(b.charge(5, 1.0), NEVER_US);
+        assert_eq!(b.charge(1_000_000, 1.0), NEVER_US);
+    }
+
+    #[test]
+    fn wfq_single_class_matches_fifo_rate() {
+        // One class: GPS degenerates to a plain rate server.
+        let mut s = WeightedCpuScheduler::new(1e6, &[1.0]);
+        assert_eq!(s.submit(0, 0, 500.0), 500);
+        assert_eq!(s.submit(0, 0, 500.0), 1000);
+        assert!((s.utilization(1000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavy_class_cannot_starve_light_class() {
+        // Rate 1e6 units/s = 1 unit/µs. Class 0 (weight 1) dumps 1 s of
+        // work; class 1 (weight 9) then submits a small request and must
+        // see near-isolated service: it gets 90% of the CPU.
+        let mut s = WeightedCpuScheduler::new(1e6, &[1.0, 9.0]);
+        let t_heavy = s.submit(0, 0, 1_000_000.0);
+        let t_light = s.submit(0, 1, 900.0);
+        // Light class drains at 0.9 units/µs while the heavy backlog is
+        // active: 900 units take 1000 µs.
+        assert_eq!(t_light, 1000);
+        // The heavy class loses exactly the light class's share and
+        // finishes later than alone (1_000_000), not earlier.
+        assert!(t_heavy >= 1_000_000, "t_heavy={t_heavy}");
+        // A FIFO would have made the light request wait the full second.
+        assert!(t_light < 10_000);
+    }
+
+    #[test]
+    fn wfq_work_conserving_after_class_empties() {
+        let mut s = WeightedCpuScheduler::new(1e6, &[1.0, 1.0]);
+        // Completion is open-loop: the first submission sees only its
+        // own backlog (500 ms); the second sees both and lands at 1 s.
+        assert_eq!(s.submit(0, 0, 500_000.0), 500_000);
+        assert_eq!(s.submit(0, 1, 500_000.0), 1_000_000);
+        // By t=1s all 1e6 units of backlog have drained; a later arrival
+        // on class 0 alone gets the full rate immediately.
+        let t = s.submit(1_000_000, 0, 100.0);
+        assert_eq!(t, 1_000_100);
+    }
+
+    #[test]
+    fn wfq_redistributes_share_when_peer_finishes() {
+        // Class 0: 100 units, then class 1: 1000 units, equal weights,
+        // rate 1 unit/µs. From class 1's view: equal shares (0.5/µs)
+        // until class 0 empties at t=200 (100 units each), then the full
+        // rate for the remaining 900 → finishes at 1100, not 2000.
+        let mut s = WeightedCpuScheduler::new(1e6, &[1.0, 1.0]);
+        let _ = s.submit(0, 0, 100.0);
+        let t1 = s.submit(0, 1, 1000.0);
+        assert_eq!(t1, 1100);
+    }
+
+    #[test]
+    fn policy_defaults_are_uncapped() {
+        let p = QosPolicy::default();
+        assert!(p.cpu_weights.is_none());
+        assert!(p.quota(3).produce_bucket().is_none());
+        assert!(p.quota(0).fetch_bucket().is_none());
+    }
+}

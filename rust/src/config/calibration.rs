@@ -201,6 +201,97 @@ impl Default for ObjDetCosts {
     }
 }
 
+/// Training-ingest cost model (ROADMAP follow-up to §8: a tenant whose
+/// signature is large sequential writes — data-loader shards streamed
+/// through the broker to training readers). Values are design targets for
+/// the QoS experiments, not paper measurements: the tenant exists to
+/// stress the shared NVMe write path the way Fig 11b's producer traffic
+/// does, with ~1 MB batches instead of 37 kB thumbnails.
+#[derive(Clone, Debug)]
+pub struct TrainCosts {
+    /// Writer cadence, µs (default 100 ms → 10 batches/s per writer).
+    pub tick_us: u64,
+    /// Serialized shard batch size, bytes (~1 MB sequential append).
+    pub batch_bytes: f64,
+    pub batches_per_tick: usize,
+    /// Lognormal cv of the batch size (shards are near-constant).
+    pub bytes_cv: f64,
+    /// Producer-side shard assembly per batch, µs.
+    pub prep_us: f64,
+    pub prep_cv: f64,
+    /// Serialization + client hand-off per batch on the send path, µs.
+    pub send_batch_us: f64,
+    /// Consumer training-step time per batch, µs.
+    pub step_us: f64,
+    pub step_cv: f64,
+    /// Throughput-tuned fetch: wait for several batches before fetching.
+    pub fetch_min_bytes: usize,
+    pub fetch_max_wait_us: u64,
+}
+
+impl Default for TrainCosts {
+    fn default() -> Self {
+        TrainCosts {
+            tick_us: 100_000,
+            batch_bytes: 1_000_000.0,
+            batches_per_tick: 1,
+            bytes_cv: 0.05,
+            prep_us: 2_000.0,
+            prep_cv: 0.2,
+            send_batch_us: 900.0,
+            step_us: 40_000.0,
+            step_cv: 0.2,
+            fetch_min_bytes: 4_000_000,
+            fetch_max_wait_us: 500_000,
+        }
+    }
+}
+
+/// RPC-style low-latency tenant (ROADMAP follow-up to §8): small
+/// request records, `fetch.min.bytes` = 1 so every commit is fetched
+/// immediately, and a p99 SLO — the tenant that *feels* cross-tenant
+/// interference first, because its latency budget is microscopic next to
+/// the bulk tenants' batching slack.
+#[derive(Clone, Debug)]
+pub struct RpcCosts {
+    /// Request cadence per client, µs (default 10 ms → 100 req/s).
+    pub period_us: u64,
+    /// Serialized request bytes.
+    pub request_bytes: f64,
+    pub bytes_cv: f64,
+    /// Client-side marshalling per request, µs.
+    pub prep_us: f64,
+    pub prep_cv: f64,
+    /// Send-path cost per request, µs.
+    pub send_request_us: f64,
+    /// Server-side handler time per request, µs.
+    pub handle_us: f64,
+    pub handle_cv: f64,
+    /// Latency-tuned fetch: any visible byte is fetched at once.
+    pub fetch_min_bytes: usize,
+    pub fetch_max_wait_us: u64,
+    /// End-to-end p99 service-level objective, µs.
+    pub slo_p99_us: u64,
+}
+
+impl Default for RpcCosts {
+    fn default() -> Self {
+        RpcCosts {
+            period_us: 10_000,
+            request_bytes: 2_000.0,
+            bytes_cv: 0.2,
+            prep_us: 150.0,
+            prep_cv: 0.3,
+            send_request_us: 20.0,
+            handle_us: 500.0,
+            handle_cv: 0.3,
+            fetch_min_bytes: 1,
+            fetch_max_wait_us: 1_000,
+            slo_p99_us: 75_000,
+        }
+    }
+}
+
 /// Core-scaling model constants (Figs 5 and 12):
 /// `latency(c) = serial + parallel/c + interference * (c - 1)`, normalized
 /// to latency(1) = 1. Fitted to the paper's quoted points: 2 cores give a
@@ -286,6 +377,8 @@ pub struct Calibration {
     pub cpu_breakdown: CpuBreakdown,
     pub broker: BrokerModel,
     pub objdet: ObjDetCosts,
+    pub train: TrainCosts,
+    pub rpc: RpcCosts,
     pub faces: FaceArrival,
 }
 

@@ -82,6 +82,33 @@ impl Deployment {
         }
     }
 
+    /// Training-ingest tenant (QoS experiments): 16 shard writers at
+    /// ~1 MB × 10/s each ≈ 160 MB/s of sequential produce — enough to
+    /// push a colocated fabric over its effective write bandwidth.
+    pub fn train_ingest() -> Self {
+        Deployment {
+            producers: 16,
+            consumers: 16,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 16,
+        }
+    }
+
+    /// RPC-style low-latency tenant (QoS experiments): 20 clients at
+    /// 100 req/s × 2 kB — byte-wise negligible, latency-wise the canary.
+    pub fn rpc_service() -> Self {
+        Deployment {
+            producers: 20,
+            consumers: 40,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 40,
+        }
+    }
+
     pub fn with_brokers(mut self, brokers: usize) -> Self {
         self.brokers = brokers;
         self
@@ -256,6 +283,8 @@ mod tests {
         Deployment::facerec_paper().validate().unwrap();
         Deployment::facerec_accel().validate().unwrap();
         Deployment::objdet_accel().validate().unwrap();
+        Deployment::train_ingest().validate().unwrap();
+        Deployment::rpc_service().validate().unwrap();
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Experiment drivers: one module per figure/table of the paper, plus
 //! extensions the component kernel enables ([`mixed`] — the cross-tenant
-//! interference sweep).
+//! interference sweep; [`qos`] — the N-tenant p99-vs-share SLO sweep with
+//! broker scheduling classes and topic quotas as the mitigation).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -21,4 +22,5 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod mixed;
+pub mod qos;
 pub mod table34;

@@ -1,0 +1,337 @@
+//! Broker QoS: the N-tenant p99-vs-share SLO sweep (`aitax experiment qos`).
+//!
+//! The Fig-15-style *mitigation view* for multi-tenancy. Four tenants
+//! colocate on the paper's 3-broker fabric:
+//!
+//! * **facerec** — §5.3 acceleration deployment at 4× (stable alone);
+//! * **objdet** — §6.3 deployment at 6×, fleet scaled by the sweep share;
+//! * **train-ingest** — large sequential shard writes, scaled by share;
+//! * **rpc** — small-record low-latency tenant with a p99 SLO, constant.
+//!
+//! Each share runs twice: QoS **off** (the pre-PR shared-FIFO broker) and
+//! QoS **on** (scheduling classes + produce quotas on the bulk tenants).
+//! Without QoS, growing the colocated share pushes the shared NVMe write
+//! path past saturation and the RPC tenant's p99 — a tenant whose byte
+//! footprint is ~0.5% of the fabric's — blows through its SLO purely on
+//! inherited broker wait. With QoS the bulk tenants are throttled to a
+//! byte budget and the RPC class is weighted up, so its p99 stays inside
+//! the SLO at every share: isolation, not hardware, is the mitigation.
+//!
+//! `run` returns structured results; [`print`] renders the table plus a
+//! machine-readable JSON report (also written to `artifacts/qos_report.json`
+//! when the artifacts directory is present).
+
+use crate::config::{Config, Deployment};
+use crate::experiments::common::{facerec_accel, objdet_accel, Fidelity};
+use crate::pipeline::dc::WorkloadKind;
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim, TenantDef};
+use crate::util::json::Json;
+use crate::util::units::fmt_us;
+
+/// Colocated share of the bulk tenants' nominal fleets (objdet + train).
+pub const QOS_SHARES: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+/// Face Recognition acceleration (stable alone; same as `mixed`).
+pub const ACCEL_FACEREC: f64 = 4.0;
+/// Object Detection acceleration (stable alone; same as `mixed`).
+pub const ACCEL_OBJDET: f64 = 6.0;
+/// Produce-byte budget for each bulk tenant when QoS is on (B/s). Sized
+/// so facerec (~420 MB/s) + 2 × 60 MB/s stays under the fabric's
+/// ~770 MB/s effective write bandwidth with headroom for bursts.
+pub const BULK_PRODUCE_QUOTA: f64 = 60e6;
+/// Scheduling-class weights: the latency tenant outranks the bulk ones.
+pub const RPC_WEIGHT: f64 = 8.0;
+pub const FACEREC_WEIGHT: f64 = 2.0;
+pub const BULK_WEIGHT: f64 = 1.0;
+
+/// Scale a deployment's producer/consumer fleet (partitions follow).
+fn scale_fleet(d: &mut Deployment, share: f64) {
+    d.producers = ((d.producers as f64 * share).round() as usize).max(1);
+    d.consumers = ((d.consumers as f64 * share).round() as usize).max(1);
+    d.partitions = d.consumers;
+}
+
+/// The 4-tenant registry at one sweep point. The QoS specs (weights +
+/// quotas) are always attached; `qos_on` decides whether they bind.
+pub fn registry(share: f64, qos_on: bool, fidelity: Fidelity) -> MultiTenantConfig {
+    let fr = facerec_accel(ACCEL_FACEREC, fidelity);
+    let mut od = objdet_accel(ACCEL_OBJDET, fidelity);
+    scale_fleet(&mut od.deployment, share);
+
+    let mut tr = Config::default();
+    tr.deployment = Deployment::train_ingest();
+    scale_fleet(&mut tr.deployment, share);
+    tr.duration_us = fidelity.horizon_us();
+    tr.seed = 0x7EA1;
+
+    let mut rpc = Config::default();
+    rpc.deployment = Deployment::rpc_service();
+    rpc.duration_us = fidelity.horizon_us();
+    rpc.seed = 0x59C;
+
+    let fabric = fr.clone();
+    let duration = fr.duration_us;
+    MultiTenantConfig::new(fabric, duration)
+        .tenant(
+            TenantDef::new("facerec", WorkloadKind::FaceRec, fr).with_weight(FACEREC_WEIGHT),
+        )
+        .tenant(
+            TenantDef::new("objdet", WorkloadKind::ObjDet, od)
+                .with_weight(BULK_WEIGHT)
+                .with_produce_quota(BULK_PRODUCE_QUOTA),
+        )
+        .tenant(
+            TenantDef::new("train-ingest", WorkloadKind::TrainIngest, tr)
+                .with_weight(BULK_WEIGHT)
+                .with_produce_quota(BULK_PRODUCE_QUOTA),
+        )
+        .tenant(TenantDef::new("rpc", WorkloadKind::Rpc, rpc).with_weight(RPC_WEIGHT))
+        .with_qos(qos_on)
+}
+
+/// One sweep point: a share × {off,on} run.
+pub struct QosPoint {
+    pub share: f64,
+    pub qos_on: bool,
+    pub report: MultiTenantReport,
+}
+
+/// The full sweep plus the RPC tenant's SLO for verdicts.
+pub struct QosSweep {
+    pub slo_p99_us: u64,
+    pub points: Vec<QosPoint>,
+}
+
+impl QosSweep {
+    /// The (off, on) pair of points at one share.
+    pub fn pair(&self, share: f64) -> (Option<&QosPoint>, Option<&QosPoint>) {
+        let find = |on: bool| {
+            self.points
+                .iter()
+                .find(|p| p.share == share && p.qos_on == on)
+        };
+        (find(false), find(true))
+    }
+
+    /// RPC p99 at one point (µs).
+    pub fn rpc_p99(p: &QosPoint) -> u64 {
+        p.report.tenant("rpc").map(|t| t.e2e_p99_us).unwrap_or(0)
+    }
+}
+
+/// Run the sweep at the given shares (each share twice: QoS off and on).
+pub fn run_at(shares: &[f64], fidelity: Fidelity) -> QosSweep {
+    let slo_p99_us = Config::default().calibration.rpc.slo_p99_us;
+    let mut points = Vec::new();
+    for &share in shares {
+        for qos_on in [false, true] {
+            points.push(QosPoint {
+                share,
+                qos_on,
+                report: MultiTenantSim::new(registry(share, qos_on, fidelity)).run(),
+            });
+        }
+    }
+    QosSweep { slo_p99_us, points }
+}
+
+pub fn run(fidelity: Fidelity) -> QosSweep {
+    run_at(&QOS_SHARES, fidelity)
+}
+
+/// The machine-readable per-tenant p99-vs-share report.
+pub fn to_json(sweep: &QosSweep) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::Str("qos".into())),
+        ("slo_p99_us", Json::Num(sweep.slo_p99_us as f64)),
+        (
+            "accel",
+            Json::obj(vec![
+                ("facerec", Json::Num(ACCEL_FACEREC)),
+                ("objdet", Json::Num(ACCEL_OBJDET)),
+            ]),
+        ),
+        ("bulk_produce_quota_bytes_per_sec", Json::Num(BULK_PRODUCE_QUOTA)),
+        (
+            "points",
+            Json::arr(
+                sweep
+                    .points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("share", Json::Num(p.share)),
+                            ("qos", Json::Bool(p.qos_on)),
+                            (
+                                "broker_storage_write_util",
+                                Json::Num(p.report.broker_storage_write_util),
+                            ),
+                            ("broker_cpu_util", Json::Num(p.report.broker_cpu_util)),
+                            ("events", Json::Num(p.report.events as f64)),
+                            (
+                                "tenants",
+                                Json::arr(
+                                    p.report
+                                        .tenants
+                                        .iter()
+                                        .map(|t| {
+                                            Json::obj(vec![
+                                                ("name", Json::Str(t.name.clone())),
+                                                ("kind", Json::Str(t.kind.label().into())),
+                                                ("completed", Json::Num(t.completed as f64)),
+                                                (
+                                                    "throughput_per_sec",
+                                                    Json::Num(t.throughput_per_sec),
+                                                ),
+                                                ("wait_mean_us", Json::Num(t.wait_mean_us)),
+                                                (
+                                                    "e2e_p99_us",
+                                                    Json::Num(t.e2e_p99_us as f64),
+                                                ),
+                                                ("stable", Json::Bool(t.stable)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the JSON report next to the AOT artifacts when that directory
+/// exists (reusing `runtime::Manifest::default_dir`'s lookup so the
+/// report always lands where the manifest machinery looks).
+fn write_report(json: &Json) -> Option<std::path::PathBuf> {
+    let dir = crate::runtime::Manifest::default_dir();
+    if !dir.is_dir() {
+        return None;
+    }
+    let path = dir.join("qos_report.json");
+    std::fs::write(&path, json.pretty()).ok()?;
+    Some(path)
+}
+
+pub fn print(sweep: &QosSweep) {
+    println!(
+        "\nBroker QoS — facerec({ACCEL_FACEREC}x) + objdet({ACCEL_OBJDET}x·share) + \
+         train-ingest(·share) + rpc on one fabric"
+    );
+    println!(
+        "  rpc SLO: e2e p99 <= {} | bulk produce quota when on: {:.0} MB/s each",
+        fmt_us(sweep.slo_p99_us),
+        BULK_PRODUCE_QUOTA / 1e6
+    );
+    println!(
+        "  {:>6} {:>4} {:>12} {:>9} {:>12} {:>12} {:>12} {:>11} {:>9}",
+        "share", "qos", "rpc p99", "rpc slo", "rpc wait", "fr p99", "train p99", "nvme write", "req cpu"
+    );
+    for p in &sweep.points {
+        let rpc = p.report.tenant("rpc");
+        let fr = p.report.tenant("facerec");
+        let tr = p.report.tenant("train-ingest");
+        let rpc_p99 = rpc.map(|t| t.e2e_p99_us).unwrap_or(0);
+        println!(
+            "  {:>5.0}% {:>4} {:>12} {:>9} {:>12} {:>12} {:>12} {:>10.1}% {:>8.2}%",
+            100.0 * p.share,
+            if p.qos_on { "on" } else { "off" },
+            fmt_us(rpc_p99),
+            if rpc_p99 <= sweep.slo_p99_us { "met" } else { "MISSED" },
+            fmt_us(rpc.map(|t| t.wait_mean_us as u64).unwrap_or(0)),
+            fmt_us(fr.map(|t| t.e2e_p99_us).unwrap_or(0)),
+            fmt_us(tr.map(|t| t.e2e_p99_us).unwrap_or(0)),
+            100.0 * p.report.broker_storage_write_util,
+            100.0 * p.report.broker_cpu_util,
+        );
+    }
+    println!(
+        "  takeaway: the rpc tenant misses its SLO on inherited broker wait as the \
+         colocated share grows; scheduling classes + quotas hold it inside the SLO \
+         at every share"
+    );
+    let json = to_json(sweep);
+    match write_report(&json) {
+        Some(path) => println!("  json report written to {}", path.display()),
+        None => println!("  json report:\n{}", json.pretty()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpc_degrades_without_qos_and_holds_with_it() {
+        // Full ≥3-tenant colocation, the acceptance point: QoS off must
+        // break the RPC SLO (shared write path past saturation), QoS on
+        // must hold it.
+        let sweep = run_at(&[1.0], Fidelity::Quick);
+        let (off, on) = sweep.pair(1.0);
+        let (off, on) = (off.unwrap(), on.unwrap());
+        let p99_off = QosSweep::rpc_p99(off);
+        let p99_on = QosSweep::rpc_p99(on);
+        assert!(
+            p99_off > sweep.slo_p99_us,
+            "without QoS the rpc p99 must blow the SLO: {} vs {}",
+            p99_off,
+            sweep.slo_p99_us
+        );
+        assert!(
+            p99_on <= sweep.slo_p99_us,
+            "with QoS the rpc p99 must hold the SLO: {} vs {}",
+            p99_on,
+            sweep.slo_p99_us
+        );
+        assert!(p99_on < p99_off);
+        // The mechanism: quotas pull the shared write path back from
+        // saturation.
+        assert!(
+            off.report.broker_storage_write_util > 0.85,
+            "off-point write util {} should be near/past saturation",
+            off.report.broker_storage_write_util
+        );
+        assert!(
+            on.report.broker_storage_write_util
+                < 0.9 * off.report.broker_storage_write_util,
+            "quotas must relieve the write path: {} vs {}",
+            on.report.broker_storage_write_util,
+            off.report.broker_storage_write_util
+        );
+    }
+
+    #[test]
+    fn low_share_is_gentle_even_without_qos() {
+        let sweep = run_at(&[0.25], Fidelity::Quick);
+        let (off, _) = sweep.pair(0.25);
+        let off = off.unwrap();
+        // A quarter of the bulk fleets leaves headroom: every tenant
+        // keeps completing and the rpc p99 stays within an order of
+        // magnitude of its SLO (the cliff is a *share* effect).
+        for t in &off.report.tenants {
+            assert!(t.completed > 0, "tenant {} starved at low share", t.name);
+        }
+        assert!(
+            QosSweep::rpc_p99(off) < 10 * sweep.slo_p99_us,
+            "rpc p99 at 25% share should not be catastrophic: {}",
+            QosSweep::rpc_p99(off)
+        );
+    }
+
+    #[test]
+    fn json_report_carries_every_point_and_tenant() {
+        let sweep = run_at(&[0.5], Fidelity::Quick);
+        let j = to_json(&sweep);
+        let points = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(points.len(), 2); // off + on
+        for p in points {
+            let tenants = p.get("tenants").and_then(|t| t.as_arr()).unwrap();
+            assert_eq!(tenants.len(), 4);
+            assert!(p.get("share").and_then(|s| s.as_f64()).is_some());
+        }
+        // Round-trips through the parser.
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.get("experiment").and_then(|e| e.as_str()), Some("qos"));
+    }
+}

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   run         live three-layer pipeline (PJRT inference + real broker)
-//!   experiment  regenerate a paper figure/table: fig5..fig15, tco, all
+//!   experiment  regenerate a paper figure/table (fig5..fig15, tco) or an
+//!               extension scenario (mixed, qos), or all of them
 //!   sim         one Face Recognition simulation with overrides
 //!   amdahl      Fig-9 analytic projections
 //!   artifacts   check/describe the AOT artifacts
@@ -20,7 +21,7 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|all>
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
@@ -105,6 +106,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             "fig15" => ex::fig15::print(&ex::fig15::run(fidelity)),
             "tco" | "table3" | "table4" => ex::table34::print(&ex::table34::run()),
             "mixed" => ex::mixed::print(&ex::mixed::run(fidelity)),
+            "qos" => ex::qos::print(&ex::qos::run(fidelity)),
             other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
         }
         Ok(())
@@ -112,7 +114,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     if which == "all" {
         for name in [
             "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-            "fig15", "tco", "mixed",
+            "fig15", "tco", "mixed", "qos",
         ] {
             run_one(name)?;
         }

@@ -1,4 +1,5 @@
-//! The data-center deployment layer: reusable [`sim::world`] components.
+//! The data-center deployment layer: reusable
+//! [`sim::world`](crate::sim::world) components.
 //!
 //! Face Recognition and Object Detection used to be two hand-rolled
 //! ~500-LoC event loops that duplicated the producer/partition/consumer
@@ -20,22 +21,36 @@
 //!   fabric hop events route here and commit notifications fan back out
 //!   to partitions and consumer wakeups.
 //!
-//! A **tenant** is one workload (Face Recognition or Object Detection)
-//! with its own producers, consumers, partitions, and metrics. Tenants
-//! share the broker fabric, the storage devices, and the byte meters —
-//! which is exactly what lets `pipeline::mixed` run both applications on
-//! one substrate and measure cross-tenant interference, something the
-//! per-workload monoliths could not express.
+//! A **tenant** is one workload (Face Recognition, Object Detection,
+//! training ingest, or an RPC-style service) with its own producers,
+//! consumers, partitions, and metrics. Tenants share the broker fabric,
+//! the storage devices, and the byte meters — which is exactly what lets
+//! `pipeline::mixed` run N applications on one substrate and measure
+//! cross-tenant interference, something the per-workload monoliths could
+//! not express.
 //!
-//! Fidelity contract: for a single-tenant world this module reproduces
-//! the legacy simulators *event for event* — same event queue insertion
-//! order, same RNG draw order, same metric updates — so reports are
-//! bit-identical for a given seed (`tests/golden_reports.rs` holds the
-//! legacy loops as a differential reference).
+//! **QoS hooks** (see [`crate::broker::qos`] and `docs/architecture.md`):
+//! when [`build_with_qos`] installs a policy, the produce path charges
+//! the tenant's produce [`TokenBucket`] at dispatch — a throttled record
+//! is re-scheduled as [`DcEvent::DispatchAdmitted`] at its admission time
+//! (backpressure in the `ProducerClient`) — and the fetch path charges
+//! the fetch bucket after each fetch, muting the poll loop through
+//! [`ConsumerGate::throttled_until`]. Request-CPU work carries the tenant
+//! id as a scheduling class so the fabric's weighted scheduler (when
+//! enabled) gives each tenant its configured share. With no policy every
+//! hook is inert.
+//!
+//! Fidelity contract: for a single-tenant world with QoS disabled this
+//! module reproduces the legacy simulators *event for event* — same event
+//! queue insertion order, same RNG draw order, same metric updates — so
+//! reports are bit-identical for a given seed (`tests/golden_reports.rs`
+//! holds the legacy loops as a differential reference, and
+//! `tests/qos_regression.rs` pins the QoS-off no-op contract).
 
 use std::collections::VecDeque;
 
-use crate::config::calibration::ObjDetCosts;
+use crate::broker::qos::{QosPolicy, TokenBucket};
+use crate::config::calibration::{ObjDetCosts, RpcCosts, TrainCosts};
 use crate::config::{AccelProtocol, Config, KafkaTuning};
 use crate::config::hardware::NvmeSpec;
 use crate::metrics::bandwidth::{BandwidthMeter, Class};
@@ -68,6 +83,24 @@ const POPULATION_SAMPLE_US: u64 = 250_000;
 pub enum WorkloadKind {
     FaceRec,
     ObjDet,
+    /// Training-data ingest: large sequential batch writes at a steady
+    /// cadence, throughput-tuned consumers (see `pipeline::train`).
+    TrainIngest,
+    /// RPC-style low-latency service: small records, immediate fetch
+    /// (`fetch.min.bytes` = 1), tight tail SLO (see `pipeline::rpc`).
+    Rpc,
+}
+
+impl WorkloadKind {
+    /// Short lowercase label for reports and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadKind::FaceRec => "facerec",
+            WorkloadKind::ObjDet => "objdet",
+            WorkloadKind::TrainIngest => "train-ingest",
+            WorkloadKind::Rpc => "rpc",
+        }
+    }
 }
 
 /// A record in flight (sizes + timestamps only — the §5.2 emulation
@@ -93,6 +126,10 @@ pub enum DcEvent {
     /// A record leaves producer `p`'s client toward `partition`
     /// ([`PARTITION_UNROUTED`] = pick at dispatch).
     Dispatch { producer: u32, partition: u32, item: Item },
+    /// A previously quota-throttled record re-entering the send path at
+    /// its admission time (partition already resolved, bucket already
+    /// charged — see the QoS hooks in the module docs).
+    DispatchAdmitted { producer: u32, partition: u32, item: Item },
     /// Broker-fabric hop (routed to [`FabricHub`]).
     Fabric(FabricEv),
     /// Consumer `c` (tenant-local index) polls its partitions.
@@ -153,6 +190,9 @@ pub struct FetchTuning {
 pub struct ConsumerGate {
     pub poll_scheduled: bool,
     pub busy_until: u64,
+    /// Fetch-quota mute: polls before this instant are deferred to it
+    /// (Kafka's throttled-channel semantics; 0 = unmuted).
+    pub throttled_until: u64,
 }
 
 /// Everything measured for one tenant.
@@ -249,6 +289,10 @@ pub struct TenantState {
     pub warmup_us: u64,
     pub producer_comp: CompId,
     pub poller_comp: CompId,
+    /// Produce byte-rate quota (QoS); `None` = uncapped.
+    pub produce_bucket: Option<TokenBucket>,
+    /// Fetch byte-rate quota (QoS); `None` = uncapped.
+    pub fetch_bucket: Option<TokenBucket>,
 }
 
 /// The shared substrate every component can reach through [`Ctx`].
@@ -354,6 +398,23 @@ pub enum ProducerKind {
         frames_per_tick: usize,
         tick_us: u64,
         frame_bytes: f64,
+    },
+    /// Generic open-loop tick producer shared by the training-ingest and
+    /// RPC tenants: every `tick_us` each producer prepares and sends
+    /// `records_per_tick` records through its send-path server (so an
+    /// overrunning send path shows up as tick-start delay, like ObjDet).
+    Tick {
+        tick_us: u64,
+        records_per_tick: usize,
+        record_bytes: f64,
+        /// Lognormal cv of the record size (0 = constant-size records).
+        bytes_cv: f64,
+        /// Producer-side compute per record before the send (µs mean;
+        /// recorded in the ingest histogram).
+        prep_us: f64,
+        prep_cv: f64,
+        /// Serialization + client cost per record on the send server.
+        send_us_per_record: f64,
     },
 }
 
@@ -496,10 +557,85 @@ impl ProducerClient {
                 }
                 ctx.at_self(now + *tick_us, DcEvent::Produce(p));
             }
+            ProducerKind::Tick {
+                tick_us,
+                records_per_tick,
+                record_bytes,
+                bytes_cv,
+                prep_us,
+                prep_cv,
+                send_us_per_record,
+            } => {
+                let (part_base, part_count) = {
+                    let ts = &ctx.shared.tenants[t];
+                    (ts.part_base, ts.part_count)
+                };
+                {
+                    let ts = &mut ctx.shared.tenants[t];
+                    ts.metrics.frames_total += 1;
+                    if now >= ts.warmup_us {
+                        ts.metrics.frames_measured += 1;
+                    }
+                }
+                let u = &mut self.units[pid];
+                u.cycles += 1;
+                // Send-path overrun from the previous tick delays this
+                // one (same mechanism as ObjDet's Fig-14 "Delay").
+                let delay = u.send.backlog_us(now);
+                let start = now + delay;
+                for _ in 0..*records_per_tick {
+                    let prep = u
+                        .rng
+                        .lognormal_mean_cv(prep_us.max(1.0), *prep_cv)
+                        .round()
+                        .max(1.0) as u64;
+                    let t_ready = start + prep;
+                    let t_sent = u.send.submit(t_ready, *send_us_per_record);
+                    let bytes = if *bytes_cv > 0.0 {
+                        u.rng.lognormal_mean_cv(*record_bytes, *bytes_cv).max(64.0)
+                    } else {
+                        *record_bytes
+                    };
+                    {
+                        let ts = &mut ctx.shared.tenants[t];
+                        ts.metrics.produced += 1;
+                        if now >= ts.warmup_us {
+                            ts.metrics.hist_ingest.record(prep.max(1));
+                            ts.metrics.hist_prep.record(delay.max(1));
+                        }
+                        ts.metrics.population.enter(t_sent.min(horizon));
+                    }
+                    // Random partition per record (see the ObjDet arm for
+                    // why rotation would convoy consumers).
+                    let partition = part_base + u.rng.below(part_count as u64) as u32;
+                    let item = Item {
+                        created_us: now,
+                        ready_us: t_sent,
+                        visible_us: 0,
+                        bytes,
+                    };
+                    ctx.at_self(
+                        t_sent + WIRE_US,
+                        DcEvent::Dispatch { producer: p, partition, item },
+                    );
+                }
+                ctx.at_self(now + *tick_us, DcEvent::Produce(p));
+            }
         }
     }
 
-    fn dispatch(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, p: u32, partition: u32, item: Item) {
+    /// Send one record into the fabric. `admitted` marks a record that
+    /// already paid its produce quota (re-dispatched at its admission
+    /// time); fresh records charge the tenant's bucket here and are
+    /// deferred via [`DcEvent::DispatchAdmitted`] when over quota.
+    fn dispatch(
+        &mut self,
+        ctx: &mut Ctx<'_, DcEvent, DcState>,
+        p: u32,
+        partition: u32,
+        item: Item,
+        admitted: bool,
+    ) {
         let now = ctx.now();
         let t = self.tenant as usize;
         let pid = p as usize;
@@ -516,18 +652,37 @@ impl ProducerClient {
             partition
         };
         let overhead = ctx.shared.tenants[t].fetch.record_overhead;
+        let bytes = item.bytes + overhead;
+        if !admitted {
+            if let Some(bucket) = &mut ctx.shared.tenants[t].produce_bucket {
+                let throttle = bucket.charge(now, bytes);
+                if throttle >= crate::broker::qos::NEVER_US {
+                    // Zero-rate quota: the record can never be admitted.
+                    // Drop it instead of parking an unreachable event in
+                    // the queue for the rest of the run.
+                    return;
+                }
+                if throttle > 0 {
+                    ctx.at_self(
+                        now.saturating_add(throttle),
+                        DcEvent::DispatchAdmitted { producer: p, partition, item },
+                    );
+                    return;
+                }
+            }
+        }
         {
             let s = &mut *ctx.shared;
             let token = s.items.alloc(item);
             let leader = s.partitions[partition as usize].leader;
-            let bytes = item.bytes + overhead;
             s.tenants[t].metrics.net_tx_bytes += bytes;
-            s.fabric.send(
+            s.fabric.send_classed(
                 now,
                 partition,
                 leader,
                 bytes,
                 token,
+                self.tenant,
                 &mut s.meter,
                 &mut self.units[pid].nic,
                 &mut s.fabric_out,
@@ -542,7 +697,10 @@ impl Component<DcEvent, DcState> for ProducerClient {
         match ev {
             DcEvent::Produce(p) => self.produce(ctx, p),
             DcEvent::Dispatch { producer, partition, item } => {
-                self.dispatch(ctx, producer, partition, item)
+                self.dispatch(ctx, producer, partition, item, false)
+            }
+            DcEvent::DispatchAdmitted { producer, partition, item } => {
+                self.dispatch(ctx, producer, partition, item, true)
             }
             _ => debug_assert!(false, "unexpected event for ProducerClient"),
         }
@@ -561,8 +719,9 @@ impl Component<DcEvent, DcState> for ProducerClient {
 pub enum ServiceModel {
     /// Identification on a 1-core container.
     FaceRec(StageModel),
-    /// R-CNN detection (already divided by the acceleration factor).
-    ObjDet { mean_us: f64, cv: f64 },
+    /// Log-normal service (ObjDet R-CNN detection — already divided by
+    /// the acceleration factor —, training steps, RPC handlers).
+    Lognormal { mean_us: f64, cv: f64 },
 }
 
 /// Per-consumer container state.
@@ -600,6 +759,14 @@ impl ConsumerPoller {
                 ctx.at_self(busy, DcEvent::Poll(c));
                 return;
             }
+            // Fetch-quota mute (QoS): the channel stays silent until the
+            // previous fetch's throttle delay has elapsed.
+            if now < gate.throttled_until {
+                gate.poll_scheduled = true;
+                let until = gate.throttled_until;
+                ctx.at_self(until, DcEvent::Poll(c));
+                return;
+            }
         }
         let fetch = ctx.shared.tenants[t].fetch;
         // Gather visible records across owned partitions.
@@ -630,6 +797,7 @@ impl ConsumerPoller {
         // Fetch all visible records per owned partition.
         let mut fetched: Vec<Item> = Vec::new();
         let mut deliver_at = now;
+        let mut fetched_bytes = 0.0;
         for &pi in &self.owned[cid] {
             let mut part_bytes = 0.0;
             let mut any = false;
@@ -651,10 +819,12 @@ impl ConsumerPoller {
             if any {
                 let s = &mut *ctx.shared;
                 s.tenants[t].metrics.net_rx_bytes += part_bytes;
-                let done = s.fabric.fetch(
+                fetched_bytes += part_bytes;
+                let done = s.fabric.fetch_classed(
                     now,
                     leader,
                     part_bytes,
+                    self.tenant,
                     &mut self.units[cid].nic_rx,
                     &mut s.meter,
                 );
@@ -664,6 +834,15 @@ impl ConsumerPoller {
         if fetched.is_empty() {
             return;
         }
+        // Charge the fetch quota (QoS): over-quota fetches mute this
+        // consumer's poll loop for the throttle delay.
+        let throttled_until = match &mut ctx.shared.tenants[t].fetch_bucket {
+            Some(bucket) => {
+                let throttle = bucket.charge(now, fetched_bytes);
+                if throttle > 0 { now.saturating_add(throttle) } else { 0 }
+            }
+            None => 0,
+        };
         // Serve each record serially on the 1-core container, oldest
         // producer-ready first.
         fetched.sort_by_key(|it| it.ready_us);
@@ -674,7 +853,7 @@ impl ConsumerPoller {
             let wait_us = start.saturating_sub(it.ready_us);
             let dur = match &self.service {
                 ServiceModel::FaceRec(stages) => stages.identify(&mut self.units[cid].rng),
-                ServiceModel::ObjDet { mean_us, cv } => self.units[cid]
+                ServiceModel::Lognormal { mean_us, cv } => self.units[cid]
                     .rng
                     .lognormal_mean_cv(*mean_us, *cv)
                     .round()
@@ -708,10 +887,12 @@ impl ConsumerPoller {
         {
             let gate = &mut ctx.shared.tenants[t].gates[cid];
             gate.busy_until = busy;
+            gate.throttled_until = throttled_until;
             gate.poll_scheduled = true;
         }
-        // Immediately look for more work when we free up.
-        ctx.at_self(busy, DcEvent::Poll(c));
+        // Immediately look for more work when we free up (or when the
+        // fetch-quota mute expires, whichever is later).
+        ctx.at_self(busy.max(throttled_until), DcEvent::Poll(c));
     }
 }
 
@@ -790,6 +971,19 @@ pub struct TenantSpec<'a> {
 /// (seeded exactly as the legacy simulators did), so a single-tenant
 /// world reproduces the legacy event and RNG sequences verbatim.
 pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -> World<DcEvent, DcState> {
+    build_with_qos(tenants, fabric, None, horizon_us)
+}
+
+/// [`build`] with an optional broker QoS policy: tenant `i` is scheduling
+/// class `i`. Installs the weighted request-CPU scheduler on the fabric
+/// (when the policy carries weights) and the per-tenant produce/fetch
+/// token buckets. `None` is bit-identical to [`build`].
+pub fn build_with_qos(
+    tenants: &[TenantSpec<'_>],
+    fabric: &FabricSpec,
+    qos: Option<&QosPolicy>,
+    horizon_us: u64,
+) -> World<DcEvent, DcState> {
     let mut meter = BandwidthMeter::new();
     meter.set_nodes(
         Class::Producer,
@@ -828,7 +1022,24 @@ pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -
                     fetch_max_wait_us: od.fetch_max_wait_us,
                 }
             }
+            WorkloadKind::TrainIngest => {
+                let tr = &spec.cfg.calibration.train;
+                FetchTuning {
+                    record_overhead: 0.0,
+                    fetch_min_bytes: tr.fetch_min_bytes,
+                    fetch_max_wait_us: tr.fetch_max_wait_us,
+                }
+            }
+            WorkloadKind::Rpc => {
+                let rpc = &spec.cfg.calibration.rpc;
+                FetchTuning {
+                    record_overhead: 0.0,
+                    fetch_min_bytes: rpc.fetch_min_bytes,
+                    fetch_max_wait_us: rpc.fetch_max_wait_us,
+                }
+            }
         };
+        let quota = qos.map(|p| p.quota(tenant)).unwrap_or_default();
         tenant_states.push(TenantState {
             kind: spec.kind,
             fetch,
@@ -839,11 +1050,17 @@ pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -
             warmup_us: (horizon_us as f64 * spec.cfg.warmup_frac) as u64,
             producer_comp: CompId::INVALID,
             poller_comp: CompId::INVALID,
+            produce_bucket: quota.produce_bucket(),
+            fetch_bucket: quota.fetch_bucket(),
         });
     }
 
+    let mut shared_fabric = fabric.build();
+    if let Some(weights) = qos.and_then(|p| p.cpu_weights.as_deref()) {
+        shared_fabric.enable_weighted_cpu(weights);
+    }
     let state = DcState {
-        fabric: fabric.build(),
+        fabric: shared_fabric,
         meter,
         partitions,
         items: ItemPool::default(),
@@ -931,7 +1148,7 @@ pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -
                 let owned = owned_partitions(&world.shared, tenant);
                 let poller = world.add(Box::new(ConsumerPoller {
                     tenant: tenant as u8,
-                    service: ServiceModel::ObjDet {
+                    service: ServiceModel::Lognormal {
                         mean_us: od.detect_us / k,
                         cv: od.detect_cv,
                     },
@@ -945,12 +1162,94 @@ pub fn build(tenants: &[TenantSpec<'_>], fabric: &FabricSpec, horizon_us: u64) -
                     world.schedule(jitter, producer, DcEvent::Produce(p as u32));
                 }
             }
+            WorkloadKind::TrainIngest => {
+                let tr: &TrainCosts = &cfg.calibration.train;
+                add_tick_tenant(
+                    &mut world,
+                    tenant,
+                    d,
+                    cfg.node.net_bw,
+                    cfg.seed ^ 0x7EA17,
+                    ProducerKind::Tick {
+                        tick_us: tr.tick_us,
+                        records_per_tick: tr.batches_per_tick,
+                        record_bytes: tr.batch_bytes,
+                        bytes_cv: tr.bytes_cv,
+                        prep_us: tr.prep_us,
+                        prep_cv: tr.prep_cv,
+                        send_us_per_record: tr.send_batch_us,
+                    },
+                    ServiceModel::Lognormal { mean_us: tr.step_us, cv: tr.step_cv },
+                );
+            }
+            WorkloadKind::Rpc => {
+                let rpc: &RpcCosts = &cfg.calibration.rpc;
+                add_tick_tenant(
+                    &mut world,
+                    tenant,
+                    d,
+                    cfg.node.net_bw,
+                    cfg.seed ^ 0x59C5,
+                    ProducerKind::Tick {
+                        tick_us: rpc.period_us,
+                        records_per_tick: 1,
+                        record_bytes: rpc.request_bytes,
+                        bytes_cv: rpc.bytes_cv,
+                        prep_us: rpc.prep_us,
+                        prep_cv: rpc.prep_cv,
+                        send_us_per_record: rpc.send_request_us,
+                    },
+                    ServiceModel::Lognormal { mean_us: rpc.handle_us, cv: rpc.handle_cv },
+                );
+            }
         }
     }
 
     let fabric_comp = world.add(Box::new(FabricHub));
     world.shared.fabric_comp = fabric_comp;
     world
+}
+
+/// Register a [`ProducerKind::Tick`] tenant (training ingest, RPC):
+/// producer + poller components, comp-id wiring, and jittered initial
+/// ticks. Kept as one helper so the registration order — which the
+/// determinism contract depends on — cannot diverge between tick
+/// workloads.
+#[allow(clippy::too_many_arguments)]
+fn add_tick_tenant(
+    world: &mut World<DcEvent, DcState>,
+    tenant: usize,
+    d: &crate::config::Deployment,
+    net_bw: f64,
+    seed: u64,
+    kind: ProducerKind,
+    service: ServiceModel,
+) {
+    let tick_us = match &kind {
+        ProducerKind::Tick { tick_us, .. } => *tick_us,
+        _ => unreachable!("add_tick_tenant requires ProducerKind::Tick"),
+    };
+    let mut master = Rng::new(seed);
+    let units = producer_units(&mut master, d.producers, net_bw);
+    let consumers = consumer_units(&mut master, d.consumers, net_bw);
+    let producer = world.add(Box::new(ProducerClient {
+        tenant: tenant as u8,
+        kind,
+        units,
+    }));
+    let owned = owned_partitions(&world.shared, tenant);
+    let poller = world.add(Box::new(ConsumerPoller {
+        tenant: tenant as u8,
+        service,
+        units: consumers,
+        owned,
+    }));
+    world.shared.tenants[tenant].producer_comp = producer;
+    world.shared.tenants[tenant].poller_comp = poller;
+    for p in 0..d.producers {
+        let jitter = (p as u64 * tick_us) / d.producers as u64;
+        world.schedule(jitter, producer, DcEvent::Produce(p as u32));
+    }
 }
 
 fn producer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ProducerUnit> {
@@ -974,6 +1273,53 @@ fn consumer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ConsumerUn
         .collect()
 }
 
+/// Compact, workload-agnostic per-tenant results view — the common
+/// denominator of the per-workload reports, used by the N-tenant registry
+/// (`pipeline::mixed`) and the QoS experiment's p99-vs-share sweeps.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub name: String,
+    pub kind: WorkloadKind,
+    pub produced: u64,
+    pub completed: u64,
+    /// Completions per second inside the measurement window.
+    pub throughput_per_sec: f64,
+    /// Broker wait (ready → service start).
+    pub wait_mean_us: f64,
+    pub wait_p99_us: u64,
+    pub e2e_mean_us: f64,
+    pub e2e_p99_us: u64,
+    pub stable: bool,
+}
+
+/// Summarize tenant `tenant` of a finished world.
+pub fn summary_for_tenant(
+    world: &World<DcEvent, DcState>,
+    tenant: usize,
+    name: &str,
+) -> TenantSummary {
+    let ts = &world.shared.tenants[tenant];
+    let m = &ts.metrics;
+    let elapsed = world.shared.horizon_us;
+    let measured = elapsed.saturating_sub(ts.warmup_us);
+    TenantSummary {
+        name: name.to_string(),
+        kind: ts.kind,
+        produced: m.produced,
+        completed: m.completed,
+        throughput_per_sec: if measured > 0 {
+            m.completed_in_window as f64 * 1e6 / measured as f64
+        } else {
+            0.0
+        },
+        wait_mean_us: m.hist_wait.mean(),
+        wait_p99_us: m.hist_wait.p99(),
+        e2e_mean_us: m.hist_e2e.mean(),
+        e2e_p99_us: m.hist_e2e.p99(),
+        stable: m.population.verdict(elapsed).stable,
+    }
+}
+
 /// Consumer -> owned global partition ids for one tenant (avoids scanning
 /// all partitions on every poll).
 fn owned_partitions(state: &DcState, tenant: usize) -> Vec<Vec<u32>> {
@@ -989,6 +1335,7 @@ fn owned_partitions(state: &DcState, tenant: usize) -> Vec<Vec<u32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::qos::TenantQuota;
     use crate::config::Deployment;
 
     fn tiny_facerec() -> Config {
@@ -1040,6 +1387,150 @@ mod tests {
         assert!(m.produced > 0, "no faces produced");
         assert!(m.completed > 0, "no faces identified");
         assert!(m.completed <= m.produced);
+    }
+
+    fn tiny_tick(kind: WorkloadKind, seed: u64) -> Config {
+        let mut cfg = Config::default();
+        cfg.deployment = Deployment {
+            producers: 4,
+            consumers: 6,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 6,
+        };
+        cfg.duration_us = 5 * crate::util::units::SEC;
+        cfg.seed = seed;
+        // Keep the tiny worlds light: small training batches.
+        if kind == WorkloadKind::TrainIngest {
+            cfg.calibration.train.batch_bytes = 200_000.0;
+            cfg.calibration.train.fetch_min_bytes = 400_000;
+        }
+        cfg
+    }
+
+    #[test]
+    fn four_tenant_world_runs_every_workload_kind() {
+        let fr = tiny_facerec();
+        let mut od = tiny_facerec();
+        od.seed = 0xD07;
+        let tr = tiny_tick(WorkloadKind::TrainIngest, 0x7EA1);
+        let rpc = tiny_tick(WorkloadKind::Rpc, 0x59C);
+        let spec = FabricSpec::from_config(&fr);
+        let mut world = build(
+            &[
+                TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr },
+                TenantSpec { kind: WorkloadKind::ObjDet, cfg: &od },
+                TenantSpec { kind: WorkloadKind::TrainIngest, cfg: &tr },
+                TenantSpec { kind: WorkloadKind::Rpc, cfg: &rpc },
+            ],
+            &spec,
+            fr.duration_us,
+        );
+        world.run_until(fr.duration_us);
+        for t in 0..4 {
+            let m = &world.shared.tenants[t].metrics;
+            assert!(m.produced > 0, "tenant {t} produced nothing");
+            assert!(m.completed > 0, "tenant {t} completed nothing");
+            let s = summary_for_tenant(&world, t, "x");
+            assert_eq!(s.completed, m.completed);
+            assert!(s.e2e_p99_us > 0);
+        }
+    }
+
+    #[test]
+    fn zero_produce_quota_starves_only_the_capped_tenant() {
+        let fr = tiny_facerec();
+        let tr = tiny_tick(WorkloadKind::TrainIngest, 0x7EA1);
+        let spec = FabricSpec::from_config(&fr);
+        let qos = QosPolicy {
+            cpu_weights: None,
+            quotas: vec![
+                TenantQuota::default(),
+                TenantQuota { produce_bytes_per_sec: Some(0.0), ..Default::default() },
+            ],
+        };
+        let mut world = build_with_qos(
+            &[
+                TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr },
+                TenantSpec { kind: WorkloadKind::TrainIngest, cfg: &tr },
+            ],
+            &spec,
+            Some(&qos),
+            fr.duration_us,
+        );
+        world.run_until(fr.duration_us);
+        let fr_m = &world.shared.tenants[0].metrics;
+        let tr_m = &world.shared.tenants[1].metrics;
+        assert!(fr_m.completed > 0, "uncapped tenant must keep flowing");
+        assert!(tr_m.produced > 0, "capped tenant still produces locally");
+        assert_eq!(tr_m.completed, 0, "zero quota must admit nothing");
+        assert_eq!(tr_m.net_tx_bytes, 0.0, "no capped bytes may reach the wire");
+    }
+
+    #[test]
+    fn ample_quota_and_all_equal_weights_change_nothing_observable() {
+        // Quota far above offered load + no CPU weights: the QoS hooks
+        // charge buckets but never delay, so the run must be identical.
+        let fr = tiny_facerec();
+        let spec = FabricSpec::from_config(&fr);
+        let tenants = [TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr }];
+        let mut base = build(&tenants, &spec, fr.duration_us);
+        base.run_until(fr.duration_us);
+        let qos = QosPolicy {
+            cpu_weights: None,
+            quotas: vec![TenantQuota {
+                produce_bytes_per_sec: Some(1e15),
+                fetch_bytes_per_sec: Some(1e15),
+                burst_bytes: None,
+            }],
+        };
+        let mut capped = build_with_qos(&tenants, &spec, Some(&qos), fr.duration_us);
+        capped.run_until(fr.duration_us);
+        let a = &base.shared.tenants[0].metrics;
+        let b = &capped.shared.tenants[0].metrics;
+        assert_eq!(a.produced, b.produced);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.hist_e2e.p99(), b.hist_e2e.p99());
+        assert_eq!(a.net_tx_bytes, b.net_tx_bytes);
+        assert_eq!(base.processed(), capped.processed());
+    }
+
+    #[test]
+    fn tight_produce_quota_rate_limits_wire_bytes() {
+        // Train tenant offers ~4 × 2 MB/s = 8 MB/s (200 kB × 10/s × 4);
+        // cap it to 2 MB/s and the wire bytes must track the cap.
+        let tr = tiny_tick(WorkloadKind::TrainIngest, 0x7EA1);
+        let spec = FabricSpec::from_config(&tr);
+        let quota = 2_000_000.0;
+        let qos = QosPolicy {
+            cpu_weights: None,
+            quotas: vec![TenantQuota {
+                produce_bytes_per_sec: Some(quota),
+                ..Default::default()
+            }],
+        };
+        let mut world = build_with_qos(
+            &[TenantSpec { kind: WorkloadKind::TrainIngest, cfg: &tr }],
+            &spec,
+            Some(&qos),
+            tr.duration_us,
+        );
+        world.run_until(tr.duration_us);
+        let m = &world.shared.tenants[0].metrics;
+        let secs = tr.duration_us as f64 / 1e6;
+        assert!(m.completed > 0);
+        assert!(
+            m.net_tx_bytes <= quota * secs * 1.3,
+            "wire bytes {} must respect the {} B/s cap",
+            m.net_tx_bytes,
+            quota
+        );
+        assert!(
+            m.net_tx_bytes >= quota * secs * 0.5,
+            "cap should still let ~quota through, got {}",
+            m.net_tx_bytes
+        );
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! which stays small in stable runs, and the approximation error does not
 //! feed back.)
 
+use crate::broker::qos::WeightedCpuScheduler;
 use crate::config::hardware::NvmeSpec;
 use crate::config::KafkaTuning;
 use crate::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
@@ -39,6 +40,22 @@ pub struct BrokerNode {
     pub nic_rx: FifoServer,
     pub nic_tx: FifoServer,
     pub req_cpu: FifoServer,
+    /// Weighted request-CPU scheduler, installed by
+    /// [`Fabric::enable_weighted_cpu`]. When present it replaces the FIFO
+    /// `req_cpu` on the produce and fetch paths; when absent (the
+    /// default) request handling is bit-for-bit the pre-QoS FIFO.
+    pub req_cpu_wfq: Option<WeightedCpuScheduler>,
+}
+
+impl BrokerNode {
+    /// Submit `cpu` µs of request-handling work of scheduling class
+    /// `class`; FIFO unless a weighted scheduler is installed.
+    fn cpu_submit(&mut self, at: u64, class: u8, cpu: f64) -> u64 {
+        match &mut self.req_cpu_wfq {
+            Some(wfq) => wfq.submit(at, class as usize, cpu),
+            None => self.req_cpu.submit(at, cpu),
+        }
+    }
 }
 
 /// Fabric-internal events. The host simulator embeds these in its own
@@ -67,6 +84,8 @@ struct InFlight {
     partition: u32,
     leader: u32,
     bytes: f64,
+    /// Scheduling class (tenant id) for weighted request-CPU service.
+    class: u8,
     remaining_acks: u8,
     leader_stored: bool,
     active: bool,
@@ -101,6 +120,7 @@ impl Fabric {
                     // Request handling is parallel across Kafka's network/
                     // IO threads; modeled as an aggregate us-of-work server.
                     req_cpu: FifoServer::new(1e6 * tuning.request_handler_cores as f64, 0),
+                    req_cpu_wfq: None,
                 })
                 .collect(),
             tuning,
@@ -112,6 +132,23 @@ impl Fabric {
 
     pub fn broker_count(&self) -> usize {
         self.brokers.len()
+    }
+
+    /// Install per-tenant scheduling classes on every broker's request
+    /// CPU: class `i` (the tenant id passed to [`Fabric::send_classed`] /
+    /// [`Fabric::fetch_classed`]) receives a `weights[i] / Σweights`
+    /// share under contention. Replaces the FIFO request CPU; call before
+    /// any traffic flows.
+    pub fn enable_weighted_cpu(&mut self, weights: &[f64]) {
+        let rate = 1e6 * self.tuning.request_handler_cores as f64;
+        for b in &mut self.brokers {
+            b.req_cpu_wfq = Some(WeightedCpuScheduler::new(rate, weights));
+        }
+    }
+
+    /// Whether weighted request-CPU scheduling is active.
+    pub fn weighted_cpu_enabled(&self) -> bool {
+        self.brokers.first().map_or(false, |b| b.req_cpu_wfq.is_some())
     }
 
     fn request_cpu_us(&self, bytes: f64) -> f64 {
@@ -129,7 +166,8 @@ impl Fabric {
     }
 
     /// Begin a produce: the record leaves the client now; returns the
-    /// event that should be scheduled (leader NIC arrival).
+    /// event that should be scheduled (leader NIC arrival). Requests sent
+    /// through this entry point run in scheduling class 0.
     pub fn send(
         &mut self,
         now: u64,
@@ -141,6 +179,25 @@ impl Fabric {
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
     ) {
+        self.send_classed(now, partition, leader, bytes, token, 0, meter, producer_nic, out)
+    }
+
+    /// [`Fabric::send`] with an explicit scheduling class (tenant id).
+    /// The class rides the record through every request-CPU hop (leader
+    /// and followers); it is inert unless weighted scheduling is enabled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_classed(
+        &mut self,
+        now: u64,
+        partition: u32,
+        leader: u32,
+        bytes: f64,
+        token: u64,
+        class: u8,
+        meter: &mut BandwidthMeter,
+        producer_nic: &mut FifoServer,
+        out: &mut Vec<FabricOut>,
+    ) {
         meter.add(Class::Producer, Channel::Network, Dir::Write, bytes);
         let t_tx = producer_nic.submit(now, bytes) + WIRE_US;
         let fid = self.alloc(InFlight {
@@ -148,6 +205,7 @@ impl Fabric {
             partition,
             leader,
             bytes,
+            class,
             remaining_acks: (self.replication - 1) as u8,
             leader_stored: false,
             active: true,
@@ -159,15 +217,15 @@ impl Fabric {
     pub fn handle(&mut self, now: u64, ev: FabricEv, meter: &mut BandwidthMeter, out: &mut Vec<FabricOut>) {
         match ev {
             FabricEv::LeaderArrive { fid } => {
-                let (leader, bytes) = {
+                let (leader, bytes, class) = {
                     let f = &self.inflight[fid as usize];
-                    (f.leader as usize, f.bytes)
+                    (f.leader as usize, f.bytes, f.class)
                 };
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
                 let cpu = self.request_cpu_us(bytes);
                 let b = &mut self.brokers[leader];
                 let t_rx = b.nic_rx.submit(now, bytes);
-                let t_cpu = b.req_cpu.submit(t_rx, cpu);
+                let t_cpu = b.cpu_submit(t_rx, class, cpu);
                 out.push(FabricOut::Schedule(t_cpu, FabricEv::LeaderCpuDone { fid }));
             }
             FabricEv::LeaderCpuDone { fid } => {
@@ -193,12 +251,15 @@ impl Fabric {
                 }
             }
             FabricEv::FollowerArrive { fid, broker } => {
-                let bytes = self.inflight[fid as usize].bytes;
+                let (bytes, class) = {
+                    let f = &self.inflight[fid as usize];
+                    (f.bytes, f.class)
+                };
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
                 let cpu = self.request_cpu_us(bytes);
                 let b = &mut self.brokers[broker as usize];
                 let t_rx = b.nic_rx.submit(now, bytes);
-                let t_cpu = b.req_cpu.submit(t_rx, cpu);
+                let t_cpu = b.cpu_submit(t_rx, class, cpu);
                 out.push(FabricOut::Schedule(
                     t_cpu,
                     FabricEv::FollowerCpuDone { fid, broker },
@@ -250,9 +311,23 @@ impl Fabric {
         consumer_nic_rx: &mut FifoServer,
         meter: &mut BandwidthMeter,
     ) -> u64 {
+        self.fetch_classed(now, leader, bytes, 0, consumer_nic_rx, meter)
+    }
+
+    /// [`Fabric::fetch`] with an explicit scheduling class (tenant id);
+    /// inert unless weighted request-CPU scheduling is enabled.
+    pub fn fetch_classed(
+        &mut self,
+        now: u64,
+        leader: u32,
+        bytes: f64,
+        class: u8,
+        consumer_nic_rx: &mut FifoServer,
+        meter: &mut BandwidthMeter,
+    ) -> u64 {
         let cpu = self.request_cpu_us(bytes);
         let b = &mut self.brokers[leader as usize];
-        let t_cpu = b.req_cpu.submit(now, cpu);
+        let t_cpu = b.cpu_submit(now, class, cpu);
         let t_read = b.storage.read(t_cpu, bytes, true); // page cache
         let t_tx = b.nic_tx.submit(t_read, bytes) + WIRE_US;
         let t_rx = consumer_nic_rx.submit(t_tx, bytes);
@@ -293,7 +368,10 @@ impl Fabric {
     pub fn max_cpu_util(&self, elapsed_us: u64) -> f64 {
         self.brokers
             .iter()
-            .map(|b| b.req_cpu.utilization(elapsed_us))
+            .map(|b| match &b.req_cpu_wfq {
+                Some(wfq) => wfq.utilization(elapsed_us),
+                None => b.req_cpu.utilization(elapsed_us),
+            })
             .fold(0.0, f64::max)
     }
 }
@@ -438,6 +516,35 @@ mod tests {
         for b in &f.brokers {
             assert!(b.storage.write_spec_utilization(10_000_000) < 0.35);
         }
+    }
+
+    #[test]
+    fn weighted_cpu_commits_and_accounts_utilization() {
+        let mut f = fabric();
+        f.enable_weighted_cpu(&[1.0, 4.0]);
+        assert!(f.weighted_cpu_enabled());
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        // One record per class through the full produce path.
+        f.send_classed(0, 0, 0, 37_300.0, 1, 0, &mut meter, &mut nic, &mut out);
+        f.send_classed(0, 1, 1, 37_300.0, 2, 1, &mut meter, &mut nic, &mut out);
+        let mut commits = 0;
+        loop {
+            for o in out.drain(..) {
+                match o {
+                    FabricOut::Schedule(t, ev) => q.at(t, ev),
+                    FabricOut::Committed { .. } => commits += 1,
+                }
+            }
+            match q.pop() {
+                Some((t, ev)) => f.handle(t, ev, &mut meter, &mut out),
+                None => break,
+            }
+        }
+        assert_eq!(commits, 2, "both classes must commit under WFQ");
+        assert!(f.max_cpu_util(1_000_000) > 0.0);
     }
 
     #[test]

@@ -1,23 +1,34 @@
-//! Mixed tenancy: Face Recognition *and* Object Detection sharing one
-//! broker fabric and storage.
+//! Multi-tenancy: N heterogeneous AI pipelines sharing one broker fabric
+//! and storage.
 //!
 //! The paper measures each application on a dedicated cluster; the
 //! `sim::world` component kernel lets us go one step further and ask the
 //! question a real AI data center faces: what happens when heterogeneous
-//! AI pipelines share the coordination substrate? Both tenants keep their
+//! AI pipelines share the coordination substrate? Every tenant keeps its
 //! own producers, consumers, and topic partitions, but every produce and
 //! fetch contends for the same broker NICs, request CPUs, and NVMe write
 //! path — so one tenant's acceleration becomes the other tenant's broker
 //! wait. This was structurally impossible with the per-workload
 //! monolithic simulators (one event enum, one state machine each).
 //!
-//! [`MixedReport`] carries the two per-tenant reports (same fields as the
-//! dedicated runs, so all existing analyses apply) plus the shared-broker
-//! view; `experiments::mixed` sweeps the facerec:objdet mix Fig-11/15
-//! style.
+//! Two APIs, one machine:
+//!
+//! * [`TenantDef`] / [`MultiTenantConfig`] / [`MultiTenantSim`] — the
+//!   N-tenant registry: any mix of [`WorkloadKind`]s, each with its own
+//!   config and an optional per-tenant QoS spec (scheduling-class weight
+//!   plus produce/fetch quotas, realized through
+//!   [`crate::broker::qos::QosPolicy`]). Reports are generic
+//!   [`TenantSummary`]s plus the shared-broker view.
+//! * [`MixedConfig`] / [`MixedSim`] — the original two-tenant
+//!   facerec+objdet scenario, kept verbatim (it builds the identical
+//!   world; `tests/qos_regression.rs` pins that the registry path with
+//!   QoS disabled reproduces it bit for bit). [`MixedReport`] carries the
+//!   two full per-tenant reports, so all existing analyses apply;
+//!   `experiments::mixed` sweeps the facerec:objdet mix Fig-11/15 style.
 
+use crate::broker::qos::{QosPolicy, TenantQuota};
 use crate::config::Config;
-use crate::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
+use crate::pipeline::dc::{self, FabricSpec, TenantSpec, TenantSummary, WorkloadKind};
 use crate::pipeline::facerec::{self, SimReport};
 use crate::pipeline::objdet::{self, ObjDetReport};
 
@@ -136,6 +147,201 @@ impl MixedSim {
     }
 }
 
+// ---------------------------------------------------------------------------
+// N-tenant registry
+// ---------------------------------------------------------------------------
+
+/// Per-tenant QoS settings in the registry (realized as a
+/// [`QosPolicy`] when the world is built with QoS enabled).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantQosSpec {
+    /// Request-CPU scheduling-class weight (share under contention).
+    pub weight: f64,
+    /// Produce byte-rate cap, bytes/sec (`None` = uncapped).
+    pub produce_bytes_per_sec: Option<f64>,
+    /// Fetch byte-rate cap, bytes/sec (`None` = uncapped).
+    pub fetch_bytes_per_sec: Option<f64>,
+}
+
+impl Default for TenantQosSpec {
+    fn default() -> Self {
+        TenantQosSpec {
+            weight: 1.0,
+            produce_bytes_per_sec: None,
+            fetch_bytes_per_sec: None,
+        }
+    }
+}
+
+/// One tenant in the registry: a named workload with its own config and
+/// QoS spec. Registration order is the scheduling-class id.
+#[derive(Clone, Debug)]
+pub struct TenantDef {
+    pub name: String,
+    pub kind: WorkloadKind,
+    pub cfg: Config,
+    pub qos: TenantQosSpec,
+}
+
+impl TenantDef {
+    pub fn new(name: &str, kind: WorkloadKind, cfg: Config) -> Self {
+        TenantDef {
+            name: name.to_string(),
+            kind,
+            cfg,
+            qos: TenantQosSpec::default(),
+        }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.qos.weight = weight;
+        self
+    }
+
+    pub fn with_produce_quota(mut self, bytes_per_sec: f64) -> Self {
+        self.qos.produce_bytes_per_sec = Some(bytes_per_sec);
+        self
+    }
+
+    pub fn with_fetch_quota(mut self, bytes_per_sec: f64) -> Self {
+        self.qos.fetch_bytes_per_sec = Some(bytes_per_sec);
+        self
+    }
+}
+
+/// An N-tenant deployment on one shared fabric.
+#[derive(Clone, Debug)]
+pub struct MultiTenantConfig {
+    pub tenants: Vec<TenantDef>,
+    /// Fabric-defining config (brokers / drives / replication / node
+    /// hardware / tuning) — one broker fleet for everyone.
+    pub fabric: Config,
+    /// Shared virtual horizon.
+    pub duration_us: u64,
+    /// Apply each tenant's quotas (and, with [`Self::weighted_cpu`], its
+    /// scheduling-class weight). `false` = the pre-QoS shared-FIFO broker.
+    pub qos_enabled: bool,
+    /// Replace the FIFO request CPU with the deficit-weighted scheduler
+    /// (only meaningful when [`Self::qos_enabled`]).
+    pub weighted_cpu: bool,
+}
+
+impl MultiTenantConfig {
+    pub fn new(fabric: Config, duration_us: u64) -> Self {
+        MultiTenantConfig {
+            tenants: Vec::new(),
+            fabric,
+            duration_us,
+            qos_enabled: false,
+            weighted_cpu: false,
+        }
+    }
+
+    pub fn tenant(mut self, def: TenantDef) -> Self {
+        self.tenants.push(def);
+        self
+    }
+
+    pub fn with_qos(mut self, enabled: bool) -> Self {
+        self.qos_enabled = enabled;
+        self.weighted_cpu = enabled;
+        self
+    }
+
+    /// The [`QosPolicy`] this registry induces (`None` when disabled).
+    pub fn policy(&self) -> Option<QosPolicy> {
+        if !self.qos_enabled {
+            return None;
+        }
+        Some(QosPolicy {
+            cpu_weights: self
+                .weighted_cpu
+                .then(|| self.tenants.iter().map(|t| t.qos.weight).collect()),
+            quotas: self
+                .tenants
+                .iter()
+                .map(|t| TenantQuota {
+                    produce_bytes_per_sec: t.qos.produce_bytes_per_sec,
+                    fetch_bytes_per_sec: t.qos.fetch_bytes_per_sec,
+                    burst_bytes: None,
+                })
+                .collect(),
+        })
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty(), "registry needs tenants");
+        anyhow::ensure!(self.duration_us > 0, "multi-tenant run needs a horizon");
+        anyhow::ensure!(
+            self.tenants.len() <= u8::MAX as usize,
+            "tenant ids are u8"
+        );
+        for t in &self.tenants {
+            t.cfg.deployment.validate()?;
+            anyhow::ensure!(t.qos.weight > 0.0, "tenant {} needs weight > 0", t.name);
+        }
+        Ok(())
+    }
+}
+
+/// Results of one N-tenant run: generic per-tenant summaries plus the
+/// shared-broker view.
+#[derive(Clone, Debug)]
+pub struct MultiTenantReport {
+    pub tenants: Vec<TenantSummary>,
+    pub broker_storage_write_util: f64,
+    pub broker_net_rx_util: f64,
+    pub broker_cpu_util: f64,
+    pub events: u64,
+}
+
+impl MultiTenantReport {
+    pub fn tenant(&self, name: &str) -> Option<&TenantSummary> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
+/// The N-tenant simulator: any workload mix, one world, one fabric,
+/// optional broker QoS.
+pub struct MultiTenantSim {
+    cfg: MultiTenantConfig,
+}
+
+impl MultiTenantSim {
+    pub fn new(cfg: MultiTenantConfig) -> Self {
+        cfg.validate().expect("invalid multi-tenant deployment");
+        MultiTenantSim { cfg }
+    }
+
+    pub fn run(&self) -> MultiTenantReport {
+        let c = &self.cfg;
+        let spec = FabricSpec::from_config(&c.fabric);
+        let tenant_specs: Vec<TenantSpec<'_>> = c
+            .tenants
+            .iter()
+            .map(|t| TenantSpec { kind: t.kind, cfg: &t.cfg })
+            .collect();
+        let policy = c.policy();
+        let mut world =
+            dc::build_with_qos(&tenant_specs, &spec, policy.as_ref(), c.duration_us);
+        world.run_until(c.duration_us);
+
+        let elapsed = c.duration_us;
+        MultiTenantReport {
+            tenants: c
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| dc::summary_for_tenant(&world, i, &t.name))
+                .collect(),
+            broker_storage_write_util: world.shared.fabric.max_storage_write_util(elapsed),
+            broker_net_rx_util: world.shared.fabric.max_nic_rx_util(elapsed),
+            broker_cpu_util: world.shared.fabric.max_cpu_util(elapsed),
+            events: world.processed(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +417,75 @@ mod tests {
         assert_eq!(a.facerec.faces_completed, b.facerec.faces_completed);
         assert_eq!(a.objdet.frames_detected, b.objdet.frames_detected);
         assert_eq!(a.events, b.events);
+    }
+
+    /// A small 3-tenant registry: facerec + training ingest + rpc.
+    fn small_registry() -> MultiTenantConfig {
+        let mut fr = Config::default();
+        fr.deployment = Deployment {
+            producers: 40,
+            consumers: 60,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 60,
+        };
+        fr.seed = 0xACCE1;
+        let mut tr = Config::default();
+        tr.deployment = Deployment {
+            producers: 8,
+            consumers: 8,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 8,
+        };
+        tr.calibration.train.batch_bytes = 250_000.0;
+        tr.calibration.train.fetch_min_bytes = 500_000;
+        tr.seed = 0x7EA1;
+        let mut rpc = Config::default();
+        rpc.deployment = Deployment::rpc_service();
+        rpc.seed = 0x59C;
+        let fabric = fr.clone();
+        MultiTenantConfig::new(fabric, 10 * SEC)
+            .tenant(TenantDef::new("facerec", WorkloadKind::FaceRec, fr))
+            .tenant(
+                TenantDef::new("train", WorkloadKind::TrainIngest, tr)
+                    .with_produce_quota(1_000_000.0),
+            )
+            .tenant(TenantDef::new("rpc", WorkloadKind::Rpc, rpc).with_weight(8.0))
+    }
+
+    #[test]
+    fn registry_runs_n_tenants_without_qos() {
+        let mut cfg = small_registry();
+        cfg.qos_enabled = false;
+        let r = MultiTenantSim::new(cfg).run();
+        assert_eq!(r.tenants.len(), 3);
+        for t in &r.tenants {
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+        }
+        assert!(r.tenant("rpc").is_some());
+        assert!(r.events > 10_000);
+    }
+
+    #[test]
+    fn registry_applies_quotas_and_weights_when_enabled() {
+        let off = MultiTenantSim::new(small_registry()).run();
+        let on = MultiTenantSim::new(small_registry().with_qos(true)).run();
+        // The train tenant offers 8 × 2.5 MB/s = 20 MB/s but is capped to
+        // 1 MB/s: its wire bytes must collapse relative to the open run.
+        let train_off = off.tenant("train").unwrap();
+        let train_on = on.tenant("train").unwrap();
+        assert!(train_off.completed > 0 && train_on.completed > 0);
+        assert!(
+            (train_on.completed as f64) < 0.5 * train_off.completed as f64,
+            "quota must throttle train completions: {} vs {}",
+            train_on.completed,
+            train_off.completed
+        );
+        // The protected tenants keep flowing under QoS.
+        assert!(on.tenant("facerec").unwrap().completed > 0);
+        assert!(on.tenant("rpc").unwrap().completed > 0);
     }
 }

@@ -20,9 +20,14 @@
 //!   source + stage costs + report assembly. Regenerates Figs 6, 7, 10,
 //!   11, 15.
 //! * [`objdet`] — Object Detection likewise (Figs 13, 14).
-//! * [`mixed`] — the mixed-tenancy scenario the component kernel makes
-//!   possible: both applications sharing one broker fabric and storage,
-//!   with per-tenant latency breakdowns and cross-tenant interference.
+//! * [`train`] — the training-ingest tenant (large sequential writes)
+//!   and [`rpc`] — the RPC-style low-latency tenant; both ~100-LoC
+//!   workload definitions over the same deployment layer.
+//! * [`mixed`] — multi-tenancy, the scenario the component kernel makes
+//!   possible: an N-tenant registry ([`mixed::TenantDef`]) colocating any
+//!   mix of workloads on one broker fabric and storage, with per-tenant
+//!   latency breakdowns, cross-tenant interference, and optional broker
+//!   QoS ([`crate::broker::qos`]).
 
 pub mod dc;
 pub mod fabric;
@@ -30,13 +35,20 @@ pub mod facerec;
 pub mod frame;
 pub mod mixed;
 pub mod objdet;
+pub mod rpc;
 pub mod scaling;
 pub mod stage;
+pub mod train;
 pub mod video;
 
 pub use facerec::{FaceRecSim, SimReport};
 pub use frame::{Face, Frame, Identity};
-pub use mixed::{MixedConfig, MixedReport, MixedSim};
+pub use mixed::{
+    MixedConfig, MixedReport, MixedSim, MultiTenantConfig, MultiTenantReport, MultiTenantSim,
+    TenantDef, TenantQosSpec,
+};
 pub use objdet::{ObjDetReport, ObjDetSim};
+pub use rpc::RpcSim;
 pub use stage::StageModel;
+pub use train::TrainIngestSim;
 pub use video::VideoSource;

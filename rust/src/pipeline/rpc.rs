@@ -1,0 +1,111 @@
+//! The *RPC-style low-latency* tenant: small records, tight tail SLO.
+//!
+//! The second ROADMAP workload: request/response traffic riding the same
+//! broker substrate — 2 kB records, `fetch.min.bytes` = 1 so consumers
+//! fetch the instant a record commits, and sub-millisecond handlers. Its
+//! byte footprint is negligible (a few MB/s against the brokers'
+//! hundreds), which is precisely what makes it the canary for
+//! cross-tenant interference: every microsecond of its end-to-end budget
+//! is broker mechanism — NIC, request CPU, NVMe commit, replication —
+//! so when a bulk tenant saturates the shared write path, the RPC p99
+//! explodes long before any throughput metric moves. The
+//! `experiments::qos` sweeps measure that against the
+//! [`slo_p99_us`](crate::config::calibration::RpcCosts::slo_p99_us)
+//! objective, with broker QoS classes/quotas as the mitigation.
+//!
+//! A thin workload definition over [`pipeline::dc`](crate::pipeline::dc):
+//! costs from [`RpcCosts`](crate::config::calibration::RpcCosts),
+//! mechanics from `ProducerKind::Tick` with one request per period.
+
+use crate::config::Config;
+use crate::pipeline::dc::{self, TenantSummary, WorkloadKind};
+
+/// Results of one dedicated RPC-tenant run.
+#[derive(Clone, Debug)]
+pub struct RpcReport {
+    pub summary: TenantSummary,
+    /// The configured p99 objective, for SLO verdicts.
+    pub slo_p99_us: u64,
+}
+
+impl RpcReport {
+    /// Did the run meet its end-to-end p99 objective?
+    pub fn slo_met(&self) -> bool {
+        self.summary.e2e_p99_us <= self.slo_p99_us
+    }
+}
+
+/// The simulator: one RPC tenant on a dedicated world.
+pub struct RpcSim {
+    cfg: Config,
+}
+
+impl RpcSim {
+    pub fn new(cfg: Config) -> Self {
+        cfg.deployment.validate().expect("invalid deployment");
+        RpcSim { cfg }
+    }
+
+    pub fn run(&self) -> RpcReport {
+        let cfg = &self.cfg;
+        let spec = dc::FabricSpec::from_config(cfg);
+        let mut world = dc::build(
+            &[dc::TenantSpec { kind: WorkloadKind::Rpc, cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        world.run_until(cfg.duration_us);
+        RpcReport {
+            summary: dc::summary_for_tenant(&world, 0, "rpc"),
+            slo_p99_us: cfg.calibration.rpc.slo_p99_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+
+    fn config() -> Config {
+        let mut cfg = Config::default();
+        cfg.deployment = Deployment::rpc_service();
+        cfg.duration_us = 10 * crate::util::units::SEC;
+        cfg.seed = 0x59C;
+        cfg
+    }
+
+    #[test]
+    fn dedicated_rpc_meets_its_slo_with_room() {
+        let r = RpcSim::new(config()).run();
+        // 20 clients × 100 req/s × 10 s ≈ 20k requests.
+        assert!(
+            (15_000..=25_000).contains(&r.summary.produced),
+            "requests={}",
+            r.summary.produced
+        );
+        assert!(r.summary.stable);
+        assert!(
+            r.slo_met(),
+            "dedicated run must meet the SLO: p99 {} vs {}",
+            r.summary.e2e_p99_us,
+            r.slo_p99_us
+        );
+        // On an idle fabric the p99 should not even be close — the SLO
+        // headroom is what colocation later eats.
+        assert!(
+            r.summary.e2e_p99_us < r.slo_p99_us / 2,
+            "p99 {} should be far below the {} SLO when alone",
+            r.summary.e2e_p99_us,
+            r.slo_p99_us
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = RpcSim::new(config()).run();
+        let b = RpcSim::new(config()).run();
+        assert_eq!(a.summary.completed, b.summary.completed);
+        assert_eq!(a.summary.e2e_p99_us, b.summary.e2e_p99_us);
+    }
+}

@@ -1,0 +1,100 @@
+//! The *training-ingest* tenant: large sequential writes.
+//!
+//! The ROADMAP's first new workload beyond the paper's two applications —
+//! a data-loader fleet streaming ~1 MB shard batches through the broker
+//! to training readers. Its AI-tax signature is the opposite of Face
+//! Recognition's: almost no producer compute, enormous bytes-per-record,
+//! throughput-tuned consumers (`fetch.min.bytes` of several batches). It
+//! exists to stress the shared NVMe write path — colocate it with a
+//! latency-sensitive tenant and the broker wait it manufactures lands on
+//! *them* (the `experiments::qos` sweeps quantify exactly that, and the
+//! per-tenant produce quota in [`crate::broker::qos`] is the mitigation).
+//!
+//! Like `facerec`/`objdet`, this file is a thin workload definition over
+//! [`pipeline::dc`](crate::pipeline::dc): costs come from
+//! [`TrainCosts`](crate::config::calibration::TrainCosts), the mechanics
+//! from `ProducerKind::Tick`, and the report below is the generic
+//! [`TenantSummary`] plus the tenant's storage pressure.
+
+use crate::config::Config;
+use crate::pipeline::dc::{self, TenantSummary, WorkloadKind};
+
+/// Results of one dedicated training-ingest run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub summary: TenantSummary,
+    /// Substrate-wide max storage-write utilization (spec-relative).
+    pub storage_write_util: f64,
+    /// Produce bytes this tenant put on the wire.
+    pub net_tx_bytes: f64,
+}
+
+/// The simulator: one training-ingest tenant on a dedicated world.
+pub struct TrainIngestSim {
+    cfg: Config,
+}
+
+impl TrainIngestSim {
+    pub fn new(cfg: Config) -> Self {
+        cfg.deployment.validate().expect("invalid deployment");
+        TrainIngestSim { cfg }
+    }
+
+    pub fn run(&self) -> TrainReport {
+        let cfg = &self.cfg;
+        let spec = dc::FabricSpec::from_config(cfg);
+        let mut world = dc::build(
+            &[dc::TenantSpec { kind: WorkloadKind::TrainIngest, cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        world.run_until(cfg.duration_us);
+        TrainReport {
+            summary: dc::summary_for_tenant(&world, 0, "train-ingest"),
+            storage_write_util: world.shared.fabric.max_storage_write_util(cfg.duration_us),
+            net_tx_bytes: world.shared.tenants[0].metrics.net_tx_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+
+    fn config() -> Config {
+        let mut cfg = Config::default();
+        cfg.deployment = Deployment::train_ingest();
+        cfg.duration_us = 10 * crate::util::units::SEC;
+        cfg.seed = 0x7EA1;
+        cfg
+    }
+
+    #[test]
+    fn steady_ingest_is_stable_and_write_heavy() {
+        let r = TrainIngestSim::new(config()).run();
+        // 16 writers × 10 batches/s × 10 s ≈ 1600 batches.
+        assert!(
+            (1_200..=1_800).contains(&r.summary.produced),
+            "batches={}",
+            r.summary.produced
+        );
+        assert!(r.summary.completed > 0, "no batches consumed");
+        assert!(r.summary.stable, "dedicated ingest must be stable");
+        // ~160 MB/s of produce against the 1.1 GB/s spec drive ≈ 15%
+        // spec-relative (×3 replication / 3 brokers cancels out).
+        assert!(
+            (0.05..0.40).contains(&r.storage_write_util),
+            "write util={}",
+            r.storage_write_util
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TrainIngestSim::new(config()).run();
+        let b = TrainIngestSim::new(config()).run();
+        assert_eq!(a.summary.completed, b.summary.completed);
+        assert_eq!(a.summary.e2e_p99_us, b.summary.e2e_p99_us);
+    }
+}

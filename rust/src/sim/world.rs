@@ -26,6 +26,22 @@
 //!   can freely mutate the queue and shared state without aliasing
 //!   itself. Components therefore cannot call each other directly — they
 //!   communicate via events or via `S`, which is the point.
+//!
+//! Lifecycle and event-routing contract:
+//!
+//! 1. **Build** — `World::new(shared)`, then [`World::add`] each
+//!    component (ids are registration order; use [`CompId::INVALID`] as a
+//!    placeholder in `S` until the real ids exist, but overwrite it
+//!    before running). Seed initial events with [`World::schedule`].
+//! 2. **Run** — [`World::run_until`] pops `(time, seq)`-ordered events
+//!    and routes each to its destination's [`Component::on_event`];
+//!    handlers read the clock via [`Ctx::now`], mutate [`Ctx::shared`],
+//!    and schedule follow-ups with [`Ctx::at`] / [`Ctx::after`] /
+//!    [`Ctx::at_self`]. Events addressed to an unregistered component
+//!    panic — there is no dead-letter queue by design.
+//! 3. **Inspect** — after the run, read results out of `world.shared`
+//!    and, for component-private state, downcast via
+//!    [`World::component`].
 
 use crate::sim::engine::EventQueue;
 
@@ -85,6 +101,45 @@ impl<'a, E, S> Ctx<'a, E, S> {
 }
 
 /// The simulation world: event queue + component registry + shared state.
+///
+/// # Example: a minimal two-component simulation
+///
+/// ```
+/// use aitax::sim::world::{CompId, Component, Ctx, World};
+///
+/// enum Ev { Kick, Echo }
+///
+/// #[derive(Default)]
+/// struct Shared { echoes: Vec<u64> }
+///
+/// /// Forwards every event to a peer after 10 µs.
+/// struct Kicker { peer: CompId }
+/// impl Component<Ev, Shared> for Kicker {
+///     fn on_event(&mut self, ctx: &mut Ctx<'_, Ev, Shared>, _ev: Ev) {
+///         let peer = self.peer;
+///         ctx.after(10, peer, Ev::Echo);
+///     }
+///     fn as_any(&self) -> &dyn std::any::Any { self }
+/// }
+///
+/// /// Records each arrival time in the shared state.
+/// struct Echoer;
+/// impl Component<Ev, Shared> for Echoer {
+///     fn on_event(&mut self, ctx: &mut Ctx<'_, Ev, Shared>, _ev: Ev) {
+///         let now = ctx.now();
+///         ctx.shared.echoes.push(now);
+///     }
+///     fn as_any(&self) -> &dyn std::any::Any { self }
+/// }
+///
+/// let mut world: World<Ev, Shared> = World::new(Shared::default());
+/// let echoer = world.add(Box::new(Echoer));
+/// let kicker = world.add(Box::new(Kicker { peer: echoer }));
+/// world.schedule(5, kicker, Ev::Kick);   // kick @5 → echo @15
+/// world.run_until(1_000);
+/// assert_eq!(world.shared.echoes, vec![15]);
+/// assert_eq!(world.processed(), 2);
+/// ```
 pub struct World<E, S> {
     queue: EventQueue<(CompId, E)>,
     components: Vec<Option<Box<dyn Component<E, S>>>>,

@@ -1,0 +1,158 @@
+//! QoS-off fidelity + quota edge cases.
+//!
+//! The broker-QoS subsystem (scheduling classes + topic quotas) is
+//! strictly opt-in. These tests pin the contract:
+//!
+//! 1. the two-tenant `MixedSim` report — PR 1's golden mixed scenario —
+//!    is reproduced *byte-identically* by the N-tenant registry with QoS
+//!    disabled (same world, same events, same RNG draws, same floats);
+//! 2. an installed-but-slack policy (quota far above offered load, no
+//!    CPU weights) is observationally a no-op;
+//! 3. a zero quota starves exactly the capped tenant and nothing else.
+//!
+//! Together with `golden_reports.rs` (single-tenant vs the legacy
+//! monolithic loops) this keeps the QoS-off paths pinned to the
+//! pre-QoS behavior at every layer.
+
+use aitax::config::{Config, Deployment};
+use aitax::pipeline::dc::WorkloadKind;
+use aitax::pipeline::mixed::{
+    MixedConfig, MixedSim, MultiTenantConfig, MultiTenantSim, TenantDef,
+};
+use aitax::util::units::SEC;
+
+/// The PR-1 mixed scenario scaled down (same shape as the `mixed` module
+/// tests) so the differential runs fast.
+fn small_mixed(fr_accel: f64, od_accel: f64) -> MixedConfig {
+    let mut cfg = MixedConfig::paper_accel(fr_accel, od_accel);
+    cfg.facerec.deployment = Deployment {
+        producers: 75,
+        consumers: 114,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 114,
+    };
+    cfg.objdet.deployment = Deployment {
+        producers: 5,
+        consumers: 480,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 480,
+    };
+    cfg.fabric = cfg.facerec.clone();
+    cfg.with_duration(15 * SEC)
+}
+
+/// The same two tenants expressed through the N-tenant registry.
+fn registry_equivalent(cfg: &MixedConfig, qos_enabled: bool) -> MultiTenantConfig {
+    let mut mt = MultiTenantConfig::new(cfg.fabric.clone(), cfg.duration_us)
+        .tenant(TenantDef::new(
+            "facerec",
+            WorkloadKind::FaceRec,
+            cfg.facerec.clone(),
+        ))
+        .tenant(TenantDef::new(
+            "objdet",
+            WorkloadKind::ObjDet,
+            cfg.objdet.clone(),
+        ));
+    mt.qos_enabled = qos_enabled;
+    mt
+}
+
+/// Exact float equality — the QoS-off refactor must not change a single
+/// operation.
+fn same_f64(a: f64, b: f64, what: &str) {
+    assert!(a == b, "{what}: mixed {a} vs registry {b}");
+}
+
+#[test]
+fn registry_with_qos_off_reproduces_the_mixed_report_byte_identically() {
+    let cfg = small_mixed(4.0, 6.0);
+    let mixed = MixedSim::new(cfg.clone()).run();
+    let multi = MultiTenantSim::new(registry_equivalent(&cfg, false)).run();
+
+    // Identical worlds ⇒ identical event counts...
+    assert_eq!(mixed.events, multi.events, "event streams diverged");
+    // ...identical per-tenant counters...
+    let fr = multi.tenant("facerec").unwrap();
+    let od = multi.tenant("objdet").unwrap();
+    assert_eq!(mixed.facerec.faces_produced, fr.produced);
+    assert_eq!(mixed.facerec.faces_completed, fr.completed);
+    assert_eq!(mixed.objdet.frames_sent, od.produced);
+    assert_eq!(mixed.objdet.frames_detected, od.completed);
+    // ...and identical floats, to the last bit.
+    same_f64(mixed.facerec.wait_mean_us, fr.wait_mean_us, "fr wait_mean");
+    same_f64(mixed.facerec.e2e_mean_us, fr.e2e_mean_us, "fr e2e_mean");
+    assert_eq!(mixed.facerec.e2e_p99_us, fr.e2e_p99_us, "fr e2e_p99");
+    assert_eq!(mixed.facerec.wait_p99_us, fr.wait_p99_us, "fr wait_p99");
+    same_f64(mixed.objdet.wait_mean_us, od.wait_mean_us, "od wait_mean");
+    same_f64(mixed.objdet.e2e_mean_us, od.e2e_mean_us, "od e2e_mean");
+    assert_eq!(mixed.objdet.e2e_p99_us, od.e2e_p99_us, "od e2e_p99");
+    same_f64(
+        mixed.broker_storage_write_util,
+        multi.broker_storage_write_util,
+        "storage_write_util",
+    );
+    same_f64(mixed.broker_cpu_util, multi.broker_cpu_util, "cpu_util");
+    same_f64(mixed.broker_net_rx_util, multi.broker_net_rx_util, "net_rx_util");
+}
+
+#[test]
+fn slack_quotas_without_weights_are_a_noop() {
+    // Quota orders of magnitude above offered load, no CPU weights: the
+    // hooks charge buckets but never delay anything, so every observable
+    // matches the unpoliced run exactly.
+    let cfg = small_mixed(2.0, 2.0);
+    let open = MultiTenantSim::new(registry_equivalent(&cfg, false)).run();
+
+    let mut policed_cfg = registry_equivalent(&cfg, true);
+    policed_cfg.weighted_cpu = false;
+    for t in &mut policed_cfg.tenants {
+        t.qos.produce_bytes_per_sec = Some(1e15);
+        t.qos.fetch_bytes_per_sec = Some(1e15);
+    }
+    let policed = MultiTenantSim::new(policed_cfg).run();
+
+    assert_eq!(open.events, policed.events);
+    for (a, b) in open.tenants.iter().zip(&policed.tenants) {
+        assert_eq!(a.produced, b.produced, "{}: produced", a.name);
+        assert_eq!(a.completed, b.completed, "{}: completed", a.name);
+        assert_eq!(a.e2e_p99_us, b.e2e_p99_us, "{}: e2e_p99", a.name);
+        same_f64(a.wait_mean_us, b.wait_mean_us, "wait_mean");
+        same_f64(a.e2e_mean_us, b.e2e_mean_us, "e2e_mean");
+    }
+    same_f64(
+        open.broker_storage_write_util,
+        policed.broker_storage_write_util,
+        "storage_write_util",
+    );
+}
+
+#[test]
+fn zero_quota_starves_exactly_the_capped_tenant() {
+    let cfg = small_mixed(1.0, 1.0);
+    let mut policed = registry_equivalent(&cfg, true);
+    policed.weighted_cpu = false;
+    // Cap objdet to zero; leave facerec uncapped.
+    policed.tenants[1].qos.produce_bytes_per_sec = Some(0.0);
+    let r = MultiTenantSim::new(policed).run();
+
+    let fr = r.tenant("facerec").unwrap();
+    let od = r.tenant("objdet").unwrap();
+    assert!(fr.completed > 0, "uncapped tenant must keep completing");
+    assert!(od.produced > 0, "capped tenant still generates load locally");
+    assert_eq!(od.completed, 0, "zero quota must starve the capped tenant");
+
+    // And the uncapped tenant now sees *less* broker pressure than in
+    // the open two-tenant run: starvation is isolation, not collapse.
+    let open = MultiTenantSim::new(registry_equivalent(&cfg, false)).run();
+    assert!(
+        r.broker_storage_write_util < open.broker_storage_write_util,
+        "capping a tenant must shed shared write pressure: {} vs {}",
+        r.broker_storage_write_util,
+        open.broker_storage_write_util
+    );
+}
