@@ -6,7 +6,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench doc fmt clippy clean
+.PHONY: artifacts build test bench bench-kernel doc fmt clippy clean
 
 # AOT-lower the JAX face-pipeline models to HLO text + manifest. Python
 # (jax + the Pallas kernels) is required only for this step; everything
@@ -22,6 +22,11 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# The perf-trajectory benchmark: DES events/sec + parallel-sweep scaling,
+# written to rust/BENCH_kernel.json (see README "Performance").
+bench-kernel:
+	cd rust && cargo run --release -- bench kernel
 
 # Rustdoc with warnings denied (what CI enforces) + the doctests.
 doc:

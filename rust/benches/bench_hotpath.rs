@@ -10,6 +10,7 @@ use aitax::broker::controller::Controller;
 use aitax::broker::record::{Record, RecordBatch};
 use aitax::broker::topic::TopicPartition;
 use aitax::config::{Config, Deployment};
+use aitax::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
 use aitax::pipeline::facerec::FaceRecSim;
 use aitax::sim::engine::EventQueue;
 use aitax::sim::resource::FifoServer;
@@ -33,16 +34,35 @@ fn main() {
         }
     });
 
+    // Deep backlog: 64k pending events is the regime the 4-ary heap's
+    // shallower sift-down is for (a paper-scale facerec world keeps tens
+    // of thousands of events in flight).
+    b.run("event queue push+pop (64k backlog)", 65_536.0, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = Rng::new(2);
+        for i in 0..65_536u64 {
+            q.at(rng.below(1 << 20), i);
+        }
+        while let Some(x) = q.pop() {
+            std::hint::black_box(x);
+        }
+    });
+
     // --- whole-simulation events/second ---
     let mut cfg = Config::default();
     cfg.deployment = Deployment::facerec_accel();
     cfg.duration_us = 10 * 1_000_000;
     cfg.accel = 4.0;
     let sim_events = {
-        // Count events via one instrumented run: faces ~ producers*fps*dur.
-        let r = FaceRecSim::new(cfg.clone()).run();
-        // ~12 events per face through the fabric + frame + polls.
-        (r.faces_produced * 12 + r.frames_ingested) as f64
+        // Exact dispatch count from the kernel itself (one counting run).
+        let spec = FabricSpec::from_config(&cfg);
+        let mut world = dc::build(
+            &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        world.run_until(cfg.duration_us);
+        world.processed() as f64
     };
     b.run_once("facerec DES 10s @4x (300p/455c)", sim_events, || {
         std::hint::black_box(FaceRecSim::new(cfg.clone()).run());

@@ -13,7 +13,9 @@
 //!    linger/fetch timers) are what the reproduction claims.
 
 /// Per-stage compute-cost model for *Face Recognition* (§4.2-§4.3).
-#[derive(Clone, Debug)]
+/// Plain scalars — `Copy`, so simulation builds pass it by value instead
+/// of cloning through the config tree.
+#[derive(Clone, Copy, Debug)]
 pub struct StageCosts {
     /// Mean ingestion time per frame, us (paper: 18.8 ms).
     pub ingest_us: f64,

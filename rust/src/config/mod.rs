@@ -144,7 +144,9 @@ impl Deployment {
 
 /// Kafka-style client/broker tuning parameters (§3.4, §5.5: "we have tuned
 /// these parameters to find settings that ensure good behavior").
-#[derive(Clone, Debug)]
+/// Plain scalars — `Copy`, so the fabric and every per-build consumer take
+/// it by value instead of cloning through the config tree.
+#[derive(Clone, Copy, Debug)]
 pub struct KafkaTuning {
     /// Producer linger: how long a producer holds a batch open waiting for
     /// more records before sending (microseconds).

@@ -45,6 +45,12 @@ pub struct LiveConfig {
     pub file_backed: bool,
     /// Use the batched identification executable on the consumer side.
     pub batched_identify: bool,
+    /// Produce byte-rate quota on the `faces` topic (bytes/sec; 0 =
+    /// uncapped). Producers publish through
+    /// [`Controller::produce_throttled`] and honor its Kafka-style mute
+    /// delay wall-clock, so the live path shares the simulator's quota
+    /// semantics (`broker::qos::TokenBucket`).
+    pub produce_quota_bytes_per_sec: f64,
     pub tuning: KafkaTuning,
     pub seed: u64,
 }
@@ -61,6 +67,7 @@ impl Default for LiveConfig {
             fps_limit: 0.0,
             file_backed: false,
             batched_identify: false,
+            produce_quota_bytes_per_sec: 0.0,
             tuning: KafkaTuning {
                 // Live scale is tiny; shorten the timers accordingly.
                 linger_us: 4_000,
@@ -132,6 +139,9 @@ impl LiveRunner {
             controller.add_broker(b as u32, backend);
         }
         controller.create_topic("faces", cfg.partitions, cfg.replication as u32)?;
+        if cfg.produce_quota_bytes_per_sec > 0.0 {
+            controller.set_topic_quota("faces", cfg.produce_quota_bytes_per_sec);
+        }
 
         let shared = Arc::new(Shared {
             controller: Mutex::new(controller),
@@ -210,6 +220,18 @@ impl LiveRunner {
     }
 }
 
+/// Honor a quota mute delay without overshooting shutdown: sleep in
+/// short slices and bail as soon as the run's stop flag is set (a tiny
+/// quota can return mute delays far longer than the run itself).
+fn throttle_sleep(shared: &Shared, throttle_us: u64) {
+    let mut left = throttle_us;
+    while left > 0 && !shared.stop.load(Ordering::SeqCst) {
+        let slice = left.min(50_000);
+        std::thread::sleep(Duration::from_micros(slice));
+        left -= slice;
+    }
+}
+
 /// Generate frames, run preprocess+detect inference, publish faces.
 fn producer_loop(id: u64, cfg: &LiveConfig, shared: &Shared) -> Result<()> {
     let engine = Engine::load_producer_side()
@@ -279,19 +301,29 @@ fn producer_loop(id: u64, cfg: &LiveConfig, shared: &Shared) -> Result<()> {
         }
 
         // ---- publish through the broker client ----
+        // The quota-aware produce path: every batch goes through
+        // `produce_throttled`, and a non-zero throttle mutes this
+        // producer for the delay (Kafka's throttled-channel semantics),
+        // honored wall-clock *outside* the controller lock.
         for mut face in faces {
             face.detected_at_us = t2;
             let payload = face.encode();
             shared.faces_produced.fetch_add(1, Ordering::Relaxed);
             if let Some(batch) = producer.send(Record::new(face.frame_id, t2, payload), shared.now_us())
             {
-                let mut ctl = shared.controller.lock().unwrap();
-                ctl.produce(&batch.tp, &batch.batch)?;
+                let throttle_us = {
+                    let mut ctl = shared.controller.lock().unwrap();
+                    ctl.produce_throttled(&batch.tp, &batch.batch, shared.now_us())?.1
+                };
+                throttle_sleep(shared, throttle_us);
             }
         }
         for batch in producer.poll(shared.now_us()) {
-            let mut ctl = shared.controller.lock().unwrap();
-            ctl.produce(&batch.tp, &batch.batch)?;
+            let throttle_us = {
+                let mut ctl = shared.controller.lock().unwrap();
+                ctl.produce_throttled(&batch.tp, &batch.batch, shared.now_us())?.1
+            };
+            throttle_sleep(shared, throttle_us);
         }
 
         // ---- optional frame pacing ----
@@ -302,10 +334,12 @@ fn producer_loop(id: u64, cfg: &LiveConfig, shared: &Shared) -> Result<()> {
             }
         }
     }
-    // Flush the tail so consumers can drain.
+    // Flush the tail so consumers can drain. Still metered through the
+    // quota bucket, but the run is over — no further sends exist for a
+    // mute delay to pace, so the tail drains without sleeping.
     for batch in producer.flush() {
         let mut ctl = shared.controller.lock().unwrap();
-        ctl.produce(&batch.tp, &batch.batch)?;
+        ctl.produce_throttled(&batch.tp, &batch.batch, shared.now_us())?;
     }
     Ok(())
 }
@@ -477,6 +511,37 @@ mod tests {
                 "no events for {kind:?}"
             );
         }
+    }
+
+    #[test]
+    fn produce_quota_caps_live_wire_bytes() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let quota = 200_000.0; // bytes/sec on the faces topic
+        let secs = 6u64;
+        let cfg = LiveConfig {
+            producers: 1,
+            consumers: 1,
+            partitions: 2,
+            duration: Duration::from_secs(secs),
+            produce_quota_bytes_per_sec: quota,
+            ..LiveConfig::default()
+        };
+        let report = LiveRunner::new(cfg).run().expect("live run");
+        // The pipeline still flows under the cap...
+        assert!(report.faces_produced > 0);
+        // ...but the broker log (client bytes x3 replication) tracks the
+        // quota instead of the uncapped inference rate. x2 slack covers
+        // the 200 ms burst allowance, framing, and the flush tail.
+        let budget = quota * secs as f64 * 3.0;
+        assert!(
+            (report.broker_log_bytes as f64) < budget * 2.0,
+            "log bytes {} must track the {} B/s quota",
+            report.broker_log_bytes,
+            quota
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use crate::config::NvmeSpec;
 use crate::experiments::common::{facerec_accel, facerec_baseline, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::facerec::{FaceRecSim, SimReport};
 
 /// One Kafka-tuning ablation point.
@@ -27,46 +28,43 @@ pub struct TuningPoint {
 }
 
 pub fn tuning_sweep(fidelity: Fidelity) -> Vec<TuningPoint> {
-    let mut out = Vec::new();
-    for (linger_ms, fetch_ms) in [(1u64, 5u64), (10, 15), (30, 45), (100, 150)] {
+    let grid = vec![(1u64, 5u64), (10, 15), (30, 45), (100, 150)];
+    runner::map(grid, |(linger_ms, fetch_ms)| {
         let mut cfg = facerec_baseline(fidelity);
         cfg.tuning.linger_us = linger_ms * 1000;
         cfg.tuning.fetch_max_wait_us = fetch_ms * 1000;
         let r = FaceRecSim::new(cfg).run();
-        out.push(TuningPoint {
+        TuningPoint {
             linger_ms,
             fetch_wait_ms: fetch_ms,
             wait_mean_us: r.wait_mean_us,
             e2e_mean_us: r.e2e_mean_us,
             broker_cpu_util: r.broker_cpu_util,
-        });
-    }
-    out
+        }
+    })
 }
 
 /// Replication-factor ablation at a given acceleration.
 pub fn replication_sweep(k: f64, fidelity: Fidelity) -> Vec<(usize, SimReport)> {
-    [1usize, 2, 3]
-        .iter()
-        .map(|&repl| {
-            let mut cfg = facerec_accel(k, fidelity);
-            cfg.deployment.replication = repl;
-            (repl, FaceRecSim::new(cfg).run())
-        })
-        .collect()
+    runner::map(vec![1usize, 2, 3], |repl| {
+        let mut cfg = facerec_accel(k, fidelity);
+        cfg.deployment.replication = repl;
+        (repl, FaceRecSim::new(cfg).run())
+    })
 }
 
 /// Storage-media ablation (P4510 vs Optane-class) across acceleration.
 pub fn storage_media_sweep(fidelity: Fidelity) -> Vec<(&'static str, f64, SimReport)> {
-    let mut out = Vec::new();
-    for (name, nvme) in [("P4510", NvmeSpec::p4510_1tb()), ("Optane", NvmeSpec::optane())] {
-        for k in [8.0, 16.0, 32.0] {
-            let mut cfg = facerec_accel(k, fidelity);
-            cfg.node.nvme = nvme;
-            out.push((name, k, FaceRecSim::new(cfg).run()));
-        }
-    }
-    out
+    let grid: Vec<(&'static str, NvmeSpec, f64)> =
+        [("P4510", NvmeSpec::p4510_1tb()), ("Optane", NvmeSpec::optane())]
+            .into_iter()
+            .flat_map(|(name, nvme)| [8.0, 16.0, 32.0].map(|k| (name, nvme, k)))
+            .collect();
+    runner::map(grid, |(name, nvme, k)| {
+        let mut cfg = facerec_accel(k, fidelity);
+        cfg.node.nvme = nvme;
+        (name, k, FaceRecSim::new(cfg).run())
+    })
 }
 
 pub fn print_tuning(points: &[TuningPoint]) {

@@ -7,6 +7,7 @@
 //! (1×, 2×, 4×, 6×).
 
 use crate::experiments::common::{facerec_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::facerec::{FaceRecSim, SimReport};
 use crate::util::units::fmt_us;
 
@@ -18,10 +19,9 @@ pub struct Fig10 {
 
 pub fn run(fidelity: Fidelity) -> Fig10 {
     Fig10 {
-        reports: FACTORS
-            .iter()
-            .map(|&k| FaceRecSim::new(facerec_accel(k, fidelity)).run())
-            .collect(),
+        reports: runner::map(FACTORS.to_vec(), |k| {
+            FaceRecSim::new(facerec_accel(k, fidelity)).run()
+        }),
     }
 }
 

@@ -6,6 +6,7 @@
 //! thanks to the page cache.
 
 use crate::experiments::common::{facerec_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::facerec::{FaceRecSim, SimReport};
 
 pub const FACTORS: [f64; 5] = [1.0, 2.0, 4.0, 6.0, 8.0];
@@ -16,10 +17,9 @@ pub struct Fig11 {
 
 pub fn run(fidelity: Fidelity) -> Fig11 {
     Fig11 {
-        reports: FACTORS
-            .iter()
-            .map(|&k| FaceRecSim::new(facerec_accel(k, fidelity)).run())
-            .collect(),
+        reports: runner::map(FACTORS.to_vec(), |k| {
+            FaceRecSim::new(facerec_accel(k, fidelity)).run()
+        }),
     }
 }
 

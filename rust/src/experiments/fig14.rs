@@ -6,6 +6,7 @@
 //! overruns the 33.3 ms tick.
 
 use crate::experiments::common::{objdet_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::objdet::{ObjDetReport, ObjDetSim};
 
 pub const FACTORS: [f64; 6] = [1.0, 2.0, 4.0, 8.0, 12.0, 16.0];
@@ -16,10 +17,9 @@ pub struct Fig14 {
 
 pub fn run(fidelity: Fidelity) -> Fig14 {
     Fig14 {
-        reports: FACTORS
-            .iter()
-            .map(|&k| ObjDetSim::new(objdet_accel(k, fidelity)).run())
-            .collect(),
+        reports: runner::map(FACTORS.to_vec(), |k| {
+            ObjDetSim::new(objdet_accel(k, fidelity)).run()
+        }),
     }
 }
 

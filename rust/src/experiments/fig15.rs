@@ -7,6 +7,7 @@
 //!     proportionally.
 
 use crate::experiments::common::{facerec_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::facerec::FaceRecSim;
 
 pub const FACTORS: [f64; 5] = [8.0, 12.0, 16.0, 24.0, 32.0];
@@ -28,27 +29,54 @@ pub struct Variant {
     pub unlocked: Option<f64>,
 }
 
-fn sweep_variant(label: String, fidelity: Fidelity, mutate: impl Fn(&mut crate::config::Config)) -> Variant {
-    let mut cells = Vec::new();
-    for &k in &FACTORS {
+/// Sweep one family of mitigation variants: the whole `params × FACTORS`
+/// grid is flattened into a single [`runner::map`] pool (20 independent
+/// simulations fan out together), then regrouped per variant in order.
+fn sweep_family<P: Copy + Send + Sync>(
+    fidelity: Fidelity,
+    params: &[P],
+    apply: impl Fn(&mut crate::config::Config, P) + Sync,
+    label: impl Fn(P) -> String,
+) -> Vec<Variant> {
+    let points: Vec<(P, f64)> = params
+        .iter()
+        .flat_map(|&p| FACTORS.iter().map(move |&k| (p, k)))
+        .collect();
+    let cells: Vec<Cell> = runner::map(points, |(p, k)| {
         let mut cfg = facerec_accel(k, fidelity);
-        mutate(&mut cfg);
+        apply(&mut cfg, p);
         let r = FaceRecSim::new(cfg).run();
-        cells.push(Cell {
+        Cell {
             k,
             stable: r.verdict.stable,
             latency_us: r.verdict.latency_or_inf(r.e2e_mean_us as u64),
             storage_write_util: r.storage_write_util,
-        });
-    }
-    let unlocked = cells.iter().filter(|c| c.stable).map(|c| c.k).fold(None, |m: Option<f64>, k| {
-        Some(m.map_or(k, |m| m.max(k)))
+        }
     });
-    Variant {
-        label,
-        cells,
-        unlocked,
-    }
+    params
+        .iter()
+        .zip(cells.chunks(FACTORS.len()))
+        .map(|(&p, chunk)| {
+            let cells = chunk.to_vec();
+            let unlocked = cells
+                .iter()
+                .filter(|c| c.stable)
+                .map(|c| c.k)
+                .fold(None, |m: Option<f64>, k| Some(m.map_or(k, |m| m.max(k))));
+            Variant { label: label(p), cells, unlocked }
+        })
+        .collect()
+}
+
+/// One labeled variant (kept for the focused per-mitigation tests).
+fn sweep_variant(
+    label: String,
+    fidelity: Fidelity,
+    mutate: impl Fn(&mut crate::config::Config) + Sync,
+) -> Variant {
+    sweep_family(fidelity, &[()], |cfg, _: ()| mutate(cfg), |_| label.clone())
+        .pop()
+        .expect("single-variant family")
 }
 
 pub struct Fig15 {
@@ -58,30 +86,24 @@ pub struct Fig15 {
 }
 
 pub fn run(fidelity: Fidelity) -> Fig15 {
-    let drives = [1usize, 2, 3, 4]
-        .iter()
-        .map(|&d| {
-            sweep_variant(format!("{d} drive(s)/broker"), fidelity, move |cfg| {
-                cfg.deployment.drives_per_broker = d;
-            })
-        })
-        .collect();
-    let brokers = [3usize, 4, 6, 8]
-        .iter()
-        .map(|&b| {
-            sweep_variant(format!("{b} brokers"), fidelity, move |cfg| {
-                cfg.deployment.brokers = b;
-            })
-        })
-        .collect();
-    let sizes = [1.0f64, 0.5, 0.25, 0.125]
-        .iter()
-        .map(|&s| {
-            sweep_variant(format!("{:.0}% thumbnails", s * 100.0), fidelity, move |cfg| {
-                cfg.face_bytes = 37_300.0 * s;
-            })
-        })
-        .collect();
+    let drives = sweep_family(
+        fidelity,
+        &[1usize, 2, 3, 4],
+        |cfg, d| cfg.deployment.drives_per_broker = d,
+        |d| format!("{d} drive(s)/broker"),
+    );
+    let brokers = sweep_family(
+        fidelity,
+        &[3usize, 4, 6, 8],
+        |cfg, b| cfg.deployment.brokers = b,
+        |b| format!("{b} brokers"),
+    );
+    let sizes = sweep_family(
+        fidelity,
+        &[1.0f64, 0.5, 0.25, 0.125],
+        |cfg, s| cfg.face_bytes = 37_300.0 * s,
+        |s| format!("{:.0}% thumbnails", s * 100.0),
+    );
     Fig15 {
         drives,
         brokers,

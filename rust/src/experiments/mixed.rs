@@ -14,6 +14,7 @@
 //! any single pipeline.
 
 use crate::experiments::common::{facerec_accel, objdet_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::facerec::FaceRecSim;
 use crate::pipeline::mixed::{MixedConfig, MixedReport, MixedSim};
 use crate::pipeline::SimReport;
@@ -57,13 +58,10 @@ pub fn mix_config(objdet_share: f64, fidelity: Fidelity) -> MixedConfig {
 
 pub fn run(fidelity: Fidelity) -> MixedSweep {
     let baseline = FaceRecSim::new(facerec_accel(ACCEL_FACEREC, fidelity)).run();
-    let points = MIX_SHARES
-        .iter()
-        .map(|&share| MixPoint {
-            objdet_share: share,
-            report: MixedSim::new(mix_config(share, fidelity)).run(),
-        })
-        .collect();
+    let points = runner::map(MIX_SHARES.to_vec(), |share| MixPoint {
+        objdet_share: share,
+        report: MixedSim::new(mix_config(share, fidelity)).run(),
+    });
     MixedSweep { baseline, points }
 }
 

@@ -7,6 +7,10 @@
 //! `print_*` helper producing the same rows/series the paper reports with
 //! the paper's values side by side. The `cargo bench` targets and the
 //! `aitax experiment <id>` CLI both call into these.
+//!
+//! Sweep drivers fan their independent points out over [`runner`] —
+//! deterministic scoped-thread parallelism whose results come back in
+//! input order, so reports are byte-identical at any `AITAX_JOBS`.
 
 pub mod ablation;
 pub mod common;
@@ -23,4 +27,5 @@ pub mod fig14;
 pub mod fig15;
 pub mod mixed;
 pub mod qos;
+pub mod runner;
 pub mod table34;

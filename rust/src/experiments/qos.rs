@@ -23,6 +23,7 @@
 
 use crate::config::{Config, Deployment};
 use crate::experiments::common::{facerec_accel, objdet_accel, Fidelity};
+use crate::experiments::runner;
 use crate::pipeline::dc::WorkloadKind;
 use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim, TenantDef};
 use crate::util::json::Json;
@@ -119,18 +120,19 @@ impl QosSweep {
 }
 
 /// Run the sweep at the given shares (each share twice: QoS off and on).
+/// The share × {off,on} grid fans out over the deterministic parallel
+/// runner; points come back in grid order.
 pub fn run_at(shares: &[f64], fidelity: Fidelity) -> QosSweep {
     let slo_p99_us = Config::default().calibration.rpc.slo_p99_us;
-    let mut points = Vec::new();
-    for &share in shares {
-        for qos_on in [false, true] {
-            points.push(QosPoint {
-                share,
-                qos_on,
-                report: MultiTenantSim::new(registry(share, qos_on, fidelity)).run(),
-            });
-        }
-    }
+    let grid: Vec<(f64, bool)> = shares
+        .iter()
+        .flat_map(|&share| [(share, false), (share, true)])
+        .collect();
+    let points = runner::map(grid, |(share, qos_on)| QosPoint {
+        share,
+        qos_on,
+        report: MultiTenantSim::new(registry(share, qos_on, fidelity)).run(),
+    });
     QosSweep { slo_p99_us, points }
 }
 

@@ -1,0 +1,169 @@
+//! Deterministic parallel sweep runner.
+//!
+//! Every experiment driver is a sweep: N independent, deterministic
+//! simulations (one per acceleration factor, mitigation variant, tenant
+//! share, …) whose results are reported in input order. Until PR 3 each
+//! driver ran its points strictly sequentially on one core; this module
+//! fans the points out over scoped threads (`std::thread::scope`, the
+//! same zero-dependency pattern as `coordinator::live`) and reassembles
+//! the results **in input order**, so the output of [`map`] is a pure
+//! function of its inputs no matter how many workers ran.
+//!
+//! # Determinism model
+//!
+//! Parallelism cannot perturb results here because the unit of
+//! parallelism is an entire simulation:
+//!
+//! * every sweep point owns its whole world — RNG streams, event queue,
+//!   metrics — and shares nothing mutable with its siblings;
+//! * workers pull indices from an atomic counter, so *scheduling* is
+//!   racy, but each result lands in its input-index slot and [`map`]
+//!   returns them in input order;
+//! * therefore `AITAX_JOBS=1` and `AITAX_JOBS=64` produce byte-identical
+//!   reports (pinned by `tests/runner_determinism.rs`); jobs=1 also runs
+//!   the exact pre-PR sequential path (same thread, no pool).
+//!
+//! # Choosing the worker count
+//!
+//! [`jobs`] resolves, in order: the programmatic override
+//! ([`set_jobs_override`], used by `aitax bench kernel` to time jobs=1 vs
+//! jobs=N), the `AITAX_JOBS` environment variable, then
+//! `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Programmatic worker-count override; 0 = none. Takes precedence over
+/// the `AITAX_JOBS` environment variable.
+static JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count for subsequent [`map`] calls (`None` clears
+/// the override). Used by benchmarks to compare jobs=1 vs jobs=N within
+/// one process without touching the environment.
+pub fn set_jobs_override(jobs: Option<usize>) {
+    JOBS_OVERRIDE.store(jobs.unwrap_or(0), Ordering::SeqCst);
+}
+
+/// The worker count [`map`] will use: the programmatic override, else
+/// `AITAX_JOBS`, else the machine's available parallelism.
+pub fn jobs() -> usize {
+    let o = JOBS_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("AITAX_JOBS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f` over every input, up to [`jobs`] at a time, and return the
+/// results **in input order**.
+///
+/// With one worker (or one input) this degenerates to a plain sequential
+/// map on the calling thread — the exact pre-runner code path. A panic in
+/// any worker propagates to the caller once the scope joins.
+pub fn map<T, R, F>(inputs: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = inputs.len();
+    let workers = jobs().min(n);
+    if workers <= 1 {
+        return inputs.into_iter().map(f).collect();
+    }
+    // Each input moves to exactly one worker; each result lands in its
+    // input-index slot. The mutexes are uncontended (one lock per item).
+    let items: Vec<Mutex<Option<T>>> =
+        inputs.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = items[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("runner input claimed twice");
+                let out = f(item);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("runner worker exited before filling its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The override is process-global and the test harness runs tests
+    /// concurrently, so every test that touches it holds this lock.
+    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Run `body` with a fixed worker count, clearing the override
+    /// afterwards. Serialized via [`OVERRIDE_LOCK`].
+    fn with_jobs<R>(n: usize, body: impl FnOnce() -> R) -> R {
+        let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_jobs_override(Some(n));
+        let out = body();
+        set_jobs_override(None);
+        out
+    }
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        for workers in [1usize, 2, 8] {
+            let out = with_jobs(workers, || map((0..50u64).collect(), |i| i * 10));
+            assert_eq!(out, (0..50u64).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u32> = with_jobs(8, || map(Vec::<u32>::new(), |x| x));
+        assert!(empty.is_empty());
+        let one = with_jobs(8, || map(vec![7u32], |x| x + 1));
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_on_stateful_work() {
+        // Each item does enough work that scheduling order varies run to
+        // run; the output must not.
+        let work = |seed: u64| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            (0..10_000).map(|_| rng.below(1000)).sum::<u64>()
+        };
+        let seq = with_jobs(1, || map((0..32u64).collect(), work));
+        let par = with_jobs(8, || map((0..32u64).collect(), work));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn jobs_override_takes_precedence() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_jobs_override(Some(3));
+        assert_eq!(jobs(), 3);
+        set_jobs_override(None);
+        assert!(jobs() >= 1);
+    }
+}

@@ -6,6 +6,8 @@
 //!               extension scenario (mixed, qos), or all of them
 //!   sim         one Face Recognition simulation with overrides
 //!   amdahl      Fig-9 analytic projections
+//!   bench       perf-trajectory benchmarks (kernel: events/sec + sweep
+//!               scaling, emits BENCH_kernel.json)
 //!   artifacts   check/describe the AOT artifacts
 
 use aitax::coordinator::live::{LiveConfig, LiveRunner};
@@ -20,13 +22,17 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
-            [--file-backed] [--batched]
+            [--file-backed] [--batched] [--produce-quota BYTES_PER_SEC]
   aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
   aitax amdahl
+  aitax bench kernel [--quick] [--out FILE]
   aitax artifacts
+
+Sweep drivers honor AITAX_JOBS (default: all cores); jobs=1 reproduces
+the sequential reports byte for byte.
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -39,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             ex::fig09::print(&ex::fig09::run());
             Ok(())
         }
+        Some("bench") => cmd_bench(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             print!("{USAGE}");
@@ -56,6 +63,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         fps_limit: args.get_f64("fps", 0.0),
         file_backed: args.flag("file-backed"),
         batched_identify: args.flag("batched"),
+        produce_quota_bytes_per_sec: args.get_f64("produce-quota", 0.0),
         ..LiveConfig::default()
     };
     println!(
@@ -84,6 +92,47 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Every experiment id `aitax experiment all` runs, in order. The kernel
+/// benchmark times exactly this list (minus printing), so the measured
+/// workload cannot drift from the command.
+const ALL_EXPERIMENTS: [&str; 14] = [
+    "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "tco", "mixed", "qos",
+];
+
+/// Print an experiment's report, or (on the benchmark path) just keep
+/// the computed result from being optimized away.
+fn emit<T>(r: T, quiet: bool, print: impl Fn(&T)) {
+    if quiet {
+        std::hint::black_box(&r);
+    } else {
+        print(&r);
+    }
+}
+
+/// Run one experiment by id; `quiet` skips the report output (the
+/// sweep-scaling benchmark wants the work without the printing).
+fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result<()> {
+    match name {
+        "fig5" => emit(ex::fig05::run(16), quiet, |r| ex::fig05::print(r)),
+        "fig6" => emit(ex::fig06::run(fidelity), quiet, |r| ex::fig06::print(r)),
+        "fig7" => emit(ex::fig07::run(fidelity), quiet, |r| ex::fig07::print(r)),
+        "fig8" => emit(ex::fig08::run(), quiet, |r| ex::fig08::print(r)),
+        "fig9" => emit(ex::fig09::run(), quiet, |r| ex::fig09::print(r)),
+        "fig10" => emit(ex::fig10::run(fidelity), quiet, |r| ex::fig10::print(r)),
+        "fig11" => emit(ex::fig11::run(fidelity), quiet, |r| ex::fig11::print(r)),
+        "fig12" => emit(ex::fig12::run(14), quiet, |r| ex::fig12::print(r)),
+        "fig13" => emit(ex::fig13::run(fidelity), quiet, |r| ex::fig13::print(r)),
+        "fig14" => emit(ex::fig14::run(fidelity), quiet, |r| ex::fig14::print(r)),
+        "fig15" => emit(ex::fig15::run(fidelity), quiet, |r| ex::fig15::print(r)),
+        "tco" | "table3" | "table4" => emit(ex::table34::run(), quiet, |r| ex::table34::print(r)),
+        "mixed" => emit(ex::mixed::run(fidelity), quiet, |r| ex::mixed::print(r)),
+        "qos" => emit(ex::qos::run(fidelity), quiet, |r| ex::qos::print(r)),
+        other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     let fidelity = if args.flag("quick") {
         Fidelity::Quick
@@ -91,36 +140,13 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         Fidelity::from_env()
     };
     let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
-    let run_one = |name: &str| -> anyhow::Result<()> {
-        match name {
-            "fig5" => ex::fig05::print(&ex::fig05::run(16)),
-            "fig6" => ex::fig06::print(&ex::fig06::run(fidelity)),
-            "fig7" => ex::fig07::print(&ex::fig07::run(fidelity)),
-            "fig8" => ex::fig08::print(&ex::fig08::run()),
-            "fig9" => ex::fig09::print(&ex::fig09::run()),
-            "fig10" => ex::fig10::print(&ex::fig10::run(fidelity)),
-            "fig11" => ex::fig11::print(&ex::fig11::run(fidelity)),
-            "fig12" => ex::fig12::print(&ex::fig12::run(14)),
-            "fig13" => ex::fig13::print(&ex::fig13::run(fidelity)),
-            "fig14" => ex::fig14::print(&ex::fig14::run(fidelity)),
-            "fig15" => ex::fig15::print(&ex::fig15::run(fidelity)),
-            "tco" | "table3" | "table4" => ex::table34::print(&ex::table34::run()),
-            "mixed" => ex::mixed::print(&ex::mixed::run(fidelity)),
-            "qos" => ex::qos::print(&ex::qos::run(fidelity)),
-            other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
-        }
-        Ok(())
-    };
     if which == "all" {
-        for name in [
-            "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-            "fig15", "tco", "mixed", "qos",
-        ] {
-            run_one(name)?;
+        for name in ALL_EXPERIMENTS {
+            run_experiment(name, fidelity, false)?;
         }
         Ok(())
     } else {
-        run_one(which)
+        run_experiment(which, fidelity, false)
     }
 }
 
@@ -174,6 +200,120 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             format!("UNSTABLE (+{:.0} faces/s)", r.verdict.growth_per_sec)
         }
     );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("kernel") => bench_kernel(args),
+        other => anyhow::bail!("unknown bench target {other:?} (expected: kernel)\n{USAGE}"),
+    }
+}
+
+/// The exact `aitax experiment all` workload (same [`ALL_EXPERIMENTS`]
+/// list), reports discarded — what the sweep-scaling benchmark times at
+/// jobs=1 vs jobs=N.
+fn run_experiment_suite(fidelity: Fidelity) {
+    for name in ALL_EXPERIMENTS {
+        run_experiment(name, fidelity, true).expect("known experiment id");
+    }
+}
+
+/// `aitax bench kernel`: the perf-trajectory benchmark behind
+/// `BENCH_kernel.json` — raw event-kernel throughput, whole-simulation
+/// events/sec on the Fig-10 hotpath world, and `experiment all`
+/// wall-clock at jobs=1 vs jobs=N (the parallel-runner speedup).
+fn bench_kernel(args: &Args) -> anyhow::Result<()> {
+    use aitax::experiments::runner;
+    use aitax::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
+    use aitax::sim::engine::EventQueue;
+    use aitax::util::json::Json;
+    use aitax::util::rng::Rng;
+    use std::time::Instant;
+
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+
+    // --- raw event-kernel throughput (push+pop through the 4-ary heap) ---
+    const QUEUE_EVENTS: u64 = 1 << 18;
+    let mut queue_eps = 0.0f64;
+    for _ in 0..3 {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = Rng::new(0x4A7);
+        let t0 = Instant::now();
+        for i in 0..QUEUE_EVENTS {
+            q.at(rng.below(1 << 20), i);
+        }
+        while let Some(x) = q.pop() {
+            std::hint::black_box(x);
+        }
+        let eps = (2 * QUEUE_EVENTS) as f64 / t0.elapsed().as_secs_f64();
+        queue_eps = queue_eps.max(eps);
+    }
+
+    // --- whole-simulation events/sec (Fig-10 hotpath: facerec @4x, 10 s) ---
+    let mut cfg = aitax::config::Config::default();
+    cfg.deployment = aitax::config::Deployment::facerec_accel();
+    cfg.duration_us = 10 * 1_000_000;
+    cfg.accel = 4.0;
+    let spec = FabricSpec::from_config(&cfg);
+    let t0 = Instant::now();
+    let mut world = dc::build(
+        &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+        &spec,
+        cfg.duration_us,
+    );
+    world.run_until(cfg.duration_us);
+    let sim_wall = t0.elapsed();
+    let sim_events = world.processed();
+    let sim_eps = sim_events as f64 / sim_wall.as_secs_f64().max(1e-9);
+
+    // --- sweep scaling: `experiment all` at jobs=1 vs jobs=N ---
+    let jobs = runner::jobs().max(2);
+    runner::set_jobs_override(Some(1));
+    let t1 = Instant::now();
+    run_experiment_suite(fidelity);
+    let wall_jobs1 = t1.elapsed();
+    runner::set_jobs_override(Some(jobs));
+    let tn = Instant::now();
+    run_experiment_suite(fidelity);
+    let wall_jobsn = tn.elapsed();
+    runner::set_jobs_override(None);
+    let speedup = wall_jobs1.as_secs_f64() / wall_jobsn.as_secs_f64().max(1e-9);
+
+    let fidelity_label = match fidelity {
+        Fidelity::Quick => "quick",
+        Fidelity::Full => "full",
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::Str("kernel".into())),
+        ("fidelity", Json::Str(fidelity_label.into())),
+        ("queue_events_per_sec", Json::Num(queue_eps)),
+        ("sim_events", Json::Num(sim_events as f64)),
+        ("sim_wall_ms", Json::Num(sim_wall.as_secs_f64() * 1e3)),
+        ("sim_events_per_sec", Json::Num(sim_eps)),
+        ("sweep_jobs", Json::Num(jobs as f64)),
+        ("sweep_wall_jobs1_ms", Json::Num(wall_jobs1.as_secs_f64() * 1e3)),
+        ("sweep_wall_jobsN_ms", Json::Num(wall_jobsn.as_secs_f64() * 1e3)),
+        ("sweep_speedup", Json::Num(speedup)),
+    ]);
+    let out = args.get_str("out", "BENCH_kernel.json").to_string();
+    std::fs::write(&out, json.pretty())?;
+    println!("kernel bench ({fidelity_label} fidelity):");
+    println!("  event queue   {queue_eps:>14.0} events/s (push+pop, {QUEUE_EVENTS} events)");
+    println!(
+        "  whole sim     {sim_eps:>14.0} events/s ({sim_events} events in {:.1} ms)",
+        sim_wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "  experiment all: jobs=1 {:.1} s vs jobs={jobs} {:.1} s -> {speedup:.2}x",
+        wall_jobs1.as_secs_f64(),
+        wall_jobsn.as_secs_f64()
+    );
+    println!("  report written to {out}");
     Ok(())
 }
 

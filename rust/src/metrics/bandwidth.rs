@@ -6,8 +6,6 @@
 //! direction) tuple and converts to utilization given the elapsed virtual
 //! time and the per-node capacity.
 
-use std::collections::BTreeMap;
-
 /// Node class, matching the paper's container classes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Class {
@@ -38,12 +36,21 @@ pub enum Dir {
     Write,
 }
 
+/// Flat accumulator index for a (class, channel, direction) tuple. The
+/// key space is tiny and fixed, and [`BandwidthMeter::add`] sits on the
+/// fabric's per-hop path — an array add beats a map walk there.
+#[inline]
+fn slot(class: Class, channel: Channel, dir: Dir) -> usize {
+    (class as usize) * 4 + (channel as usize) * 2 + (dir as usize)
+}
+
 /// Accumulates bytes by (class, channel, direction).
 #[derive(Clone, Debug, Default)]
 pub struct BandwidthMeter {
-    bytes: BTreeMap<(Class, Channel, Dir), f64>,
-    /// Node count per class, to report *per-node* utilization like Fig 11.
-    nodes: BTreeMap<Class, usize>,
+    bytes: [f64; 12],
+    /// Node count per class, to report *per-node* utilization like Fig 11
+    /// (0 = unset, treated as 1 node).
+    nodes: [usize; 3],
 }
 
 impl BandwidthMeter {
@@ -52,16 +59,16 @@ impl BandwidthMeter {
     }
 
     pub fn set_nodes(&mut self, class: Class, count: usize) {
-        self.nodes.insert(class, count.max(1));
+        self.nodes[class as usize] = count.max(1);
     }
 
     #[inline]
     pub fn add(&mut self, class: Class, channel: Channel, dir: Dir, bytes: f64) {
-        *self.bytes.entry((class, channel, dir)).or_insert(0.0) += bytes;
+        self.bytes[slot(class, channel, dir)] += bytes;
     }
 
     pub fn total(&self, class: Class, channel: Channel, dir: Dir) -> f64 {
-        self.bytes.get(&(class, channel, dir)).copied().unwrap_or(0.0)
+        self.bytes[slot(class, channel, dir)]
     }
 
     /// Mean per-node bandwidth in bytes/s over `[0, elapsed_us]`.
@@ -69,7 +76,7 @@ impl BandwidthMeter {
         if elapsed_us == 0 {
             return 0.0;
         }
-        let nodes = *self.nodes.get(&class).unwrap_or(&1) as f64;
+        let nodes = self.nodes[class as usize].max(1) as f64;
         self.total(class, channel, dir) * 1e6 / (elapsed_us as f64 * nodes)
     }
 

@@ -317,8 +317,8 @@ pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
         i += 1;
         match o {
             FabricOut::Schedule(t, fev) => {
+                // Past times clamp to now inside `EventQueue::at`.
                 let dst = ctx.shared.fabric_comp;
-                let t = t.max(ctx.now());
                 ctx.at(t, dst, DcEvent::Fabric(fev));
             }
             FabricOut::Committed { token, partition, at } => {
@@ -338,7 +338,6 @@ pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
                     gate.poll_scheduled = true;
                     (at.max(gate.busy_until), ts.poller_comp, consumer)
                 };
-                let wake = wake.max(ctx.now());
                 ctx.at(wake, dst, DcEvent::Poll(consumer));
             }
         }
@@ -390,19 +389,13 @@ pub enum ProducerKind {
         linger_us: u64,
         face_bytes: f64,
     },
-    /// §6: 30 FPS ticks; under k× acceleration each tick sends k frames
-    /// whose send path may overrun the tick (Fig 14's "Delay").
-    ObjDet {
-        ingest_us: f64,
-        send_us_per_frame: f64,
-        frames_per_tick: usize,
-        tick_us: u64,
-        frame_bytes: f64,
-    },
-    /// Generic open-loop tick producer shared by the training-ingest and
-    /// RPC tenants: every `tick_us` each producer prepares and sends
-    /// `records_per_tick` records through its send-path server (so an
-    /// overrunning send path shows up as tick-start delay, like ObjDet).
+    /// Generic open-loop tick producer shared by the Object Detection,
+    /// training-ingest and RPC tenants: every `tick_us` each producer
+    /// prepares and sends `records_per_tick` records through its
+    /// send-path server, so an overrunning send path shows up as
+    /// tick-start delay (Fig 14's "Delay"). Object Detection is the
+    /// §6 instance: 30 FPS ticks, `records_per_tick = k` frames under k×
+    /// acceleration, constant frame bytes (`bytes_cv = 0`).
     Tick {
         tick_us: u64,
         records_per_tick: usize,
@@ -497,66 +490,6 @@ impl ProducerClient {
                 // this one's ingest+detect completes.
                 ctx.at_self(detect_end.max(now + 1), DcEvent::Produce(p));
             }
-            ProducerKind::ObjDet {
-                ingest_us,
-                send_us_per_frame,
-                frames_per_tick,
-                tick_us,
-                frame_bytes,
-            } => {
-                let (part_base, part_count) = {
-                    let ts = &ctx.shared.tenants[t];
-                    (ts.part_base, ts.part_count)
-                };
-                {
-                    let ts = &mut ctx.shared.tenants[t];
-                    ts.metrics.frames_total += 1;
-                    if now >= ts.warmup_us {
-                        ts.metrics.frames_measured += 1;
-                    }
-                }
-                let u = &mut self.units[pid];
-                u.cycles += 1;
-                // Fig 14's Delay: the send server may still be draining
-                // the previous set; the new set starts late.
-                let delay = u.send.backlog_us(now);
-                let start = now + delay;
-                for _ in 0..*frames_per_tick {
-                    let ing = u
-                        .rng
-                        .lognormal_mean_cv(ingest_us.max(1.0), 0.15)
-                        .round()
-                        .max(1.0) as u64;
-                    let t_ing = start + ing;
-                    let t_sent = u.send.submit(t_ing, *send_us_per_frame);
-                    let bytes = *frame_bytes + OBJDET_RECORD_OVERHEAD;
-                    {
-                        let ts = &mut ctx.shared.tenants[t];
-                        ts.metrics.produced += 1;
-                        if now >= ts.warmup_us {
-                            ts.metrics.hist_ingest.record(ing.max(1));
-                            ts.metrics.hist_prep.record(delay.max(1));
-                        }
-                        ts.metrics.population.enter(t_sent.min(horizon));
-                    }
-                    // Each frame goes to a different partition so the
-                    // brokers can fully load-balance (§6.3). Random choice
-                    // — deterministic rotation across same-cadence
-                    // producers would convoy the consumers.
-                    let partition = part_base + u.rng.below(part_count as u64) as u32;
-                    let item = Item {
-                        created_us: now,
-                        ready_us: t_sent,
-                        visible_us: 0,
-                        bytes,
-                    };
-                    ctx.at_self(
-                        t_sent + WIRE_US,
-                        DcEvent::Dispatch { producer: p, partition, item },
-                    );
-                }
-                ctx.at_self(now + *tick_us, DcEvent::Produce(p));
-            }
             ProducerKind::Tick {
                 tick_us,
                 records_per_tick,
@@ -579,8 +512,8 @@ impl ProducerClient {
                 }
                 let u = &mut self.units[pid];
                 u.cycles += 1;
-                // Send-path overrun from the previous tick delays this
-                // one (same mechanism as ObjDet's Fig-14 "Delay").
+                // Fig 14's "Delay": the send server may still be draining
+                // the previous tick's records; this tick starts late.
                 let delay = u.send.backlog_us(now);
                 let start = now + delay;
                 for _ in 0..*records_per_tick {
@@ -605,8 +538,9 @@ impl ProducerClient {
                         }
                         ts.metrics.population.enter(t_sent.min(horizon));
                     }
-                    // Random partition per record (see the ObjDet arm for
-                    // why rotation would convoy consumers).
+                    // Random partition per record so the brokers can fully
+                    // load-balance (§6.3) — deterministic rotation across
+                    // same-cadence producers would convoy the consumers.
                     let partition = part_base + u.rng.below(part_count as u64) as u32;
                     let item = Item {
                         created_us: now,
@@ -738,9 +672,32 @@ pub struct ConsumerPoller {
     units: Vec<ConsumerUnit>,
     /// Global partition ids owned by each tenant-local consumer.
     owned: Vec<Vec<u32>>,
+    /// Fetch scratch, reused across polls so the steady-state fetch path
+    /// allocates nothing: items grouped as per-partition runs, each run
+    /// kept sorted by `ready_us` while it is collected.
+    fetched: Vec<Item>,
+    /// Scratch: half-open `[head, end)` bounds of each run in `fetched`;
+    /// `head` advances as the serve loop merges the runs.
+    runs: Vec<(u32, u32)>,
 }
 
 impl ConsumerPoller {
+    fn new(
+        tenant: u8,
+        service: ServiceModel,
+        units: Vec<ConsumerUnit>,
+        owned: Vec<Vec<u32>>,
+    ) -> ConsumerPoller {
+        ConsumerPoller {
+            tenant,
+            service,
+            units,
+            owned,
+            fetched: Vec::new(),
+            runs: Vec::new(),
+        }
+    }
+
     /// Consumers that have completed at least one item (debug telemetry).
     pub fn active_units(&self) -> usize {
         self.units.iter().filter(|u| u.done > 0).count()
@@ -794,29 +751,39 @@ impl ConsumerPoller {
                 return;
             }
         }
-        // Fetch all visible records per owned partition.
-        let mut fetched: Vec<Item> = Vec::new();
+        // Fetch all visible records per owned partition. Each partition's
+        // run is kept sorted by producer-ready time as it is collected
+        // (the committed queues are nearly ready-ordered already, so the
+        // insertion point is almost always the run's tail); the scratch
+        // buffers are reused across polls, so the steady-state fetch path
+        // allocates nothing.
+        self.fetched.clear();
+        self.runs.clear();
         let mut deliver_at = now;
         let mut fetched_bytes = 0.0;
         for &pi in &self.owned[cid] {
+            let run_start = self.fetched.len();
             let mut part_bytes = 0.0;
-            let mut any = false;
             let leader;
             {
                 let part = &mut ctx.shared.partitions[pi as usize];
                 leader = part.leader;
                 while let Some(it) = part.queue.front() {
-                    if it.visible_us <= now {
-                        part_bytes += it.bytes + fetch.record_overhead;
-                        fetched.push(*it);
-                        part.queue.pop_front();
-                        any = true;
-                    } else {
+                    if it.visible_us > now {
                         break;
                     }
+                    part_bytes += it.bytes + fetch.record_overhead;
+                    let item = *it;
+                    part.queue.pop_front();
+                    let mut at = self.fetched.len();
+                    while at > run_start && self.fetched[at - 1].ready_us > item.ready_us {
+                        at -= 1;
+                    }
+                    self.fetched.insert(at, item);
                 }
             }
-            if any {
+            if self.fetched.len() > run_start {
+                self.runs.push((run_start as u32, self.fetched.len() as u32));
                 let s = &mut *ctx.shared;
                 s.tenants[t].metrics.net_rx_bytes += part_bytes;
                 fetched_bytes += part_bytes;
@@ -831,7 +798,7 @@ impl ConsumerPoller {
                 deliver_at = deliver_at.max(done);
             }
         }
-        if fetched.is_empty() {
+        if self.fetched.is_empty() {
             return;
         }
         // Charge the fetch quota (QoS): over-quota fetches mute this
@@ -844,11 +811,29 @@ impl ConsumerPoller {
             None => 0,
         };
         // Serve each record serially on the 1-core container, oldest
-        // producer-ready first.
-        fetched.sort_by_key(|it| it.ready_us);
+        // producer-ready first: a stable k-way merge across the sorted
+        // per-partition runs (ties pick the earliest run, then queue
+        // order), which reproduces the old global stable sort record for
+        // record without re-sorting the already-sorted runs.
         let horizon = ctx.shared.horizon_us;
         let mut busy = ctx.shared.tenants[t].gates[cid].busy_until.max(deliver_at);
-        for it in fetched {
+        let is_facerec = matches!(self.service, ServiceModel::FaceRec(_));
+        for _ in 0..self.fetched.len() {
+            let mut best: Option<usize> = None;
+            let mut best_key = 0u64;
+            for (ri, &(head, end)) in self.runs.iter().enumerate() {
+                if head < end {
+                    let key = self.fetched[head as usize].ready_us;
+                    if best.is_none() || key < best_key {
+                        best_key = key;
+                        best = Some(ri);
+                    }
+                }
+            }
+            let best = best.expect("merge invariant: an unexhausted run remains");
+            let head = self.runs[best].0;
+            self.runs[best].0 += 1;
+            let it = self.fetched[head as usize];
             let start = busy;
             let wait_us = start.saturating_sub(it.ready_us);
             let dur = match &self.service {
@@ -861,7 +846,6 @@ impl ConsumerPoller {
             };
             busy = start + dur;
             self.units[cid].done += 1;
-            let is_facerec = matches!(self.service, ServiceModel::FaceRec(_));
             let ts = &mut ctx.shared.tenants[t];
             ts.metrics.population.exit(busy.min(horizon));
             ts.metrics.completed += 1;
@@ -941,7 +925,7 @@ impl FabricSpec {
                 d.brokers,
             ),
             net_bw: cfg.node.net_bw,
-            tuning: cfg.tuning.clone(),
+            tuning: cfg.tuning,
         }
     }
 
@@ -953,7 +937,7 @@ impl FabricSpec {
             self.nvme,
             self.effective_write_bw,
             self.net_bw,
-            self.tuning.clone(),
+            self.tuning,
         )
     }
 }
@@ -1076,8 +1060,7 @@ pub fn build_with_qos(
         let d = &cfg.deployment;
         match spec.kind {
             WorkloadKind::FaceRec => {
-                let stages =
-                    StageModel::new(cfg.calibration.stages.clone(), cfg.accel, cfg.protocol);
+                let stages = StageModel::new(cfg.calibration.stages, cfg.accel, cfg.protocol);
                 let mut master = Rng::new(cfg.seed);
                 // Acceleration-emulation runs use 1 face/frame (§5.3);
                 // otherwise every producer replays the same video, so face
@@ -1099,7 +1082,7 @@ pub fn build_with_qos(
                 let producer = world.add(Box::new(ProducerClient {
                     tenant: tenant as u8,
                     kind: ProducerKind::FaceRec {
-                        stages: stages.clone(),
+                        stages,
                         schedule,
                         linger_us: cfg.tuning.linger_us,
                         face_bytes: cfg.face_bytes,
@@ -1107,12 +1090,12 @@ pub fn build_with_qos(
                     units,
                 }));
                 let owned = owned_partitions(&world.shared, tenant);
-                let poller = world.add(Box::new(ConsumerPoller {
-                    tenant: tenant as u8,
-                    service: ServiceModel::FaceRec(stages),
-                    units: consumers,
+                let poller = world.add(Box::new(ConsumerPoller::new(
+                    tenant as u8,
+                    ServiceModel::FaceRec(stages),
+                    consumers,
                     owned,
-                }));
+                )));
                 world.shared.tenants[tenant].producer_comp = producer;
                 world.shared.tenants[tenant].poller_comp = poller;
                 for p in 0..d.producers {
@@ -1124,43 +1107,33 @@ pub fn build_with_qos(
             WorkloadKind::ObjDet => {
                 let od: &ObjDetCosts = &cfg.calibration.objdet;
                 let k = cfg.accel;
-                let mut master = Rng::new(cfg.seed ^ 0x0BDE7);
-                let units = producer_units(&mut master, d.producers, cfg.node.net_bw);
-                let consumers = consumer_units(&mut master, d.consumers, cfg.node.net_bw);
                 // Effective per-frame send cost with Kafka's batching
                 // amortization (§6.3: "producers and the brokers manage to
                 // intelligently batch").
                 let send_us_per_frame = od.send_frame_us * (1.0 - od.batch_amort)
                     + od.send_frame_us * od.batch_amort / k;
-                let producer = world.add(Box::new(ProducerClient {
-                    tenant: tenant as u8,
-                    kind: ProducerKind::ObjDet {
-                        // Emulation protocol: ingestion and detection
-                        // compute divide by k.
-                        ingest_us: od.ingest_us / k,
-                        send_us_per_frame,
-                        frames_per_tick: k.round().max(1.0) as usize,
+                add_tick_tenant(
+                    &mut world,
+                    tenant,
+                    d,
+                    cfg.node.net_bw,
+                    cfg.seed ^ 0x0BDE7,
+                    ProducerKind::Tick {
                         tick_us: od.tick_us,
-                        frame_bytes: od.frame_bytes,
+                        // Emulation protocol: ingestion and detection
+                        // compute divide by k; k frames per 30 FPS tick.
+                        records_per_tick: k.round().max(1.0) as usize,
+                        record_bytes: od.frame_bytes + OBJDET_RECORD_OVERHEAD,
+                        bytes_cv: 0.0,
+                        prep_us: od.ingest_us / k,
+                        prep_cv: 0.15,
+                        send_us_per_record: send_us_per_frame,
                     },
-                    units,
-                }));
-                let owned = owned_partitions(&world.shared, tenant);
-                let poller = world.add(Box::new(ConsumerPoller {
-                    tenant: tenant as u8,
-                    service: ServiceModel::Lognormal {
+                    ServiceModel::Lognormal {
                         mean_us: od.detect_us / k,
                         cv: od.detect_cv,
                     },
-                    units: consumers,
-                    owned,
-                }));
-                world.shared.tenants[tenant].producer_comp = producer;
-                world.shared.tenants[tenant].poller_comp = poller;
-                for p in 0..d.producers {
-                    let jitter = (p as u64 * od.tick_us) / d.producers as u64;
-                    world.schedule(jitter, producer, DcEvent::Produce(p as u32));
-                }
+                );
             }
             WorkloadKind::TrainIngest => {
                 let tr: &TrainCosts = &cfg.calibration.train;
@@ -1210,11 +1183,11 @@ pub fn build_with_qos(
     world
 }
 
-/// Register a [`ProducerKind::Tick`] tenant (training ingest, RPC):
-/// producer + poller components, comp-id wiring, and jittered initial
-/// ticks. Kept as one helper so the registration order — which the
-/// determinism contract depends on — cannot diverge between tick
-/// workloads.
+/// Register a [`ProducerKind::Tick`] tenant (Object Detection, training
+/// ingest, RPC): producer + poller components, comp-id wiring, and
+/// jittered initial ticks. Kept as one helper so the registration order
+/// — which the determinism contract depends on — cannot diverge between
+/// tick workloads.
 #[allow(clippy::too_many_arguments)]
 fn add_tick_tenant(
     world: &mut World<DcEvent, DcState>,
@@ -1238,12 +1211,12 @@ fn add_tick_tenant(
         units,
     }));
     let owned = owned_partitions(&world.shared, tenant);
-    let poller = world.add(Box::new(ConsumerPoller {
-        tenant: tenant as u8,
+    let poller = world.add(Box::new(ConsumerPoller::new(
+        tenant as u8,
         service,
-        units: consumers,
+        consumers,
         owned,
-    }));
+    )));
     world.shared.tenants[tenant].producer_comp = producer;
     world.shared.tenants[tenant].poller_comp = poller;
     for p in 0..d.producers {

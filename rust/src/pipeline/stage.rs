@@ -17,7 +17,7 @@ use crate::config::AccelProtocol;
 use crate::util::rng::Rng;
 
 /// Samples per-stage compute durations (us) for the FR pipeline.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct StageModel {
     pub costs: StageCosts,
     pub accel: f64,

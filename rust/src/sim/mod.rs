@@ -12,7 +12,8 @@
 //! Layering (bottom to top):
 //!
 //! * [`engine`] — the event queue and virtual clock: a deterministic
-//!   `(time, seq)` min-heap every higher layer schedules into.
+//!   4-ary min-heap on a packed `(time, seq)` key every higher layer
+//!   schedules into.
 //! * [`resource`] — FIFO rate servers (storage write path, NICs, broker
 //!   request CPU) with utilization accounting.
 //! * [`queue`] — time-weighted population tracking (faces in system,
@@ -29,7 +30,7 @@ pub mod queue;
 pub mod resource;
 pub mod world;
 
-pub use engine::{EventQueue, Scheduled};
+pub use engine::EventQueue;
 pub use queue::{InstabilityVerdict, Population};
 pub use resource::{FifoServer, ServerPool};
 pub use world::{CompId, Component, Ctx, World};

@@ -21,11 +21,12 @@
 //!   instead cross-component state lives in `S` and is reachable through
 //!   [`Ctx::shared`] while private per-component state stays inside the
 //!   component. This mirrors DSLab's `SimulationContext` split.
-//! * **Components are taken out while handling.** During dispatch the
-//!   destination component is moved out of the registry, so a component
-//!   can freely mutate the queue and shared state without aliasing
-//!   itself. Components therefore cannot call each other directly — they
-//!   communicate via events or via `S`, which is the point.
+//! * **Components never see the registry.** [`Ctx`] exposes the event
+//!   queue and the shared state but *not* the component table, so during
+//!   dispatch the handler can be borrowed straight out of the registry
+//!   (disjoint field borrows — no `Option::take`/restore round-trip on
+//!   the hot path). Components therefore cannot call each other directly
+//!   — they communicate via events or via `S`, which is the point.
 //!
 //! Lifecycle and event-routing contract:
 //!
@@ -82,10 +83,11 @@ impl<'a, E, S> Ctx<'a, E, S> {
         self.queue.now()
     }
 
-    /// Schedule `ev` for `dst` at absolute virtual time `time` (clamped
-    /// to now, like [`EventQueue::at`]).
+    /// Schedule `ev` for `dst` at absolute virtual time `time`.
+    /// [`EventQueue::at`] clamps past times to `now`; no second clamp is
+    /// needed here.
     pub fn at(&mut self, time: u64, dst: CompId, ev: E) {
-        self.queue.at(time.max(self.queue.now()), (dst, ev));
+        self.queue.at(time, (dst, ev));
     }
 
     /// Schedule `ev` for `dst` after a relative delay.
@@ -142,7 +144,7 @@ impl<'a, E, S> Ctx<'a, E, S> {
 /// ```
 pub struct World<E, S> {
     queue: EventQueue<(CompId, E)>,
-    components: Vec<Option<Box<dyn Component<E, S>>>>,
+    components: Vec<Box<dyn Component<E, S>>>,
     pub shared: S,
 }
 
@@ -157,7 +159,7 @@ impl<E, S> World<E, S> {
 
     /// Register a component; its id is its registration order.
     pub fn add(&mut self, component: Box<dyn Component<E, S>>) -> CompId {
-        self.components.push(Some(component));
+        self.components.push(component);
         CompId((self.components.len() - 1) as u32)
     }
 
@@ -192,16 +194,19 @@ impl<E, S> World<E, S> {
             return false;
         }
         let idx = dst.0 as usize;
-        let mut component = self.components[idx]
-            .take()
-            .unwrap_or_else(|| panic!("event routed to unknown component {dst:?}"));
+        assert!(
+            idx < self.components.len(),
+            "event routed to unknown component {dst:?}"
+        );
+        // Disjoint field borrows: the handler comes from `components`, the
+        // Ctx from `queue` + `shared`. Ctx does not expose the registry,
+        // so no take/restore is needed on the dispatch path.
         let mut ctx = Ctx {
             queue: &mut self.queue,
             shared: &mut self.shared,
             self_id: dst,
         };
-        component.on_event(&mut ctx, ev);
-        self.components[idx] = Some(component);
+        self.components[idx].on_event(&mut ctx, ev);
         true
     }
 
@@ -215,7 +220,6 @@ impl<E, S> World<E, S> {
     pub fn component<T: 'static>(&self, id: CompId) -> Option<&T> {
         self.components
             .get(id.0 as usize)?
-            .as_ref()?
             .as_any()
             .downcast_ref::<T>()
     }

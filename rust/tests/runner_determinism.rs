@@ -1,0 +1,33 @@
+//! Parallel-runner determinism: `AITAX_JOBS=1` and `AITAX_JOBS=8` must
+//! produce **identical experiment JSON**.
+//!
+//! The sweep runner (`experiments::runner`) fans independent simulations
+//! out over scoped threads and reassembles results in input order; since
+//! every sweep point owns its world (RNG streams, event queue, metrics),
+//! worker count must be unobservable in the results. This test pins that
+//! contract end to end on the QoS experiment — the sweep with the most
+//! machinery behind it (N-tenant worlds, scheduling classes, quotas) and
+//! a canonical JSON report.
+
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::{qos, runner};
+
+#[test]
+fn qos_experiment_json_is_identical_at_jobs_1_and_8() {
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = qos::run_at(&[0.5], Fidelity::Quick);
+        runner::set_jobs_override(None);
+        qos::to_json(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "experiment JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    // Sanity: the report is a real sweep, not an empty object.
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 2, "0.5 share runs QoS off + on");
+}
