@@ -12,9 +12,12 @@
 //! admits the batch and returns the Kafka-style mute delay the client
 //! must observe before its next request. The bucket semantics are the
 //! same ones the DES enforces (see [`crate::broker::qos`]); the live
-//! coordinator still produces through the uncapped
-//! [`Controller::produce`] — wiring its producers through the throttled
-//! entry point is an open follow-up.
+//! coordinator's producers go through this entry point
+//! (`LiveConfig::produce_quota_bytes_per_sec`). Operators who think in
+//! device bandwidth instead of client bandwidth can hand
+//! [`Controller::set_broker_write_budget`] a per-broker write budget and
+//! let the controller translate it into per-topic client rates (divided
+//! by each topic's replication factor).
 
 use std::collections::HashMap;
 
@@ -135,6 +138,34 @@ impl Controller {
     pub fn set_topic_quota(&mut self, topic: &str, bytes_per_sec: f64) {
         self.topic_quotas
             .insert(topic.to_string(), TokenBucket::with_default_burst(bytes_per_sec));
+    }
+
+    /// Translate an operator's **per-broker write budget** (bytes/sec of
+    /// device writes each broker can spend on this workload) into
+    /// per-topic produce quotas. The cluster-wide budget
+    /// (`budget × brokers`) splits evenly across the existing topics, and
+    /// each topic's slice is divided by its replication factor — the
+    /// produce bucket meters *client* bytes, so dividing by RF makes the
+    /// admitted client rate cost exactly the budgeted device bytes once
+    /// replicated. Returns the number of topics capped; re-call after
+    /// creating topics to re-translate.
+    pub fn set_broker_write_budget(&mut self, bytes_per_sec_per_broker: f64) -> usize {
+        let brokers = self.backends.len();
+        let topics: Vec<(String, u32)> = self
+            .topics
+            .values()
+            .map(|t| (t.name.clone(), t.replication.max(1)))
+            .collect();
+        let n = topics.len();
+        for (name, replication) in &topics {
+            let rate = crate::broker::qos::write_budget_per_tenant_rate(
+                bytes_per_sec_per_broker,
+                brokers,
+                n,
+            ) / *replication as f64;
+            self.set_topic_quota(name, rate);
+        }
+        n
     }
 
     /// Quota-aware produce: admits the batch (never rejects) and returns
@@ -324,6 +355,52 @@ mod tests {
         let free = TopicPartition::new("free", 0);
         let (_, throttle) = c.produce_throttled(&free, &single(1, 100_000), 0).unwrap();
         assert_eq!(throttle, 0);
+    }
+
+    #[test]
+    fn write_budget_divides_by_replication() {
+        let mut c = cluster(3);
+        c.create_topic("rf3", 1, 3).unwrap();
+        c.create_topic("rf1", 1, 1).unwrap();
+        // 2 MB/s per broker × 3 brokers = 6 MB/s of device writes,
+        // 3 MB/s of it per topic: 1 MB/s of client bytes on the RF=3
+        // topic, 3 MB/s on the RF=1 topic.
+        assert_eq!(c.set_broker_write_budget(2_000_000.0), 2);
+        let rf3 = TopicPartition::new("rf3", 0);
+        let rf1 = TopicPartition::new("rf1", 0);
+        // Drain each bucket's 200 ms burst, then measure the marginal
+        // throttle of one extra 100 kB batch: 100 ms at 1 MB/s vs
+        // ~33 ms at 3 MB/s.
+        for i in 0..20 {
+            c.produce_throttled(&rf3, &single(i, 100_000), 0).unwrap();
+            c.produce_throttled(&rf1, &single(i, 100_000), 0).unwrap();
+        }
+        let (_, t3a) = c.produce_throttled(&rf3, &single(90, 1), 0).unwrap();
+        let (_, t3b) = c.produce_throttled(&rf3, &single(91, 100_000), 0).unwrap();
+        let (_, t1a) = c.produce_throttled(&rf1, &single(90, 1), 0).unwrap();
+        let (_, t1b) = c.produce_throttled(&rf1, &single(91, 100_000), 0).unwrap();
+        let marginal_rf3 = t3b - t3a;
+        let marginal_rf1 = t1b - t1a;
+        assert!(
+            (95_000..=110_000).contains(&marginal_rf3),
+            "rf3 marginal throttle {marginal_rf3} should be ~100 ms at 1 MB/s"
+        );
+        assert!(
+            (30_000..=40_000).contains(&marginal_rf1),
+            "rf1 marginal throttle {marginal_rf1} should be ~33 ms at 3 MB/s"
+        );
+    }
+
+    #[test]
+    fn zero_write_budget_never_admits_within_horizon() {
+        use crate::broker::qos::NEVER_US;
+        let mut c = cluster(3);
+        c.create_topic("t", 1, 3).unwrap();
+        c.set_broker_write_budget(0.0);
+        let tp = TopicPartition::new("t", 0);
+        let (base, throttle) = c.produce_throttled(&tp, &single(0, 1_000), 0).unwrap();
+        assert_eq!(base, 0, "batches are still admitted (debt model)");
+        assert_eq!(throttle, NEVER_US, "zero budget mutes the channel forever");
     }
 
     #[test]

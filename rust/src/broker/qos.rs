@@ -22,15 +22,26 @@
 //!   Producers see it as delayed dispatch, consumers as a muted poll
 //!   loop — backpressure, not loss.
 //!
-//! [`QosPolicy`] bundles both per tenant. The policy is strictly opt-in:
-//! with no policy installed the broker fabric and the deployment layer
-//! behave bit-for-bit as before (the FIFO request CPU, no buckets), which
-//! `tests/qos_regression.rs` pins.
+//! PR 4 pushed the same discipline down the write path:
+//! [`QosPolicy::storage_weights`] installs the GPS-fluid scheduler
+//! (extracted to [`WeightedServer`]) on every broker's NVMe write queue,
+//! and [`TenantQuota::replication_aware`] switches a produce bucket to
+//! write-path-byte accounting (`bytes × RF` per record) — optionally
+//! derived from an operator's per-broker write budget via
+//! [`write_budget_per_tenant_rate`].
+//!
+//! [`QosPolicy`] bundles all of it per tenant. The policy is strictly
+//! opt-in: with no policy installed the broker fabric and the deployment
+//! layer behave bit-for-bit as before (the FIFO request CPU, the FIFO
+//! write queue, no buckets), which `tests/qos_regression.rs` and
+//! `tests/storage_qos_differential.rs` pin.
 //!
 //! The DES ([`crate::pipeline::fabric`], [`crate::pipeline::dc`]) uses
 //! these types on the virtual clock; the in-process broker
 //! ([`crate::broker::controller`]) reuses [`TokenBucket`] for its
 //! wall-clock topic quotas.
+
+use crate::sim::resource::WeightedServer;
 
 /// Throttle delay returned when a bucket can never admit the request
 /// (zero or negative quota rate). Far beyond any simulation horizon but
@@ -117,140 +128,37 @@ impl TokenBucket {
 /// instant its class's backlog reaches zero assuming no further arrivals
 /// — the same open-loop approximation `FifoServer` makes, so the two are
 /// directly substitutable in the fabric.
+///
+/// The GPS-fluid core lives in [`WeightedServer`] (PR 4 extracted it so
+/// the NVMe write path could reuse the identical discipline — see
+/// [`crate::storage::device::StorageDevice::enable_write_qos`]); this
+/// type is the request-CPU instantiation with zero device latency.
 #[derive(Clone, Debug)]
 pub struct WeightedCpuScheduler {
-    /// Service rate in units per second.
-    rate: f64,
-    weights: Vec<f64>,
-    /// Outstanding service units per class at `last_us`.
-    backlog: Vec<f64>,
-    /// Scratch copy of `backlog` for the completion-time forward
-    /// simulation (avoids a per-request allocation on the hot path).
-    scratch: Vec<f64>,
-    last_us: u64,
-    /// Accumulated service time for utilization reporting (µs).
-    busy_us: f64,
+    inner: WeightedServer,
 }
 
 impl WeightedCpuScheduler {
     pub fn new(rate_per_sec: f64, weights: &[f64]) -> Self {
-        assert!(rate_per_sec > 0.0, "scheduler rate must be positive");
-        assert!(!weights.is_empty(), "need at least one class");
-        assert!(
-            weights.iter().all(|w| *w > 0.0),
-            "class weights must be positive"
-        );
         WeightedCpuScheduler {
-            rate: rate_per_sec,
-            weights: weights.to_vec(),
-            backlog: vec![0.0; weights.len()],
-            scratch: vec![0.0; weights.len()],
-            last_us: 0,
-            busy_us: 0.0,
+            inner: WeightedServer::new(rate_per_sec, 0, weights),
         }
     }
 
     pub fn classes(&self) -> usize {
-        self.weights.len()
-    }
-
-    /// Drain backlogs with the capacity accrued since the last
-    /// observation, redistributing shares as classes empty.
-    fn drain_to(&mut self, now: u64) {
-        if now <= self.last_us {
-            return;
-        }
-        let mut capacity = (now - self.last_us) as f64 * self.rate / 1e6;
-        self.last_us = now;
-        loop {
-            let wsum: f64 = self
-                .weights
-                .iter()
-                .zip(&self.backlog)
-                .filter(|(_, b)| **b > 0.0)
-                .map(|(w, _)| *w)
-                .sum();
-            if wsum <= 0.0 || capacity <= 0.0 {
-                break;
-            }
-            // Capacity spent when the first active class empties under
-            // proportional sharing.
-            let need = self
-                .backlog
-                .iter()
-                .zip(&self.weights)
-                .filter(|(b, _)| **b > 0.0)
-                .map(|(b, w)| b * wsum / w)
-                .fold(f64::INFINITY, f64::min);
-            if need >= capacity {
-                for (b, w) in self.backlog.iter_mut().zip(&self.weights) {
-                    if *b > 0.0 {
-                        *b = (*b - capacity * w / wsum).max(0.0);
-                    }
-                }
-                break;
-            }
-            for (b, w) in self.backlog.iter_mut().zip(&self.weights) {
-                if *b > 0.0 {
-                    *b = (*b - need * w / wsum).max(0.0);
-                }
-            }
-            capacity -= need;
-        }
+        self.inner.classes()
     }
 
     /// Submit `work` units of class `class` at `now`; returns the
     /// completion time in µs. Classes out of range share the last class.
     pub fn submit(&mut self, now: u64, class: usize, work: f64) -> u64 {
-        self.drain_to(now);
-        let class = class.min(self.weights.len() - 1);
-        self.busy_us += work / self.rate * 1e6;
-        self.backlog[class] += work;
-
-        // Fluid forward-simulation: when does `class` empty?
-        self.scratch.clone_from(&self.backlog);
-        let bl = &mut self.scratch;
-        let mut t = 0.0; // seconds from now
-        loop {
-            let wsum: f64 = self
-                .weights
-                .iter()
-                .zip(bl.iter())
-                .filter(|(_, b)| **b > 0.0)
-                .map(|(w, _)| *w)
-                .sum();
-            debug_assert!(wsum > 0.0, "target class backlog vanished early");
-            if wsum <= 0.0 {
-                break;
-            }
-            let t_class = bl[class] * wsum / (self.rate * self.weights[class]);
-            let t_first = bl
-                .iter()
-                .zip(&self.weights)
-                .filter(|(b, _)| **b > 0.0)
-                .map(|(b, w)| b * wsum / (self.rate * w))
-                .fold(f64::INFINITY, f64::min);
-            if t_class <= t_first + 1e-12 {
-                t += t_class;
-                break;
-            }
-            for (b, w) in bl.iter_mut().zip(&self.weights) {
-                if *b > 0.0 {
-                    *b = (*b - t_first * self.rate * w / wsum).max(0.0);
-                }
-            }
-            t += t_first;
-        }
-        now + (t * 1e6).ceil() as u64
+        self.inner.submit(now, class, work)
     }
 
     /// Fraction of `[0, now]` the scheduler was busy (unclamped; >1 under
     /// overload, matching `FifoServer::utilization`).
     pub fn utilization(&self, now: u64) -> f64 {
-        if now == 0 {
-            return 0.0;
-        }
-        self.busy_us / now as f64
+        self.inner.utilization(now)
     }
 }
 
@@ -263,6 +171,14 @@ pub struct TenantQuota {
     pub fetch_bytes_per_sec: Option<f64>,
     /// Token-bucket burst; defaults to 200 ms of the rate.
     pub burst_bytes: Option<f64>,
+    /// **Replication-aware accounting**: when set, the produce bucket is
+    /// denominated in *write-path* bytes — the dispatch hook charges
+    /// `bytes × replication` per record, so a tenant on an RF=3 topic
+    /// spends its budget 3× as fast as one on RF=1, which is what the
+    /// admitted bytes actually cost the shared NVMe write path. When
+    /// unset (the default, and the pre-PR-4 behavior) the bucket meters
+    /// client bytes as Kafka's own quotas do.
+    pub replication_aware: bool,
 }
 
 impl TenantQuota {
@@ -289,6 +205,14 @@ pub struct QosPolicy {
     /// Request-CPU scheduling-class weights, one per tenant. `None`
     /// keeps the FIFO request CPU (quotas can still apply).
     pub cpu_weights: Option<Vec<f64>>,
+    /// NVMe write-path scheduling-class weights, one per tenant. `None`
+    /// keeps the FIFO write queue (the default; bit-identical to the
+    /// pre-QoS device). When set, every broker's storage device serves
+    /// write submissions with the same GPS-fluid discipline as the
+    /// request CPU, so a latency tenant's small appends no longer queue
+    /// behind a bulk tenant's 1 MB batches (head-of-line blocking, the
+    /// residual interference quotas alone cannot remove).
+    pub storage_weights: Option<Vec<f64>>,
     /// Per-tenant quotas, one per tenant (missing entries = uncapped).
     pub quotas: Vec<TenantQuota>,
 }
@@ -298,6 +222,30 @@ impl QosPolicy {
     pub fn quota(&self, t: usize) -> TenantQuota {
         self.quotas.get(t).copied().unwrap_or_default()
     }
+}
+
+/// Translate an operator's **per-broker write budget** into the
+/// per-tenant produce rate of a replication-aware bucket.
+///
+/// `budget × brokers` is the cluster-wide write-path byte budget; divided
+/// evenly across `tenants` it is the write-path rate each tenant's bucket
+/// may admit. Pair the result with
+/// [`TenantQuota::replication_aware`]` = true` so the bucket spends
+/// `bytes × RF` per record and the budget means device bytes, not client
+/// bytes — the translation the DES registry
+/// (`pipeline::mixed::MultiTenantConfig::with_broker_write_budget`) and
+/// the wall-clock controller
+/// ([`crate::broker::controller::Controller::set_broker_write_budget`])
+/// both use.
+pub fn write_budget_per_tenant_rate(
+    budget_per_broker_bytes_per_sec: f64,
+    brokers: usize,
+    tenants: usize,
+) -> f64 {
+    if tenants == 0 {
+        return 0.0;
+    }
+    budget_per_broker_bytes_per_sec * brokers as f64 / tenants as f64
 }
 
 #[cfg(test)]
@@ -395,7 +343,26 @@ mod tests {
     fn policy_defaults_are_uncapped() {
         let p = QosPolicy::default();
         assert!(p.cpu_weights.is_none());
+        assert!(p.storage_weights.is_none());
         assert!(p.quota(3).produce_bucket().is_none());
         assert!(p.quota(0).fetch_bucket().is_none());
+        assert!(!p.quota(0).replication_aware);
+    }
+
+    #[test]
+    fn write_budget_translation_divides_cluster_capacity() {
+        // 300 MB/s per broker × 3 brokers = 900 MB/s cluster write
+        // budget; 3 tenants get 300 MB/s of write-path bytes each.
+        let rate = write_budget_per_tenant_rate(300e6, 3, 3);
+        assert!((rate - 300e6).abs() < 1e-6);
+        // On an RF=3 topic a replication-aware bucket at that rate admits
+        // 100 MB/s of *client* bytes: 3 s of budget pays for 1 s of
+        // client traffic.
+        let mut b = TokenBucket::new(rate, 0.0);
+        let throttle = b.charge(0, 300e6 * 3.0); // 300 MB client × RF 3
+        assert_eq!(throttle, 3_000_000);
+        // Degenerate cases.
+        assert_eq!(write_budget_per_tenant_rate(300e6, 3, 0), 0.0);
+        assert_eq!(write_budget_per_tenant_rate(0.0, 3, 4), 0.0);
     }
 }

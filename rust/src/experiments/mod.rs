@@ -1,7 +1,9 @@
 //! Experiment drivers: one module per figure/table of the paper, plus
 //! extensions the component kernel enables ([`mixed`] — the cross-tenant
 //! interference sweep; [`qos`] — the N-tenant p99-vs-share SLO sweep with
-//! broker scheduling classes and topic quotas as the mitigation).
+//! broker scheduling classes and topic quotas as the mitigation;
+//! [`storage_qos`] — the write-path sweep pitting the seed FIFO NVMe
+//! queue against per-class GPS write scheduling).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -28,4 +30,5 @@ pub mod fig15;
 pub mod mixed;
 pub mod qos;
 pub mod runner;
+pub mod storage_qos;
 pub mod table34;

@@ -23,7 +23,7 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched] [--produce-quota BYTES_PER_SEC]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|all>
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
@@ -95,9 +95,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// Every experiment id `aitax experiment all` runs, in order. The kernel
 /// benchmark times exactly this list (minus printing), so the measured
 /// workload cannot drift from the command.
-const ALL_EXPERIMENTS: [&str; 14] = [
+const ALL_EXPERIMENTS: [&str; 15] = [
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "fig15", "tco", "mixed", "qos",
+    "fig15", "tco", "mixed", "qos", "storage-qos",
 ];
 
 /// Print an experiment's report, or (on the benchmark path) just keep
@@ -128,6 +128,9 @@ fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result
         "tco" | "table3" | "table4" => emit(ex::table34::run(), quiet, |r| ex::table34::print(r)),
         "mixed" => emit(ex::mixed::run(fidelity), quiet, |r| ex::mixed::print(r)),
         "qos" => emit(ex::qos::run(fidelity), quiet, |r| ex::qos::print(r)),
+        "storage-qos" => {
+            emit(ex::storage_qos::run(fidelity), quiet, |r| ex::storage_qos::print(r))
+        }
         other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
     }
     Ok(())

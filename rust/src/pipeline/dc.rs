@@ -37,8 +37,13 @@
 //! the fetch bucket after each fetch, muting the poll loop through
 //! [`ConsumerGate::throttled_until`]. Request-CPU work carries the tenant
 //! id as a scheduling class so the fabric's weighted scheduler (when
-//! enabled) gives each tenant its configured share. With no policy every
-//! hook is inert.
+//! enabled) gives each tenant its configured share; the same class rides
+//! every in-flight record down to the broker NVMe write queues, where
+//! [`QosPolicy::storage_weights`](crate::broker::qos::QosPolicy) (when
+//! set) swaps the FIFO write path for the per-class GPS scheduler.
+//! Replication-aware quotas charge `bytes × RF` at dispatch
+//! ([`TenantState::produce_charge_factor`]) so a produce budget is
+//! denominated in write-path bytes. With no policy every hook is inert.
 //!
 //! Fidelity contract: for a single-tenant world with QoS disabled this
 //! module reproduces the legacy simulators *event for event* — same event
@@ -291,6 +296,11 @@ pub struct TenantState {
     pub poller_comp: CompId,
     /// Produce byte-rate quota (QoS); `None` = uncapped.
     pub produce_bucket: Option<TokenBucket>,
+    /// Bytes charged against the produce bucket per client byte: `1.0`
+    /// for Kafka-style client-byte metering, the fabric's replication
+    /// factor for replication-aware (write-path-byte) quotas — see
+    /// [`crate::broker::qos::TenantQuota::replication_aware`].
+    pub produce_charge_factor: f64,
     /// Fetch byte-rate quota (QoS); `None` = uncapped.
     pub fetch_bucket: Option<TokenBucket>,
 }
@@ -588,8 +598,12 @@ impl ProducerClient {
         let overhead = ctx.shared.tenants[t].fetch.record_overhead;
         let bytes = item.bytes + overhead;
         if !admitted {
+            let factor = ctx.shared.tenants[t].produce_charge_factor;
             if let Some(bucket) = &mut ctx.shared.tenants[t].produce_bucket {
-                let throttle = bucket.charge(now, bytes);
+                // Replication-aware quotas charge what the record costs
+                // the shared write path (`bytes × RF`), not what it costs
+                // the client NIC.
+                let throttle = bucket.charge(now, bytes * factor);
                 if throttle >= crate::broker::qos::NEVER_US {
                     // Zero-rate quota: the record can never be admitted.
                     // Drop it instead of parking an unreachable event in
@@ -1035,6 +1049,11 @@ pub fn build_with_qos(
             producer_comp: CompId::INVALID,
             poller_comp: CompId::INVALID,
             produce_bucket: quota.produce_bucket(),
+            produce_charge_factor: if quota.replication_aware {
+                fabric.replication as f64
+            } else {
+                1.0
+            },
             fetch_bucket: quota.fetch_bucket(),
         });
     }
@@ -1042,6 +1061,9 @@ pub fn build_with_qos(
     let mut shared_fabric = fabric.build();
     if let Some(weights) = qos.and_then(|p| p.cpu_weights.as_deref()) {
         shared_fabric.enable_weighted_cpu(weights);
+    }
+    if let Some(weights) = qos.and_then(|p| p.storage_weights.as_deref()) {
+        shared_fabric.enable_storage_qos(weights);
     }
     let state = DcState {
         fabric: shared_fabric,
@@ -1418,6 +1440,7 @@ mod tests {
         let spec = FabricSpec::from_config(&fr);
         let qos = QosPolicy {
             cpu_weights: None,
+            storage_weights: None,
             quotas: vec![
                 TenantQuota::default(),
                 TenantQuota { produce_bytes_per_sec: Some(0.0), ..Default::default() },
@@ -1452,10 +1475,11 @@ mod tests {
         base.run_until(fr.duration_us);
         let qos = QosPolicy {
             cpu_weights: None,
+            storage_weights: None,
             quotas: vec![TenantQuota {
                 produce_bytes_per_sec: Some(1e15),
                 fetch_bytes_per_sec: Some(1e15),
-                burst_bytes: None,
+                ..Default::default()
             }],
         };
         let mut capped = build_with_qos(&tenants, &spec, Some(&qos), fr.duration_us);
@@ -1478,6 +1502,7 @@ mod tests {
         let quota = 2_000_000.0;
         let qos = QosPolicy {
             cpu_weights: None,
+            storage_weights: None,
             quotas: vec![TenantQuota {
                 produce_bytes_per_sec: Some(quota),
                 ..Default::default()
@@ -1504,6 +1529,70 @@ mod tests {
             "cap should still let ~quota through, got {}",
             m.net_tx_bytes
         );
+    }
+
+    #[test]
+    fn replication_aware_quota_meters_write_path_bytes() {
+        // Train offers ~8 MB/s of client bytes on an RF=3 fabric. A
+        // 6 MB/s produce budget admits ~6 MB/s when metering client
+        // bytes, but only ~2 MB/s (6 / RF) when the bucket is
+        // denominated in write-path bytes — the same budget now pays for
+        // the 3 device copies each record costs.
+        let tr = tiny_tick(WorkloadKind::TrainIngest, 0x7EA1);
+        let spec = FabricSpec::from_config(&tr);
+        let budget = 6_000_000.0;
+        let run = |aware: bool| {
+            let qos = QosPolicy {
+                cpu_weights: None,
+                storage_weights: None,
+                quotas: vec![TenantQuota {
+                    produce_bytes_per_sec: Some(budget),
+                    replication_aware: aware,
+                    ..Default::default()
+                }],
+            };
+            let mut world = build_with_qos(
+                &[TenantSpec { kind: WorkloadKind::TrainIngest, cfg: &tr }],
+                &spec,
+                Some(&qos),
+                tr.duration_us,
+            );
+            world.run_until(tr.duration_us);
+            world.shared.tenants[0].metrics.net_tx_bytes
+        };
+        let plain = run(false);
+        let aware = run(true);
+        let secs = tr.duration_us as f64 / 1e6;
+        let rf = spec.replication as f64;
+        assert!(
+            aware <= budget / rf * secs * 1.3,
+            "replication-aware wire bytes {aware} must track budget/RF"
+        );
+        assert!(
+            aware >= budget / rf * secs * 0.5,
+            "replication-aware cap should still admit ~budget/RF, got {aware}"
+        );
+        assert!(
+            aware < 0.6 * plain,
+            "RF={rf} must shrink admitted bytes: {aware} vs {plain}"
+        );
+    }
+
+    #[test]
+    fn storage_weights_install_the_write_scheduler() {
+        let fr = tiny_facerec();
+        let spec = FabricSpec::from_config(&fr);
+        let qos = QosPolicy {
+            cpu_weights: None,
+            storage_weights: Some(vec![1.0]),
+            quotas: Vec::new(),
+        };
+        let tenants = [TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr }];
+        let mut world = build_with_qos(&tenants, &spec, Some(&qos), fr.duration_us);
+        assert!(world.shared.fabric.storage_qos_enabled());
+        assert!(!world.shared.fabric.weighted_cpu_enabled());
+        world.run_until(fr.duration_us);
+        assert!(world.shared.tenants[0].metrics.completed > 0);
     }
 
     #[test]

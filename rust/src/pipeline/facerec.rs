@@ -60,6 +60,9 @@ pub struct SimReport {
     pub population: Vec<(u64, i64)>,
     /// (completion time, face e2e latency) samples for Fig 7.
     pub latency_series: Vec<(u64, u64)>,
+    /// Past-time schedules clamped by the event queue — zero in every
+    /// healthy run (`tests/golden_reports.rs` asserts it).
+    pub clamped_events: u64,
 }
 
 impl SimReport {
@@ -136,6 +139,7 @@ pub fn report_for_tenant(world: &World<DcEvent, DcState>, cfg: &Config, tenant: 
         ),
         population: m.population.samples().to_vec(),
         latency_series: m.latency_series(),
+        clamped_events: world.clamped(),
     }
 }
 

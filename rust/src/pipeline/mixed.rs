@@ -98,6 +98,9 @@ pub struct MixedReport {
     pub broker_cpu_util: f64,
     /// Events dispatched by the world (DES throughput numerator).
     pub events: u64,
+    /// Past-time schedules clamped by the event queue — zero in every
+    /// healthy run (`tests/qos_regression.rs` asserts it).
+    pub clamped_events: u64,
 }
 
 impl MixedReport {
@@ -141,6 +144,7 @@ impl MixedSim {
             broker_net_tx_util: s.fabric.max_nic_tx_util(elapsed),
             broker_cpu_util: s.fabric.max_cpu_util(elapsed),
             events: world.processed(),
+            clamped_events: world.clamped(),
             facerec: facerec::report_for_tenant(&world, &c.facerec, 0),
             objdet: objdet::report_for_tenant(&world, &c.objdet, 1),
         }
@@ -155,10 +159,17 @@ impl MixedSim {
 /// [`QosPolicy`] when the world is built with QoS enabled).
 #[derive(Clone, Copy, Debug)]
 pub struct TenantQosSpec {
-    /// Request-CPU scheduling-class weight (share under contention).
+    /// Scheduling-class weight (share under contention). One weight
+    /// drives both classed servers: the broker request CPU (when
+    /// [`MultiTenantConfig::weighted_cpu`]) and the NVMe write path
+    /// (when [`MultiTenantConfig::storage_qos`]).
     pub weight: f64,
     /// Produce byte-rate cap, bytes/sec (`None` = uncapped).
     pub produce_bytes_per_sec: Option<f64>,
+    /// Denominate the produce cap in write-path bytes (`bytes × RF`
+    /// charged per record) instead of client bytes — see
+    /// [`TenantQuota::replication_aware`].
+    pub charge_replicated: bool,
     /// Fetch byte-rate cap, bytes/sec (`None` = uncapped).
     pub fetch_bytes_per_sec: Option<f64>,
 }
@@ -168,6 +179,7 @@ impl Default for TenantQosSpec {
         TenantQosSpec {
             weight: 1.0,
             produce_bytes_per_sec: None,
+            charge_replicated: false,
             fetch_bytes_per_sec: None,
         }
     }
@@ -203,6 +215,16 @@ impl TenantDef {
         self
     }
 
+    /// Produce cap denominated in **write-path** bytes: the bucket is
+    /// charged `bytes × RF` per record, so this budget is what the
+    /// tenant may cost the shared NVMe write path, not what it may put
+    /// on the client wire.
+    pub fn with_replicated_produce_quota(mut self, write_bytes_per_sec: f64) -> Self {
+        self.qos.produce_bytes_per_sec = Some(write_bytes_per_sec);
+        self.qos.charge_replicated = true;
+        self
+    }
+
     pub fn with_fetch_quota(mut self, bytes_per_sec: f64) -> Self {
         self.qos.fetch_bytes_per_sec = Some(bytes_per_sec);
         self
@@ -224,6 +246,21 @@ pub struct MultiTenantConfig {
     /// Replace the FIFO request CPU with the deficit-weighted scheduler
     /// (only meaningful when [`Self::qos_enabled`]).
     pub weighted_cpu: bool,
+    /// Replace the FIFO NVMe write queue on every broker with the
+    /// per-class GPS scheduler (tenant weights). Independent of
+    /// [`Self::qos_enabled`] so the storage mitigation can be studied in
+    /// isolation from quotas — `experiments::storage_qos` does exactly
+    /// that.
+    pub storage_qos: bool,
+    /// Operator-facing **per-broker write budget** (bytes/sec of device
+    /// writes). Translated into a replication-aware produce quota per
+    /// tenant that has no explicit produce cap:
+    /// `budget × brokers / tenants` write-path bytes each (see
+    /// [`crate::broker::qos::write_budget_per_tenant_rate`]). Setting it
+    /// via [`Self::with_broker_write_budget`] turns quota enforcement
+    /// ([`Self::qos_enabled`]) on; a later `with_qos(false)` turns
+    /// enforcement — budget included — back off.
+    pub broker_write_budget: Option<f64>,
 }
 
 impl MultiTenantConfig {
@@ -234,6 +271,8 @@ impl MultiTenantConfig {
             duration_us,
             qos_enabled: false,
             weighted_cpu: false,
+            storage_qos: false,
+            broker_write_budget: None,
         }
     }
 
@@ -248,24 +287,65 @@ impl MultiTenantConfig {
         self
     }
 
-    /// The [`QosPolicy`] this registry induces (`None` when disabled).
+    /// Enable (or disable) the per-class NVMe write scheduler.
+    pub fn with_storage_qos(mut self, enabled: bool) -> Self {
+        self.storage_qos = enabled;
+        self
+    }
+
+    /// Set the per-broker write budget (see [`Self::broker_write_budget`]).
+    /// A budget is a quota mechanism, so this also enables quota
+    /// enforcement — without touching [`Self::weighted_cpu`] or
+    /// [`Self::storage_qos`] — rather than silently holding a value that
+    /// would never bind.
+    pub fn with_broker_write_budget(mut self, bytes_per_sec_per_broker: f64) -> Self {
+        self.broker_write_budget = Some(bytes_per_sec_per_broker);
+        self.qos_enabled = true;
+        self
+    }
+
+    /// The [`QosPolicy`] this registry induces (`None` when every
+    /// mechanism is disabled).
     pub fn policy(&self) -> Option<QosPolicy> {
-        if !self.qos_enabled {
+        if !self.qos_enabled && !self.storage_qos {
             return None;
         }
+        // The write budget translates into a replication-aware produce
+        // rate for every tenant without an explicit cap of its own.
+        let budget_rate = self.broker_write_budget.map(|b| {
+            crate::broker::qos::write_budget_per_tenant_rate(
+                b,
+                self.fabric.deployment.brokers,
+                self.tenants.len(),
+            )
+        });
         Some(QosPolicy {
-            cpu_weights: self
-                .weighted_cpu
+            cpu_weights: (self.qos_enabled && self.weighted_cpu)
                 .then(|| self.tenants.iter().map(|t| t.qos.weight).collect()),
-            quotas: self
-                .tenants
-                .iter()
-                .map(|t| TenantQuota {
-                    produce_bytes_per_sec: t.qos.produce_bytes_per_sec,
-                    fetch_bytes_per_sec: t.qos.fetch_bytes_per_sec,
-                    burst_bytes: None,
-                })
-                .collect(),
+            storage_weights: self
+                .storage_qos
+                .then(|| self.tenants.iter().map(|t| t.qos.weight).collect()),
+            quotas: if self.qos_enabled {
+                self.tenants
+                    .iter()
+                    .map(|t| match (t.qos.produce_bytes_per_sec, budget_rate) {
+                        (None, Some(rate)) => TenantQuota {
+                            produce_bytes_per_sec: Some(rate),
+                            fetch_bytes_per_sec: t.qos.fetch_bytes_per_sec,
+                            burst_bytes: None,
+                            replication_aware: true,
+                        },
+                        _ => TenantQuota {
+                            produce_bytes_per_sec: t.qos.produce_bytes_per_sec,
+                            fetch_bytes_per_sec: t.qos.fetch_bytes_per_sec,
+                            burst_bytes: None,
+                            replication_aware: t.qos.charge_replicated,
+                        },
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            },
         })
     }
 
@@ -293,6 +373,9 @@ pub struct MultiTenantReport {
     pub broker_net_rx_util: f64,
     pub broker_cpu_util: f64,
     pub events: u64,
+    /// Past-time schedules clamped by the event queue — zero in every
+    /// healthy run (`tests/qos_regression.rs` asserts it).
+    pub clamped_events: u64,
 }
 
 impl MultiTenantReport {
@@ -338,6 +421,7 @@ impl MultiTenantSim {
             broker_net_rx_util: world.shared.fabric.max_nic_rx_util(elapsed),
             broker_cpu_util: world.shared.fabric.max_cpu_util(elapsed),
             events: world.processed(),
+            clamped_events: world.clamped(),
         }
     }
 }
@@ -487,5 +571,42 @@ mod tests {
         // The protected tenants keep flowing under QoS.
         assert!(on.tenant("facerec").unwrap().completed > 0);
         assert!(on.tenant("rpc").unwrap().completed > 0);
+    }
+
+    #[test]
+    fn storage_qos_alone_induces_only_storage_weights() {
+        let cfg = small_registry().with_storage_qos(true);
+        assert!(!cfg.qos_enabled);
+        let policy = cfg.policy().expect("storage QoS induces a policy");
+        assert!(policy.cpu_weights.is_none());
+        assert_eq!(policy.storage_weights.as_ref().map(Vec::len), Some(3));
+        assert!(policy.quotas.is_empty(), "quotas stay off without with_qos");
+        // And the world runs with the write scheduler installed.
+        let r = MultiTenantSim::new(cfg).run();
+        for t in &r.tenants {
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+        }
+    }
+
+    #[test]
+    fn write_budget_fills_only_uncapped_tenants() {
+        // The registry's train tenant carries an explicit 1 MB/s produce
+        // cap; the budget must leave it alone and cover the other two
+        // with replication-aware quotas at budget × brokers / tenants.
+        // Setting a budget alone enables quota enforcement (it would be
+        // a silent no-op otherwise) without installing CPU weights.
+        let cfg = small_registry().with_broker_write_budget(300e6);
+        assert!(cfg.qos_enabled, "a budget must turn quota enforcement on");
+        let policy = cfg.policy().unwrap();
+        assert!(policy.cpu_weights.is_none());
+        assert!(policy.storage_weights.is_none());
+        let expected = crate::broker::qos::write_budget_per_tenant_rate(300e6, 3, 3);
+        assert_eq!(policy.quotas.len(), 3);
+        assert_eq!(policy.quotas[0].produce_bytes_per_sec, Some(expected));
+        assert!(policy.quotas[0].replication_aware);
+        assert_eq!(policy.quotas[1].produce_bytes_per_sec, Some(1_000_000.0));
+        assert!(!policy.quotas[1].replication_aware);
+        assert_eq!(policy.quotas[2].produce_bytes_per_sec, Some(expected));
+        assert!(policy.quotas[2].replication_aware);
     }
 }

@@ -35,6 +35,9 @@ pub struct ObjDetReport {
     pub verdict: InstabilityVerdict,
     pub storage_write_util: f64,
     pub producer_send_util: f64,
+    /// Past-time schedules clamped by the event queue — zero in every
+    /// healthy run (`tests/golden_reports.rs` asserts it).
+    pub clamped_events: u64,
 }
 
 impl ObjDetReport {
@@ -79,6 +82,7 @@ pub fn report_for_tenant(
         verdict: m.population.verdict(elapsed),
         storage_write_util: s.fabric.max_storage_write_util(elapsed),
         producer_send_util,
+        clamped_events: world.clamped(),
     }
 }
 

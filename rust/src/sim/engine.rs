@@ -32,6 +32,7 @@ pub struct EventQueue<E> {
     now: u64,
     seq: u64,
     processed: u64,
+    clamped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -47,6 +48,7 @@ impl<E> EventQueue<E> {
             now: 0,
             seq: 0,
             processed: 0,
+            clamped: 0,
         }
     }
 
@@ -58,6 +60,16 @@ impl<E> EventQueue<E> {
     /// Number of events popped so far (the DES throughput numerator).
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// Number of schedules whose requested time lay in the past and was
+    /// clamped to `now`. The production simulations never schedule
+    /// backwards (every resource server returns completions `>= now`), so
+    /// the integration suites assert this stays zero — a non-zero count
+    /// means the clamp is silently reordering a buggy schedule rather
+    /// than providing the documented as-soon-as-possible semantics.
+    pub fn clamped(&self) -> u64 {
+        self.clamped
     }
 
     pub fn len(&self) -> usize {
@@ -76,6 +88,9 @@ impl<E> EventQueue<E> {
     /// such a request is "as soon as possible". The clamp is the contract
     /// in every build (debug and release agree).
     pub fn at(&mut self, time: u64, event: E) {
+        if time < self.now {
+            self.clamped += 1;
+        }
         let time = time.max(self.now);
         self.heap.push((pack(time, self.seq), event));
         self.seq += 1;
@@ -195,10 +210,25 @@ mod tests {
     fn past_times_clamp_to_now_in_every_build() {
         let mut q = EventQueue::new();
         q.at(100, "first");
+        assert_eq!(q.clamped(), 0);
         q.pop(); // now = 100
         q.at(40, "late"); // in the past: clamps, never panics
         assert_eq!(q.pop(), Some((100, "late")));
         assert_eq!(q.now(), 100);
+        assert_eq!(q.clamped(), 1, "the past-time schedule must be counted");
+    }
+
+    #[test]
+    fn clamp_counter_ignores_present_and_future_schedules() {
+        let mut q = EventQueue::new();
+        q.at(10, 1u32);
+        q.pop(); // now = 10
+        q.at(10, 2); // exactly now: not a clamp
+        q.at(11, 3); // future: not a clamp
+        q.at(9, 4); // past: clamp
+        assert_eq!(q.clamped(), 1);
+        while q.pop().is_some() {}
+        assert_eq!(q.clamped(), 1);
     }
 
     #[test]

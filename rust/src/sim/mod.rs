@@ -14,8 +14,11 @@
 //! * [`engine`] — the event queue and virtual clock: a deterministic
 //!   4-ary min-heap on a packed `(time, seq)` key every higher layer
 //!   schedules into.
-//! * [`resource`] — FIFO rate servers (storage write path, NICs, broker
-//!   request CPU) with utilization accounting.
+//! * [`resource`] — rate servers with utilization accounting: FIFO
+//!   ([`resource::FifoServer`]: NICs, the default storage write path and
+//!   request CPU) and weighted GPS-fluid
+//!   ([`resource::WeightedServer`]: the QoS scheduling-class discipline
+//!   shared by the broker request CPU and the NVMe write path).
 //! * [`queue`] — time-weighted population tracking (faces in system,
 //!   Fig 7) and the §5.3 instability detector.
 //! * [`world`] — the component kernel: typed components with ids, a
@@ -32,5 +35,5 @@ pub mod world;
 
 pub use engine::EventQueue;
 pub use queue::{InstabilityVerdict, Population};
-pub use resource::{FifoServer, ServerPool};
+pub use resource::{FifoServer, ServerPool, WeightedServer};
 pub use world::{CompId, Component, Ctx, World};

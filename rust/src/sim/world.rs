@@ -177,6 +177,13 @@ impl<E, S> World<E, S> {
         self.queue.processed()
     }
 
+    /// Past-time schedules clamped to `now` by the event queue. The
+    /// deployment layer never schedules backwards, so integration suites
+    /// assert this is zero (see [`EventQueue::clamped`]).
+    pub fn clamped(&self) -> u64 {
+        self.queue.clamped()
+    }
+
     /// Schedule an event from outside any component (world setup).
     pub fn schedule(&mut self, time: u64, dst: CompId, ev: E) {
         self.queue.at(time, (dst, ev));

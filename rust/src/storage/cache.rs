@@ -10,6 +10,26 @@
 //! node's memory budget. Streaming consumers read data shortly after it is
 //! produced, so in a healthy system virtually all fetches hit; only a
 //! consumer lagging by more than the cache window touches the device.
+//!
+//! **Per-partition-group accounting.** One broker caches appends from many
+//! partition groups (in a mixed world, many tenants), and each group has
+//! its *own* logical offset space — a training tenant's offset 10⁹ says
+//! nothing about a facerec partition's offsets. The seed model kept one
+//! shared `appended` counter, silently conflating every group into a
+//! single offset space. The window entries now carry their group id:
+//! capacity stays **shared-bounded** (one RAM pool, evicted globally
+//! oldest-first, exactly what the OS does), while hit/miss decisions
+//! compare a group's offsets only against that group's surviving
+//! entries. The pre-PR-4 single-group API ([`PageCache::append`] /
+//! [`PageCache::lookup`]) delegates to group 0 and behaves identically.
+//!
+//! Scope note: this type is currently a *standalone* model — the DES
+//! fetch path hardcodes cache hits (streaming consumers read right
+//! behind the appender, and the golden fidelity contract pins that
+//! behavior), so nothing constructs a `PageCache` per broker yet. The
+//! group accounting is the prerequisite for wiring it in as an opt-in
+//! hook so that deeply lagging consumers start missing to the device
+//! read path; that wiring is a ROADMAP follow-up.
 
 use std::collections::VecDeque;
 
@@ -19,11 +39,12 @@ pub struct PageCache {
     /// Cache capacity in bytes (a slice of node RAM given to the page
     /// cache; brokers do little else with their 384 GB).
     capacity: f64,
-    /// (end_offset, bytes) of cached appends per partition-group, FIFO.
-    window: VecDeque<(u64, f64)>,
+    /// `(group, end_offset, bytes)` of cached appends, FIFO in global
+    /// append order. Offsets are per-group; the bound is shared.
+    window: VecDeque<(u32, u64, f64)>,
     cached_bytes: f64,
-    /// Monotone logical offset of all bytes ever appended.
-    appended: u64,
+    /// Monotone logical offset of all bytes ever appended, per group.
+    appended: Vec<u64>,
     hits: u64,
     misses: u64,
 }
@@ -34,47 +55,82 @@ impl PageCache {
             capacity: capacity_bytes,
             window: VecDeque::new(),
             cached_bytes: 0.0,
-            appended: 0,
+            appended: Vec::new(),
             hits: 0,
             misses: 0,
         }
     }
 
-    /// Record an append of `bytes`; evicts the oldest entries past
-    /// capacity. Returns the new end offset.
-    pub fn append(&mut self, bytes: f64) -> u64 {
-        self.appended += bytes as u64;
-        self.window.push_back((self.appended, bytes));
+    fn appended_mut(&mut self, group: u32) -> &mut u64 {
+        let idx = group as usize;
+        if idx >= self.appended.len() {
+            self.appended.resize(idx + 1, 0);
+        }
+        &mut self.appended[idx]
+    }
+
+    fn appended_of(&self, group: u32) -> u64 {
+        self.appended.get(group as usize).copied().unwrap_or(0)
+    }
+
+    /// Record an append of `bytes`; evicts the globally oldest entries
+    /// past capacity, whatever group they belong to (the shared bound).
+    /// Returns the group's new end offset.
+    pub fn append_group(&mut self, group: u32, bytes: f64) -> u64 {
+        let end = {
+            let appended = self.appended_mut(group);
+            *appended += bytes as u64;
+            *appended
+        };
+        self.window.push_back((group, end, bytes));
         self.cached_bytes += bytes;
         while self.cached_bytes > self.capacity {
-            if let Some((_, b)) = self.window.pop_front() {
+            if let Some((_, _, b)) = self.window.pop_front() {
                 self.cached_bytes -= b;
             } else {
                 break;
             }
         }
-        self.appended
+        end
     }
 
-    /// Oldest still-cached offset.
-    pub fn oldest_cached(&self) -> u64 {
+    /// Single-group [`PageCache::append_group`] (the pre-PR-4 API).
+    pub fn append(&mut self, bytes: f64) -> u64 {
+        self.append_group(0, bytes)
+    }
+
+    /// Oldest still-cached offset of one group (the group's high-water
+    /// mark when none of its entries survive).
+    pub fn oldest_cached_group(&self, group: u32) -> u64 {
         self.window
-            .front()
-            .map(|(end, b)| end.saturating_sub(*b as u64))
-            .unwrap_or(self.appended)
+            .iter()
+            .find(|(g, _, _)| *g == group)
+            .map(|(_, end, b)| end.saturating_sub(*b as u64))
+            .unwrap_or_else(|| self.appended_of(group))
     }
 
-    /// Would a read ending at `offset` be served from memory? The data
-    /// ending at `offset` is cached iff it lies strictly inside the cached
-    /// window (the byte range `(oldest_cached, appended]`).
-    pub fn lookup(&mut self, offset: u64) -> bool {
-        let hit = offset > self.oldest_cached() && offset <= self.appended;
+    /// Single-group [`PageCache::oldest_cached_group`].
+    pub fn oldest_cached(&self) -> u64 {
+        self.oldest_cached_group(0)
+    }
+
+    /// Would a read of group `group` ending at `offset` be served from
+    /// memory? The data ending at `offset` is cached iff it lies strictly
+    /// inside the group's cached window (the byte range
+    /// `(oldest_cached, appended]`).
+    pub fn lookup_group(&mut self, group: u32, offset: u64) -> bool {
+        let hit = offset > self.oldest_cached_group(group) && offset <= self.appended_of(group);
         if hit {
             self.hits += 1;
         } else {
             self.misses += 1;
         }
         hit
+    }
+
+    /// Single-group [`PageCache::lookup_group`] (the pre-PR-4 API).
+    pub fn lookup(&mut self, offset: u64) -> bool {
+        self.lookup_group(0, offset)
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -129,14 +185,84 @@ mod tests {
     }
 
     #[test]
+    fn groups_keep_disjoint_offset_spaces() {
+        // Two tenants interleave appends. Before PR 4 the shared
+        // `appended` counter conflated their offset spaces: group 1's
+        // small offsets looked "evicted" against group 0's high-water
+        // mark. Now each group's offsets are its own.
+        let mut c = PageCache::new(1e9);
+        let a1 = c.append_group(0, 10_000.0);
+        let b1 = c.append_group(1, 500.0);
+        let a2 = c.append_group(0, 10_000.0);
+        let b2 = c.append_group(1, 500.0);
+        assert_eq!(a1, 10_000);
+        assert_eq!(a2, 20_000);
+        assert_eq!(b1, 500, "group 1 offsets must not include group 0 bytes");
+        assert_eq!(b2, 1_000);
+        assert!(c.lookup_group(0, a1));
+        assert!(c.lookup_group(1, b1));
+        assert!(c.lookup_group(1, b2));
+        assert_eq!(c.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn eviction_order_is_global_fifo_under_interleaved_tenants() {
+        // Shared-bounded window: capacity pressure from a bulk tenant
+        // evicts the *globally oldest* entries first — including another
+        // tenant's — exactly like the real page cache's one RAM pool.
+        let mut c = PageCache::new(30_000.0);
+        let small = c.append_group(1, 1_000.0); // oldest entry overall
+        c.append_group(0, 10_000.0);
+        c.append_group(0, 10_000.0);
+        assert!(c.lookup_group(1, small), "still within capacity");
+        c.append_group(0, 10_000.0); // 31 kB total: evicts group 1's entry
+        assert!(
+            !c.lookup_group(1, small),
+            "the globally oldest entry is evicted first, regardless of group"
+        );
+        // Group 0's newest three entries survived intact.
+        assert_eq!(c.oldest_cached_group(0), 0);
+        assert!(c.lookup_group(0, 10_000));
+        assert!(c.lookup_group(0, 30_000));
+        // A fresh group-1 append is cached again at its own offsets.
+        let next = c.append_group(1, 1_000.0);
+        assert_eq!(next, 2_000);
+        assert!(c.lookup_group(1, next));
+    }
+
+    #[test]
     fn cache_never_exceeds_capacity_property() {
         crate::util::prop::check(100, |rng| {
             let cap = rng.uniform(1e4, 1e6);
             let mut c = PageCache::new(cap);
             for _ in 0..200 {
-                c.append(rng.uniform(1.0, 5e4));
+                c.append_group(rng.below(4) as u32, rng.uniform(1.0, 5e4));
                 if c.cached_bytes > cap + 5e4 {
                     return Err(format!("cache overflow: {} > {}", c.cached_bytes, cap));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_window_semantics_property() {
+        // For every group: reads at the group high-water mark always
+        // hit while the newest entry survives, and reads below the
+        // group's oldest surviving entry always miss.
+        crate::util::prop::check(100, |rng| {
+            let mut c = PageCache::new(rng.uniform(2e4, 2e5));
+            for _ in 0..100 {
+                let g = rng.below(3) as u32;
+                let end = c.append_group(g, rng.uniform(1.0, 2e4));
+                let oldest = c.oldest_cached_group(g);
+                if oldest < end && !c.lookup_group(g, end) {
+                    return Err(format!("fresh append missed: group {g} end {end}"));
+                }
+                if oldest > 0 && c.lookup_group(g, oldest) {
+                    return Err(format!(
+                        "offset at/below the window start must miss: group {g} oldest {oldest}"
+                    ));
                 }
             }
             Ok(())

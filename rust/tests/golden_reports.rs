@@ -782,6 +782,10 @@ fn assert_facerec_matches(cfg: &Config) {
     same_f64(legacy.consumer_net_rx_util, new.consumer_net_rx_util, "consumer_net_rx_util");
     same_f64(legacy.mean_faces_per_frame, new.mean_faces_per_frame, "mean_faces_per_frame");
     assert_eq!(legacy.population, new.population, "population samples");
+    // No event was ever scheduled into the past: the queue's clamp must
+    // stay a dead path in a healthy world, or it could silently reorder
+    // a buggy schedule instead of surfacing it.
+    assert_eq!(new.clamped_events, 0, "kernel world clamped a past-time event");
 }
 
 #[test]
@@ -827,6 +831,7 @@ fn objdet_is_seed_identical() {
     same_f64(legacy.e2e_mean_us, new.e2e_mean_us, "e2e_mean_us");
     same_f64(legacy.storage_write_util, new.storage_write_util, "storage_write_util");
     same_f64(legacy.producer_send_util, new.producer_send_util, "producer_send_util");
+    assert_eq!(new.clamped_events, 0, "kernel world clamped a past-time event");
 }
 
 #[test]
@@ -843,4 +848,5 @@ fn objdet_overload_is_seed_identical() {
     assert_eq!(legacy.frames_detected, new.frames_detected);
     same_f64(legacy.delay_mean_us, new.delay_mean_us, "delay_mean_us");
     same_f64(legacy.producer_send_util, new.producer_send_util, "producer_send_util");
+    assert_eq!(new.clamped_events, 0, "kernel world clamped a past-time event");
 }

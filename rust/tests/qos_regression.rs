@@ -76,6 +76,11 @@ fn registry_with_qos_off_reproduces_the_mixed_report_byte_identically() {
 
     // Identical worlds ⇒ identical event counts...
     assert_eq!(mixed.events, multi.events, "event streams diverged");
+    // ...and no event was ever scheduled into the past: the queue's
+    // release-build clamp must stay a dead path, or it could silently
+    // reorder a buggy schedule instead of surfacing it.
+    assert_eq!(mixed.clamped_events, 0, "mixed world clamped a past-time event");
+    assert_eq!(multi.clamped_events, 0, "registry world clamped a past-time event");
     // ...identical per-tenant counters...
     let fr = multi.tenant("facerec").unwrap();
     let od = multi.tenant("objdet").unwrap();
@@ -117,6 +122,8 @@ fn slack_quotas_without_weights_are_a_noop() {
     let policed = MultiTenantSim::new(policed_cfg).run();
 
     assert_eq!(open.events, policed.events);
+    assert_eq!(open.clamped_events, 0);
+    assert_eq!(policed.clamped_events, 0);
     for (a, b) in open.tenants.iter().zip(&policed.tenants) {
         assert_eq!(a.produced, b.produced, "{}: produced", a.name);
         assert_eq!(a.completed, b.completed, "{}: completed", a.name);

@@ -1,0 +1,168 @@
+//! Storage-scheduler off-path fidelity + per-broker write-budget edges.
+//!
+//! PR 4 swapped the NVMe write queue's *implementation point*: every
+//! write now flows through `StorageDevice::write_classed`, which routes
+//! to the weighted per-class scheduler only when storage QoS is
+//! installed. These tests pin the contract the same way the PR-3
+//! heap/merge differentials did — a verbatim copy of the seed FIFO write
+//! path is kept here as the reference, and the new device must reproduce
+//! its completion times **bit-identically** on random workloads when QoS
+//! is disabled:
+//!
+//! 1. device-level differential: random `(now, bytes, class)` write
+//!    sequences against the seed FIFO reference;
+//! 2. a registry world with storage QoS off induces no policy at all;
+//! 3. per-broker write-budget edge cases: a zero budget starves every
+//!    budgeted tenant (and only on the wire — local production
+//!    continues), a slack budget is observationally a no-op.
+
+use aitax::config::hardware::NvmeSpec;
+use aitax::config::{Config, Deployment};
+use aitax::pipeline::dc::WorkloadKind;
+use aitax::pipeline::mixed::{MultiTenantConfig, MultiTenantSim, TenantDef};
+use aitax::storage::device::StorageDevice;
+use aitax::util::units::SEC;
+
+/// The seed repository's FIFO write path, verbatim: a rate server with a
+/// µs backlog that drains during idle gaps, `ceil` service rounding, and
+/// pipelined fixed latency (`sim::resource::FifoServer::submit` as of
+/// PR 3, specialized to the write path).
+mod reference {
+    pub struct SeedWriteFifo {
+        rate: f64,
+        latency_us: u64,
+        last_us: u64,
+        backlog: u64,
+    }
+
+    impl SeedWriteFifo {
+        pub fn new(rate_per_sec: f64, latency_us: u64) -> Self {
+            SeedWriteFifo { rate: rate_per_sec, latency_us, last_us: 0, backlog: 0 }
+        }
+
+        pub fn submit(&mut self, now: u64, work: f64) -> u64 {
+            let service_us = (work / self.rate * 1e6).ceil() as u64;
+            if now > self.last_us {
+                let idle = now - self.last_us;
+                self.backlog = self.backlog.saturating_sub(idle);
+                self.last_us = now;
+            }
+            self.backlog += service_us;
+            self.last_us + self.backlog + self.latency_us
+        }
+    }
+}
+
+#[test]
+fn disabled_storage_scheduler_is_byte_identical_to_the_seed_fifo() {
+    // Random interleaved writes — in-order and slightly out-of-order
+    // submission times, byte sizes from 2 kB rpc records to 1 MB train
+    // batches, arbitrary classes (inert without QoS). Every completion
+    // must match the seed FIFO to the microsecond.
+    aitax::util::prop::check(300, |rng| {
+        let spec = NvmeSpec::p4510_1tb();
+        let rate = rng.uniform(0.3, 1.0) * spec.write_bw;
+        let mut device = StorageDevice::new(spec, 1, rate);
+        assert!(!device.write_qos_enabled());
+        let mut seed = reference::SeedWriteFifo::new(rate, spec.write_latency_us);
+        let mut now = 0u64;
+        for i in 0..200 {
+            // Mostly forward time, occasionally the same instant, and an
+            // out-of-order submission every few writes (the fabric's
+            // order-relaxed regime).
+            match rng.below(8) {
+                0 => {}
+                1 => now = now.saturating_sub(rng.below(50)),
+                _ => now += rng.below(20_000),
+            }
+            let bytes = rng.uniform(2_000.0, 1_000_000.0);
+            let class = rng.below(4) as u8;
+            let a = device.write_classed(now, bytes, class);
+            let b = seed.submit(now, bytes);
+            if a != b {
+                return Err(format!(
+                    "write {i} diverged: device {a} vs seed fifo {b} (now={now}, bytes={bytes})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Scaled-down facerec + train pair for the budget edge cases.
+fn small_registry() -> MultiTenantConfig {
+    let mut fr = Config::default();
+    fr.deployment = Deployment {
+        producers: 20,
+        consumers: 30,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 30,
+    };
+    fr.seed = 0xACCE1;
+    fr.duration_us = 10 * SEC;
+    let mut tr = Config::default();
+    tr.deployment = Deployment {
+        producers: 4,
+        consumers: 6,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 6,
+    };
+    tr.calibration.train.batch_bytes = 200_000.0;
+    tr.calibration.train.fetch_min_bytes = 400_000;
+    tr.seed = 0x7EA1;
+    tr.duration_us = 10 * SEC;
+    let fabric = fr.clone();
+    MultiTenantConfig::new(fabric, 10 * SEC)
+        .tenant(TenantDef::new("facerec", WorkloadKind::FaceRec, fr))
+        .tenant(TenantDef::new("train", WorkloadKind::TrainIngest, tr))
+}
+
+#[test]
+fn storage_qos_off_induces_no_policy() {
+    let cfg = small_registry();
+    assert!(!cfg.storage_qos && !cfg.qos_enabled);
+    assert!(cfg.policy().is_none(), "no mechanism enabled ⇒ no policy");
+}
+
+#[test]
+fn zero_write_budget_starves_every_budgeted_tenant() {
+    let cfg = small_registry().with_qos(true).with_broker_write_budget(0.0);
+    let mut cfg = cfg;
+    cfg.weighted_cpu = false;
+    let r = MultiTenantSim::new(cfg).run();
+    for t in &r.tenants {
+        assert!(t.produced > 0, "tenant {} must keep producing locally", t.name);
+        assert_eq!(
+            t.completed, 0,
+            "tenant {} must complete nothing under a zero write budget",
+            t.name
+        );
+    }
+    assert_eq!(r.clamped_events, 0);
+}
+
+#[test]
+fn slack_write_budget_is_observationally_a_noop() {
+    // A budget orders of magnitude above offered load: buckets are
+    // charged but never delay, so every observable matches the
+    // unpoliced run exactly — same events, same counters, same floats.
+    let open = MultiTenantSim::new(small_registry()).run();
+    let mut policed_cfg = small_registry().with_qos(true).with_broker_write_budget(1e15);
+    policed_cfg.weighted_cpu = false;
+    let policed = MultiTenantSim::new(policed_cfg).run();
+    assert_eq!(open.events, policed.events);
+    for (a, b) in open.tenants.iter().zip(&policed.tenants) {
+        assert_eq!(a.produced, b.produced, "{}: produced", a.name);
+        assert_eq!(a.completed, b.completed, "{}: completed", a.name);
+        assert_eq!(a.e2e_p99_us, b.e2e_p99_us, "{}: e2e_p99", a.name);
+        assert!(a.wait_mean_us == b.wait_mean_us, "{}: wait_mean", a.name);
+        assert!(a.e2e_mean_us == b.e2e_mean_us, "{}: e2e_mean", a.name);
+    }
+    assert!(open.broker_storage_write_util == policed.broker_storage_write_util);
+    assert_eq!(open.clamped_events, 0);
+    assert_eq!(policed.clamped_events, 0);
+}
