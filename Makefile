@@ -35,8 +35,14 @@ doc:
 fmt:
 	cd rust && cargo fmt --all --check
 
+# Warnings denied, matching CI (same provisional allow-list; see
+# .github/workflows/ci.yml for why each entry exists).
 clippy:
-	cd rust && cargo clippy --all-targets
+	cd rust && cargo clippy --all-targets -- -D warnings \
+	  -A clippy::field-reassign-with-default \
+	  -A clippy::redundant-closure \
+	  -A clippy::new-without-default \
+	  -A clippy::unnecessary-map-or
 
 clean:
 	cd rust && cargo clean

@@ -134,9 +134,22 @@ pub struct BrokerModel {
     /// Fitted to Fig 15b unlock points (3 -> <8x, 4 -> 8x, 6 -> 16x,
     /// 8 -> 32x).
     pub broker_relief_exp: f64,
-    /// Fraction of consumer fetches served from the page cache (paper
-    /// §5.4: reads "use essentially none of the available bandwidth").
+    /// **Calibration target** for the measured read path (paper §5.4:
+    /// reads "use essentially none of the available bandwidth"): the
+    /// byte-weighted cache hit ratio the default page-cache capacity
+    /// ([`BrokerModel::page_cache_frac`]) must reproduce under nominal
+    /// lag — streaming consumers reading right behind the appenders.
+    /// `experiments::read_path` pins this
+    /// (`default_cache_reproduces_the_calibrated_hit_rate`); the DES
+    /// does not substitute the constant for the model — hits and misses
+    /// come from per-group offsets against the cached window.
     pub read_cache_hit: f64,
+    /// Fraction of broker-node RAM given to the OS page cache when the
+    /// measured read path derives its default capacity
+    /// ([`Calibration::page_cache_capacity`]). Kafka brokers run with a
+    /// small JVM heap and leave the rest of their 384 GB (Table 2) to
+    /// the page cache; 0.75 is the operator rule of thumb.
+    pub page_cache_frac: f64,
 }
 
 impl Default for BrokerModel {
@@ -146,6 +159,7 @@ impl Default for BrokerModel {
             drive_scale_alpha: 0.17,
             broker_relief_exp: 0.58,
             read_cache_hit: 0.995,
+            page_cache_frac: 0.75,
         }
     }
 }
@@ -398,6 +412,12 @@ impl Calibration {
         spec_write_bw * self.broker.small_write_eff * d.powf(1.0 + self.broker.drive_scale_alpha)
             * relief.max(1.0) // adding brokers never *hurts* a broker
     }
+
+    /// Default per-broker page-cache capacity for the measured read
+    /// path: the configured fraction of the broker node's RAM (bytes).
+    pub fn page_cache_capacity(&self, node_memory_bytes: u64) -> f64 {
+        node_memory_bytes as f64 * self.broker.page_cache_frac
+    }
 }
 
 #[cfg(test)]
@@ -459,6 +479,19 @@ mod tests {
         let c = Calibration::default();
         let cap = c.broker_write_capacity(1.1e9, 1, 3);
         assert!((cap - 0.77e9).abs() < 1e7, "cap={cap}");
+    }
+
+    #[test]
+    fn page_cache_capacity_is_a_ram_fraction() {
+        let c = Calibration::default();
+        let node = crate::config::NodeSpec::xeon_8176();
+        let cap = c.page_cache_capacity(node.memory);
+        assert!((cap - 0.75 * node.memory as f64).abs() < 1.0);
+        // ~288 GB of window: at the fabric's ~770 MB/s effective write
+        // bandwidth that is >5 minutes of residency, so nominal-lag
+        // consumers must land at/above the §5.4 calibration target.
+        assert!(cap > 250e9);
+        assert!(c.broker.read_cache_hit >= 0.99);
     }
 
     #[test]

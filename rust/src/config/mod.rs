@@ -197,6 +197,11 @@ pub struct Config {
     pub protocol: AccelProtocol,
     /// Mean face thumbnail bytes (paper: 37.3 kB). Fig 15c sweeps this.
     pub face_bytes: f64,
+    /// Catch-up scenarios: this tenant's consumers do not poll before
+    /// this virtual instant (µs), then drain the accumulated backlog —
+    /// through cold device reads once it ages out of the page-cache
+    /// window (the measured read path). 0 = consumers start live.
+    pub consumer_lag_start_us: u64,
 }
 
 impl Default for Config {
@@ -212,6 +217,7 @@ impl Default for Config {
             accel: 1.0,
             protocol: AccelProtocol::Emulation,
             face_bytes: 37_300.0,
+            consumer_lag_start_us: 0,
         }
     }
 }
@@ -242,6 +248,7 @@ impl Config {
                 "warmup_frac" => self.warmup_frac = req_f64(v, k)?,
                 "accel" => self.accel = req_f64(v, k)?,
                 "face_bytes" => self.face_bytes = req_f64(v, k)?,
+                "consumer_lag_start_us" => self.consumer_lag_start_us = req_u64(v, k)?,
                 "protocol" => {
                     self.protocol = match v.as_str() {
                         Some("ai_share") => AccelProtocol::AiShareOnly,

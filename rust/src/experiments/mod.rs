@@ -3,7 +3,10 @@
 //! interference sweep; [`qos`] — the N-tenant p99-vs-share SLO sweep with
 //! broker scheduling classes and topic quotas as the mitigation;
 //! [`storage_qos`] — the write-path sweep pitting the seed FIFO NVMe
-//! queue against per-class GPS write scheduling).
+//! queue against per-class GPS write scheduling; [`read_path`] — the
+//! lagging-consumer sweep that turns Fig 11's "reads are free"
+//! assumption into a measured threshold: catch-up lag × page-cache size
+//! × {unclassed, classed} device reads).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -29,6 +32,7 @@ pub mod fig14;
 pub mod fig15;
 pub mod mixed;
 pub mod qos;
+pub mod read_path;
 pub mod runner;
 pub mod storage_qos;
 pub mod table34;

@@ -1,0 +1,182 @@
+//! Catch-up consumers: the scenario where Fig 11's "reads are free"
+//! assumption breaks.
+//!
+//! The paper argues consumer reads cost nothing because brokers serve
+//! them from the OS page cache (§5.4) — true for *streaming* consumers
+//! that read right behind the producers. But a consumer that falls
+//! behind — a crashed replica rejoining, a batch job replaying a topic,
+//! a training reader restarted from an old checkpoint — must drain a
+//! backlog that may have aged out of the cache window, and every cold
+//! byte comes off the same NVMe spindle the producers are writing to.
+//! This module packages that scenario on the N-tenant registry:
+//!
+//! * **facerec** — the §5.3 acceleration deployment at 4× (stable
+//!   alone), streaming consumers; its ~420 MB/s of replicated appends
+//!   is the cache-eviction pressure.
+//! * **train-ingest** — 16 shard writers at ~160 MB/s whose consumers
+//!   start [`CatchupSpec::lag_us`] behind
+//!   ([`TenantDef::with_consumer_lag`]): at resume they fetch the whole
+//!   accumulated backlog, and whatever lies below the cache window
+//!   becomes one sustained cold-read burst on every broker.
+//! * **rpc** — the latency canary: byte-wise negligible, but its 2 kB
+//!   appends commit through the same spindle the cold reads occupy.
+//!
+//! With `classed_reads = false` the burst hits the seed FIFO spindle and
+//! every tenant's produce path waits it out; with `classed_reads = true`
+//! the cold reads carry the catch-up tenant's class through the same
+//! GPS write scheduler PR 4 installed ([`QosPolicy::storage_weights`]
+//! via [`MultiTenantConfig::with_storage_qos`]), so the replay drains at
+//! weight 1 while facerec and rpc keep their shares.
+//! `experiments::read_path` sweeps lag depth × cache size × the two
+//! arms (`aitax experiment read-path`).
+//!
+//! [`QosPolicy::storage_weights`]: crate::broker::qos::QosPolicy
+
+use crate::config::{Config, Deployment};
+use crate::pipeline::dc::WorkloadKind;
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim, TenantDef};
+
+/// Scheduling-class weights, shared with `experiments::storage_qos`:
+/// the latency tenants outrank the bulk replayer.
+pub const FACEREC_WEIGHT: f64 = 4.0;
+pub const TRAIN_WEIGHT: f64 = 1.0;
+pub const RPC_WEIGHT: f64 = 8.0;
+
+/// Face Recognition acceleration factor (stable alone at 4×).
+pub const ACCEL_FACEREC: f64 = 4.0;
+
+/// One catch-up scenario point.
+#[derive(Clone, Copy, Debug)]
+pub struct CatchupSpec {
+    /// How far behind the train tenant's consumers start (µs). 0 = a
+    /// fully streaming world (the control arm).
+    pub lag_us: u64,
+    /// Per-broker page-cache capacity (bytes) for the measured read
+    /// path.
+    pub cache_bytes: f64,
+    /// `true`: cold reads and writes share the per-class GPS spindle
+    /// scheduler at the tenant weights; `false`: the seed FIFO spindle.
+    pub classed_reads: bool,
+}
+
+/// The 3-tenant catch-up registry at one scenario point, on the paper's
+/// 3-broker fabric, with the measured read path enabled. No quotas and
+/// no CPU weights in either arm — the sweep isolates the read path.
+pub fn registry(spec: CatchupSpec, horizon_us: u64) -> MultiTenantConfig {
+    let mut fr = Config::default();
+    fr.deployment = Deployment::facerec_accel();
+    fr.accel = ACCEL_FACEREC;
+    fr.duration_us = horizon_us;
+    fr.seed = 0xACCE1;
+
+    let mut tr = Config::default();
+    tr.deployment = Deployment::train_ingest();
+    tr.duration_us = horizon_us;
+    tr.seed = 0x7EA1;
+
+    let mut rpc = Config::default();
+    rpc.deployment = Deployment::rpc_service();
+    rpc.duration_us = horizon_us;
+    rpc.seed = 0x59C;
+
+    let fabric = fr.clone();
+    MultiTenantConfig::new(fabric, horizon_us)
+        .tenant(
+            TenantDef::new("facerec", WorkloadKind::FaceRec, fr).with_weight(FACEREC_WEIGHT),
+        )
+        .tenant(
+            TenantDef::new("train-ingest", WorkloadKind::TrainIngest, tr)
+                .with_weight(TRAIN_WEIGHT)
+                .with_consumer_lag(spec.lag_us),
+        )
+        .tenant(TenantDef::new("rpc", WorkloadKind::Rpc, rpc).with_weight(RPC_WEIGHT))
+        .with_read_cache(spec.cache_bytes)
+        .with_storage_qos(spec.classed_reads)
+}
+
+/// Run one catch-up scenario point.
+pub fn run(spec: CatchupSpec, horizon_us: u64) -> MultiTenantReport {
+    MultiTenantSim::new(registry(spec, horizon_us)).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::SEC;
+
+    #[test]
+    fn registry_wires_the_scenario() {
+        let spec = CatchupSpec {
+            lag_us: 10 * SEC,
+            cache_bytes: 2e9,
+            classed_reads: true,
+        };
+        let cfg = registry(spec, 20 * SEC);
+        assert_eq!(cfg.tenants.len(), 3);
+        assert_eq!(cfg.read_cache_bytes, Some(2e9));
+        assert!(cfg.storage_qos);
+        assert!(!cfg.qos_enabled, "no quotas in either arm");
+        assert!(!cfg.weighted_cpu, "no CPU weights in either arm");
+        assert_eq!(cfg.tenants[1].cfg.consumer_lag_start_us, 10 * SEC);
+        assert_eq!(cfg.tenants[0].cfg.consumer_lag_start_us, 0);
+        assert_eq!(cfg.tenants[1].qos.weight, TRAIN_WEIGHT);
+        cfg.validate().unwrap();
+    }
+
+    /// Scaled-down catch-up world (small fleets, short horizon) so the
+    /// unit test stays fast; the full-size acceptance runs live in
+    /// `experiments::read_path`.
+    fn small_catchup(lag_us: u64, cache_bytes: f64) -> MultiTenantConfig {
+        let mut cfg = registry(
+            CatchupSpec { lag_us, cache_bytes, classed_reads: false },
+            10 * SEC,
+        );
+        cfg.tenants[0].cfg.deployment = Deployment {
+            producers: 20,
+            consumers: 30,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 30,
+        };
+        cfg.tenants[1].cfg.deployment = Deployment {
+            producers: 4,
+            consumers: 6,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 6,
+        };
+        cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+        cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+        cfg.fabric = cfg.tenants[0].cfg.clone();
+        cfg
+    }
+
+    #[test]
+    fn lagging_tenant_sleeps_then_drains_its_backlog() {
+        let behind = MultiTenantSim::new(small_catchup(5 * SEC, 50e6)).run();
+        let live = MultiTenantSim::new(small_catchup(0, 50e6)).run();
+        let tr_behind = behind.tenant("train-ingest").unwrap();
+        let tr_live = live.tenant("train-ingest").unwrap();
+        // The lagging consumers still complete work — after the resume.
+        assert!(tr_behind.completed > 0, "catch-up tenant never resumed");
+        assert!(
+            tr_behind.completed < tr_live.completed,
+            "sleeping 5 of 10 s must cost completions: {} vs {}",
+            tr_behind.completed,
+            tr_live.completed
+        );
+        // And the drain went cold: a 50 MB window cannot hold 5 s of
+        // this world's log traffic.
+        assert!(behind.cache_hit_ratio < 1.0);
+        assert!(behind.device_read_share > 0.0);
+        // The zero-lag arm stays effectively warm.
+        assert!(live.cache_hit_ratio > behind.cache_hit_ratio);
+        // The streaming tenants never starve in either arm.
+        for r in [&behind, &live] {
+            assert!(r.tenant("facerec").unwrap().completed > 0);
+            assert!(r.tenant("rpc").unwrap().completed > 0);
+        }
+    }
+}

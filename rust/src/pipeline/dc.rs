@@ -801,9 +801,13 @@ impl ConsumerPoller {
                 let s = &mut *ctx.shared;
                 s.tenants[t].metrics.net_rx_bytes += part_bytes;
                 fetched_bytes += part_bytes;
-                let done = s.fabric.fetch_classed(
+                // The global partition id is the read-path group key, so
+                // a lagging consumer's fetch is split against what is
+                // actually still cached for *this* partition.
+                let done = s.fabric.fetch_group_classed(
                     now,
                     leader,
+                    pi,
                     part_bytes,
                     self.tenant,
                     &mut self.units[cid].nic_rx,
@@ -922,6 +926,9 @@ pub struct FabricSpec {
     pub effective_write_bw: f64,
     pub net_bw: f64,
     pub tuning: KafkaTuning,
+    /// Per-broker page-cache capacity for the measured read path;
+    /// `None` (the default) keeps the seed's hardcoded cache hits.
+    pub read_cache_bytes: Option<f64>,
 }
 
 impl FabricSpec {
@@ -940,11 +947,19 @@ impl FabricSpec {
             ),
             net_bw: cfg.node.net_bw,
             tuning: cfg.tuning,
+            read_cache_bytes: None,
         }
     }
 
+    /// Enable the measured read path with a per-broker page cache of
+    /// `bytes` (see [`Fabric::enable_read_path`]).
+    pub fn with_read_cache(mut self, bytes: f64) -> FabricSpec {
+        self.read_cache_bytes = Some(bytes);
+        self
+    }
+
     fn build(&self) -> Fabric {
-        Fabric::new(
+        let mut fabric = Fabric::new(
             self.brokers,
             self.drives_per_broker,
             self.replication,
@@ -952,7 +967,11 @@ impl FabricSpec {
             self.effective_write_bw,
             self.net_bw,
             self.tuning,
-        )
+        );
+        if let Some(bytes) = self.read_cache_bytes {
+            fabric.enable_read_path(bytes);
+        }
+        fabric
     }
 }
 
@@ -1038,10 +1057,19 @@ pub fn build_with_qos(
             }
         };
         let quota = qos.map(|p| p.quota(tenant)).unwrap_or_default();
+        // Catch-up scenarios: a tenant whose consumers start
+        // `consumer_lag_start_us` behind sleeps through that window (the
+        // gate defers the first poll), then drains its backlog — through
+        // cold device reads once the backlog ages out of the page-cache
+        // window. Zero (the default) is the all-zero `ConsumerGate`.
+        let lag_gate = ConsumerGate {
+            busy_until: spec.cfg.consumer_lag_start_us,
+            ..ConsumerGate::default()
+        };
         tenant_states.push(TenantState {
             kind: spec.kind,
             fetch,
-            gates: vec![ConsumerGate::default(); d.consumers],
+            gates: vec![lag_gate; d.consumers],
             metrics: TenantMetrics::new(horizon_us),
             part_base,
             part_count: d.partitions as u32,
@@ -1285,6 +1313,11 @@ pub struct TenantSummary {
     pub e2e_mean_us: f64,
     pub e2e_p99_us: u64,
     pub stable: bool,
+    /// End-of-run consumer lag summed over the tenant's partitions
+    /// (bytes still unread past the fetch offsets). Zero when the
+    /// measured read path is disabled — and in any healthy streaming
+    /// run; nonzero means the tenant ended the horizon still behind.
+    pub consumer_lag_bytes: u64,
 }
 
 /// Summarize tenant `tenant` of a finished world.
@@ -1312,6 +1345,9 @@ pub fn summary_for_tenant(
         e2e_mean_us: m.hist_e2e.mean(),
         e2e_p99_us: m.hist_e2e.p99(),
         stable: m.population.verdict(elapsed).stable,
+        consumer_lag_bytes: (ts.part_base..ts.part_base + ts.part_count)
+            .map(|g| world.shared.fabric.group_lag_bytes(g))
+            .sum(),
     }
 }
 

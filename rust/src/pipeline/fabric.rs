@@ -27,12 +27,18 @@ use crate::config::hardware::NvmeSpec;
 use crate::config::KafkaTuning;
 use crate::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
 use crate::sim::resource::FifoServer;
+use crate::storage::cache::PageCache;
 use crate::storage::device::StorageDevice;
 
 /// One-way wire/switch transit within the data center (fat tree, µs).
 pub const WIRE_US: u64 = 30;
 /// Replication ack transit back to the leader.
 pub const ACK_TRANSIT_US: u64 = 60;
+
+/// Sentinel partition group for fetches with no partition identity
+/// (legacy entry points); such reads are always served from memory,
+/// reproducing the seed's hardcoded-hit behavior.
+pub const NO_GROUP: u32 = u32::MAX;
 
 /// A broker node's devices.
 pub struct BrokerNode {
@@ -91,6 +97,52 @@ struct InFlight {
     active: bool,
 }
 
+/// The measured consumer read path (opt-in; see
+/// [`Fabric::enable_read_path`]): one OS page cache per broker keyed by
+/// partition group, plus the per-group consumer offsets that turn cache
+/// residency into a function of the actual produce/consume gap.
+#[derive(Clone, Debug)]
+struct ReadPath {
+    /// One page cache per broker (index = broker id). Every durable
+    /// write — leader and follower — mirrors an append, so capacity
+    /// pressure on a broker comes from *all* log traffic it carries,
+    /// including replication follower writes of other partitions.
+    caches: Vec<PageCache>,
+    /// Consumer offset per partition group (bytes fetched so far);
+    /// grows on demand. One pinned consumer per partition makes a
+    /// single offset per group exact. (Hit/miss byte totals live in the
+    /// caches themselves — [`PageCache::byte_counters`] — summed by
+    /// [`Fabric::read_path_stats`].)
+    consumed: Vec<u64>,
+}
+
+/// Aggregate read-path counters ([`Fabric::read_path_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ReadPathStats {
+    /// Fetched bytes served from broker memory.
+    pub hit_bytes: f64,
+    /// Fetched bytes that went to the device read path.
+    pub miss_bytes: f64,
+}
+
+impl ReadPathStats {
+    /// Byte-weighted cache hit ratio (1.0 before any fetch).
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hit_bytes + self.miss_bytes;
+        if total == 0.0 {
+            1.0
+        } else {
+            self.hit_bytes / total
+        }
+    }
+
+    /// Fraction of fetched bytes served by the device (0.0 before any
+    /// fetch) — the complement of [`ReadPathStats::hit_ratio`].
+    pub fn device_read_share(&self) -> f64 {
+        1.0 - self.hit_ratio()
+    }
+}
+
 /// The broker fabric: brokers + in-flight produce state.
 pub struct Fabric {
     pub brokers: Vec<BrokerNode>,
@@ -98,6 +150,9 @@ pub struct Fabric {
     replication: usize,
     inflight: Vec<InFlight>,
     free: Vec<u32>,
+    /// Measured read path; `None` (the default) keeps the seed's
+    /// hardcoded cache hits bit for bit.
+    read_path: Option<ReadPath>,
 }
 
 impl Fabric {
@@ -127,6 +182,7 @@ impl Fabric {
             replication,
             inflight: Vec::new(),
             free: Vec::new(),
+            read_path: None,
         }
     }
 
@@ -168,6 +224,59 @@ impl Fabric {
         self.brokers
             .first()
             .map_or(false, |b| b.storage.write_qos_enabled())
+    }
+
+    /// Install the measured read path: one [`PageCache`] of
+    /// `cache_bytes_per_broker` on every broker, keyed by partition
+    /// group. Every durable write then mirrors an append into the
+    /// broker's cache, and every [`Fabric::fetch_group_classed`] is
+    /// split against the group's cached window at the consumer's actual
+    /// offset — cold bytes go to the device read path, where they
+    /// contend with replicated writes on the same spindle
+    /// ([`StorageDevice::read_cold_classed`]; classed when storage QoS
+    /// weights are installed). Call before any traffic flows. With this
+    /// disabled (the default) every fetch is served from memory, bit
+    /// for bit the seed behavior.
+    pub fn enable_read_path(&mut self, cache_bytes_per_broker: f64) {
+        self.read_path = Some(ReadPath {
+            caches: (0..self.brokers.len())
+                .map(|_| PageCache::new(cache_bytes_per_broker))
+                .collect(),
+            consumed: Vec::new(),
+        });
+    }
+
+    /// Whether the measured read path is active.
+    pub fn read_path_enabled(&self) -> bool {
+        self.read_path.is_some()
+    }
+
+    /// Aggregate read-path hit/miss byte totals, summed across the
+    /// per-broker caches (`None` when disabled).
+    pub fn read_path_stats(&self) -> Option<ReadPathStats> {
+        self.read_path.as_ref().map(|rp| {
+            let (hit_bytes, miss_bytes) = rp
+                .caches
+                .iter()
+                .map(PageCache::byte_counters)
+                .fold((0.0, 0.0), |(h, m), (ch, cm)| (h + ch, m + cm));
+            ReadPathStats { hit_bytes, miss_bytes }
+        })
+    }
+
+    /// Consumer lag of one partition group in bytes — the gap between
+    /// the group's appended high-water mark and its consumer's fetch
+    /// offset. Zero when the read path is disabled.
+    pub fn group_lag_bytes(&self, group: u32) -> u64 {
+        let Some(rp) = &self.read_path else { return 0 };
+        let appended = rp
+            .caches
+            .iter()
+            .map(|c| c.appended_of(group))
+            .max()
+            .unwrap_or(0);
+        let consumed = rp.consumed.get(group as usize).copied().unwrap_or(0);
+        appended.saturating_sub(consumed)
     }
 
     fn request_cpu_us(&self, bytes: f64) -> f64 {
@@ -248,14 +357,17 @@ impl Fabric {
                 out.push(FabricOut::Schedule(t_cpu, FabricEv::LeaderCpuDone { fid }));
             }
             FabricEv::LeaderCpuDone { fid } => {
-                let (leader, bytes, class) = {
+                let (leader, bytes, class, partition) = {
                     let f = &self.inflight[fid as usize];
-                    (f.leader as usize, f.bytes, f.class)
+                    (f.leader as usize, f.bytes, f.class, f.partition)
                 };
                 // Durable write on the leader, in the record's tenant
                 // class (inert unless storage QoS is enabled).
                 meter.add(Class::Broker, Channel::Storage, Dir::Write, bytes);
                 let t_wr = self.brokers[leader].storage.write_classed(now, bytes, class);
+                if let Some(rp) = &mut self.read_path {
+                    rp.caches[leader].append_group(partition, bytes);
+                }
                 out.push(FabricOut::Schedule(t_wr, FabricEv::LeaderStored { fid }));
                 // Fan out to followers.
                 let n = self.brokers.len();
@@ -285,14 +397,17 @@ impl Fabric {
                 ));
             }
             FabricEv::FollowerCpuDone { fid, broker } => {
-                let (bytes, class) = {
+                let (bytes, class, partition) = {
                     let f = &self.inflight[fid as usize];
-                    (f.bytes, f.class)
+                    (f.bytes, f.class, f.partition)
                 };
                 meter.add(Class::Broker, Channel::Storage, Dir::Write, bytes);
                 let t_wr = self.brokers[broker as usize]
                     .storage
                     .write_classed(now, bytes, class);
+                if let Some(rp) = &mut self.read_path {
+                    rp.caches[broker as usize].append_group(partition, bytes);
+                }
                 out.push(FabricOut::Schedule(
                     t_wr + ACK_TRANSIT_US,
                     FabricEv::ReplicaAck { fid },
@@ -339,7 +454,9 @@ impl Fabric {
     }
 
     /// [`Fabric::fetch`] with an explicit scheduling class (tenant id);
-    /// inert unless weighted request-CPU scheduling is enabled.
+    /// inert unless weighted request-CPU scheduling is enabled. No
+    /// partition identity, so with the read path enabled the fetch is
+    /// still served from memory (the [`NO_GROUP`] contract).
     pub fn fetch_classed(
         &mut self,
         now: u64,
@@ -349,10 +466,58 @@ impl Fabric {
         consumer_nic_rx: &mut FifoServer,
         meter: &mut BandwidthMeter,
     ) -> u64 {
+        self.fetch_group_classed(now, leader, NO_GROUP, bytes, class, consumer_nic_rx, meter)
+    }
+
+    /// [`Fabric::fetch_classed`] with the partition group identity the
+    /// measured read path needs. With the read path disabled (or
+    /// `group == NO_GROUP`) this is the seed fetch, bit for bit: request
+    /// CPU, a free page-cache read, NIC out. With it enabled, the fetch
+    /// range `(consumed, consumed + bytes]` of the group is split
+    /// against the leader's cached window — resident bytes stay free,
+    /// cold bytes go to the device read path in the fetch's scheduling
+    /// class, where they contend with the replicated write stream on
+    /// the same spindle.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fetch_group_classed(
+        &mut self,
+        now: u64,
+        leader: u32,
+        group: u32,
+        bytes: f64,
+        class: u8,
+        consumer_nic_rx: &mut FifoServer,
+        meter: &mut BandwidthMeter,
+    ) -> u64 {
         let cpu = self.request_cpu_us(bytes);
         let b = &mut self.brokers[leader as usize];
         let t_cpu = b.cpu_submit(now, class, cpu);
-        let t_read = b.storage.read(t_cpu, bytes, true); // page cache
+        let t_read = match &mut self.read_path {
+            Some(rp) if group != NO_GROUP => {
+                let idx = group as usize;
+                if idx >= rp.consumed.len() {
+                    rp.consumed.resize(idx + 1, 0);
+                }
+                let cache = &mut rp.caches[leader as usize];
+                let start = rp.consumed[idx];
+                let want = bytes.ceil() as u64;
+                let (hit, miss) = cache.read_range_group(group, start, want);
+                // Advance the consumer offset; clamp to the group's
+                // high-water mark so per-fetch rounding cannot push the
+                // offset past what was actually appended.
+                rp.consumed[idx] = (start + want).min(cache.appended_of(group)).max(start);
+                let mut t = t_cpu;
+                if hit > 0 {
+                    t = b.storage.read(t_cpu, hit as f64, true);
+                }
+                if miss > 0 {
+                    meter.add(Class::Broker, Channel::Storage, Dir::Read, miss as f64);
+                    t = t.max(b.storage.read_cold_classed(t_cpu, miss as f64, class));
+                }
+                t
+            }
+            _ => b.storage.read(t_cpu, bytes, true), // page cache (seed path)
+        };
         let t_tx = b.nic_tx.submit(t_read, bytes) + WIRE_US;
         let t_rx = consumer_nic_rx.submit(t_tx, bytes);
         meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
@@ -623,5 +788,77 @@ mod tests {
         // cpu (~112us) + nic transfer (~3us) + wire.
         assert!(t > 5_000 && t < 5_600, "fetch delivered at {t}");
         assert_eq!(f.max_storage_read_util(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn read_path_streaming_fetch_stays_memory_speed() {
+        // Ample cache + a consumer reading right behind the appender:
+        // every fetch is resident, the device read path stays idle, and
+        // the delivery time matches the seed's hardcoded-hit fetch.
+        let mut f = fabric();
+        f.enable_read_path(1e9);
+        assert!(f.read_path_enabled());
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut t_commit = 0;
+        for i in 0..20 {
+            let (_, at) = run_one(&mut f, i * 50_000, 37_300.0);
+            t_commit = at;
+        }
+        let t = f.fetch_group_classed(
+            t_commit,
+            0,
+            0,
+            20.0 * 37_300.0,
+            0,
+            &mut nic,
+            &mut meter,
+        );
+        assert!(t < t_commit + 2_000, "streaming fetch delivered at {t}");
+        let stats = f.read_path_stats().unwrap();
+        assert_eq!(stats.hit_ratio(), 1.0);
+        assert_eq!(stats.device_read_share(), 0.0);
+        assert_eq!(f.max_storage_read_util(t_commit), 0.0);
+        assert_eq!(f.group_lag_bytes(0), 0, "fetch drained the whole group");
+    }
+
+    #[test]
+    fn read_path_lagging_fetch_splits_to_the_device() {
+        // A 50 kB cache holds barely one 37.3 kB record per broker; a
+        // consumer that never polled while 20 records landed reads the
+        // evicted majority from the device — and that cold read queues
+        // on the same spindle the writes use.
+        let mut f = fabric();
+        f.enable_read_path(50_000.0);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut t_commit = 0;
+        for i in 0..20 {
+            let (_, at) = run_one(&mut f, i * 50_000, 37_300.0);
+            t_commit = at;
+        }
+        let backlog = 20.0 * 37_300.0;
+        assert!(f.group_lag_bytes(0) >= backlog as u64 - 20);
+        let t = f.fetch_group_classed(t_commit, 0, 0, backlog, 0, &mut nic, &mut meter);
+        let stats = f.read_path_stats().unwrap();
+        assert!(
+            stats.hit_ratio() < 0.1,
+            "19 of 20 records were evicted: hit ratio {}",
+            stats.hit_ratio()
+        );
+        assert!(stats.device_read_share() > 0.9);
+        assert!(f.max_storage_read_util(t_commit) > 0.0, "device reads must show up");
+        // ~700 kB cold at the 770 MB/s effective spindle rate ≈ 0.9 ms
+        // of device time — far slower than the memory-speed fetch.
+        assert!(t > t_commit + 800, "cold fetch delivered too fast: {t}");
+        assert_eq!(f.group_lag_bytes(0), 0, "catch-up fetch drained the lag");
+    }
+
+    #[test]
+    fn read_path_disabled_reports_no_stats() {
+        let f = fabric();
+        assert!(!f.read_path_enabled());
+        assert!(f.read_path_stats().is_none());
+        assert_eq!(f.group_lag_bytes(7), 0);
     }
 }

@@ -229,6 +229,16 @@ impl TenantDef {
         self.qos.fetch_bytes_per_sec = Some(bytes_per_sec);
         self
     }
+
+    /// Catch-up scenario: this tenant's consumers start `lag_us` behind
+    /// (no polls before that virtual instant), then drain the backlog —
+    /// through cold device reads once it ages out of the page-cache
+    /// window, when the registry enables the measured read path
+    /// ([`MultiTenantConfig::with_read_cache`]).
+    pub fn with_consumer_lag(mut self, lag_us: u64) -> Self {
+        self.cfg.consumer_lag_start_us = lag_us;
+        self
+    }
 }
 
 /// An N-tenant deployment on one shared fabric.
@@ -261,6 +271,14 @@ pub struct MultiTenantConfig {
     /// ([`Self::qos_enabled`]) on; a later `with_qos(false)` turns
     /// enforcement — budget included — back off.
     pub broker_write_budget: Option<f64>,
+    /// Per-broker page-cache capacity of the **measured read path**
+    /// (bytes); `None` (the default) keeps the seed's hardcoded cache
+    /// hits. When set, consumer fetches are split against each broker's
+    /// cached window at the tenant's actual consume offsets, and cold
+    /// bytes contend with replicated writes on the NVMe spindle —
+    /// classed at the tenant weights when [`Self::storage_qos`] is on,
+    /// FIFO otherwise.
+    pub read_cache_bytes: Option<f64>,
 }
 
 impl MultiTenantConfig {
@@ -273,6 +291,7 @@ impl MultiTenantConfig {
             weighted_cpu: false,
             storage_qos: false,
             broker_write_budget: None,
+            read_cache_bytes: None,
         }
     }
 
@@ -291,6 +310,25 @@ impl MultiTenantConfig {
     pub fn with_storage_qos(mut self, enabled: bool) -> Self {
         self.storage_qos = enabled;
         self
+    }
+
+    /// Enable the measured read path with an explicit per-broker
+    /// page-cache capacity (see [`Self::read_cache_bytes`]).
+    pub fn with_read_cache(mut self, bytes: f64) -> Self {
+        self.read_cache_bytes = Some(bytes);
+        self
+    }
+
+    /// Enable the measured read path at the calibrated default
+    /// capacity: [`crate::config::Calibration::page_cache_capacity`] of
+    /// the fabric node's RAM (the capacity that must reproduce the
+    /// §5.4 `read_cache_hit` target under nominal lag).
+    pub fn with_default_read_cache(self) -> Self {
+        let bytes = self
+            .fabric
+            .calibration
+            .page_cache_capacity(self.fabric.node.memory);
+        self.with_read_cache(bytes)
     }
 
     /// Set the per-broker write budget (see [`Self::broker_write_budget`]).
@@ -370,8 +408,17 @@ impl MultiTenantConfig {
 pub struct MultiTenantReport {
     pub tenants: Vec<TenantSummary>,
     pub broker_storage_write_util: f64,
+    /// Max per-broker device-read utilization (spec-relative) — nonzero
+    /// only when the measured read path sees cache misses.
+    pub broker_storage_read_util: f64,
     pub broker_net_rx_util: f64,
     pub broker_cpu_util: f64,
+    /// Byte-weighted page-cache hit ratio across all fetches (1.0 when
+    /// the measured read path is disabled: the seed's assumption).
+    pub cache_hit_ratio: f64,
+    /// Fraction of fetched bytes served by the NVMe read path (0.0 when
+    /// the read path is disabled).
+    pub device_read_share: f64,
     pub events: u64,
     /// Past-time schedules clamped by the event queue — zero in every
     /// healthy run (`tests/qos_regression.rs` asserts it).
@@ -398,7 +445,10 @@ impl MultiTenantSim {
 
     pub fn run(&self) -> MultiTenantReport {
         let c = &self.cfg;
-        let spec = FabricSpec::from_config(&c.fabric);
+        let mut spec = FabricSpec::from_config(&c.fabric);
+        if let Some(bytes) = c.read_cache_bytes {
+            spec = spec.with_read_cache(bytes);
+        }
         let tenant_specs: Vec<TenantSpec<'_>> = c
             .tenants
             .iter()
@@ -410,6 +460,7 @@ impl MultiTenantSim {
         world.run_until(c.duration_us);
 
         let elapsed = c.duration_us;
+        let read_stats = world.shared.fabric.read_path_stats();
         MultiTenantReport {
             tenants: c
                 .tenants
@@ -418,8 +469,11 @@ impl MultiTenantSim {
                 .map(|(i, t)| dc::summary_for_tenant(&world, i, &t.name))
                 .collect(),
             broker_storage_write_util: world.shared.fabric.max_storage_write_util(elapsed),
+            broker_storage_read_util: world.shared.fabric.max_storage_read_util(elapsed),
             broker_net_rx_util: world.shared.fabric.max_nic_rx_util(elapsed),
             broker_cpu_util: world.shared.fabric.max_cpu_util(elapsed),
+            cache_hit_ratio: read_stats.map_or(1.0, |s| s.hit_ratio()),
+            device_read_share: read_stats.map_or(0.0, |s| s.device_read_share()),
             events: world.processed(),
             clamped_events: world.clamped(),
         }
@@ -586,6 +640,49 @@ mod tests {
         for t in &r.tenants {
             assert!(t.completed > 0, "tenant {} starved", t.name);
         }
+    }
+
+    #[test]
+    fn read_path_disabled_reports_seed_assumptions() {
+        let r = MultiTenantSim::new(small_registry()).run();
+        assert_eq!(r.cache_hit_ratio, 1.0, "no read path ⇒ the seed's free reads");
+        assert_eq!(r.device_read_share, 0.0);
+        assert_eq!(r.broker_storage_read_util, 0.0);
+        for t in &r.tenants {
+            assert_eq!(t.consumer_lag_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn lagging_consumer_with_small_cache_reads_from_the_device() {
+        // 50 MB of per-broker cache holds ~2 s of this registry's log
+        // traffic; the train tenant's consumers start 5 s behind, so
+        // most of their backlog has aged out and must come cold from
+        // the NVMe read path.
+        let mut cfg = small_registry().with_read_cache(50e6);
+        cfg.tenants[1] = cfg.tenants[1].clone().with_consumer_lag(5 * SEC);
+        let r = MultiTenantSim::new(cfg).run();
+        assert!(
+            r.cache_hit_ratio < 1.0,
+            "lagging fetches must miss: hit ratio {}",
+            r.cache_hit_ratio
+        );
+        assert!(r.device_read_share > 0.0);
+        assert!(r.broker_storage_read_util > 0.0, "device reads must be visible");
+        // The healthy tenants keep streaming from memory.
+        assert!(r.tenant("facerec").unwrap().completed > 0);
+        assert!(r.tenant("rpc").unwrap().completed > 0);
+    }
+
+    #[test]
+    fn default_read_cache_comes_from_the_calibration() {
+        let cfg = small_registry().with_default_read_cache();
+        let expect = cfg
+            .fabric
+            .calibration
+            .page_cache_capacity(cfg.fabric.node.memory);
+        assert_eq!(cfg.read_cache_bytes, Some(expect));
+        assert!(expect > 250e9, "384 GB node ⇒ ~288 GB page cache");
     }
 
     #[test]

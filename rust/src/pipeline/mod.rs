@@ -28,7 +28,12 @@
 //!   mix of workloads on one broker fabric and storage, with per-tenant
 //!   latency breakdowns, cross-tenant interference, and optional broker
 //!   QoS ([`crate::broker::qos`]).
+//! * [`catchup`] — the lagging-consumer scenario on the measured read
+//!   path ([`fabric::Fabric::enable_read_path`]): a tenant whose
+//!   consumers start behind and must drain their backlog through cold
+//!   device reads that contend with the replicated write stream.
 
+pub mod catchup;
 pub mod dc;
 pub mod fabric;
 pub mod facerec;

@@ -23,13 +23,16 @@
 //! entries. The pre-PR-4 single-group API ([`PageCache::append`] /
 //! [`PageCache::lookup`]) delegates to group 0 and behaves identically.
 //!
-//! Scope note: this type is currently a *standalone* model — the DES
-//! fetch path hardcodes cache hits (streaming consumers read right
-//! behind the appender, and the golden fidelity contract pins that
-//! behavior), so nothing constructs a `PageCache` per broker yet. The
-//! group accounting is the prerequisite for wiring it in as an opt-in
-//! hook so that deeply lagging consumers start missing to the device
-//! read path; that wiring is a ROADMAP follow-up.
+//! **Wired into the DES** (PR 5): `Fabric::enable_read_path` (see
+//! [`crate::pipeline::fabric::Fabric`]) instantiates one `PageCache` per
+//! broker with the global partition id as the group key; every durable
+//! write (leader and follower) mirrors a [`PageCache::append_group`],
+//! and every consumer
+//! fetch is split by [`PageCache::read_range_group`] into memory-resident
+//! bytes and cold bytes that must go to the device read path. The hook is
+//! strictly opt-in: with the read path disabled the fetch path hardcodes
+//! hits exactly as the seed did (the golden fidelity contract), pinned by
+//! `tests/read_path_differential.rs`.
 
 use std::collections::VecDeque;
 
@@ -45,8 +48,18 @@ pub struct PageCache {
     cached_bytes: f64,
     /// Monotone logical offset of all bytes ever appended, per group.
     appended: Vec<u64>,
+    /// Surviving window entries per group, maintained on append/evict,
+    /// so a fully-evicted group — the lagging-consumer case — resolves
+    /// its window start in O(1) instead of scanning the whole window on
+    /// every fetch.
+    live_entries: Vec<u32>,
     hits: u64,
     misses: u64,
+    /// Byte-weighted hit/miss totals from [`PageCache::read_range_group`]
+    /// (a range read can be partially resident; the per-lookup counters
+    /// above cannot express that).
+    hit_bytes: f64,
+    miss_bytes: f64,
 }
 
 impl PageCache {
@@ -56,8 +69,11 @@ impl PageCache {
             window: VecDeque::new(),
             cached_bytes: 0.0,
             appended: Vec::new(),
+            live_entries: Vec::new(),
             hits: 0,
             misses: 0,
+            hit_bytes: 0.0,
+            miss_bytes: 0.0,
         }
     }
 
@@ -69,7 +85,8 @@ impl PageCache {
         &mut self.appended[idx]
     }
 
-    fn appended_of(&self, group: u32) -> u64 {
+    /// Total bytes ever appended to `group` (its high-water offset).
+    pub fn appended_of(&self, group: u32) -> u64 {
         self.appended.get(group as usize).copied().unwrap_or(0)
     }
 
@@ -83,10 +100,16 @@ impl PageCache {
             *appended
         };
         self.window.push_back((group, end, bytes));
+        let idx = group as usize;
+        if idx >= self.live_entries.len() {
+            self.live_entries.resize(idx + 1, 0);
+        }
+        self.live_entries[idx] += 1;
         self.cached_bytes += bytes;
         while self.cached_bytes > self.capacity {
-            if let Some((_, _, b)) = self.window.pop_front() {
+            if let Some((g, _, b)) = self.window.pop_front() {
                 self.cached_bytes -= b;
+                self.live_entries[g as usize] -= 1;
             } else {
                 break;
             }
@@ -100,8 +123,19 @@ impl PageCache {
     }
 
     /// Oldest still-cached offset of one group (the group's high-water
-    /// mark when none of its entries survive).
+    /// mark when none of its entries survive). O(1) for a fully-evicted
+    /// group — the lagging-consumer fast path — via the live-entry
+    /// count; otherwise scans to the group's first surviving entry.
     pub fn oldest_cached_group(&self, group: u32) -> u64 {
+        if self
+            .live_entries
+            .get(group as usize)
+            .copied()
+            .unwrap_or(0)
+            == 0
+        {
+            return self.appended_of(group);
+        }
         self.window
             .iter()
             .find(|(g, _, _)| *g == group)
@@ -133,6 +167,39 @@ impl PageCache {
         self.lookup_group(0, offset)
     }
 
+    /// Split a consumer range read of group `group` — the byte range
+    /// `(start, start + bytes]` — into `(hit_bytes, miss_bytes)`.
+    ///
+    /// The cold part is whatever lies below the group's oldest surviving
+    /// window entry (evicted data that must come from the device); the
+    /// rest is memory-resident. Bytes above the group's high-water mark
+    /// count as hits — they can only be the newest appends, reachable
+    /// when the caller's consumed-offset arithmetic rounds a fetch up by
+    /// a few bytes relative to the per-record append rounding.
+    ///
+    /// Monotonicity (pinned by `tests/read_path_differential.rs`): for a
+    /// fixed append/read trace, `hit_bytes` is non-decreasing in the
+    /// cache capacity and non-increasing in the reader's lag
+    /// (`appended - start`), because a larger capacity only lowers
+    /// `oldest_cached_group` and a deeper lag only lowers `start`.
+    pub fn read_range_group(&mut self, group: u32, start: u64, bytes: u64) -> (u64, u64) {
+        let oldest = self.oldest_cached_group(group);
+        let miss = if start < oldest {
+            (oldest - start).min(bytes)
+        } else {
+            0
+        };
+        let hit = bytes - miss;
+        if miss > 0 {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        self.hit_bytes += hit as f64;
+        self.miss_bytes += miss as f64;
+        (hit, miss)
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -140,6 +207,25 @@ impl PageCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// Byte-weighted hit ratio across all
+    /// [`PageCache::read_range_group`] calls (1.0 before any range read,
+    /// matching [`PageCache::hit_rate`]'s empty case).
+    pub fn byte_hit_rate(&self) -> f64 {
+        let total = self.hit_bytes + self.miss_bytes;
+        if total == 0.0 {
+            1.0
+        } else {
+            self.hit_bytes / total
+        }
+    }
+
+    /// Cumulative `(hit_bytes, miss_bytes)` across all
+    /// [`PageCache::read_range_group`] calls — the single source of
+    /// truth the fabric sums per broker for its read-path stats.
+    pub fn byte_counters(&self) -> (f64, f64) {
+        (self.hit_bytes, self.miss_bytes)
     }
 }
 
@@ -231,6 +317,45 @@ mod tests {
     }
 
     #[test]
+    fn range_read_splits_cold_and_resident_bytes() {
+        // 10 kB window over 30 kB of appends: a reader 25 kB behind gets
+        // the below-window part cold and the in-window part from memory.
+        let mut c = PageCache::new(10_000.0);
+        for _ in 0..30 {
+            c.append_group(0, 1_000.0);
+        }
+        assert_eq!(c.oldest_cached_group(0), 20_000);
+        // Read (5_000, 25_000]: 15 kB below the window miss, 5 kB hit.
+        let (hit, miss) = c.read_range_group(0, 5_000, 20_000);
+        assert_eq!(miss, 15_000);
+        assert_eq!(hit, 5_000);
+        assert!((c.byte_hit_rate() - 0.25).abs() < 1e-9);
+        // A streaming read right at the tail is fully resident.
+        let (hit, miss) = c.read_range_group(0, 29_000, 1_000);
+        assert_eq!((hit, miss), (1_000, 0));
+    }
+
+    #[test]
+    fn zero_capacity_range_reads_always_miss() {
+        let mut c = PageCache::new(0.0);
+        let end = c.append_group(0, 1_000.0);
+        assert_eq!(c.oldest_cached_group(0), end, "nothing survives");
+        let (hit, miss) = c.read_range_group(0, 0, 1_000);
+        assert_eq!((hit, miss), (0, 1_000));
+        assert_eq!(c.byte_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn overshoot_past_high_water_counts_as_hit() {
+        // Consumed-offset rounding can ask for a few bytes past the
+        // group's appended total; those are the freshest bytes — hits.
+        let mut c = PageCache::new(1e6);
+        c.append_group(0, 1_000.0);
+        let (hit, miss) = c.read_range_group(0, 0, 1_003);
+        assert_eq!((hit, miss), (1_003, 0));
+    }
+
+    #[test]
     fn cache_never_exceeds_capacity_property() {
         crate::util::prop::check(100, |rng| {
             let cap = rng.uniform(1e4, 1e6);
@@ -239,6 +364,13 @@ mod tests {
                 c.append_group(rng.below(4) as u32, rng.uniform(1.0, 5e4));
                 if c.cached_bytes > cap + 5e4 {
                     return Err(format!("cache overflow: {} > {}", c.cached_bytes, cap));
+                }
+                // The O(1) fast-path counter must agree with the window.
+                for g in 0..4u32 {
+                    let n = c.window.iter().filter(|(gg, _, _)| *gg == g).count();
+                    if c.live_entries.get(g as usize).copied().unwrap_or(0) != n as u32 {
+                        return Err(format!("live_entries[{g}] out of sync with window"));
+                    }
                 }
             }
             Ok(())

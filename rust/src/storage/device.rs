@@ -19,8 +19,22 @@
 //! (pinned by `tests/storage_qos_differential.rs`).
 //!
 //! Reads go through the [`super::cache::PageCache`]: recently appended data
-//! is served from memory, so the device read server is touched only on
-//! cache misses.
+//! is served from memory, so the device is touched only on cache misses.
+//!
+//! **Cold reads share the spindle with writes**
+//! ([`StorageDevice::read_cold_classed`]): a consumer that fell out of
+//! the cache window reads old log segments from the *same* device the
+//! producers are appending to, so cold-read bytes are submitted to the
+//! write-path server — FIFO by default, the per-class GPS scheduler when
+//! [`StorageDevice::enable_write_qos`] installed weights (the read
+//! carries its tenant class, so classed reads and replicated writes
+//! contend at their configured shares). Cold bytes are charged byte for
+//! byte at the effective *write* rate: under a mixed read/write pattern
+//! the log-structured device loses the idle sequential-read advantage —
+//! the same small-request coordination tax §5.4 names for writes. The
+//! standalone [`StorageDevice::read`] server (idle-device sequential
+//! reads at spec bandwidth) remains for paths outside the measured read
+//! path.
 
 use crate::config::hardware::NvmeSpec;
 use crate::sim::resource::{FifoServer, WeightedServer};
@@ -109,6 +123,26 @@ impl StorageDevice {
             self.bytes_read_device += bytes;
             self.read.submit(now, bytes)
         }
+    }
+
+    /// Cold (page-cache-miss) read of `bytes` at `now` in scheduling
+    /// class `class`; returns the read-completion time. The bytes are
+    /// submitted to the shared write-path spindle server (see the module
+    /// docs), so cold reads and replicated writes contend — FIFO without
+    /// write QoS, per-class GPS with it. The per-request latency delta
+    /// between the spec read and write latencies is pipelined on top
+    /// (the underlying server already adds the write latency).
+    pub fn read_cold_classed(&mut self, now: u64, bytes: f64, class: u8) -> u64 {
+        self.bytes_read_device += bytes;
+        let extra = self
+            .spec
+            .read_latency_us
+            .saturating_sub(self.spec.write_latency_us);
+        let done = match &mut self.write_wfq {
+            Some(wfq) => wfq.submit(now, class as usize, bytes),
+            None => self.write.submit(now, bytes),
+        };
+        done + extra
     }
 
     /// Queueing delay a write arriving now would experience (us). With
@@ -261,6 +295,35 @@ mod tests {
         assert!(d.write_offered_utilization(100_000) > 0.9);
         assert!(d.write_backlog_us(0) > 0);
         assert!(d.write_throughput(100_000) > 0.0);
+    }
+
+    #[test]
+    fn cold_reads_queue_behind_writes_on_the_fifo_spindle() {
+        // 770 MB/s effective; 77 MB of writes = ~100 ms of backlog. A
+        // cold read submitted at the same instant waits it out (plus its
+        // own transfer and the read-latency delta) — unlike the seed's
+        // idle-device read server, which would finish in ~27 ms.
+        let mut d = device();
+        let t_wr = d.write(0, 77e6);
+        let t_rd = d.read_cold_classed(0, 7.7e6, 1);
+        assert!(t_rd > t_wr, "cold read must queue behind the write backlog");
+        assert!((t_rd as i64 - 110_077).abs() <= 2, "t_rd={t_rd}");
+        // Device-read accounting flows to the read-side counters.
+        assert!(d.read_spec_utilization(110_000) > 0.0);
+        assert!(d.cache_read_fraction() < 1.0);
+        // The write-byte counter is untouched (Fig 11b stays clean).
+        assert_eq!(d.bytes_written(), 77e6);
+    }
+
+    #[test]
+    fn classed_cold_read_bypasses_bulk_writes_under_qos() {
+        // With write QoS installed the same cold read drains at its own
+        // class share instead of waiting out the bulk backlog.
+        let mut d = device();
+        d.enable_write_qos(&[1.0, 9.0]);
+        d.write(0, 770e6); // ~1 s of class-0 bulk
+        let t_rd = d.read_cold_classed(0, 77e3, 1);
+        assert!(t_rd < 1_000, "classed cold read stuck at {t_rd}");
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //!   observation (§5.4) emergent.
 //! * [`cache`] — the OS page-cache model: the paper observes consumer reads
 //!   are served from memory ("reads use essentially none of the available
-//!   bandwidth"), which is why only the *write* path saturates.
+//!   bandwidth"), which is why only the *write* path saturates. Wired into
+//!   the DES per broker by `Fabric::enable_read_path`, so a consumer that
+//!   lags past the cache window reads cold from the [`device`] — the
+//!   measured version of Fig 11's "reads are free" assumption.
 //! * [`backend`] — the *live-mode* log storage: a real-file backend (the
 //!   broker's segment files hit the local filesystem) and an in-memory
 //!   backend for tests.

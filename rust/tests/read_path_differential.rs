@@ -1,0 +1,276 @@
+//! Read-path fidelity + cache/lag model properties.
+//!
+//! PR 5 swapped the DES fetch path's *implementation point*: every
+//! consumer fetch now flows through `Fabric::fetch_group_classed`,
+//! which splits the fetch range against the broker's page cache only
+//! when the measured read path is installed. Two contracts are pinned
+//! here, mirroring `tests/storage_qos_differential.rs`:
+//!
+//! 1. **Disabled path** — with no read path the fetch is the seed's
+//!    hardcoded cache hit, bit for bit (the golden fidelity contract;
+//!    `tests/golden_reports.rs` separately pins the dc worlds against
+//!    the legacy loops).
+//! 2. **Infinite cache** — with the read path *enabled* but an
+//!    unbounded cache, nothing is ever evicted, every fetch is
+//!    resident, and every observable (counters, latencies, event
+//!    totals, float byte meters) must match the disabled run exactly —
+//!    the model only charges for what actually misses.
+//!
+//! Plus the model properties the experiment relies on: byte hit ratio
+//! monotone (non-decreasing) in cache capacity and non-increasing in
+//! consumer lag, on random append/read traces.
+
+use aitax::config::{Config, Deployment};
+use aitax::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
+use aitax::pipeline::mixed::{MultiTenantConfig, MultiTenantSim, TenantDef};
+use aitax::sim::world::World;
+use aitax::storage::cache::PageCache;
+use aitax::util::units::SEC;
+
+fn tiny_facerec(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment {
+        producers: 8,
+        consumers: 12,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 12,
+    };
+    cfg.duration_us = 5 * SEC;
+    cfg.seed = seed;
+    cfg
+}
+
+fn tiny_objdet(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment {
+        producers: 2,
+        consumers: 20,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 20,
+    };
+    cfg.duration_us = 5 * SEC;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Run a world and collect every cross-checkable observable.
+fn observables(
+    world: &World<dc::DcEvent, dc::DcState>,
+    tenants: usize,
+) -> Vec<(u64, u64, u64, u64, f64, f64)> {
+    (0..tenants)
+        .map(|t| {
+            let m = &world.shared.tenants[t].metrics;
+            (
+                m.produced,
+                m.completed,
+                m.hist_e2e.p99(),
+                m.hist_wait.p99(),
+                m.net_tx_bytes,
+                m.net_rx_bytes,
+            )
+        })
+        .collect()
+}
+
+/// Build + run the same tenant mix twice — read path disabled vs
+/// enabled with an infinite cache — and demand identical observables.
+fn assert_infinite_cache_is_invisible(tenants: &[TenantSpec<'_>], horizon: u64) {
+    let spec_off = FabricSpec::from_config(tenants[0].cfg);
+    let spec_inf = spec_off.clone().with_read_cache(f64::INFINITY);
+
+    let mut base = dc::build(tenants, &spec_off, horizon);
+    base.run_until(horizon);
+    let mut wired = dc::build(tenants, &spec_inf, horizon);
+    wired.run_until(horizon);
+
+    assert!(wired.shared.fabric.read_path_enabled());
+    assert_eq!(base.processed(), wired.processed(), "event totals diverged");
+    assert_eq!(base.clamped(), wired.clamped());
+    let a = observables(&base, tenants.len());
+    let b = observables(&wired, tenants.len());
+    assert_eq!(a, b, "an all-hit read path must be observationally invisible");
+    // And the wired run must account every fetched byte as a hit.
+    let stats = wired.shared.fabric.read_path_stats().unwrap();
+    assert_eq!(stats.hit_ratio(), 1.0);
+    assert_eq!(stats.miss_bytes, 0.0);
+    assert_eq!(
+        wired.shared.fabric.max_storage_read_util(horizon),
+        0.0,
+        "no device reads without a miss"
+    );
+}
+
+#[test]
+fn facerec_world_is_bit_exact_under_an_infinite_cache() {
+    let cfg = tiny_facerec(0x51);
+    assert_infinite_cache_is_invisible(
+        &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+        cfg.duration_us,
+    );
+}
+
+#[test]
+fn objdet_world_is_bit_exact_under_an_infinite_cache() {
+    let cfg = tiny_objdet(0xD07);
+    assert_infinite_cache_is_invisible(
+        &[TenantSpec { kind: WorkloadKind::ObjDet, cfg: &cfg }],
+        cfg.duration_us,
+    );
+}
+
+#[test]
+fn mixed_world_is_bit_exact_under_an_infinite_cache() {
+    let fr = tiny_facerec(0x51);
+    let od = tiny_objdet(0xD07);
+    assert_infinite_cache_is_invisible(
+        &[
+            TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr },
+            TenantSpec { kind: WorkloadKind::ObjDet, cfg: &od },
+        ],
+        fr.duration_us,
+    );
+}
+
+/// A registry with the read path off must report the seed assumptions
+/// (hit ratio 1, zero device share) — and its policy hooks stay off.
+#[test]
+fn registry_defaults_keep_the_seed_read_model() {
+    let fr = tiny_facerec(0xACCE1);
+    let fabric = fr.clone();
+    let cfg = MultiTenantConfig::new(fabric, 5 * SEC)
+        .tenant(TenantDef::new("facerec", WorkloadKind::FaceRec, fr));
+    assert!(cfg.read_cache_bytes.is_none());
+    let r = MultiTenantSim::new(cfg).run();
+    assert_eq!(r.cache_hit_ratio, 1.0);
+    assert_eq!(r.device_read_share, 0.0);
+    assert_eq!(r.broker_storage_read_util, 0.0);
+}
+
+/// Zero capacity is the degenerate extreme: nothing is ever resident,
+/// so every fetched byte must come off the device.
+#[test]
+fn zero_capacity_cache_sends_every_fetch_to_the_device() {
+    let fr = tiny_facerec(0x51);
+    let fabric = fr.clone();
+    let cfg = MultiTenantConfig::new(fabric, 5 * SEC)
+        .tenant(TenantDef::new("facerec", WorkloadKind::FaceRec, fr))
+        .with_read_cache(0.0);
+    let r = MultiTenantSim::new(cfg).run();
+    // Not exactly 0.0: per-fetch ceil vs per-append floor rounding can
+    // credit a few bytes per fetch as "freshest data" hits.
+    assert!(
+        r.cache_hit_ratio < 1e-3,
+        "nothing can be resident at capacity 0: hit {}",
+        r.cache_hit_ratio
+    );
+    assert!(r.device_read_share > 0.999);
+    assert!(r.broker_storage_read_util > 0.0);
+    assert!(
+        r.tenant("facerec").unwrap().completed > 0,
+        "cold reads are a tax, not a wall"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Cache/lag model properties (pure, no worlds)
+// ---------------------------------------------------------------------------
+
+/// One random interleaved append/read trace, replayed against a cache
+/// of each given capacity with a reader trailing `lag` bytes behind the
+/// group high-water mark. Returns total hit bytes per capacity.
+fn replay_hits(trace: &[(u32, f64)], capacities: &[f64], lag: u64, chunk: u64) -> Vec<f64> {
+    capacities
+        .iter()
+        .map(|&cap| {
+            let mut c = PageCache::new(cap);
+            let mut hits = 0.0;
+            for &(group, bytes) in trace {
+                let end = c.append_group(group, bytes);
+                let start = end.saturating_sub(lag + chunk);
+                let (hit, _) = c.read_range_group(group, start, chunk.min(end - start));
+                hits += hit as f64;
+            }
+            hits
+        })
+        .collect()
+}
+
+#[test]
+fn hit_bytes_monotone_in_capacity_property() {
+    aitax::util::prop::check(200, |rng| {
+        let trace: Vec<(u32, f64)> = (0..150)
+            .map(|_| (rng.below(3) as u32, rng.uniform(1.0, 3e4)))
+            .collect();
+        let c1 = rng.uniform(1e4, 2e5);
+        let grow = rng.uniform(1.5, 8.0);
+        let caps = [c1, c1 * grow, c1 * grow * grow];
+        let lag = rng.below(3e5 as u64);
+        let hits = replay_hits(&trace, &caps, lag, 20_000);
+        if !(hits[0] <= hits[1] && hits[1] <= hits[2]) {
+            return Err(format!(
+                "hit bytes must be non-decreasing in capacity: {hits:?} at lag {lag}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hit_bytes_non_increasing_in_lag_property() {
+    aitax::util::prop::check(200, |rng| {
+        let trace: Vec<(u32, f64)> = (0..150)
+            .map(|_| (rng.below(3) as u32, rng.uniform(1.0, 3e4)))
+            .collect();
+        let cap = rng.uniform(2e4, 4e5);
+        let l1 = rng.below(1e5 as u64);
+        let l2 = l1 + 1 + rng.below(2e5 as u64);
+        let l3 = l2 + 1 + rng.below(4e5 as u64);
+        let per_lag: Vec<f64> = [l1, l2, l3]
+            .iter()
+            .map(|&lag| replay_hits(&trace, &[cap], lag, 20_000)[0])
+            .collect();
+        if !(per_lag[0] >= per_lag[1] && per_lag[1] >= per_lag[2]) {
+            return Err(format!(
+                "hit bytes must not rise with lag: {per_lag:?} at lags {l1}/{l2}/{l3}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn streaming_reader_never_misses_property() {
+    // A consumer that drains after every append, using the fabric's
+    // consumed-offset arithmetic (ceil-per-fetch, clamped to the
+    // group's high-water mark), never misses as long as the capacity
+    // holds one record — the floor-per-append vs ceil-per-fetch drift
+    // is absorbed by the clamp, and its fetch offset stays aligned to
+    // the group's append boundary even while *other* groups' appends
+    // evict this group's older entries from the shared window.
+    aitax::util::prop::check(200, |rng| {
+        let cap = rng.uniform(5e4, 5e5);
+        let mut c = PageCache::new(cap);
+        let mut consumed = [0u64; 3];
+        for _ in 0..200 {
+            let g = rng.below(3) as u32;
+            let bytes = rng.uniform(64.0, 2e4);
+            c.append_group(g, bytes);
+            let start = consumed[g as usize];
+            let want = bytes.ceil() as u64;
+            let (_, miss) = c.read_range_group(g, start, want);
+            if miss != 0 {
+                return Err(format!("streaming read missed {miss} bytes (cap {cap})"));
+            }
+            consumed[g as usize] = (start + want).min(c.appended_of(g)).max(start);
+            if consumed[g as usize] != c.appended_of(g) {
+                return Err("full drain must clamp to the high-water mark".into());
+            }
+        }
+        Ok(())
+    });
+}
