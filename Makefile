@@ -6,7 +6,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench bench-kernel doc fmt clippy clean
+.PHONY: artifacts build test bench bench-kernel bench-scale doc fmt clippy clean
 
 # AOT-lower the JAX face-pipeline models to HLO text + manifest. Python
 # (jax + the Pallas kernels) is required only for this step; everything
@@ -27,6 +27,11 @@ bench:
 # written to rust/BENCH_kernel.json (see README "Performance").
 bench-kernel:
 	cd rust && cargo run --release -- bench kernel
+
+# Flow-aggregation perf trend: per-record vs flow wall clock at 10^4
+# clients + the 10^6-client flow point, written to rust/BENCH_scale.json.
+bench-scale:
+	cd rust && cargo run --release -- bench scale
 
 # Rustdoc with warnings denied (what CI enforces) + the doctests.
 doc:

@@ -99,6 +99,15 @@ impl TokenBucket {
 
     /// Admit `bytes` at `now`; returns the throttle delay in µs (0 when
     /// within quota). [`NEVER_US`] when the rate is non-positive.
+    ///
+    /// **Aggregate charging** (PR 6): a flow-aggregated producer charges
+    /// one macro-record of `k × b` bytes where a per-record producer
+    /// would charge `k` records of `b` bytes at the same instant. The
+    /// two are equivalent by construction — refill happens once per
+    /// distinct `now`, and the balance decrement is a plain sum — so a
+    /// quota binds identically whether the tenant's bytes arrive one
+    /// record or one macro-record at a time
+    /// (`aggregate_charge_equals_same_instant_sub_charges` pins this).
     pub fn charge(&mut self, now: u64, bytes: f64) -> u64 {
         self.refill(now);
         if self.rate <= 0.0 {
@@ -278,6 +287,31 @@ mod tests {
             (9_000_000..=11_000_000).contains(&done),
             "10 MB through a 1 MB/s bucket must take ~10 s, got {done}"
         );
+    }
+
+    #[test]
+    fn aggregate_charge_equals_same_instant_sub_charges() {
+        // The flow-producer contract: one macro charge of k·b bytes at
+        // instant t leaves the bucket in the same state as k per-record
+        // charges of b bytes at t. Exercise across refill boundaries and
+        // into debt. b = 4096 keeps every partial sum exactly
+        // representable, so the balances match to the bit.
+        let mk = || TokenBucket::new(2_000_000.0, 262_144.0);
+        let (mut agg, mut per) = (mk(), mk());
+        for (t, k) in [(0u64, 16u64), (25_000, 64), (50_000, 512), (250_000, 3)] {
+            let b = 4096.0;
+            let d_agg = agg.charge(t, k as f64 * b);
+            let mut d_per = 0;
+            for _ in 0..k {
+                d_per = per.charge(t, b);
+            }
+            assert_eq!(
+                agg.balance().to_bits(),
+                per.balance().to_bits(),
+                "balances diverged at t={t} k={k}"
+            );
+            assert_eq!(d_agg, d_per, "throttle diverged at t={t} k={k}");
+        }
     }
 
     #[test]

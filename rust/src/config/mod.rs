@@ -165,6 +165,11 @@ pub struct KafkaTuning {
     /// Cores a broker dedicates to request handling (Kafka network +
     /// I/O threads; the broker nodes have 56 cores, §3.2).
     pub request_handler_cores: usize,
+    /// `max.partition.fetch.bytes`: per-partition byte cap on one poll's
+    /// fetch; a capped drain immediately re-polls for the remainder.
+    /// `usize::MAX` (the default) is unbounded — the pre-cap behavior,
+    /// bit for bit.
+    pub max_partition_fetch_bytes: usize,
 }
 
 impl Default for KafkaTuning {
@@ -177,6 +182,7 @@ impl Default for KafkaTuning {
             request_cpu_us: 90.0,
             per_byte_cpu_us: 0.0006,
             request_handler_cores: 16,
+            max_partition_fetch_bytes: usize::MAX,
         }
     }
 }
@@ -202,6 +208,17 @@ pub struct Config {
     /// through cold device reads once it ages out of the page-cache
     /// window (the measured read path). 0 = consumers start live.
     pub consumer_lag_start_us: u64,
+    /// Hybrid fluid/discrete scaling: aggregate this many clients into
+    /// flow rate processes instead of per-record tick producers
+    /// (tick workloads only). 0 (the default) = per-record simulation.
+    pub flow_clients: u64,
+    /// Coalescing quantum for flow producers (µs): all flows in the
+    /// world wake on this shared grid and emit one macro-record per
+    /// owned partition per wake.
+    pub flow_quantum_us: u64,
+    /// Number of flow rate processes per tenant; 0 (the default) =
+    /// auto, `min(partitions, 32)` (capped at the client count).
+    pub flow_processes: usize,
 }
 
 impl Default for Config {
@@ -218,6 +235,9 @@ impl Default for Config {
             protocol: AccelProtocol::Emulation,
             face_bytes: 37_300.0,
             consumer_lag_start_us: 0,
+            flow_clients: 0,
+            flow_quantum_us: 25_000,
+            flow_processes: 0,
         }
     }
 }
@@ -249,6 +269,12 @@ impl Config {
                 "accel" => self.accel = req_f64(v, k)?,
                 "face_bytes" => self.face_bytes = req_f64(v, k)?,
                 "consumer_lag_start_us" => self.consumer_lag_start_us = req_u64(v, k)?,
+                "max_partition_fetch_bytes" => {
+                    self.tuning.max_partition_fetch_bytes = req_u64(v, k)? as usize
+                }
+                "flow_clients" => self.flow_clients = req_u64(v, k)?,
+                "flow_quantum_us" => self.flow_quantum_us = req_u64(v, k)?,
+                "flow_processes" => self.flow_processes = req_u64(v, k)? as usize,
                 "protocol" => {
                     self.protocol = match v.as_str() {
                         Some("ai_share") => AccelProtocol::AiShareOnly,

@@ -6,7 +6,9 @@
 //! queue against per-class GPS write scheduling; [`read_path`] — the
 //! lagging-consumer sweep that turns Fig 11's "reads are free"
 //! assumption into a measured threshold: catch-up lag × page-cache size
-//! × {unclassed, classed} device reads).
+//! × {unclassed, classed} device reads; [`scale`] — the million-client
+//! sweep pitting per-record replay against the hybrid fluid/discrete
+//! flow producers, cost and convergence side by side).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -34,5 +36,6 @@ pub mod mixed;
 pub mod qos;
 pub mod read_path;
 pub mod runner;
+pub mod scale;
 pub mod storage_qos;
 pub mod table34;

@@ -1,0 +1,438 @@
+//! Scale: the million-client sweep (`aitax experiment scale`).
+//!
+//! The paper's AI tax is measured on fleets of tens to hundreds of
+//! clients; an AI data center front-end sees orders of magnitude more.
+//! A per-record DES spends one event chain per record, so the event
+//! rate — and the wall clock — grows linearly with the client count:
+//! 10^6 clients at even 2 req/s is ~2 M record chains per virtual
+//! second, far past what one core can replay interactively. The hybrid
+//! fluid/discrete layer ([`ProducerKind::Flow`]) collapses a tenant's
+//! client population into a handful of deterministic rate processes
+//! emitting batched macro-records on a coalescing quantum, so the event
+//! rate scales with *partitions × quanta* instead of *clients ×
+//! requests* while the broker fabric still sees the same offered byte
+//! stream, aggregate request CPU, quota charges, and read-path traffic.
+//!
+//! This sweep quantifies both halves of that trade:
+//!
+//! * **cost** — wall-clock and events per simulated run, per-record vs
+//!   flow, clients ∈ {10^3 .. 10^6} (per-record stops at
+//!   [`PER_RECORD_CAP`]: beyond it the exact replay is exactly the
+//!   problem);
+//! * **fidelity** — per-tenant means (throughput, byte meters, broker
+//!   utilizations, cache hit ratio) flow vs per-record at the same
+//!   offered load. Means must converge as N grows (the fluid limit);
+//!   latency *tails* are intentionally not pinned — coalescing moves
+//!   intra-quantum waits around, which is the approximation being
+//!   bought. `tests/flow_differential.rs` enforces the convergence
+//!   contract; this sweep reports the deltas.
+//!
+//! The scenario is a single "edge" RPC tenant — N clients at 2 req/s ×
+//! 2 kB — on a fabric whose consumer/broker fleet scales with N, with
+//! the measured read path on (finite per-broker page cache) so the
+//! flow byte stream exercises produce, replication, quota, *and* fetch
+//! accounting.
+//!
+//! `run` returns structured results; [`print`] renders the table plus a
+//! machine-readable JSON report (written to
+//! `artifacts/scale_report.json` when the artifacts directory is
+//! present). `aitax bench scale` reuses [`run_points`] for the
+//! wall-clock speedup figure (`BENCH_scale.json`).
+//!
+//! [`ProducerKind::Flow`]: crate::pipeline::dc::ProducerKind
+
+use crate::config::{Config, Deployment};
+use crate::experiments::common::Fidelity;
+use crate::experiments::runner;
+use crate::pipeline::dc::WorkloadKind;
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantSim, TenantDef};
+use crate::util::json::Json;
+use crate::util::units::fmt_us;
+
+/// Client populations swept (10^3 .. 10^6).
+pub const CLIENTS: [u64; 4] = [1_000, 10_000, 100_000, 1_000_000];
+/// Largest population the per-record arm replays. Past this the exact
+/// simulation is the very cost being measured (≥ 10^5 clients is tens
+/// of millions of events per run); the flow arm covers the rest and
+/// the differential contract is pinned at this N, where both arms run.
+pub const PER_RECORD_CAP: u64 = 10_000;
+/// Per-client request cadence, µs (2 req/s — an edge session's
+/// heartbeat-ish rate, so 10^6 clients offer 2 M req/s).
+pub const CLIENT_PERIOD_US: u64 = 500_000;
+/// Per-broker page-cache capacity (bytes) for the measured read path.
+pub const CACHE_PER_BROKER: f64 = 8e9;
+
+/// The N-client edge-RPC tenant config: request cadence
+/// [`CLIENT_PERIOD_US`], 2 kB records, 250 µs handler, latency-tuned
+/// fetch. Consumer / partition / broker fleets scale with the client
+/// count so the per-node load stays in the stable regime at every N
+/// (util ~50%), which is what makes the flow-vs-per-record means
+/// comparable instead of both saturating.
+pub fn edge_config(clients: u64, horizon_us: u64) -> Config {
+    let mut cfg = Config::default();
+    let consumers = (clients / 1_000).clamp(8, 1_024) as usize;
+    let brokers = ((clients / 20_000) as usize).clamp(3, 64);
+    cfg.deployment = Deployment {
+        // Per-record mode instantiates one producer unit per client;
+        // flow mode replaces the fleet with ≤ 32 rate processes and
+        // only reads this for validation.
+        producers: clients.max(1) as usize,
+        consumers,
+        brokers,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: consumers,
+    };
+    cfg.calibration.rpc.period_us = CLIENT_PERIOD_US;
+    cfg.calibration.rpc.handle_us = 250.0;
+    cfg.duration_us = horizon_us;
+    cfg.seed = 0x5CA1E;
+    cfg
+}
+
+/// The one-tenant registry for a `(clients, flow)` point. Public so the
+/// differential tests drive the identical scenario.
+pub fn registry(clients: u64, flow: bool, horizon_us: u64) -> MultiTenantConfig {
+    let cfg = edge_config(clients, horizon_us);
+    let fabric = cfg.clone();
+    let mut def = TenantDef::new("edge", WorkloadKind::Rpc, cfg);
+    if flow {
+        def = def.with_flow_clients(clients);
+    }
+    MultiTenantConfig::new(fabric, horizon_us)
+        .tenant(def)
+        .with_read_cache(CACHE_PER_BROKER)
+}
+
+/// One sweep point: N clients, per-record or flow, with both the cost
+/// (wall clock, events) and the fidelity (tenant means) sides.
+pub struct ScalePoint {
+    pub clients: u64,
+    pub flow: bool,
+    /// Host wall-clock for the run, milliseconds (not deterministic —
+    /// excluded from [`to_json_model`]).
+    pub wall_ms: f64,
+    pub events: u64,
+    pub clamped: u64,
+    pub produced: u64,
+    pub completed: u64,
+    pub throughput_per_sec: f64,
+    pub e2e_mean_us: f64,
+    pub e2e_p99_us: u64,
+    pub wait_p99_us: u64,
+    pub net_tx_bytes: f64,
+    pub net_rx_bytes: f64,
+    pub broker_write_util: f64,
+    pub broker_cpu_util: f64,
+    pub cache_hit_ratio: f64,
+    pub stable: bool,
+}
+
+impl ScalePoint {
+    /// DES throughput: events dispatched per host-second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.events as f64 * 1e3 / self.wall_ms
+    }
+}
+
+pub struct ScaleSweep {
+    pub points: Vec<ScalePoint>,
+}
+
+impl ScaleSweep {
+    pub fn point(&self, clients: u64, flow: bool) -> Option<&ScalePoint> {
+        self.points
+            .iter()
+            .find(|p| p.clients == clients && p.flow == flow)
+    }
+
+    /// (per-record, flow) pair at one N, when both arms ran.
+    pub fn pair(&self, clients: u64) -> Option<(&ScalePoint, &ScalePoint)> {
+        Some((self.point(clients, false)?, self.point(clients, true)?))
+    }
+}
+
+/// Relative delta |a−b| / max(|a|, tiny) — 0 when both sides are ~0.
+pub fn rel_delta(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(1e-12);
+    if a == 0.0 && b == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / scale
+    }
+}
+
+fn run_one(clients: u64, flow: bool, horizon_us: u64) -> ScalePoint {
+    let sim = MultiTenantSim::new(registry(clients, flow, horizon_us));
+    let t0 = std::time::Instant::now();
+    let r = sim.run();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t = r.tenant("edge").expect("edge tenant");
+    ScalePoint {
+        clients,
+        flow,
+        wall_ms,
+        events: r.events,
+        clamped: r.clamped_events,
+        produced: t.produced,
+        completed: t.completed,
+        throughput_per_sec: t.throughput_per_sec,
+        e2e_mean_us: t.e2e_mean_us,
+        e2e_p99_us: t.e2e_p99_us,
+        wait_p99_us: t.wait_p99_us,
+        net_tx_bytes: t.net_tx_bytes,
+        net_rx_bytes: t.net_rx_bytes,
+        broker_write_util: r.broker_storage_write_util,
+        broker_cpu_util: r.broker_cpu_util,
+        cache_hit_ratio: r.cache_hit_ratio,
+        stable: t.stable,
+    }
+}
+
+/// Run an explicit set of `(clients, flow)` points, fanned out over the
+/// deterministic parallel runner. Wall-clock per point is measured
+/// inside the worker, so jobs>1 timings are noisier but the model
+/// outputs stay byte-identical at any `AITAX_JOBS`.
+pub fn run_points(points: Vec<(u64, bool)>, fidelity: Fidelity) -> ScaleSweep {
+    let horizon = fidelity.horizon_us();
+    let points = runner::map(points, move |(clients, flow)| {
+        run_one(clients, flow, horizon)
+    });
+    ScaleSweep { points }
+}
+
+/// The default grid: flow at every N in [`CLIENTS`], per-record up to
+/// [`PER_RECORD_CAP`].
+pub fn grid() -> Vec<(u64, bool)> {
+    let mut g = Vec::new();
+    for &n in &CLIENTS {
+        if n <= PER_RECORD_CAP {
+            g.push((n, false));
+        }
+        g.push((n, true));
+    }
+    g
+}
+
+pub fn run(fidelity: Fidelity) -> ScaleSweep {
+    run_points(grid(), fidelity)
+}
+
+fn point_json(p: &ScalePoint, with_timing: bool) -> Json {
+    let mut fields = vec![
+        ("clients", Json::Num(p.clients as f64)),
+        ("mode", Json::Str(if p.flow { "flow" } else { "per-record" }.into())),
+        ("events", Json::Num(p.events as f64)),
+        ("clamped_events", Json::Num(p.clamped as f64)),
+        ("produced", Json::Num(p.produced as f64)),
+        ("completed", Json::Num(p.completed as f64)),
+        ("throughput_per_sec", Json::Num(p.throughput_per_sec)),
+        ("e2e_mean_us", Json::Num(p.e2e_mean_us)),
+        ("e2e_p99_us", Json::Num(p.e2e_p99_us as f64)),
+        ("wait_p99_us", Json::Num(p.wait_p99_us as f64)),
+        ("net_tx_bytes", Json::Num(p.net_tx_bytes)),
+        ("net_rx_bytes", Json::Num(p.net_rx_bytes)),
+        ("broker_write_util", Json::Num(p.broker_write_util)),
+        ("broker_cpu_util", Json::Num(p.broker_cpu_util)),
+        ("cache_hit_ratio", Json::Num(p.cache_hit_ratio)),
+        ("stable", Json::Bool(p.stable)),
+    ];
+    if with_timing {
+        fields.push(("wall_ms", Json::Num(p.wall_ms)));
+        fields.push(("events_per_sec", Json::Num(p.events_per_sec())));
+    }
+    Json::obj(fields)
+}
+
+fn convergence_json(sweep: &ScaleSweep) -> Json {
+    Json::arr(
+        CLIENTS
+            .iter()
+            .filter_map(|&n| sweep.pair(n))
+            .map(|(pr, fl)| {
+                Json::obj(vec![
+                    ("clients", Json::Num(pr.clients as f64)),
+                    (
+                        "throughput_delta",
+                        Json::Num(rel_delta(pr.throughput_per_sec, fl.throughput_per_sec)),
+                    ),
+                    (
+                        "net_tx_delta",
+                        Json::Num(rel_delta(pr.net_tx_bytes, fl.net_tx_bytes)),
+                    ),
+                    (
+                        "write_util_delta",
+                        Json::Num(rel_delta(pr.broker_write_util, fl.broker_write_util)),
+                    ),
+                    (
+                        "cache_hit_delta",
+                        Json::Num(rel_delta(pr.cache_hit_ratio, fl.cache_hit_ratio)),
+                    ),
+                    (
+                        "e2e_mean_delta",
+                        Json::Num(rel_delta(pr.e2e_mean_us, fl.e2e_mean_us)),
+                    ),
+                    (
+                        "event_reduction",
+                        Json::Num(pr.events as f64 / (fl.events as f64).max(1.0)),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The machine-readable report, timing included (host-dependent).
+pub fn to_json(sweep: &ScaleSweep) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::Str("scale".into())),
+        ("per_record_cap", Json::Num(PER_RECORD_CAP as f64)),
+        ("client_period_us", Json::Num(CLIENT_PERIOD_US as f64)),
+        ("cache_per_broker_bytes", Json::Num(CACHE_PER_BROKER)),
+        (
+            "points",
+            Json::arr(sweep.points.iter().map(|p| point_json(p, true)).collect()),
+        ),
+        ("convergence", convergence_json(sweep)),
+    ])
+}
+
+/// Model outputs only — no wall-clock fields — so runs on different
+/// hosts (or at different `AITAX_JOBS`) serialize byte-identically.
+/// `tests/runner_determinism.rs` pins jobs=1 ≡ jobs=8 on this form.
+pub fn to_json_model(sweep: &ScaleSweep) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::Str("scale".into())),
+        (
+            "points",
+            Json::arr(sweep.points.iter().map(|p| point_json(p, false)).collect()),
+        ),
+        ("convergence", convergence_json(sweep)),
+    ])
+}
+
+fn write_report(json: &Json) -> Option<std::path::PathBuf> {
+    let dir = crate::runtime::Manifest::default_dir();
+    if !dir.is_dir() {
+        return None;
+    }
+    let path = dir.join("scale_report.json");
+    std::fs::write(&path, json.pretty()).ok()?;
+    Some(path)
+}
+
+pub fn print(sweep: &ScaleSweep) {
+    println!(
+        "\nScale — edge tenant, N clients × 2 req/s × 2 kB, per-record vs \
+         flow-aggregated producers (macro-records on the coalescing quantum)"
+    );
+    println!(
+        "  per-record arm capped at {PER_RECORD_CAP} clients; \
+         read path on at {:.0} GB/broker",
+        CACHE_PER_BROKER / 1e9
+    );
+    println!(
+        "  {:>9} {:>10} {:>9} {:>9} {:>10} {:>10} {:>10} {:>9} {:>7} {:>7}",
+        "clients", "mode", "wall", "events", "thru/s", "e2e mean", "e2e p99", "tx MB", "wr util", "hit"
+    );
+    for p in &sweep.points {
+        println!(
+            "  {:>9} {:>10} {:>8.2}s {:>9} {:>10.0} {:>10} {:>10} {:>9.0} {:>6.1}% {:>6.2}%",
+            p.clients,
+            if p.flow { "flow" } else { "per-record" },
+            p.wall_ms / 1e3,
+            p.events,
+            p.throughput_per_sec,
+            fmt_us(p.e2e_mean_us.round() as u64),
+            fmt_us(p.e2e_p99_us),
+            p.net_tx_bytes / 1e6,
+            100.0 * p.broker_write_util,
+            100.0 * p.cache_hit_ratio,
+        );
+    }
+    for &n in &CLIENTS {
+        if let Some((pr, fl)) = sweep.pair(n) {
+            println!(
+                "  convergence @ {n}: thru Δ {:.2}% | tx Δ {:.2}% | wr-util Δ {:.2}% \
+                 | hit Δ {:.2}% | e2e-mean Δ {:.2}% | {:.0}x fewer events",
+                100.0 * rel_delta(pr.throughput_per_sec, fl.throughput_per_sec),
+                100.0 * rel_delta(pr.net_tx_bytes, fl.net_tx_bytes),
+                100.0 * rel_delta(pr.broker_write_util, fl.broker_write_util),
+                100.0 * rel_delta(pr.cache_hit_ratio, fl.cache_hit_ratio),
+                100.0 * rel_delta(pr.e2e_mean_us, fl.e2e_mean_us),
+                pr.events as f64 / (fl.events as f64).max(1.0),
+            );
+        }
+    }
+    println!(
+        "  takeaway: the fluid layer trades per-record event chains for \
+         per-quantum macro-records — tenant means (throughput, bytes, \
+         utilization, cache hits) converge to the exact replay while the \
+         event count stops scaling with the client population; latency \
+         tails are the knowingly-coarsened axis"
+    );
+    let json = to_json(sweep);
+    match write_report(&json) {
+        Some(path) => println!("  json report written to {}", path.display()),
+        None => println!("  json report:\n{}", json.pretty()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_mode_slashes_event_count_at_equal_offered_load() {
+        let sweep = run_points(vec![(1_000, false), (1_000, true)], Fidelity::Quick);
+        let (pr, fl) = sweep.pair(1_000).expect("both arms");
+        assert_eq!(pr.clamped, 0);
+        assert_eq!(fl.clamped, 0);
+        assert!(pr.stable && fl.stable);
+        assert!(
+            (fl.events as f64) < 0.25 * pr.events as f64,
+            "flow must coalesce events: {} vs {}",
+            fl.events,
+            pr.events
+        );
+        // Same offered load: the byte stream and throughput agree
+        // loosely even at this small N (the tight 5% contract at
+        // larger N lives in tests/flow_differential.rs).
+        assert!(rel_delta(pr.net_tx_bytes, fl.net_tx_bytes) < 0.10);
+        assert!(rel_delta(pr.throughput_per_sec, fl.throughput_per_sec) < 0.10);
+    }
+
+    #[test]
+    fn json_report_carries_points_and_convergence() {
+        let sweep = run_points(vec![(1_000, false), (1_000, true)], Fidelity::Quick);
+        let j = to_json(&sweep);
+        let points = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].get("wall_ms").is_some());
+        let conv = j.get("convergence").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(conv.len(), 1);
+        assert!(
+            conv[0].get("event_reduction").and_then(|e| e.as_f64()).unwrap() > 4.0
+        );
+        // The model form drops host-dependent timing.
+        let m = to_json_model(&sweep);
+        let mp = m.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert!(mp[0].get("wall_ms").is_none());
+        let reparsed = Json::parse(&m.to_string()).unwrap();
+        assert_eq!(reparsed.get("experiment").and_then(|e| e.as_str()), Some("scale"));
+    }
+
+    #[test]
+    fn grid_runs_flow_everywhere_and_per_record_below_the_cap() {
+        let g = grid();
+        assert_eq!(g.iter().filter(|(_, flow)| *flow).count(), CLIENTS.len());
+        assert!(g
+            .iter()
+            .filter(|(_, flow)| !*flow)
+            .all(|&(n, _)| n <= PER_RECORD_CAP));
+        assert!(g.contains(&(1_000_000, true)));
+    }
+}

@@ -3,12 +3,13 @@
 //! Subcommands:
 //!   run         live three-layer pipeline (PJRT inference + real broker)
 //!   experiment  regenerate a paper figure/table (fig5..fig15, tco) or an
-//!               extension scenario (mixed, qos, storage-qos, read-path),
-//!               or all of them
+//!               extension scenario (mixed, qos, storage-qos, read-path,
+//!               scale), or all of them
 //!   sim         one Face Recognition simulation with overrides
 //!   amdahl      Fig-9 analytic projections
 //!   bench       perf-trajectory benchmarks (kernel: events/sec + sweep
-//!               scaling, emits BENCH_kernel.json)
+//!               scaling, emits BENCH_kernel.json; scale: per-record vs
+//!               flow-aggregated wall clock, emits BENCH_scale.json)
 //!   artifacts   check/describe the AOT artifacts
 
 use aitax::coordinator::live::{LiveConfig, LiveRunner};
@@ -24,12 +25,13 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched] [--produce-quota BYTES_PER_SEC]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|all>
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|scale|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
   aitax amdahl
   aitax bench kernel [--quick] [--out FILE]
+  aitax bench scale [--quick] [--out FILE]
   aitax artifacts
 
 Sweep drivers honor AITAX_JOBS (default: all cores); jobs=1 reproduces
@@ -135,6 +137,12 @@ fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result
         "read-path" => {
             emit(ex::read_path::run(fidelity), quiet, |r| ex::read_path::print(r))
         }
+        // Runnable by name but not part of `all` / ALL_EXPERIMENTS: the
+        // sweep measures its own wall clock per point, so folding it
+        // into the timed `experiment all` suite (which the kernel bench
+        // replays twice) would both skew and be skewed by the
+        // benchmark; `aitax bench scale` owns its perf trend instead.
+        "scale" => emit(ex::scale::run(fidelity), quiet, |r| ex::scale::print(r)),
         other => anyhow::bail!("unknown experiment: {other}\n{USAGE}"),
     }
     Ok(())
@@ -213,7 +221,10 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     match args.positional.get(1).map(String::as_str) {
         Some("kernel") => bench_kernel(args),
-        other => anyhow::bail!("unknown bench target {other:?} (expected: kernel)\n{USAGE}"),
+        Some("scale") => bench_scale(args),
+        other => {
+            anyhow::bail!("unknown bench target {other:?} (expected: kernel, scale)\n{USAGE}")
+        }
     }
 }
 
@@ -319,6 +330,86 @@ fn bench_kernel(args: &Args) -> anyhow::Result<()> {
         "  experiment all: jobs=1 {:.1} s vs jobs={jobs} {:.1} s -> {speedup:.2}x",
         wall_jobs1.as_secs_f64(),
         wall_jobsn.as_secs_f64()
+    );
+    println!("  report written to {out}");
+    Ok(())
+}
+
+/// `aitax bench scale`: the flow-aggregation perf trend behind
+/// `BENCH_scale.json` — per-record vs flow wall clock at the largest N
+/// both arms replay, plus the million-client flow point the per-record
+/// path cannot touch (the acceptance bar: it must finish in interactive
+/// time single-threaded).
+fn bench_scale(args: &Args) -> anyhow::Result<()> {
+    use aitax::experiments::runner;
+    use aitax::experiments::scale;
+    use aitax::util::json::Json;
+
+    let fidelity = if args.flag("quick") {
+        Fidelity::Quick
+    } else {
+        Fidelity::from_env()
+    };
+    // Wall clock is the measurement: run every point sequentially.
+    runner::set_jobs_override(Some(1));
+    let sweep = scale::run_points(
+        vec![
+            (scale::PER_RECORD_CAP, false),
+            (scale::PER_RECORD_CAP, true),
+            (1_000_000, true),
+        ],
+        fidelity,
+    );
+    runner::set_jobs_override(None);
+    let pr = sweep.point(scale::PER_RECORD_CAP, false).expect("per-record arm");
+    let fl = sweep.point(scale::PER_RECORD_CAP, true).expect("flow arm");
+    let million = sweep.point(1_000_000, true).expect("10^6 flow arm");
+    let speedup = pr.wall_ms / fl.wall_ms.max(1e-9);
+
+    let fidelity_label = match fidelity {
+        Fidelity::Quick => "quick",
+        Fidelity::Full => "full",
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("fidelity", Json::Str(fidelity_label.into())),
+        ("clients", Json::Num(scale::PER_RECORD_CAP as f64)),
+        ("per_record_wall_ms", Json::Num(pr.wall_ms)),
+        ("per_record_events", Json::Num(pr.events as f64)),
+        ("flow_wall_ms", Json::Num(fl.wall_ms)),
+        ("flow_events", Json::Num(fl.events as f64)),
+        ("flow_speedup", Json::Num(speedup)),
+        (
+            "event_reduction",
+            Json::Num(pr.events as f64 / (fl.events as f64).max(1.0)),
+        ),
+        ("million_flow_wall_ms", Json::Num(million.wall_ms)),
+        ("million_flow_events", Json::Num(million.events as f64)),
+        (
+            "million_flow_events_per_sec",
+            Json::Num(million.events_per_sec()),
+        ),
+        (
+            "throughput_delta",
+            Json::Num(scale::rel_delta(pr.throughput_per_sec, fl.throughput_per_sec)),
+        ),
+    ]);
+    let out = args.get_str("out", "BENCH_scale.json").to_string();
+    std::fs::write(&out, json.pretty())?;
+    println!("scale bench ({fidelity_label} fidelity, jobs=1):");
+    println!(
+        "  {} clients   per-record {:.1} s ({} events) vs flow {:.2} s ({} events) -> {speedup:.1}x",
+        scale::PER_RECORD_CAP,
+        pr.wall_ms / 1e3,
+        pr.events,
+        fl.wall_ms / 1e3,
+        fl.events,
+    );
+    println!(
+        "  1000000 clients  flow {:.2} s ({} events, {:.0} events/s)",
+        million.wall_ms / 1e3,
+        million.events,
+        million.events_per_sec(),
     );
     println!("  report written to {out}");
     Ok(())

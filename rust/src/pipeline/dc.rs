@@ -121,6 +121,11 @@ pub struct Item {
     /// When the record became visible to consumers (commit time).
     pub visible_us: u64,
     pub bytes: f64,
+    /// Client records this item stands for: 1 on the per-record path,
+    /// >1 for a flow-aggregated macro-record ([`ProducerKind::Flow`]),
+    /// whose `bytes` are the records' aggregate payload. Metrics weight
+    /// by this count so tenant means match the per-record simulation.
+    pub count: u64,
 }
 
 /// Events routed between data-center components.
@@ -187,6 +192,13 @@ pub struct FetchTuning {
     pub record_overhead: f64,
     pub fetch_min_bytes: usize,
     pub fetch_max_wait_us: u64,
+    /// `max.partition.fetch.bytes`-style cap: one poll drains at most
+    /// this many bytes per partition, then immediately re-polls for the
+    /// rest — so a catch-up drain is a train of bounded requests instead
+    /// of one giant fetch. At least one record is always fetched
+    /// (Kafka's oversized-record escape hatch). `usize::MAX` (the
+    /// default) is the uncapped pre-PR-6 behavior, bit for bit.
+    pub max_partition_fetch_bytes: usize,
 }
 
 /// Cross-component per-consumer scheduling state (the "mailbox" the
@@ -419,6 +431,52 @@ pub enum ProducerKind {
         /// Serialization + client cost per record on the send server.
         send_us_per_record: f64,
     },
+    /// Hybrid fluid/discrete scaling: each producer *unit* is one flow
+    /// standing for thousands of [`Tick`](ProducerKind::Tick) clients.
+    /// Every coalescing quantum the flow converts its population's
+    /// offered rate (`clients × records_per_tick / tick_us`) into whole
+    /// records via a fractional carry accumulator and emits **one
+    /// macro-record per owned partition** carrying the aggregate bytes
+    /// and a record count — so the quota buckets, the fabric NIC/CPU/
+    /// storage hops, and the read path see the same byte stream the
+    /// per-record simulation offers, in ~`partitions / quantum` events
+    /// instead of one per record.
+    ///
+    /// The fluid boundary (see `docs/architecture.md`): per-record RNG
+    /// draws (size, prep) collapse to their means; the per-client send
+    /// server is left idle and its mean latency applied as a constant
+    /// offset (a flow stands for N *parallel* clients, each far below
+    /// send saturation, so no single-server queue is the right model);
+    /// creation epochs take the quantum-window midpoint so mean e2e
+    /// matches the smeared per-record arrivals. No RNG runs on this
+    /// path — flow worlds are trivially jobs-deterministic.
+    Flow {
+        tick_us: u64,
+        records_per_tick: usize,
+        record_bytes: f64,
+        prep_us: f64,
+        send_us_per_record: f64,
+        /// Coalescing quantum (µs): all flows wake on this shared grid
+        /// ([`Ctx::at_self_aligned`]).
+        quantum_us: u64,
+        /// One entry per producer unit (flow).
+        flows: Vec<FlowState>,
+    },
+}
+
+/// Deterministic rate-process state of one flow ([`ProducerKind::Flow`]).
+#[derive(Clone, Debug)]
+pub struct FlowState {
+    /// Client population this flow aggregates.
+    pub clients: u64,
+    /// Fractional records carried to the next quantum, so the long-run
+    /// emitted count is exactly `clients × rate × elapsed` (no drift).
+    pub carry: f64,
+    /// Last wake time (µs) — the integration window start.
+    pub last_us: u64,
+    /// Round-robin cursor distributing the per-quantum remainder across
+    /// owned partitions.
+    pub rr: u32,
 }
 
 /// Per-producer container state.
@@ -485,6 +543,7 @@ impl ProducerClient {
                         ready_us: detect_end,
                         visible_us: 0,
                         bytes,
+                        count: 1,
                     };
                     {
                         let ts = &mut ctx.shared.tenants[t];
@@ -557,6 +616,7 @@ impl ProducerClient {
                         ready_us: t_sent,
                         visible_us: 0,
                         bytes,
+                        count: 1,
                     };
                     ctx.at_self(
                         t_sent + WIRE_US,
@@ -564,6 +624,90 @@ impl ProducerClient {
                     );
                 }
                 ctx.at_self(now + *tick_us, DcEvent::Produce(p));
+            }
+            ProducerKind::Flow {
+                tick_us,
+                records_per_tick,
+                record_bytes,
+                prep_us,
+                send_us_per_record,
+                quantum_us,
+                flows,
+            } => {
+                let (part_base, part_count, warmup) = {
+                    let ts = &mut ctx.shared.tenants[t];
+                    ts.metrics.frames_total += 1;
+                    if now >= ts.warmup_us {
+                        ts.metrics.frames_measured += 1;
+                    }
+                    (ts.part_base, ts.part_count, ts.warmup_us)
+                };
+                self.units[pid].cycles += 1;
+                let nflows = flows.len() as u32;
+                let st = &mut flows[pid];
+                let elapsed = now - st.last_us;
+                st.last_us = now;
+                // Deterministic rate integration with fractional carry:
+                // offered records this window, whole part emitted now,
+                // fraction carried forward.
+                let offered = st.clients as f64 * *records_per_tick as f64 * elapsed as f64
+                    / *tick_us as f64
+                    + st.carry;
+                let emit = offered.floor() as u64;
+                st.carry = offered - emit as f64;
+                if emit > 0 {
+                    // Window-midpoint creation epoch: per-record arrivals
+                    // smear uniformly over the quantum, so the mean
+                    // creation time of the batch is the midpoint.
+                    let created = now - elapsed / 2;
+                    let prep = prep_us.max(1.0).round() as u64;
+                    let t_ready = now + prep;
+                    // Mean client send latency as a constant offset; the
+                    // send server itself stays idle (see the Flow docs).
+                    let t_sent = t_ready + send_us_per_record.round() as u64;
+                    // Flow `pid` owns partitions {pid, pid+nflows, ...}
+                    // within the tenant slice (strided so every flow's
+                    // macro-records spread over the brokers).
+                    let owned = (part_count - pid as u32 + nflows - 1) / nflows;
+                    let base_each = emit / owned as u64;
+                    let rem = (emit % owned as u64) as u32;
+                    // Rotate which partitions absorb the remainder so no
+                    // partition is systematically heavier.
+                    let rr = st.rr % owned;
+                    st.rr = (rr + rem) % owned;
+                    {
+                        let ts = &mut ctx.shared.tenants[t];
+                        ts.metrics.produced += emit;
+                        if now >= warmup {
+                            ts.metrics.hist_ingest.record_n(prep.max(1), emit);
+                            // Flow send paths never overrun (N parallel
+                            // clients): tick-start delay is identically ~0.
+                            ts.metrics.hist_prep.record_n(1, emit);
+                        }
+                        ts.metrics.population.enter_n(t_sent.min(horizon), emit as i64);
+                    }
+                    for k in 0..owned {
+                        let idx = (rr + k) % owned;
+                        let recs = base_each + u64::from(k < rem);
+                        if recs == 0 {
+                            continue;
+                        }
+                        let partition = part_base + pid as u32 + idx * nflows;
+                        let item = Item {
+                            created_us: created,
+                            ready_us: t_sent,
+                            visible_us: 0,
+                            bytes: recs as f64 * *record_bytes,
+                            count: recs,
+                        };
+                        ctx.at_self(
+                            t_sent + WIRE_US,
+                            DcEvent::Dispatch { producer: p, partition, item },
+                        );
+                    }
+                }
+                let q = (*quantum_us).max(1);
+                ctx.at_self_aligned(now + q, q, DcEvent::Produce(p));
             }
         }
     }
@@ -596,7 +740,9 @@ impl ProducerClient {
             partition
         };
         let overhead = ctx.shared.tenants[t].fetch.record_overhead;
-        let bytes = item.bytes + overhead;
+        // Macro-records pay the framing overhead once per client record
+        // (`count == 1` multiplies by 1.0 — exact, the per-record path).
+        let bytes = item.bytes + overhead * item.count as f64;
         if !admitted {
             let factor = ctx.shared.tenants[t].produce_charge_factor;
             if let Some(bucket) = &mut ctx.shared.tenants[t].produce_bucket {
@@ -624,11 +770,12 @@ impl ProducerClient {
             let token = s.items.alloc(item);
             let leader = s.partitions[partition as usize].leader;
             s.tenants[t].metrics.net_tx_bytes += bytes;
-            s.fabric.send_classed(
+            s.fabric.send_grouped_classed(
                 now,
                 partition,
                 leader,
                 bytes,
+                item.count,
                 token,
                 self.tenant,
                 &mut s.meter,
@@ -746,7 +893,7 @@ impl ConsumerPoller {
         for &pi in &self.owned[cid] {
             for it in ctx.shared.partitions[pi as usize].queue.iter() {
                 if it.visible_us <= now {
-                    avail_bytes += it.bytes + fetch.record_overhead;
+                    avail_bytes += it.bytes + fetch.record_overhead * it.count as f64;
                     oldest_visible = oldest_visible.min(it.visible_us);
                 } else {
                     break;
@@ -786,7 +933,17 @@ impl ConsumerPoller {
                     if it.visible_us > now {
                         break;
                     }
-                    part_bytes += it.bytes + fetch.record_overhead;
+                    let it_bytes = it.bytes + fetch.record_overhead * it.count as f64;
+                    // Per-partition fetch cap: stop once this poll's take
+                    // from the partition would exceed the cap (always at
+                    // least one record); the end-of-serve re-poll drains
+                    // the remainder as its own bounded request.
+                    if part_bytes > 0.0
+                        && part_bytes + it_bytes > fetch.max_partition_fetch_bytes as f64
+                    {
+                        break;
+                    }
+                    part_bytes += it_bytes;
                     let item = *it;
                     part.queue.pop_front();
                     let mut at = self.fetched.len();
@@ -854,35 +1011,55 @@ impl ConsumerPoller {
             let it = self.fetched[head as usize];
             let start = busy;
             let wait_us = start.saturating_sub(it.ready_us);
-            let dur = match &self.service {
-                ServiceModel::FaceRec(stages) => stages.identify(&mut self.units[cid].rng),
-                ServiceModel::Lognormal { mean_us, cv } => self.units[cid]
-                    .rng
-                    .lognormal_mean_cv(*mean_us, *cv)
-                    .round()
-                    .max(1.0) as u64,
+            let k = it.count;
+            // A macro-record occupies the container for k records' worth
+            // of mean service time (deterministic — the fluid path draws
+            // no RNG); a plain record takes the exact per-record draw.
+            let dur = if k <= 1 {
+                match &self.service {
+                    ServiceModel::FaceRec(stages) => stages.identify(&mut self.units[cid].rng),
+                    ServiceModel::Lognormal { mean_us, cv } => self.units[cid]
+                        .rng
+                        .lognormal_mean_cv(*mean_us, *cv)
+                        .round()
+                        .max(1.0) as u64,
+                }
+            } else {
+                match &self.service {
+                    // Flow mode is tick-workload-only (asserted at build).
+                    ServiceModel::FaceRec(_) => unreachable!("flow macro-record on facerec"),
+                    ServiceModel::Lognormal { mean_us, .. } => {
+                        (*mean_us * k as f64).round().max(1.0) as u64
+                    }
+                }
             };
             busy = start + dur;
-            self.units[cid].done += 1;
+            self.units[cid].done += k;
             let ts = &mut ctx.shared.tenants[t];
-            ts.metrics.population.exit(busy.min(horizon));
-            ts.metrics.completed += 1;
+            ts.metrics.population.exit_n(busy.min(horizon), k as i64);
+            ts.metrics.completed += k;
             if busy >= ts.warmup_us && busy <= horizon {
-                ts.metrics.completed_in_window += 1;
+                ts.metrics.completed_in_window += k;
             }
             if it.created_us >= ts.warmup_us && busy <= horizon {
-                ts.metrics.hist_wait.record(wait_us.max(1));
+                ts.metrics.hist_wait.record_n(wait_us.max(1), k);
                 if is_facerec {
                     ts.metrics.hist_service.record(dur.max(1));
-                } else {
+                } else if k <= 1 {
                     ts.metrics.hist_service.record(dur);
+                } else {
+                    // Per-record service value, weighted by the records
+                    // the macro stands for.
+                    ts.metrics
+                        .hist_service
+                        .record_n(((dur as f64 / k as f64).round() as u64).max(1), k);
                 }
                 let e2e = busy - it.created_us;
-                ts.metrics.hist_e2e.record(e2e.max(1));
+                ts.metrics.hist_e2e.record_n(e2e.max(1), k);
                 let sec = (it.created_us / 1_000_000) as usize;
                 if sec < ts.metrics.lat_sum.len() {
-                    ts.metrics.lat_sum[sec] += e2e;
-                    ts.metrics.lat_n[sec] += 1;
+                    ts.metrics.lat_sum[sec] += e2e * k;
+                    ts.metrics.lat_n[sec] += k;
                 }
             }
         }
@@ -1025,11 +1202,13 @@ pub fn build_with_qos(
                 queue: VecDeque::new(),
             });
         }
+        let cap = spec.cfg.tuning.max_partition_fetch_bytes;
         let fetch = match spec.kind {
             WorkloadKind::FaceRec => FetchTuning {
                 record_overhead: FACEREC_RECORD_OVERHEAD,
                 fetch_min_bytes: spec.cfg.tuning.fetch_min_bytes,
                 fetch_max_wait_us: spec.cfg.tuning.fetch_max_wait_us,
+                max_partition_fetch_bytes: cap,
             },
             WorkloadKind::ObjDet => {
                 let od = &spec.cfg.calibration.objdet;
@@ -1037,6 +1216,7 @@ pub fn build_with_qos(
                     record_overhead: 0.0,
                     fetch_min_bytes: od.fetch_min_bytes,
                     fetch_max_wait_us: od.fetch_max_wait_us,
+                    max_partition_fetch_bytes: cap,
                 }
             }
             WorkloadKind::TrainIngest => {
@@ -1045,6 +1225,7 @@ pub fn build_with_qos(
                     record_overhead: 0.0,
                     fetch_min_bytes: tr.fetch_min_bytes,
                     fetch_max_wait_us: tr.fetch_max_wait_us,
+                    max_partition_fetch_bytes: cap,
                 }
             }
             WorkloadKind::Rpc => {
@@ -1053,6 +1234,7 @@ pub fn build_with_qos(
                     record_overhead: 0.0,
                     fetch_min_bytes: rpc.fetch_min_bytes,
                     fetch_max_wait_us: rpc.fetch_max_wait_us,
+                    max_partition_fetch_bytes: cap,
                 }
             }
         };
@@ -1110,6 +1292,10 @@ pub fn build_with_qos(
         let d = &cfg.deployment;
         match spec.kind {
             WorkloadKind::FaceRec => {
+                assert_eq!(
+                    cfg.flow_clients, 0,
+                    "flow aggregation (flow_clients) supports tick workloads only"
+                );
                 let stages = StageModel::new(cfg.calibration.stages, cfg.accel, cfg.protocol);
                 let mut master = Rng::new(cfg.seed);
                 // Acceleration-emulation runs use 1 face/frame (§5.3);
@@ -1165,8 +1351,7 @@ pub fn build_with_qos(
                 add_tick_tenant(
                     &mut world,
                     tenant,
-                    d,
-                    cfg.node.net_bw,
+                    cfg,
                     cfg.seed ^ 0x0BDE7,
                     ProducerKind::Tick {
                         tick_us: od.tick_us,
@@ -1190,8 +1375,7 @@ pub fn build_with_qos(
                 add_tick_tenant(
                     &mut world,
                     tenant,
-                    d,
-                    cfg.node.net_bw,
+                    cfg,
                     cfg.seed ^ 0x7EA17,
                     ProducerKind::Tick {
                         tick_us: tr.tick_us,
@@ -1210,8 +1394,7 @@ pub fn build_with_qos(
                 add_tick_tenant(
                     &mut world,
                     tenant,
-                    d,
-                    cfg.node.net_bw,
+                    cfg,
                     cfg.seed ^ 0x59C5,
                     ProducerKind::Tick {
                         tick_us: rpc.period_us,
@@ -1238,21 +1421,86 @@ pub fn build_with_qos(
 /// jittered initial ticks. Kept as one helper so the registration order
 /// — which the determinism contract depends on — cannot diverge between
 /// tick workloads.
-#[allow(clippy::too_many_arguments)]
+///
+/// When `cfg.flow_clients > 0` the tick producer fleet is replaced by a
+/// small set of [`ProducerKind::Flow`] rate processes aggregating that
+/// client population (`cfg.flow_processes` flows, default
+/// `min(partitions, 32)`), waking on the shared `cfg.flow_quantum_us`
+/// grid. `flow_clients == 0` (the default) is the unchanged per-record
+/// path, bit for bit.
 fn add_tick_tenant(
     world: &mut World<DcEvent, DcState>,
     tenant: usize,
-    d: &crate::config::Deployment,
-    net_bw: f64,
+    cfg: &Config,
     seed: u64,
     kind: ProducerKind,
     service: ServiceModel,
 ) {
-    let tick_us = match &kind {
-        ProducerKind::Tick { tick_us, .. } => *tick_us,
-        _ => unreachable!("add_tick_tenant requires ProducerKind::Tick"),
+    let d = &cfg.deployment;
+    let net_bw = cfg.node.net_bw;
+    let &ProducerKind::Tick {
+        tick_us,
+        records_per_tick,
+        record_bytes,
+        prep_us,
+        send_us_per_record,
+        ..
+    } = &kind
+    else {
+        unreachable!("add_tick_tenant requires ProducerKind::Tick");
     };
     let mut master = Rng::new(seed);
+    if cfg.flow_clients > 0 {
+        // Hybrid fluid mode: up to 32 flows (never more than partitions
+        // or clients) each owning a strided partition subset, so the
+        // aggregate ~N× byte stream spreads over many producer NICs
+        // instead of falsely bottlenecking on one.
+        let clients = cfg.flow_clients;
+        let auto = d.partitions.min(32);
+        let nflows = (if cfg.flow_processes > 0 { cfg.flow_processes } else { auto })
+            .min(d.partitions)
+            .max(1)
+            .min(clients as usize);
+        let flows: Vec<FlowState> = (0..nflows as u64)
+            .map(|f| FlowState {
+                clients: clients / nflows as u64 + u64::from(f < clients % nflows as u64),
+                carry: 0.0,
+                last_us: 0,
+                rr: 0,
+            })
+            .collect();
+        let units = producer_units(&mut master, nflows, net_bw);
+        let consumers = consumer_units(&mut master, d.consumers, net_bw);
+        let producer = world.add(Box::new(ProducerClient {
+            tenant: tenant as u8,
+            kind: ProducerKind::Flow {
+                tick_us,
+                records_per_tick,
+                record_bytes,
+                prep_us,
+                send_us_per_record,
+                quantum_us: cfg.flow_quantum_us.max(1),
+                flows: flows.clone(),
+            },
+            units,
+        }));
+        let owned = owned_partitions(&world.shared, tenant);
+        let poller = world.add(Box::new(ConsumerPoller::new(
+            tenant as u8,
+            service,
+            consumers,
+            owned,
+        )));
+        world.shared.tenants[tenant].producer_comp = producer;
+        world.shared.tenants[tenant].poller_comp = poller;
+        for (f, st) in flows.iter().enumerate() {
+            // A zero-client flow emits nothing, ever: schedule no wake.
+            if st.clients > 0 {
+                world.schedule(0, producer, DcEvent::Produce(f as u32));
+            }
+        }
+        return;
+    }
     let units = producer_units(&mut master, d.producers, net_bw);
     let consumers = consumer_units(&mut master, d.consumers, net_bw);
     let producer = world.add(Box::new(ProducerClient {
@@ -1313,6 +1561,11 @@ pub struct TenantSummary {
     pub e2e_mean_us: f64,
     pub e2e_p99_us: u64,
     pub stable: bool,
+    /// Producer→broker bytes this tenant put on the wire (per-tenant
+    /// NIC meter — the shared [`BandwidthMeter`] only has class totals).
+    pub net_tx_bytes: f64,
+    /// Broker→consumer bytes this tenant fetched.
+    pub net_rx_bytes: f64,
     /// End-of-run consumer lag summed over the tenant's partitions
     /// (bytes still unread past the fetch offsets). Zero when the
     /// measured read path is disabled — and in any healthy streaming
@@ -1345,6 +1598,8 @@ pub fn summary_for_tenant(
         e2e_mean_us: m.hist_e2e.mean(),
         e2e_p99_us: m.hist_e2e.p99(),
         stable: m.population.verdict(elapsed).stable,
+        net_tx_bytes: m.net_tx_bytes,
+        net_rx_bytes: m.net_rx_bytes,
         consumer_lag_bytes: (ts.part_base..ts.part_base + ts.part_count)
             .map(|g| world.shared.fabric.group_lag_bytes(g))
             .sum(),

@@ -90,6 +90,12 @@ struct InFlight {
     partition: u32,
     leader: u32,
     bytes: f64,
+    /// Client records this produce stands for (1 on the per-record path;
+    /// >1 for a flow-aggregated macro-record). Request CPU is charged per
+    /// record, so a macro pays `records × request_cpu_us` plus the
+    /// per-byte term — the same total broker CPU the per-record
+    /// simulation would pay for the same stream.
+    records: u64,
     /// Scheduling class (tenant id) for weighted request-CPU service.
     class: u8,
     remaining_acks: u8,
@@ -283,6 +289,18 @@ impl Fabric {
         self.tuning.request_cpu_us + self.tuning.per_byte_cpu_us * bytes
     }
 
+    /// Request CPU for a batch standing for `records` client records:
+    /// the fixed per-request cost is paid once per record (the broker
+    /// would have parsed/validated each), the per-byte cost once per
+    /// byte. `records <= 1` takes the exact per-record expression.
+    fn request_cpu_us_n(&self, bytes: f64, records: u64) -> f64 {
+        if records <= 1 {
+            self.request_cpu_us(bytes)
+        } else {
+            self.tuning.request_cpu_us * records as f64 + self.tuning.per_byte_cpu_us * bytes
+        }
+    }
+
     fn alloc(&mut self, inf: InFlight) -> u32 {
         if let Some(fid) = self.free.pop() {
             self.inflight[fid as usize] = inf;
@@ -326,6 +344,30 @@ impl Fabric {
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
     ) {
+        self.send_grouped_classed(
+            now, partition, leader, bytes, 1, token, class, meter, producer_nic, out,
+        )
+    }
+
+    /// [`Fabric::send_classed`] for a batch standing for `records` client
+    /// records (flow-aggregation macro-records). Bytes ride the NIC /
+    /// storage hops in aggregate; request CPU is charged per record via
+    /// [`Fabric::request_cpu_us_n`]. `records == 1` is exactly
+    /// [`Fabric::send_classed`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_grouped_classed(
+        &mut self,
+        now: u64,
+        partition: u32,
+        leader: u32,
+        bytes: f64,
+        records: u64,
+        token: u64,
+        class: u8,
+        meter: &mut BandwidthMeter,
+        producer_nic: &mut FifoServer,
+        out: &mut Vec<FabricOut>,
+    ) {
         meter.add(Class::Producer, Channel::Network, Dir::Write, bytes);
         let t_tx = producer_nic.submit(now, bytes) + WIRE_US;
         let fid = self.alloc(InFlight {
@@ -333,6 +375,7 @@ impl Fabric {
             partition,
             leader,
             bytes,
+            records,
             class,
             remaining_acks: (self.replication - 1) as u8,
             leader_stored: false,
@@ -345,12 +388,12 @@ impl Fabric {
     pub fn handle(&mut self, now: u64, ev: FabricEv, meter: &mut BandwidthMeter, out: &mut Vec<FabricOut>) {
         match ev {
             FabricEv::LeaderArrive { fid } => {
-                let (leader, bytes, class) = {
+                let (leader, bytes, records, class) = {
                     let f = &self.inflight[fid as usize];
-                    (f.leader as usize, f.bytes, f.class)
+                    (f.leader as usize, f.bytes, f.records, f.class)
                 };
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
-                let cpu = self.request_cpu_us(bytes);
+                let cpu = self.request_cpu_us_n(bytes, records);
                 let b = &mut self.brokers[leader];
                 let t_rx = b.nic_rx.submit(now, bytes);
                 let t_cpu = b.cpu_submit(t_rx, class, cpu);
@@ -382,12 +425,12 @@ impl Fabric {
                 }
             }
             FabricEv::FollowerArrive { fid, broker } => {
-                let (bytes, class) = {
+                let (bytes, records, class) = {
                     let f = &self.inflight[fid as usize];
-                    (f.bytes, f.class)
+                    (f.bytes, f.records, f.class)
                 };
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
-                let cpu = self.request_cpu_us(bytes);
+                let cpu = self.request_cpu_us_n(bytes, records);
                 let b = &mut self.brokers[broker as usize];
                 let t_rx = b.nic_rx.submit(now, bytes);
                 let t_cpu = b.cpu_submit(t_rx, class, cpu);
@@ -734,6 +777,80 @@ mod tests {
         }
         assert_eq!(commits, 2, "both classes must commit under WFQ");
         assert!(f.max_cpu_util(1_000_000) > 0.0);
+    }
+
+    #[test]
+    fn grouped_send_charges_request_cpu_per_record() {
+        // A macro-record standing for k client records must pay the same
+        // broker request CPU the k individual sends would have paid: the
+        // fixed per-request cost k times plus the per-byte term once.
+        let run_grouped = |records: u64, bytes: f64| -> Fabric {
+            let mut f = fabric();
+            let mut meter = BandwidthMeter::new();
+            let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+            let mut q: EventQueue<FabricEv> = EventQueue::new();
+            let mut out = Vec::new();
+            f.send_grouped_classed(0, 0, 0, bytes, records, 9, 0, &mut meter, &mut nic, &mut out);
+            loop {
+                for o in out.drain(..) {
+                    if let FabricOut::Schedule(t, ev) = o {
+                        q.at(t, ev);
+                    }
+                }
+                match q.pop() {
+                    Some((t, ev)) => f.handle(t, ev, &mut meter, &mut out),
+                    None => break,
+                }
+            }
+            f
+        };
+        let elapsed = 1_000_000u64;
+        let k = 16u64;
+        let bytes = 2_000.0 * k as f64;
+        let one = run_grouped(1, bytes).max_cpu_util(elapsed);
+        let grouped = run_grouped(k, bytes).max_cpu_util(elapsed);
+        // Leader CPU: the grouped request pays (k-1) extra fixed costs.
+        let extra = (k - 1) as f64 * KafkaTuning::default().request_cpu_us / elapsed as f64;
+        assert!(
+            (grouped - one - extra).abs() < 1e-9,
+            "grouped {grouped} vs single {one}, expected extra {extra}"
+        );
+    }
+
+    #[test]
+    fn grouped_send_of_one_record_matches_send_classed() {
+        // records == 1 must be the exact send_classed path: same commit
+        // time, same meters, same utilizations.
+        let run = |grouped: bool| -> (u64, f64) {
+            let mut f = fabric();
+            let mut meter = BandwidthMeter::new();
+            let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+            let mut q: EventQueue<FabricEv> = EventQueue::new();
+            let mut out = Vec::new();
+            if grouped {
+                f.send_grouped_classed(0, 0, 0, 37_300.0, 1, 5, 0, &mut meter, &mut nic, &mut out);
+            } else {
+                f.send_classed(0, 0, 0, 37_300.0, 5, 0, &mut meter, &mut nic, &mut out);
+            }
+            let mut committed = 0;
+            loop {
+                for o in out.drain(..) {
+                    match o {
+                        FabricOut::Schedule(t, ev) => q.at(t, ev),
+                        FabricOut::Committed { at, .. } => committed = at,
+                    }
+                }
+                match q.pop() {
+                    Some((t, ev)) => f.handle(t, ev, &mut meter, &mut out),
+                    None => break,
+                }
+            }
+            (committed, f.max_cpu_util(1_000_000))
+        };
+        let (at_a, cpu_a) = run(false);
+        let (at_b, cpu_b) = run(true);
+        assert_eq!(at_a, at_b);
+        assert_eq!(cpu_a.to_bits(), cpu_b.to_bits());
     }
 
     #[test]

@@ -239,6 +239,33 @@ impl TenantDef {
         self.cfg.consumer_lag_start_us = lag_us;
         self
     }
+
+    /// Hybrid fluid/discrete scaling: represent this tenant's producer
+    /// population as `clients` clients aggregated into a handful of
+    /// deterministic rate processes instead of one component (and one
+    /// event stream) per client. The flow producers emit batched
+    /// macro-records on the coalescing quantum
+    /// ([`Self::with_flow_quantum`]), so a million-client tenant costs a
+    /// few events per quantum rather than millions per second, while the
+    /// broker fabric still sees the same offered byte stream, aggregate
+    /// request-CPU, quota charges, and read-path traffic.
+    /// Tick-style workloads only ([`WorkloadKind::TrainIngest`] /
+    /// [`WorkloadKind::Rpc`]); `tests/flow_differential.rs` pins that
+    /// tenant means converge to the per-record simulation as N grows.
+    pub fn with_flow_clients(mut self, clients: u64) -> Self {
+        self.cfg.flow_clients = clients;
+        self.cfg.deployment.producers = clients.max(1) as usize;
+        self
+    }
+
+    /// Coalescing quantum for flow-aggregated producers, µs (default
+    /// [`crate::config::Config::flow_quantum_us`]): macro-records are
+    /// emitted on this grid, so it bounds both the event rate and the
+    /// burstiness the fluid approximation injects.
+    pub fn with_flow_quantum(mut self, quantum_us: u64) -> Self {
+        self.cfg.flow_quantum_us = quantum_us;
+        self
+    }
 }
 
 /// An N-tenant deployment on one shared fabric.

@@ -25,6 +25,26 @@ fn pack(time: u64, seq: u64) -> u128 {
 /// 16-byte keys while halving the depth of a binary heap.
 const ARITY: usize = 4;
 
+/// Round `time` up to the next multiple of `quantum` (µs). `quantum <= 1`
+/// leaves the time untouched — the per-record (unquantized) grid.
+///
+/// This is the coalescing grid the flow-aggregation layer schedules on:
+/// all flow producers in a world share one quantum, so their wake-ups
+/// land on common instants and the per-quantum work batches instead of
+/// interleaving one event per record.
+#[inline]
+pub fn align_up(time: u64, quantum: u64) -> u64 {
+    if quantum <= 1 {
+        return time;
+    }
+    let r = time % quantum;
+    if r == 0 {
+        time
+    } else {
+        time + (quantum - r)
+    }
+}
+
 /// Deterministic discrete-event queue.
 pub struct EventQueue<E> {
     /// Implicit 4-ary min-heap: children of `i` are `4i+1 ..= 4i+4`.
@@ -100,6 +120,12 @@ impl<E> EventQueue<E> {
     /// Schedule `event` after a delay from now.
     pub fn after(&mut self, delay: u64, event: E) {
         self.at(self.now + delay, event);
+    }
+
+    /// Schedule `event` at `time` rounded up to the coalescing grid
+    /// (see [`align_up`]). With `quantum <= 1` this is exactly [`at`].
+    pub fn at_aligned(&mut self, time: u64, quantum: u64, event: E) {
+        self.at(align_up(time, quantum), event);
     }
 
     /// Pop the next event, advancing the clock.
@@ -229,6 +255,34 @@ mod tests {
         assert_eq!(q.clamped(), 1);
         while q.pop().is_some() {}
         assert_eq!(q.clamped(), 1);
+    }
+
+    #[test]
+    fn align_up_grid() {
+        // quantum <= 1: identity (the per-record grid).
+        assert_eq!(align_up(0, 0), 0);
+        assert_eq!(align_up(37, 0), 37);
+        assert_eq!(align_up(37, 1), 37);
+        // On-grid times stay put; off-grid times round up.
+        assert_eq!(align_up(0, 25_000), 0);
+        assert_eq!(align_up(25_000, 25_000), 25_000);
+        assert_eq!(align_up(25_001, 25_000), 50_000);
+        assert_eq!(align_up(1, 25_000), 25_000);
+        assert_eq!(align_up(49_999, 25_000), 50_000);
+    }
+
+    #[test]
+    fn at_aligned_schedules_on_the_grid() {
+        let mut q = EventQueue::new();
+        q.at_aligned(30, 100, "a"); // -> 100
+        q.at_aligned(100, 100, "b"); // on-grid -> 100 (after "a": tie-break)
+        q.at_aligned(101, 100, "c"); // -> 200
+        assert_eq!(q.pop(), Some((100, "a")));
+        assert_eq!(q.pop(), Some((100, "b")));
+        assert_eq!(q.pop(), Some((200, "c")));
+        // quantum 1 degenerates to `at` exactly.
+        q.at_aligned(250, 1, "d");
+        assert_eq!(q.pop(), Some((250, "d")));
     }
 
     #[test]

@@ -56,9 +56,32 @@ impl Population {
         self.peak = self.peak.max(self.count);
     }
 
+    /// `n` simultaneous entries in O(1); `n == 0` is a no-op, `n == 1`
+    /// performs the exact same operations as [`enter`](Self::enter).
+    /// Flow-mode macro-records use this to keep the time-weighted area
+    /// equal to `n` per-record entries at the same instant.
+    pub fn enter_n(&mut self, now: u64, n: i64) {
+        if n == 0 {
+            return;
+        }
+        self.advance(now);
+        self.count += n;
+        self.peak = self.peak.max(self.count);
+    }
+
     pub fn exit(&mut self, now: u64) {
         self.advance(now);
         self.count -= 1;
+        debug_assert!(self.count >= 0, "population went negative");
+    }
+
+    /// `n` simultaneous exits in O(1); see [`enter_n`](Self::enter_n).
+    pub fn exit_n(&mut self, now: u64, n: i64) {
+        if n == 0 {
+            return;
+        }
+        self.advance(now);
+        self.count -= n;
         debug_assert!(self.count >= 0, "population went negative");
     }
 
@@ -154,6 +177,26 @@ mod tests {
         p.enter(500_000); // 2 from 500ms..1s
         assert!((p.mean(1_000_000) - 1.5).abs() < 1e-9);
         assert_eq!(p.peak(), 2);
+    }
+
+    #[test]
+    fn enter_n_exit_n_match_repeated_calls() {
+        let mut batch = Population::new(1000);
+        let mut each = Population::new(1000);
+        batch.enter_n(0, 3);
+        for _ in 0..3 {
+            each.enter(0);
+        }
+        batch.enter_n(500_000, 0); // no-op, must not advance anything
+        batch.exit_n(800_000, 2);
+        each.exit(800_000);
+        each.exit(800_000);
+        assert_eq!(batch.current(), each.current());
+        assert_eq!(batch.peak(), each.peak());
+        assert_eq!(
+            batch.mean(1_000_000).to_bits(),
+            each.mean(1_000_000).to_bits()
+        );
     }
 
     #[test]

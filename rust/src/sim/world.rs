@@ -100,6 +100,15 @@ impl<'a, E, S> Ctx<'a, E, S> {
         let dst = self.self_id;
         self.at(time, dst, ev);
     }
+
+    /// Schedule an event to self at `time` rounded up to the coalescing
+    /// grid (see [`crate::sim::engine::align_up`]). Flow producers use
+    /// this so every flow in a world wakes on shared quantum instants;
+    /// with `quantum <= 1` it is exactly [`at_self`](Self::at_self).
+    pub fn at_self_aligned(&mut self, time: u64, quantum: u64, ev: E) {
+        let dst = self.self_id;
+        self.queue.at_aligned(time, quantum, (dst, ev));
+    }
 }
 
 /// The simulation world: event queue + component registry + shared state.
@@ -360,6 +369,33 @@ mod tests {
         w.run_until(10);
         let tags: Vec<&str> = w.shared.entries.iter().map(|(_, s)| s.as_str()).collect();
         assert_eq!(tags, vec!["b", "a", "b"]);
+    }
+
+    #[test]
+    fn at_self_aligned_lands_on_the_quantum_grid() {
+        struct Quantized {
+            left: u32,
+        }
+        impl Component<Msg, Log> for Quantized {
+            fn on_event(&mut self, ctx: &mut Ctx<'_, Msg, Log>, _ev: Msg) {
+                ctx.shared.entries.push((ctx.now(), "q".into()));
+                if self.left > 0 {
+                    self.left -= 1;
+                    // +70 off-grid delays must still wake on 100s.
+                    ctx.at_self_aligned(ctx.now() + 70, 100, Msg::Ping(0));
+                }
+            }
+
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        let mut w: World<Msg, Log> = World::new(Log::default());
+        let c = w.add(Box::new(Quantized { left: 3 }));
+        w.schedule(0, c, Msg::Ping(0));
+        w.run_until(u64::MAX);
+        let times: Vec<u64> = w.shared.entries.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![0, 100, 200, 300]);
     }
 
     #[test]

@@ -37,6 +37,30 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Add `n` identical observations of `x` in O(1).
+    ///
+    /// `n == 1` delegates to [`add`](Self::add) so single observations
+    /// stay bit-identical to the plain Welford path (merge and add
+    /// evaluate in different floating-point orders); `n == 0` is a no-op.
+    /// Used by the flow-aggregation fast path, where one macro-record
+    /// stands for `n` client records sharing a value.
+    pub fn add_n(&mut self, x: f64, n: u64) {
+        match n {
+            0 => {}
+            1 => self.add(x),
+            _ => {
+                let batch = Running {
+                    n,
+                    mean: x,
+                    m2: 0.0,
+                    min: x,
+                    max: x,
+                };
+                self.merge(&batch);
+            }
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -157,6 +181,24 @@ impl Histogram {
         self.counts[Self::index(value)] += 1;
         self.total += 1;
         self.running.add(value as f64);
+    }
+
+    /// Record `n` identical observations of `value` in O(1).
+    ///
+    /// `n == 1` delegates to [`record`](Self::record) (bit-identical to
+    /// the per-record path); `n == 0` is a no-op. The flow-aggregation
+    /// fast path uses this to weight one macro-record's latency by the
+    /// client records it stands for.
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        match n {
+            0 => {}
+            1 => self.record(value),
+            _ => {
+                self.counts[Self::index(value)] += n;
+                self.total += n;
+                self.running.add_n(value as f64, n);
+            }
+        }
     }
 
     pub fn count(&self) -> u64 {
@@ -283,6 +325,69 @@ mod tests {
         assert!((a.mean() - all.mean()).abs() < 1e-9);
         assert!((a.variance() - all.variance()).abs() < 1e-9);
         assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn add_n_one_is_bit_identical_to_add() {
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for x in [3.25, 7.5, 0.125, 42.0, 3.25] {
+            a.add(x);
+            b.add_n(x, 1);
+        }
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.m2.to_bits(), b.m2.to_bits());
+        assert_eq!(a.min.to_bits(), b.min.to_bits());
+        assert_eq!(a.max.to_bits(), b.max.to_bits());
+    }
+
+    #[test]
+    fn add_n_matches_repeated_add() {
+        let mut batch = Running::new();
+        let mut each = Running::new();
+        for (x, k) in [(5.0, 10u64), (2.5, 3), (9.0, 1), (4.0, 0), (7.25, 100)] {
+            batch.add_n(x, k);
+            for _ in 0..k {
+                each.add(x);
+            }
+        }
+        assert_eq!(batch.count(), each.count());
+        assert!((batch.mean() - each.mean()).abs() < 1e-9);
+        assert!((batch.variance() - each.variance()).abs() < 1e-9);
+        assert_eq!(batch.min(), each.min());
+        assert_eq!(batch.max(), each.max());
+    }
+
+    #[test]
+    fn record_n_one_is_identical_to_record() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [1u64, 17, 1000, 123_456] {
+            a.record(v);
+            b.record_n(v, 1);
+        }
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.running.mean.to_bits(), b.running.mean.to_bits());
+        assert_eq!(a.running.m2.to_bits(), b.running.m2.to_bits());
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut batch = Histogram::new();
+        let mut each = Histogram::new();
+        for (v, k) in [(50u64, 20u64), (5_000, 7), (1, 0), (900_000, 3)] {
+            batch.record_n(v, k);
+            for _ in 0..k {
+                each.record(v);
+            }
+        }
+        assert_eq!(batch.count(), each.count());
+        assert_eq!(batch.counts, each.counts);
+        assert_eq!(batch.p50(), each.p50());
+        assert_eq!(batch.p99(), each.p99());
+        assert!((batch.mean() - each.mean()).abs() < 1e-9);
     }
 
     #[test]

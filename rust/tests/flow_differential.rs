@@ -1,0 +1,231 @@
+//! Fidelity contract of the hybrid fluid/discrete scaling layer (PR 6).
+//!
+//! The flow producer (`ProducerKind::Flow`) replaces a tenant's client
+//! fleet with a few deterministic rate processes emitting macro-records
+//! on a coalescing quantum. That buys event-rate independence from the
+//! client count — and it is only admissible because of the contracts
+//! pinned here:
+//!
+//! * **convergence** — flow-mode tenant *means* (throughput, wire
+//!   bytes, broker write utilization, cache hit ratio) match the exact
+//!   per-record replay within 5% at the largest N both arms run
+//!   (latency tails are explicitly out of contract: coalescing moves
+//!   intra-quantum waits);
+//! * **degeneration** — `flow_clients = 0` is the per-record path, bit
+//!   for bit; one flow client emits singleton macro-records on the
+//!   per-record cadence;
+//! * **neutrality of the fetch cap** — the PR-6
+//!   `max.partition.fetch.bytes` knob at its uncapped default is
+//!   bit-exact to a cap that never binds, and a binding cap re-polls
+//!   its way through the same byte stream (more events, same bytes).
+
+use aitax::config::Config;
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::scale;
+use aitax::pipeline::dc::WorkloadKind;
+use aitax::pipeline::mixed::{
+    MultiTenantConfig, MultiTenantReport, MultiTenantSim, TenantDef,
+};
+use aitax::util::units::SEC;
+
+fn one_tenant(fabric: Config, horizon_us: u64, def: TenantDef) -> MultiTenantReport {
+    MultiTenantSim::new(
+        MultiTenantConfig::new(fabric, horizon_us)
+            .tenant(def)
+            .with_read_cache(scale::CACHE_PER_BROKER),
+    )
+    .run()
+}
+
+/// Model outputs (no timing) of the single tenant, compared bitwise.
+fn assert_identical(a: &MultiTenantReport, b: &MultiTenantReport, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: event counts diverged");
+    assert_eq!(a.clamped_events, b.clamped_events);
+    let (ta, tb) = (&a.tenants[0], &b.tenants[0]);
+    assert_eq!(ta.produced, tb.produced, "{what}: produced diverged");
+    assert_eq!(ta.completed, tb.completed, "{what}: completed diverged");
+    assert_eq!(ta.e2e_p99_us, tb.e2e_p99_us, "{what}: e2e p99 diverged");
+    assert_eq!(ta.wait_p99_us, tb.wait_p99_us, "{what}: wait p99 diverged");
+    assert_eq!(
+        ta.e2e_mean_us.to_bits(),
+        tb.e2e_mean_us.to_bits(),
+        "{what}: e2e mean diverged"
+    );
+    assert_eq!(
+        ta.net_tx_bytes.to_bits(),
+        tb.net_tx_bytes.to_bits(),
+        "{what}: tx bytes diverged"
+    );
+    assert_eq!(
+        ta.net_rx_bytes.to_bits(),
+        tb.net_rx_bytes.to_bits(),
+        "{what}: rx bytes diverged"
+    );
+}
+
+#[test]
+fn flow_means_converge_to_per_record_at_scale() {
+    // The acceptance bar: at the largest N where the exact replay still
+    // runs (PER_RECORD_CAP clients), the fluid tenant's means land
+    // within 5% of per-record at the same offered load.
+    let sweep = scale::run_points(
+        vec![(scale::PER_RECORD_CAP, false), (scale::PER_RECORD_CAP, true)],
+        Fidelity::Quick,
+    );
+    let (pr, fl) = sweep.pair(scale::PER_RECORD_CAP).expect("both arms");
+    assert_eq!(pr.clamped, 0, "per-record arm clamped past-time events");
+    assert_eq!(fl.clamped, 0, "flow arm clamped past-time events");
+    assert!(pr.stable && fl.stable, "both arms must be in the stable regime");
+    for (name, a, b) in [
+        ("throughput", pr.throughput_per_sec, fl.throughput_per_sec),
+        ("produced", pr.produced as f64, fl.produced as f64),
+        ("net_tx_bytes", pr.net_tx_bytes, fl.net_tx_bytes),
+        ("broker_write_util", pr.broker_write_util, fl.broker_write_util),
+        ("cache_hit_ratio", pr.cache_hit_ratio, fl.cache_hit_ratio),
+    ] {
+        let d = scale::rel_delta(a, b);
+        assert!(
+            d < 0.05,
+            "{name} diverged beyond the 5% contract: per-record {a} vs flow {b} (Δ {:.2}%)",
+            100.0 * d
+        );
+    }
+    // The whole point: the same world in a fraction of the events.
+    assert!(
+        (fl.events as f64) < 0.25 * pr.events as f64,
+        "flow mode must coalesce the event stream: {} vs {}",
+        fl.events,
+        pr.events
+    );
+}
+
+#[test]
+fn zero_flow_clients_degenerates_to_the_per_record_path() {
+    // `with_flow_clients(0)` must mean "no fluid layer" — the builder
+    // normalizes the producer fleet to one and the world that comes out
+    // is the per-record world, bit for bit.
+    let horizon = 10 * SEC;
+    let cfg = scale::edge_config(50, horizon);
+    let fabric = cfg.clone();
+
+    let flow0 = TenantDef::new("edge", WorkloadKind::Rpc, cfg.clone()).with_flow_clients(0);
+    assert_eq!(flow0.cfg.flow_clients, 0);
+    assert_eq!(flow0.cfg.deployment.producers, 1);
+    let mut per_record_cfg = cfg;
+    per_record_cfg.deployment.producers = 1;
+    let per_record = TenantDef::new("edge", WorkloadKind::Rpc, per_record_cfg);
+
+    let a = one_tenant(fabric.clone(), horizon, flow0);
+    let b = one_tenant(fabric, horizon, per_record);
+    assert_identical(&a, &b, "flow_clients=0 vs per-record");
+    assert!(a.tenants[0].completed > 0, "degenerate world must still run");
+}
+
+#[test]
+fn one_flow_client_emits_singleton_records_on_the_per_record_cadence() {
+    // A single client aggregated into a flow is the smallest population
+    // the fluid layer accepts: one rate process owning every partition,
+    // whose fractional-carry accumulator fires one singleton
+    // macro-record per period — the per-record cadence, just on the
+    // quantum grid.
+    let horizon = 20 * SEC;
+    let cfg = scale::edge_config(1, horizon);
+    let fabric = cfg.clone();
+    let r = one_tenant(
+        fabric,
+        horizon,
+        TenantDef::new("edge", WorkloadKind::Rpc, cfg).with_flow_clients(1),
+    );
+    let t = &r.tenants[0];
+    // 2 req/s × 20 s = 40 offered; allow the quantum-grid edge effects.
+    let expected = (horizon / scale::CLIENT_PERIOD_US) as i64;
+    assert!(
+        (t.produced as i64 - expected).abs() <= 2,
+        "one client must keep its cadence: produced {} vs expected {expected}",
+        t.produced
+    );
+    assert!(
+        t.completed + 3 >= t.produced,
+        "singletons must flow through: completed {} of {}",
+        t.completed,
+        t.produced
+    );
+    assert_eq!(r.clamped_events, 0);
+    // Mean wire bytes per record stay the per-record 2 kB (no bundling
+    // distortion at emit=1).
+    let per_rec = t.net_tx_bytes / t.produced.max(1) as f64;
+    assert!(
+        (per_rec - 2_000.0).abs() < 100.0,
+        "singleton macro-records must carry one record's bytes: {per_rec}"
+    );
+}
+
+#[test]
+fn default_fetch_cap_is_bit_exact_to_a_cap_that_never_binds() {
+    // The PR-6 `max.partition.fetch.bytes` plumbing must be invisible
+    // until it binds: the uncapped default (usize::MAX) and an explicit
+    // huge cap produce bitwise-identical worlds.
+    let horizon = 10 * SEC;
+    let cfg = scale::edge_config(1_000, horizon);
+    assert_eq!(cfg.tuning.max_partition_fetch_bytes, usize::MAX);
+    let mut capped_cfg = cfg.clone();
+    capped_cfg.tuning.max_partition_fetch_bytes = usize::MAX / 2;
+
+    let a = one_tenant(
+        cfg.clone(),
+        horizon,
+        TenantDef::new("edge", WorkloadKind::Rpc, cfg),
+    );
+    let b = one_tenant(
+        capped_cfg.clone(),
+        horizon,
+        TenantDef::new("edge", WorkloadKind::Rpc, capped_cfg),
+    );
+    assert_identical(&a, &b, "default vs never-binding cap");
+}
+
+#[test]
+fn binding_fetch_cap_drains_a_backlog_through_re_polls() {
+    // Consumers start 2 s behind, so each partition resumes onto a
+    // ~500-record backlog. Uncapped, the drain is a handful of giant
+    // fetches; capped at ~2 records per poll it must re-poll its way
+    // through — strictly more events — while moving the same bytes and
+    // completing the same work by the horizon.
+    let horizon = 20 * SEC;
+    let cfg = scale::edge_config(1_000, horizon);
+    let fabric = cfg.clone();
+    let lagged =
+        |c: Config| TenantDef::new("edge", WorkloadKind::Rpc, c).with_consumer_lag(2 * SEC);
+
+    let uncapped = one_tenant(fabric.clone(), horizon, lagged(cfg.clone()));
+    let mut capped_cfg = cfg;
+    capped_cfg.tuning.max_partition_fetch_bytes = 4_500;
+    let capped = one_tenant(fabric, horizon, lagged(capped_cfg));
+
+    let (tu, tc) = (&uncapped.tenants[0], &capped.tenants[0]);
+    assert!(tu.completed > 0 && tc.completed > 0);
+    assert!(
+        capped.events > uncapped.events,
+        "a binding cap must add re-poll round trips: {} vs {}",
+        capped.events,
+        uncapped.events
+    );
+    let d_completed = scale::rel_delta(tu.completed as f64, tc.completed as f64);
+    assert!(
+        d_completed < 0.02,
+        "the cap may reshape fetches, not lose records: {} vs {} (Δ {:.2}%)",
+        tu.completed,
+        tc.completed,
+        100.0 * d_completed
+    );
+    let d_rx = scale::rel_delta(tu.net_rx_bytes, tc.net_rx_bytes);
+    assert!(
+        d_rx < 0.02,
+        "fetched bytes must match across cap settings: {} vs {} (Δ {:.2}%)",
+        tu.net_rx_bytes,
+        tc.net_rx_bytes,
+        100.0 * d_rx
+    );
+    assert_eq!(uncapped.clamped_events, 0);
+    assert_eq!(capped.clamped_events, 0);
+}

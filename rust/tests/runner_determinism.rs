@@ -31,3 +31,34 @@ fn qos_experiment_json_is_identical_at_jobs_1_and_8() {
     let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
     assert_eq!(points.len(), 2, "0.5 share runs QoS off + on");
 }
+
+#[test]
+fn scale_experiment_model_json_is_identical_at_jobs_1_and_8() {
+    // The scale sweep measures wall clock per point, which can never be
+    // deterministic — so the contract is pinned on the model-output form
+    // (`to_json_model`), which strips timing. The flow path must be
+    // jobs-invariant by construction: its rate processes draw no RNG.
+    use aitax::experiments::scale;
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = scale::run_points(
+            vec![(1_000, false), (1_000, true), (10_000, true)],
+            Fidelity::Quick,
+        );
+        runner::set_jobs_override(None);
+        scale::to_json_model(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "scale model JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 3);
+    assert!(
+        points.iter().all(|p| p.get("wall_ms").is_none()),
+        "model form must not leak host timing"
+    );
+}
