@@ -219,6 +219,13 @@ pub struct Config {
     /// Number of flow rate processes per tenant; 0 (the default) =
     /// auto, `min(partitions, 32)` (capped at the client count).
     pub flow_processes: usize,
+    /// Optional `(start_us, end_us)` observation window: end-to-end
+    /// latencies of items *created* inside it are additionally recorded
+    /// in a windowed histogram (`TenantSummary::e2e_p99_window_us`), so
+    /// a failover experiment can measure a tenant's p99 *through* the
+    /// failure window instead of diluting it over the whole run.
+    /// `None` (the default) leaves the windowed histogram empty.
+    pub observe_window_us: Option<(u64, u64)>,
 }
 
 impl Default for Config {
@@ -238,6 +245,7 @@ impl Default for Config {
             flow_clients: 0,
             flow_quantum_us: 25_000,
             flow_processes: 0,
+            observe_window_us: None,
         }
     }
 }

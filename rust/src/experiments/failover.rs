@@ -1,0 +1,381 @@
+//! Failover: the broker-crash sweep (`aitax experiment failover`).
+//!
+//! Every figure in the paper is measured on a healthy fabric; the AI
+//! tax has a second, sharper edge the moment membership changes. This
+//! sweep quantifies it on the failover scenario
+//! ([`crate::pipeline::failover`]): facerec(4×) + train-ingest + rpc on
+//! the 3-broker fabric, one broker killed mid-run and restarted a fixed
+//! downtime later. The kill re-elects leadership and pauses the
+//! affected consumers; the restart replays the victim's missed bytes as
+//! a maximally-lagged consumer — cold reads off the surviving spindles,
+//! classed writes into the recovering one — until it rejoins the ISR.
+//!
+//! Three axes:
+//!
+//! * **kill time** — when in the run the broker dies (as a fraction of
+//!   the horizon: how much log the world has built up by then);
+//! * **storage arm** — the recovery stream on the seed FIFO spindle vs
+//!   carried through the per-class GPS scheduler at the tenant weights
+//!   ([`MultiTenantConfig::with_storage_qos`]);
+//! * **recovery bandwidth** — how hard catch-up reads the missed bytes
+//!   back. It must outrun the ~640 MB/s the world keeps writing while
+//!   the victim is out of sync, so the sweep brackets the spindle spec
+//!   from above.
+//!
+//! Reported per point: recovery duration (restart → ISR rejoin), the
+//! rpc canary's e2e p99 over the re-replication window
+//! ([`FailoverSpec::observe_window`]), and the share of device-read
+//! bytes consumed by re-replication. The headline is the same shape as
+//! the read-path sweep's, now for repair traffic: unclassed, the
+//! catch-up burst blows the canary's tail through the SLO; classed, the
+//! replay drains at the bulk weights and the canary holds.
+//!
+//! `run` returns structured results; [`print`] renders the table plus a
+//! machine-readable JSON report (written to
+//! `artifacts/failover_report.json` when the artifacts directory is
+//! present).
+//!
+//! [`MultiTenantConfig::with_storage_qos`]: crate::pipeline::mixed::MultiTenantConfig::with_storage_qos
+
+use crate::config::Config;
+use crate::experiments::common::Fidelity;
+use crate::experiments::runner;
+use crate::pipeline::catchup;
+use crate::pipeline::failover::{self, FailoverSpec, OBSERVE_TAIL_US, VICTIM};
+use crate::pipeline::mixed::MultiTenantReport;
+use crate::util::json::Json;
+use crate::util::units::{fmt_us, SEC};
+
+/// Kill instants as fractions of the horizon.
+pub const KILL_FRACS: [f64; 2] = [0.3, 0.5];
+/// Recovery bandwidths (GB/s). Both sit above the scenario's ~640 MB/s
+/// of ongoing replication (catch-up converges) and bracket the
+/// 1.1 GB/s drive spec.
+pub const RECOVERY_GBPS: [f64; 2] = [0.8, 1.6];
+/// How long the victim stays down before rejoining.
+pub const DOWNTIME_US: u64 = SEC;
+/// Per-broker page-cache capacity: ~3 s of residency at this world's
+/// write rate, so the victim's missed window has aged out of the
+/// survivors' caches and catch-up reads go to the device.
+pub const CACHE_BYTES: f64 = 2e9;
+
+/// One sweep point: kill-time × storage arm × recovery bandwidth.
+pub struct FailoverPoint {
+    pub kill_frac: f64,
+    pub classed: bool,
+    pub recovery_gbps: f64,
+    pub kill_at_us: u64,
+    pub restart_at_us: u64,
+    pub report: MultiTenantReport,
+}
+
+impl FailoverPoint {
+    /// Restart → ISR rejoin (µs); `None` if recovery never finished
+    /// inside the horizon.
+    pub fn recovery_duration_us(&self) -> Option<u64> {
+        let f = self.report.fault.as_ref()?;
+        Some(f.recovery_done_us?.saturating_sub(self.restart_at_us))
+    }
+
+    /// The rpc canary's e2e p99 over the re-replication window (µs).
+    pub fn rpc_window_p99_us(&self) -> u64 {
+        self.report
+            .tenant("rpc")
+            .map(|t| t.e2e_p99_window_us)
+            .unwrap_or(0)
+    }
+}
+
+/// The full sweep plus the RPC tenant's SLO for verdicts.
+pub struct FailoverSweep {
+    pub slo_p99_us: u64,
+    pub horizon_us: u64,
+    pub points: Vec<FailoverPoint>,
+}
+
+impl FailoverSweep {
+    pub fn point(
+        &self,
+        kill_frac: f64,
+        classed: bool,
+        recovery_gbps: f64,
+    ) -> Option<&FailoverPoint> {
+        self.points.iter().find(|p| {
+            p.kill_frac == kill_frac
+                && p.classed == classed
+                && p.recovery_gbps == recovery_gbps
+        })
+    }
+}
+
+/// Run an explicit set of `(kill_frac, classed, recovery_gbps)` points,
+/// fanned out over the deterministic parallel runner.
+pub fn run_points(points: Vec<(f64, bool, f64)>, fidelity: Fidelity) -> FailoverSweep {
+    let slo_p99_us = Config::default().calibration.rpc.slo_p99_us;
+    let horizon = fidelity.horizon_us();
+    let points = runner::map(points, move |(kill_frac, classed, recovery_gbps)| {
+        let kill_at_us = (kill_frac * horizon as f64) as u64;
+        let restart_at_us = kill_at_us + DOWNTIME_US;
+        let spec = FailoverSpec {
+            kill_at_us,
+            restart_at_us,
+            classed,
+            recovery_bytes_per_sec: recovery_gbps * 1e9,
+            cache_bytes: CACHE_BYTES,
+        };
+        FailoverPoint {
+            kill_frac,
+            classed,
+            recovery_gbps,
+            kill_at_us,
+            restart_at_us,
+            report: failover::run(spec, horizon),
+        }
+    });
+    FailoverSweep { slo_p99_us, horizon_us: horizon, points }
+}
+
+/// Run the sweep over the kill-time × arm × bandwidth grid.
+pub fn run_grid(
+    kill_fracs: &[f64],
+    recovery_gbps: &[f64],
+    fidelity: Fidelity,
+) -> FailoverSweep {
+    let grid: Vec<(f64, bool, f64)> = kill_fracs
+        .iter()
+        .flat_map(|&frac| {
+            recovery_gbps
+                .iter()
+                .flat_map(move |&gbps| [(frac, false, gbps), (frac, true, gbps)])
+        })
+        .collect();
+    run_points(grid, fidelity)
+}
+
+pub fn run(fidelity: Fidelity) -> FailoverSweep {
+    run_grid(&KILL_FRACS, &RECOVERY_GBPS, fidelity)
+}
+
+/// The machine-readable report.
+pub fn to_json(sweep: &FailoverSweep) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::Str("failover".into())),
+        ("slo_p99_us", Json::Num(sweep.slo_p99_us as f64)),
+        ("horizon_us", Json::Num(sweep.horizon_us as f64)),
+        ("victim_broker", Json::Num(VICTIM as f64)),
+        ("downtime_us", Json::Num(DOWNTIME_US as f64)),
+        ("observe_tail_us", Json::Num(OBSERVE_TAIL_US as f64)),
+        ("accel_facerec", Json::Num(catchup::ACCEL_FACEREC)),
+        (
+            "storage_weights",
+            Json::obj(vec![
+                ("facerec", Json::Num(catchup::FACEREC_WEIGHT)),
+                ("train-ingest", Json::Num(catchup::TRAIN_WEIGHT)),
+                ("rpc", Json::Num(catchup::RPC_WEIGHT)),
+            ]),
+        ),
+        (
+            "points",
+            Json::arr(sweep.points.iter().map(point_json).collect()),
+        ),
+    ])
+}
+
+fn point_json(p: &FailoverPoint) -> Json {
+    let f = p.report.fault.as_ref();
+    Json::obj(vec![
+        ("kill_frac", Json::Num(p.kill_frac)),
+        ("classed", Json::Bool(p.classed)),
+        ("recovery_gbps", Json::Num(p.recovery_gbps)),
+        ("kill_at_us", Json::Num(p.kill_at_us as f64)),
+        ("restart_at_us", Json::Num(p.restart_at_us as f64)),
+        (
+            "recovery_duration_us",
+            match p.recovery_duration_us() {
+                Some(us) => Json::Num(us as f64),
+                None => Json::Null,
+            },
+        ),
+        ("rpc_window_p99_us", Json::Num(p.rpc_window_p99_us() as f64)),
+        (
+            "missed_bytes",
+            Json::Num(f.map(|f| f.missed_bytes).unwrap_or(0.0)),
+        ),
+        (
+            "rereplicated_bytes",
+            Json::Num(f.map(|f| f.rereplicated_bytes).unwrap_or(0.0)),
+        ),
+        (
+            "rereplication_read_share",
+            Json::Num(f.map(|f| f.rereplication_read_share).unwrap_or(0.0)),
+        ),
+        (
+            "records_lost",
+            Json::Num(f.map(|f| f.records_lost).unwrap_or(0) as f64),
+        ),
+        (
+            "records_rejected",
+            Json::Num(f.map(|f| f.records_rejected).unwrap_or(0) as f64),
+        ),
+        (
+            "min_isr_violations",
+            Json::Num(f.map(|f| f.min_isr_violations).unwrap_or(0) as f64),
+        ),
+        (
+            "backlog_bytes",
+            Json::Num(f.map(|f| f.backlog_bytes).unwrap_or(0.0)),
+        ),
+        ("device_read_share", Json::Num(p.report.device_read_share)),
+        ("cache_hit_ratio", Json::Num(p.report.cache_hit_ratio)),
+        (
+            "tenants",
+            Json::arr(
+                p.report
+                    .tenants
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("name", Json::Str(t.name.clone())),
+                            ("completed", Json::Num(t.completed as f64)),
+                            ("e2e_p99_us", Json::Num(t.e2e_p99_us as f64)),
+                            (
+                                "e2e_p99_window_us",
+                                Json::Num(t.e2e_p99_window_us as f64),
+                            ),
+                            ("stable", Json::Bool(t.stable)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the JSON report next to the AOT artifacts when that directory
+/// exists (same lookup as the other sweep drivers).
+fn write_report(json: &Json) -> Option<std::path::PathBuf> {
+    let dir = crate::runtime::Manifest::default_dir();
+    if !dir.is_dir() {
+        return None;
+    }
+    let path = dir.join("failover_report.json");
+    std::fs::write(&path, json.pretty()).ok()?;
+    Some(path)
+}
+
+pub fn print(sweep: &FailoverSweep) {
+    println!(
+        "\nFailover — facerec({}x) + train-ingest + rpc; broker {} killed at \
+         frac×horizon, back {} later, catch-up at N GB/s, {{FIFO, classed}} storage",
+        catchup::ACCEL_FACEREC,
+        VICTIM,
+        fmt_us(DOWNTIME_US),
+    );
+    println!(
+        "  rpc SLO: e2e p99 <= {} over the re-replication window \
+         (restart, +{})",
+        fmt_us(sweep.slo_p99_us),
+        fmt_us(OBSERVE_TAIL_US),
+    );
+    println!(
+        "  {:>5} {:>7} {:>6} {:>10} {:>12} {:>9} {:>9} {:>8} {:>6}",
+        "kill", "classed", "GB/s", "recovery", "rpc p99(w)", "missed", "replayed", "rerep%", "lost"
+    );
+    for p in &sweep.points {
+        let f = p.report.fault.as_ref();
+        let rpc_p99 = p.rpc_window_p99_us();
+        println!(
+            "  {:>4.1}h {:>7} {:>6.1} {:>10} {:>10}{} {:>8}M {:>8}M {:>7.1}% {:>6}",
+            p.kill_frac,
+            if p.classed { "yes" } else { "no" },
+            p.recovery_gbps,
+            match p.recovery_duration_us() {
+                Some(us) => fmt_us(us),
+                None => "never".into(),
+            },
+            fmt_us(rpc_p99),
+            if rpc_p99 <= sweep.slo_p99_us { " " } else { "!" },
+            f.map(|f| (f.missed_bytes / 1e6) as u64).unwrap_or(0),
+            f.map(|f| (f.rereplicated_bytes / 1e6) as u64).unwrap_or(0),
+            100.0 * f.map(|f| f.rereplication_read_share).unwrap_or(0.0),
+            f.map(|f| f.records_lost).unwrap_or(0),
+        );
+    }
+    println!(
+        "  takeaway: repair traffic is the read-path tax at its worst — on the \
+         FIFO spindle the catch-up burst rides ahead of the canary's 2 kB \
+         commits; classed, the replay drains at the bulk weights and the \
+         canary holds its SLO while the fabric heals"
+    );
+    let json = to_json(sweep);
+    match write_report(&json) {
+        Some(path) => println!("  json report written to {}", path.display()),
+        None => println!("  json report:\n{}", json.pretty()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The SLO acceptance pin — classed storage holds the rpc canary
+    // through recovery while the FIFO arm blows the SLO — lives with
+    // the rest of the failover differential suite
+    // (`tests/failover_differential.rs`), on the same full-size points
+    // this sweep runs.
+
+    #[test]
+    fn recovery_duration_shrinks_with_bandwidth() {
+        let sweep = run_points(
+            vec![(0.3, true, 0.8), (0.3, true, 1.6)],
+            Fidelity::Quick,
+        );
+        let slow = sweep.point(0.3, true, 0.8).unwrap();
+        let fast = sweep.point(0.3, true, 1.6).unwrap();
+        let (ds, df) = (
+            slow.recovery_duration_us().expect("slow arm finishes"),
+            fast.recovery_duration_us().expect("fast arm finishes"),
+        );
+        assert!(
+            df < ds,
+            "2x catch-up bandwidth must shorten the outage: {df} vs {ds}"
+        );
+        // And the repair consumed a visible share of the device reads.
+        for p in [slow, fast] {
+            let f = p.report.fault.as_ref().unwrap();
+            assert!(f.rereplicated_bytes > 0.0);
+            assert!(f.rereplication_read_share > 0.0);
+            assert!(p.report.device_read_share > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_report_carries_every_point_and_tenant() {
+        let sweep = run_points(vec![(0.3, true, 1.6)], Fidelity::Quick);
+        let j = to_json(&sweep);
+        let points = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(points.len(), 1);
+        for p in points {
+            let tenants = p.get("tenants").and_then(|t| t.as_arr()).unwrap();
+            assert_eq!(tenants.len(), 3);
+            assert!(p.get("recovery_duration_us").is_some());
+            assert!(p
+                .get("rpc_window_p99_us")
+                .and_then(|v| v.as_f64())
+                .is_some());
+            assert!(p
+                .get("rereplication_read_share")
+                .and_then(|v| v.as_f64())
+                .is_some());
+        }
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            reparsed.get("experiment").and_then(|e| e.as_str()),
+            Some("failover")
+        );
+        assert_eq!(
+            reparsed.get("victim_broker").and_then(|v| v.as_f64()),
+            Some(VICTIM as f64)
+        );
+    }
+}

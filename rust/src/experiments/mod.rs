@@ -6,9 +6,12 @@
 //! queue against per-class GPS write scheduling; [`read_path`] — the
 //! lagging-consumer sweep that turns Fig 11's "reads are free"
 //! assumption into a measured threshold: catch-up lag × page-cache size
-//! × {unclassed, classed} device reads; [`scale`] — the million-client
-//! sweep pitting per-record replay against the hybrid fluid/discrete
-//! flow producers, cost and convergence side by side).
+//! × {unclassed, classed} device reads; [`failover`] — the broker-crash
+//! sweep: kill time × storage arm × recovery bandwidth, measuring
+//! recovery duration and the rpc tail through the re-replication
+//! window; [`scale`] — the million-client sweep pitting per-record
+//! replay against the hybrid fluid/discrete flow producers, cost and
+//! convergence side by side).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -21,6 +24,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod failover;
 pub mod fig05;
 pub mod fig06;
 pub mod fig07;

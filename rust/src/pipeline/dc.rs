@@ -59,7 +59,7 @@ use crate::config::calibration::{ObjDetCosts, RpcCosts, TrainCosts};
 use crate::config::{AccelProtocol, Config, KafkaTuning};
 use crate::config::hardware::NvmeSpec;
 use crate::metrics::bandwidth::{BandwidthMeter, Class};
-use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut, WIRE_US};
+use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut, FaultEvent, FaultPlan, WIRE_US};
 use crate::pipeline::stage::StageModel;
 use crate::pipeline::video::BurstSchedule;
 use crate::sim::queue::Population;
@@ -144,6 +144,9 @@ pub enum DcEvent {
     Fabric(FabricEv),
     /// Consumer `c` (tenant-local index) polls its partitions.
     Poll(u32),
+    /// World-level fault `i` of the installed [`FaultPlan`] fires
+    /// (routed to [`FabricHub`]; never scheduled in an immortal world).
+    Fault(u32),
 }
 
 /// One topic partition: leader broker, pinned consumer, committed queue.
@@ -224,6 +227,11 @@ pub struct TenantMetrics {
     /// Consumer-side service (identify / R-CNN detect).
     pub hist_service: Histogram,
     pub hist_e2e: Histogram,
+    /// End-to-end latency of items created inside the tenant's
+    /// observation window ([`Config::observe_window_us`]); empty when no
+    /// window is set. Lets a failover run report the p99 *through* the
+    /// failure window.
+    pub hist_e2e_window: Histogram,
     /// Items in system (Fig 7).
     pub population: Population,
     /// Dense per-second e2e latency aggregation, bucketed by *arrival*
@@ -257,6 +265,7 @@ impl TenantMetrics {
             hist_wait: Histogram::new(),
             hist_service: Histogram::new(),
             hist_e2e: Histogram::new(),
+            hist_e2e_window: Histogram::new(),
             population: Population::new(POPULATION_SAMPLE_US),
             lat_sum: vec![0; n_secs],
             lat_n: vec![0; n_secs],
@@ -315,6 +324,9 @@ pub struct TenantState {
     pub produce_charge_factor: f64,
     /// Fetch byte-rate quota (QoS); `None` = uncapped.
     pub fetch_bucket: Option<TokenBucket>,
+    /// `(start_us, end_us)` of the windowed-latency observation
+    /// ([`Config::observe_window_us`]); `None` = no windowed histogram.
+    pub observe_window: Option<(u64, u64)>,
 }
 
 /// The shared substrate every component can reach through [`Ctx`].
@@ -371,27 +383,92 @@ pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
 // FabricHub
 // ---------------------------------------------------------------------------
 
+/// Stop-the-world pause a consumer group takes when partition leadership
+/// moves (Kafka's eager rebalance, abbreviated to one constant): every
+/// consumer owning a moved partition defers its polls this long.
+pub const REBALANCE_PAUSE_US: u64 = 500_000;
+
 /// The broker fabric wrapped as a component: hop events land here, the
 /// device state itself lives in [`DcState`] so producers (send) and
 /// consumers (fetch) can drive it synchronously at the same instant.
-pub struct FabricHub;
+/// Also the injection point for world-level faults: the installed
+/// [`FaultPlan`]'s events are scheduled as [`DcEvent::Fault`] at build
+/// time and applied here (kill / restart / partition + the dc-side
+/// leader re-election and rebalance pauses).
+pub struct FabricHub {
+    /// The fault schedule, indexed by [`DcEvent::Fault`] (empty in an
+    /// immortal world).
+    faults: Vec<FaultEvent>,
+}
 
 impl Component<DcEvent, DcState> for FabricHub {
     fn on_event(&mut self, ctx: &mut Ctx<'_, DcEvent, DcState>, ev: DcEvent) {
-        let DcEvent::Fabric(fev) = ev else {
-            debug_assert!(false, "non-fabric event routed to FabricHub");
-            return;
-        };
         let now = ctx.now();
-        {
-            let s = &mut *ctx.shared;
-            s.fabric.handle(now, fev, &mut s.meter, &mut s.fabric_out);
+        match ev {
+            DcEvent::Fabric(fev) => {
+                {
+                    let s = &mut *ctx.shared;
+                    s.fabric.handle(now, fev, &mut s.meter, &mut s.fabric_out);
+                }
+                drain_fabric(ctx);
+            }
+            DcEvent::Fault(i) => {
+                let fault = self.faults[i as usize];
+                match fault {
+                    FaultEvent::Kill { broker, .. } => {
+                        {
+                            let s = &mut *ctx.shared;
+                            s.fabric.kill_broker(now, broker, &mut s.fabric_out);
+                        }
+                        reassign_leaders(ctx, broker);
+                    }
+                    FaultEvent::Restart { broker, .. } => {
+                        let s = &mut *ctx.shared;
+                        s.fabric.restart_broker(now, broker, &mut s.fabric_out);
+                    }
+                    FaultEvent::Partition { a, b, duration_us, .. } => {
+                        let s = &mut *ctx.shared;
+                        s.fabric.partition_links(now, a, b, duration_us, &mut s.fabric_out);
+                    }
+                }
+                drain_fabric(ctx);
+            }
+            _ => debug_assert!(false, "unexpected event routed to FabricHub"),
         }
-        drain_fabric(ctx);
     }
 
     fn as_any(&self) -> &dyn std::any::Any {
         self
+    }
+}
+
+/// Re-elect every partition led by the dead `broker` to the next alive
+/// broker in ring order, and pause the consumers owning the moved
+/// partitions for the rebalance window ([`REBALANCE_PAUSE_US`]): their
+/// gates' `busy_until` defers any poll landing inside it. If no broker
+/// is alive the partition keeps its dead leader and new produces are
+/// rejected at admission until a restart.
+fn reassign_leaders(ctx: &mut Ctx<'_, DcEvent, DcState>, broker: u32) {
+    let now = ctx.now();
+    let s = &mut *ctx.shared;
+    let n = s.fabric.broker_count() as u32;
+    for pi in 0..s.partitions.len() {
+        if s.partitions[pi].leader != broker {
+            continue;
+        }
+        for r in 1..n {
+            let cand = (broker + r) % n;
+            if s.fabric.broker_alive(cand) {
+                s.partitions[pi].leader = cand;
+                break;
+            }
+        }
+        let (tenant, consumer) = {
+            let part = &s.partitions[pi];
+            (part.tenant as usize, part.consumer as usize)
+        };
+        let gate = &mut s.tenants[tenant].gates[consumer];
+        gate.busy_until = gate.busy_until.max(now + REBALANCE_PAUSE_US);
     }
 }
 
@@ -769,8 +846,7 @@ impl ProducerClient {
             let s = &mut *ctx.shared;
             let token = s.items.alloc(item);
             let leader = s.partitions[partition as usize].leader;
-            s.tenants[t].metrics.net_tx_bytes += bytes;
-            s.fabric.send_grouped_classed(
+            let sent = s.fabric.send_grouped_classed(
                 now,
                 partition,
                 leader,
@@ -782,6 +858,20 @@ impl ProducerClient {
                 &mut self.units[pid].nic,
                 &mut s.fabric_out,
             );
+            if sent {
+                s.tenants[t].metrics.net_tx_bytes += bytes;
+            } else {
+                // Fault-mode admission rejection (dead leader / ISR below
+                // quorum): no commit will ever arrive for this token, so
+                // the record leaves the system here — free the token and
+                // balance the population the produce step entered.
+                s.items.release(token);
+                let horizon = s.horizon_us;
+                s.tenants[t]
+                    .metrics
+                    .population
+                    .exit_n(now.min(horizon), item.count as i64);
+            }
         }
         drain_fabric(ctx);
     }
@@ -1056,6 +1146,11 @@ impl ConsumerPoller {
                 }
                 let e2e = busy - it.created_us;
                 ts.metrics.hist_e2e.record_n(e2e.max(1), k);
+                if let Some((ws, we)) = ts.observe_window {
+                    if it.created_us >= ws && it.created_us <= we {
+                        ts.metrics.hist_e2e_window.record_n(e2e.max(1), k);
+                    }
+                }
                 let sec = (it.created_us / 1_000_000) as usize;
                 if sec < ts.metrics.lat_sum.len() {
                     ts.metrics.lat_sum[sec] += e2e * k;
@@ -1106,6 +1201,12 @@ pub struct FabricSpec {
     /// Per-broker page-cache capacity for the measured read path;
     /// `None` (the default) keeps the seed's hardcoded cache hits.
     pub read_cache_bytes: Option<f64>,
+    /// World-level fault schedule + membership policy; `None` (the
+    /// default) is the immortal fabric bit for bit. `Some` installs the
+    /// fault machinery even when the event list is empty — the
+    /// installed-but-inert case `tests/failover_differential.rs` pins
+    /// bit-exact against `None`.
+    pub faults: Option<FaultPlan>,
 }
 
 impl FabricSpec {
@@ -1125,6 +1226,7 @@ impl FabricSpec {
             net_bw: cfg.node.net_bw,
             tuning: cfg.tuning,
             read_cache_bytes: None,
+            faults: None,
         }
     }
 
@@ -1132,6 +1234,13 @@ impl FabricSpec {
     /// `bytes` (see [`Fabric::enable_read_path`]).
     pub fn with_read_cache(mut self, bytes: f64) -> FabricSpec {
         self.read_cache_bytes = Some(bytes);
+        self
+    }
+
+    /// Install a [`FaultPlan`] (see [`Fabric::enable_faults`]); its
+    /// events are scheduled into the world at build time.
+    pub fn with_faults(mut self, plan: FaultPlan) -> FabricSpec {
+        self.faults = Some(plan);
         self
     }
 
@@ -1147,6 +1256,9 @@ impl FabricSpec {
         );
         if let Some(bytes) = self.read_cache_bytes {
             fabric.enable_read_path(bytes);
+        }
+        if let Some(plan) = &self.faults {
+            fabric.enable_faults(plan.min_isr, plan.recovery_bytes_per_sec);
         }
         fabric
     }
@@ -1265,6 +1377,7 @@ pub fn build_with_qos(
                 1.0
             },
             fetch_bucket: quota.fetch_bucket(),
+            observe_window: spec.cfg.observe_window_us,
         });
     }
 
@@ -1411,8 +1524,16 @@ pub fn build_with_qos(
         }
     }
 
-    let fabric_comp = world.add(Box::new(FabricHub));
+    let fault_events = fabric
+        .faults
+        .as_ref()
+        .map(|plan| plan.events.clone())
+        .unwrap_or_default();
+    let fabric_comp = world.add(Box::new(FabricHub { faults: fault_events.clone() }));
     world.shared.fabric_comp = fabric_comp;
+    for (i, ev) in fault_events.iter().enumerate() {
+        world.schedule(ev.at_us(), fabric_comp, DcEvent::Fault(i as u32));
+    }
     world
 }
 
@@ -1560,6 +1681,10 @@ pub struct TenantSummary {
     pub wait_p99_us: u64,
     pub e2e_mean_us: f64,
     pub e2e_p99_us: u64,
+    /// End-to-end p99 over items created inside the tenant's
+    /// observation window ([`Config::observe_window_us`]); 0 when no
+    /// window is configured (an empty histogram's p99).
+    pub e2e_p99_window_us: u64,
     pub stable: bool,
     /// Producer→broker bytes this tenant put on the wire (per-tenant
     /// NIC meter — the shared [`BandwidthMeter`] only has class totals).
@@ -1597,6 +1722,7 @@ pub fn summary_for_tenant(
         wait_p99_us: m.hist_wait.p99(),
         e2e_mean_us: m.hist_e2e.mean(),
         e2e_p99_us: m.hist_e2e.p99(),
+        e2e_p99_window_us: m.hist_e2e_window.p99(),
         stable: m.population.verdict(elapsed).stable,
         net_tx_bytes: m.net_tx_bytes,
         net_rx_bytes: m.net_rx_bytes,
@@ -1926,5 +2052,118 @@ mod tests {
                 (i as u32) >= ts.part_base && (i as u32) < ts.part_base + ts.part_count
             );
         }
+    }
+
+    // In-tree ports of the Python property simulations that vetted the
+    // PR 6 flow arithmetic (previously living outside the repo; see
+    // ROADMAP "toolchain debt"). They mirror the exact expressions of
+    // the production paths above so tier-1 re-checks them every run.
+
+    #[test]
+    fn flow_carry_conservation_property() {
+        // Mirror of the ProducerKind::Flow rate integration: over any
+        // wake pattern, emitted + carry equals the exact offered total
+        // (no drift), and the carry is always a proper fraction.
+        crate::util::prop::check(200, |rng| {
+            let clients = 1 + rng.below(1_000_000);
+            let records_per_tick = 1 + rng.below(8);
+            let tick_us = 1_000 + rng.below(100_000);
+            let mut carry = 0.0f64;
+            let mut last_us = 0u64;
+            let mut emitted = 0u64;
+            let mut now = 0u64;
+            for _ in 0..300 {
+                now += 1 + rng.below(50_000);
+                let elapsed = now - last_us;
+                last_us = now;
+                let offered = clients as f64 * records_per_tick as f64 * elapsed as f64
+                    / tick_us as f64
+                    + carry;
+                let emit = offered.floor() as u64;
+                carry = offered - emit as f64;
+                emitted += emit;
+                if !(0.0..1.0).contains(&carry) {
+                    return Err(format!("carry out of [0,1): {carry}"));
+                }
+            }
+            let exact = clients as f64 * records_per_tick as f64 * now as f64 / tick_us as f64;
+            let total = emitted as f64 + carry;
+            // f64 accumulation tolerance: 300 additions of values up to
+            // ~1e10 records; relative error stays well under 1e-9.
+            if (total - exact).abs() > 1.0 + exact * 1e-9 {
+                return Err(format!("drift: emitted+carry {total} vs exact {exact}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn capped_drain_conservation_property() {
+        // Mirror of the per-partition fetch cap in ConsumerPoller::poll:
+        // repeatedly draining a queue under max_partition_fetch_bytes
+        // takes every byte exactly once (conservation), each poll's take
+        // respects the cap except for the single-oversized-record escape
+        // hatch, and the drain terminates.
+        crate::util::prop::check(200, |rng| {
+            let cap = 1_000.0 + rng.below(50_000) as f64;
+            let mut queue: VecDeque<f64> = (0..1 + rng.below(200))
+                .map(|_| 1.0 + rng.below(20_000) as f64)
+                .collect();
+            let total: f64 = queue.iter().sum();
+            let largest = queue.iter().cloned().fold(0.0, f64::max);
+            let mut taken = 0.0f64;
+            let mut polls = 0;
+            while !queue.is_empty() {
+                polls += 1;
+                if polls > 100_000 {
+                    return Err("drain did not terminate".into());
+                }
+                let mut part_bytes = 0.0f64;
+                while let Some(&it_bytes) = queue.front() {
+                    if part_bytes > 0.0 && part_bytes + it_bytes > cap {
+                        break;
+                    }
+                    part_bytes += it_bytes;
+                    queue.pop_front();
+                }
+                if part_bytes > cap.max(largest) {
+                    return Err(format!("poll took {part_bytes} > cap {cap}"));
+                }
+                if part_bytes == 0.0 {
+                    return Err("livelock: poll took nothing".into());
+                }
+                taken += part_bytes;
+            }
+            if (taken - total).abs() > 1e-6 * total.max(1.0) {
+                return Err(format!("conservation: took {taken} of {total}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fault_plan_schedules_events_and_reassigns_leaders() {
+        // A kill at t=1s must re-elect the dead broker's partition
+        // leaders to alive brokers and pause the affected consumers.
+        let cfg = tiny_facerec();
+        let spec = FabricSpec::from_config(&cfg)
+            .with_faults(FaultPlan::new().kill_broker(1_000_000, 0));
+        let mut world = build(
+            &[TenantSpec { kind: WorkloadKind::FaceRec, cfg: &cfg }],
+            &spec,
+            cfg.duration_us,
+        );
+        assert!(world.shared.fabric.faults_enabled());
+        world.run_until(cfg.duration_us);
+        assert!(!world.shared.fabric.broker_alive(0));
+        for p in &world.shared.partitions {
+            assert_ne!(p.leader, 0, "partition still led by the dead broker");
+            assert!(world.shared.fabric.broker_alive(p.leader));
+        }
+        // The world kept moving records after the failover.
+        let m = &world.shared.tenants[0].metrics;
+        assert!(m.completed > 0);
+        let s = world.shared.fabric.fault_stats().unwrap();
+        assert_eq!(s.min_isr_violations, 0);
     }
 }

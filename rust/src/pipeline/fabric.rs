@@ -73,7 +73,15 @@ pub enum FabricEv {
     LeaderStored { fid: u32 },
     FollowerArrive { fid: u32, broker: u32 },
     FollowerCpuDone { fid: u32, broker: u32 },
-    ReplicaAck { fid: u32 },
+    /// Replication ack arriving back at the leader. `broker` identifies
+    /// the acking follower so the fault layer can match it against the
+    /// record's pending-ack mask; without faults it is ignored.
+    ReplicaAck { fid: u32, broker: u32 },
+    /// Re-replication catch-up tick for a recovering broker: drain one
+    /// bandwidth-bounded chunk of its missed-byte backlog as cold reads
+    /// off the source leaders' spindles ([`Fabric::enable_faults`]).
+    /// Never scheduled in a fault-free world.
+    Recovery { broker: u32 },
 }
 
 /// Outputs of a fabric step: new events to schedule, or a commit
@@ -101,6 +109,17 @@ struct InFlight {
     remaining_acks: u8,
     leader_stored: bool,
     active: bool,
+    /// Fault mode only: bitmask over replica offsets `r` (1..RF) whose
+    /// acks are still awaited. Maintained so a broker kill can resolve
+    /// the acks that will never arrive, and stale follower events from
+    /// before a kill can be recognized and dropped. Unused (0) without
+    /// faults.
+    pending: u8,
+    /// Fault mode only: in-sync replica count (leader included) this
+    /// record was fanned out to — what "ISR quorum" meant for *this*
+    /// record. Checked against `min_isr` at commit; `replication`
+    /// without faults.
+    isr: u8,
 }
 
 /// The measured consumer read path (opt-in; see
@@ -149,6 +168,219 @@ impl ReadPathStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Failure and membership dynamics (opt-in)
+// ---------------------------------------------------------------------------
+
+/// Interval between re-replication catch-up ticks: a recovering broker
+/// drains `recovery_bytes_per_sec × 10 ms` of its missed-byte backlog
+/// per tick, so the catch-up stream is paced rather than one burst.
+pub const RECOVERY_TICK_US: u64 = 10_000;
+
+/// One world-level fault, injected at an absolute virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Broker `broker` fail-stops: loses RAM (page cache), stops
+    /// processing, drops out of every ISR. Its on-disk log survives.
+    Kill { at_us: u64, broker: u32 },
+    /// Broker `broker` rejoins as an out-of-sync follower and starts
+    /// replaying its missed bytes (a maximally-lagged consumer of the
+    /// surviving leaders); it re-enters ISRs once the backlog drains.
+    Restart { at_us: u64, broker: u32 },
+    /// The links between brokers `a` and `b` drop for `duration_us`:
+    /// fan-outs across the cut are skipped (the far side falls out of
+    /// sync) until the heal, after which catch-up replication runs.
+    Partition { at_us: u64, a: u32, b: u32, duration_us: u64 },
+}
+
+impl FaultEvent {
+    /// The virtual instant this fault fires.
+    pub fn at_us(&self) -> u64 {
+        match *self {
+            FaultEvent::Kill { at_us, .. }
+            | FaultEvent::Restart { at_us, .. }
+            | FaultEvent::Partition { at_us, .. } => at_us,
+        }
+    }
+}
+
+/// A world-level fault schedule plus the membership policy knobs.
+/// `FaultPlan::default()` (no events, `min_isr = 1`) installed on a
+/// world is observationally inert — pinned bit-exact by
+/// `tests/failover_differential.rs`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// Minimum in-sync replicas (leader included) a produce needs at
+    /// admission; below it the send is rejected (Kafka's
+    /// NotEnoughReplicas), counted in [`FaultStats::records_rejected`].
+    pub min_isr: usize,
+    /// Re-replication read bandwidth per recovering broker (bytes/s):
+    /// how fast catch-up cold-reads the missed bytes off the source
+    /// leaders' spindles.
+    pub recovery_bytes_per_sec: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            min_isr: 1,
+            recovery_bytes_per_sec: 400e6,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Fail-stop `broker` at `at_us`.
+    pub fn kill_broker(mut self, at_us: u64, broker: u32) -> Self {
+        self.events.push(FaultEvent::Kill { at_us, broker });
+        self
+    }
+
+    /// Rejoin `broker` at `at_us` (catch-up replication follows).
+    pub fn restart_broker(mut self, at_us: u64, broker: u32) -> Self {
+        self.events.push(FaultEvent::Restart { at_us, broker });
+        self
+    }
+
+    /// Cut the `a`↔`b` links for `duration_us` starting at `at_us`.
+    pub fn partition_fabric(mut self, at_us: u64, a: u32, b: u32, duration_us: u64) -> Self {
+        self.events.push(FaultEvent::Partition { at_us, a, b, duration_us });
+        self
+    }
+
+    pub fn with_min_isr(mut self, min_isr: usize) -> Self {
+        self.min_isr = min_isr;
+        self
+    }
+
+    pub fn with_recovery_bandwidth(mut self, bytes_per_sec: f64) -> Self {
+        self.recovery_bytes_per_sec = bytes_per_sec;
+        self
+    }
+}
+
+/// Fault-mode accounting ([`Fabric::fault_stats`]). The conservation
+/// contract pinned by `tests/failover_differential.rs`:
+/// `records_offered == records_committed + records_rejected +
+/// records_lost + active in-flight`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// Produce attempts entering the fabric (post-dispatch).
+    pub records_offered: u64,
+    pub bytes_offered: f64,
+    /// Commits (every one satisfied its ISR quorum).
+    pub records_committed: u64,
+    pub bytes_committed: f64,
+    /// Admission rejections: leader dead or ISR below `min_isr`.
+    pub records_rejected: u64,
+    pub bytes_rejected: f64,
+    /// Records that died with their leader (or lost quorum after the
+    /// leader stored them) — Kafka would truncate these on recovery.
+    pub records_lost: u64,
+    pub bytes_lost: f64,
+    /// Bytes that skipped an unavailable follower at fan-out and were
+    /// queued for re-replication.
+    pub missed_bytes: f64,
+    /// Bytes catch-up actually replayed (device cold reads at the
+    /// source + follower re-writes). Equals `missed_bytes` once every
+    /// recovery completes — the high-water-mark equality invariant.
+    pub rereplicated_bytes: f64,
+    /// Commits that would have violated the ISR quorum. Admission and
+    /// fan-out checks make this structurally unreachable; it exists so
+    /// the invariant is counted, not assumed.
+    pub min_isr_violations: u64,
+    /// `(broker, virtual time)` at which each recovery completed (the
+    /// last missed byte applied and the broker back in sync).
+    pub recovered_at_us: Vec<(u32, u64)>,
+}
+
+/// One recovering broker's claim on bytes it missed from one source:
+/// replayed in FIFO order against the source leader's spindle.
+#[derive(Clone, Copy, Debug)]
+struct PendingReplay {
+    group: u32,
+    /// Source broker holding the bytes (the partition leader at the
+    /// time of the miss).
+    leader: u32,
+    class: u8,
+    bytes: f64,
+}
+
+/// Per-world fault machinery, installed by [`Fabric::enable_faults`].
+/// `None` on [`Fabric`] (the default) keeps every code path bit-exact
+/// to the immortal fabric.
+#[derive(Clone, Debug)]
+struct FaultState {
+    min_isr: usize,
+    recovery_bytes_per_sec: f64,
+    alive: Vec<bool>,
+    in_sync: Vec<bool>,
+    /// Severed broker pairs: `(min, max, healed_at_us)`.
+    blocked: Vec<(u32, u32, u64)>,
+    /// Per-broker missed-byte backlog awaiting re-replication.
+    replay: Vec<Vec<PendingReplay>>,
+    /// Per-broker queued [`FabricEv::Recovery`] ticks (coalesces
+    /// duplicate kicks from restart + partition heals).
+    recovery_ticks: Vec<u32>,
+    /// Per-broker latest catch-up apply completion (device + NIC +
+    /// follower write), for the recovery-duration stamp.
+    last_apply_us: Vec<u64>,
+    stats: FaultStats,
+}
+
+impl FaultState {
+    fn new(brokers: usize, min_isr: usize, recovery_bytes_per_sec: f64) -> Self {
+        FaultState {
+            min_isr,
+            recovery_bytes_per_sec,
+            alive: vec![true; brokers],
+            in_sync: vec![true; brokers],
+            blocked: Vec::new(),
+            replay: vec![Vec::new(); brokers],
+            recovery_ticks: vec![0; brokers],
+            last_apply_us: vec![0; brokers],
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Is the `a`↔`b` link currently cut?
+    fn link_blocked(&self, a: u32, b: u32, now: u64) -> bool {
+        let (lo, hi) = (a.min(b), a.max(b));
+        self.blocked
+            .iter()
+            .any(|&(x, y, until)| x == lo && y == hi && now < until)
+    }
+
+    /// Can `follower` take a replica write from `leader` right now?
+    fn follower_available(&self, leader: u32, follower: u32, now: u64) -> bool {
+        self.alive[follower as usize]
+            && self.in_sync[follower as usize]
+            && !self.link_blocked(leader, follower, now)
+    }
+
+    /// Queue bytes a skipped follower will have to replay, merging into
+    /// an existing backlog entry with the same (group, source, class).
+    fn note_missed(&mut self, follower: u32, group: u32, leader: u32, class: u8, bytes: f64) {
+        self.stats.missed_bytes += bytes;
+        self.in_sync[follower as usize] = false;
+        let backlog = &mut self.replay[follower as usize];
+        if let Some(e) = backlog
+            .iter_mut()
+            .find(|e| e.group == group && e.leader == leader && e.class == class)
+        {
+            e.bytes += bytes;
+        } else {
+            backlog.push(PendingReplay { group, leader, class, bytes });
+        }
+    }
+}
+
 /// The broker fabric: brokers + in-flight produce state.
 pub struct Fabric {
     pub brokers: Vec<BrokerNode>,
@@ -159,6 +391,9 @@ pub struct Fabric {
     /// Measured read path; `None` (the default) keeps the seed's
     /// hardcoded cache hits bit for bit.
     read_path: Option<ReadPath>,
+    /// Failure/membership machinery; `None` (the default) is the
+    /// immortal fabric bit for bit.
+    faults: Option<FaultState>,
 }
 
 impl Fabric {
@@ -189,6 +424,7 @@ impl Fabric {
             inflight: Vec::new(),
             free: Vec::new(),
             read_path: None,
+            faults: None,
         }
     }
 
@@ -285,6 +521,177 @@ impl Fabric {
         appended.saturating_sub(consumed)
     }
 
+    /// Install the failure/membership machinery: liveness + ISR state
+    /// per broker, pending-ack masks on in-flight records, `min_isr`
+    /// admission, and paced catch-up re-replication at
+    /// `recovery_bytes_per_sec`. With every broker alive and no link
+    /// cut, the machinery is observationally inert — the fan-out,
+    /// commit, and ack paths produce the exact event stream of the
+    /// immortal fabric (pinned by `tests/failover_differential.rs`).
+    /// Call before any traffic flows.
+    pub fn enable_faults(&mut self, min_isr: usize, recovery_bytes_per_sec: f64) {
+        assert!(
+            self.replication <= 8,
+            "fault mode tracks pending acks in a u8 mask (replication <= 8)"
+        );
+        assert!(min_isr >= 1 && min_isr <= self.replication);
+        self.faults = Some(FaultState::new(
+            self.brokers.len(),
+            min_isr,
+            recovery_bytes_per_sec,
+        ));
+    }
+
+    /// Whether the failure machinery is installed.
+    pub fn faults_enabled(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Fault-mode accounting (`None` when faults are disabled).
+    pub fn fault_stats(&self) -> Option<&FaultStats> {
+        self.faults.as_ref().map(|fs| &fs.stats)
+    }
+
+    /// Liveness of one broker (true when faults are disabled).
+    pub fn broker_alive(&self, broker: u32) -> bool {
+        self.faults
+            .as_ref()
+            .map_or(true, |fs| fs.alive[broker as usize])
+    }
+
+    /// ISR membership of one broker (true when faults are disabled).
+    pub fn broker_in_sync(&self, broker: u32) -> bool {
+        self.faults
+            .as_ref()
+            .map_or(true, |fs| fs.in_sync[broker as usize])
+    }
+
+    /// Bytes one broker still has to replay before rejoining ISRs.
+    pub fn recovery_backlog_bytes(&self, broker: u32) -> f64 {
+        self.faults
+            .as_ref()
+            .map_or(0.0, |fs| {
+                fs.replay[broker as usize].iter().map(|e| e.bytes).sum()
+            })
+    }
+
+    /// Active (uncommitted, unlost) in-flight records and bytes — the
+    /// residual term of the fault-mode conservation identity.
+    pub fn active_in_flight(&self) -> (u64, f64) {
+        self.inflight
+            .iter()
+            .filter(|f| f.active)
+            .fold((0, 0.0), |(r, b), f| (r + f.records, b + f.bytes))
+    }
+
+    /// Total bytes read from the device across brokers (cold fetches +
+    /// re-replication), for the re-replication read-share metric.
+    pub fn device_read_bytes(&self) -> f64 {
+        self.brokers
+            .iter()
+            .map(|b| b.storage.bytes_read_device())
+            .sum()
+    }
+
+    /// Fail-stop `broker` at `now`: it leaves every ISR, loses its RAM
+    /// (page cache evicted; the on-disk log survives), and every
+    /// in-flight record touching it is resolved — records it led are
+    /// lost, acks it owed are skipped (their bytes queue for
+    /// re-replication) so surviving records commit on the shrunken ISR
+    /// instead of hanging. Panics without [`Fabric::enable_faults`].
+    pub fn kill_broker(&mut self, now: u64, broker: u32, out: &mut Vec<FabricOut>) {
+        let n = self.brokers.len();
+        {
+            let fs = self.faults.as_mut().expect("enable_faults first");
+            fs.alive[broker as usize] = false;
+            fs.in_sync[broker as usize] = false;
+        }
+        // A crash loses the page cache, not the log: drop the cached
+        // window, keep the per-group appended (high-water) counters.
+        if let Some(rp) = &mut self.read_path {
+            rp.caches[broker as usize].evict_all();
+        }
+        // Resolve in-flight state. Indexed loop: maybe_commit needs
+        // &mut self. The fid is intentionally NOT freed on loss — stale
+        // events referencing it may still be queued (see the pending
+        // mask docs); the leak is bounded by in-flight count per kill.
+        for fid in 0..self.inflight.len() as u32 {
+            let (active, leader, partition, class, bytes, pending) = {
+                let f = &self.inflight[fid as usize];
+                (f.active, f.leader, f.partition, f.class, f.bytes, f.pending)
+            };
+            if !active {
+                continue;
+            }
+            if leader == broker {
+                self.lose(fid);
+                continue;
+            }
+            let r = (broker as usize + n - leader as usize) % n;
+            if r >= 1 && r < self.replication && pending & (1 << r) != 0 {
+                {
+                    let f = &mut self.inflight[fid as usize];
+                    f.pending &= !(1 << r);
+                    debug_assert!(f.remaining_acks > 0);
+                    f.remaining_acks -= 1;
+                }
+                self.faults
+                    .as_mut()
+                    .unwrap()
+                    .note_missed(broker, partition, leader, class, bytes);
+                self.maybe_commit(fid, now, out);
+            }
+        }
+    }
+
+    /// Rejoin `broker` at `now` as an alive, out-of-sync follower, and
+    /// kick catch-up: its missed bytes replay off the source leaders at
+    /// the recovery bandwidth; it re-enters ISRs when the backlog is
+    /// empty. Panics without [`Fabric::enable_faults`].
+    pub fn restart_broker(&mut self, now: u64, broker: u32, out: &mut Vec<FabricOut>) {
+        let fs = self.faults.as_mut().expect("enable_faults first");
+        fs.alive[broker as usize] = true;
+        fs.recovery_ticks[broker as usize] += 1;
+        out.push(FabricOut::Schedule(now, FabricEv::Recovery { broker }));
+    }
+
+    /// Cut the `a`↔`b` links until `now + duration_us`. Fan-outs across
+    /// the cut are skipped from now on (the skipped side falls out of
+    /// sync and accrues replay backlog); packets already in flight are
+    /// delivered. At the heal instant both ends get a catch-up kick.
+    /// Panics without [`Fabric::enable_faults`].
+    pub fn partition_links(
+        &mut self,
+        now: u64,
+        a: u32,
+        b: u32,
+        duration_us: u64,
+        out: &mut Vec<FabricOut>,
+    ) {
+        let healed_at = now + duration_us;
+        let fs = self.faults.as_mut().expect("enable_faults first");
+        fs.blocked.retain(|&(_, _, until)| until > now);
+        fs.blocked.push((a.min(b), a.max(b), healed_at));
+        for broker in [a, b] {
+            fs.recovery_ticks[broker as usize] += 1;
+            out.push(FabricOut::Schedule(healed_at, FabricEv::Recovery { broker }));
+        }
+    }
+
+    /// Mark an active record as lost (leader death / quorum loss before
+    /// commit). The fid stays allocated: queued events may still name it.
+    fn lose(&mut self, fid: u32) {
+        let f = &mut self.inflight[fid as usize];
+        if !f.active {
+            return;
+        }
+        f.active = false;
+        let (records, bytes) = (f.records, f.bytes);
+        let fs = self.faults.as_mut().expect("lose() is fault-mode only");
+        fs.stats.records_lost += records;
+        fs.stats.bytes_lost += bytes;
+    }
+
     fn request_cpu_us(&self, bytes: f64) -> f64 {
         self.tuning.request_cpu_us + self.tuning.per_byte_cpu_us * bytes
     }
@@ -314,6 +721,11 @@ impl Fabric {
     /// Begin a produce: the record leaves the client now; returns the
     /// event that should be scheduled (leader NIC arrival). Requests sent
     /// through this entry point run in scheduling class 0.
+    ///
+    /// Returns whether the produce was admitted: always `true` in an
+    /// immortal world; `false` only in fault mode when the leader is
+    /// dead or the ISR is below `min_isr` (the caller should release
+    /// its token — no commit will ever arrive).
     pub fn send(
         &mut self,
         now: u64,
@@ -324,7 +736,7 @@ impl Fabric {
         meter: &mut BandwidthMeter,
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
-    ) {
+    ) -> bool {
         self.send_classed(now, partition, leader, bytes, token, 0, meter, producer_nic, out)
     }
 
@@ -343,7 +755,7 @@ impl Fabric {
         meter: &mut BandwidthMeter,
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
-    ) {
+    ) -> bool {
         self.send_grouped_classed(
             now, partition, leader, bytes, 1, token, class, meter, producer_nic, out,
         )
@@ -367,7 +779,30 @@ impl Fabric {
         meter: &mut BandwidthMeter,
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
-    ) {
+    ) -> bool {
+        // Fault-mode admission: a dead leader or an ISR below min_isr
+        // refuses the produce (Kafka's NotEnoughReplicas), counted as a
+        // rejection. With every broker healthy this computes isr ==
+        // replication and charges nothing extra.
+        if let Some(fs) = &self.faults {
+            let n = self.brokers.len();
+            let mut isr = 1usize;
+            for r in 1..self.replication {
+                let fb = ((leader as usize + r) % n) as u32;
+                if fs.follower_available(leader, fb, now) {
+                    isr += 1;
+                }
+            }
+            let rejected = !fs.alive[leader as usize] || isr < fs.min_isr;
+            let fs = self.faults.as_mut().unwrap();
+            fs.stats.records_offered += records;
+            fs.stats.bytes_offered += bytes;
+            if rejected {
+                fs.stats.records_rejected += records;
+                fs.stats.bytes_rejected += bytes;
+                return false;
+            }
+        }
         meter.add(Class::Producer, Channel::Network, Dir::Write, bytes);
         let t_tx = producer_nic.submit(now, bytes) + WIRE_US;
         let fid = self.alloc(InFlight {
@@ -380,8 +815,11 @@ impl Fabric {
             remaining_acks: (self.replication - 1) as u8,
             leader_stored: false,
             active: true,
+            pending: 0,
+            isr: self.replication as u8,
         });
         out.push(FabricOut::Schedule(t_tx, FabricEv::LeaderArrive { fid }));
+        true
     }
 
     /// Advance one fabric event.
@@ -392,6 +830,15 @@ impl Fabric {
                     let f = &self.inflight[fid as usize];
                     (f.leader as usize, f.bytes, f.records, f.class)
                 };
+                if self.faults.is_some() {
+                    if !self.inflight[fid as usize].active {
+                        return; // already lost (leader died mid-flight)
+                    }
+                    if !self.broker_alive(leader as u32) {
+                        self.lose(fid);
+                        return;
+                    }
+                }
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
                 let cpu = self.request_cpu_us_n(bytes, records);
                 let b = &mut self.brokers[leader];
@@ -404,6 +851,15 @@ impl Fabric {
                     let f = &self.inflight[fid as usize];
                     (f.leader as usize, f.bytes, f.class, f.partition)
                 };
+                if self.faults.is_some() {
+                    if !self.inflight[fid as usize].active {
+                        return;
+                    }
+                    if !self.broker_alive(leader as u32) {
+                        self.lose(fid);
+                        return;
+                    }
+                }
                 // Durable write on the leader, in the record's tenant
                 // class (inert unless storage QoS is enabled).
                 meter.add(Class::Broker, Channel::Storage, Dir::Write, bytes);
@@ -414,14 +870,59 @@ impl Fabric {
                 out.push(FabricOut::Schedule(t_wr, FabricEv::LeaderStored { fid }));
                 // Fan out to followers.
                 let n = self.brokers.len();
-                for r in 1..self.replication {
-                    let fb = ((leader + r) % n) as u32;
-                    meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
-                    let t_out = self.brokers[leader].nic_tx.submit(now, bytes) + WIRE_US;
-                    out.push(FabricOut::Schedule(
-                        t_out,
-                        FabricEv::FollowerArrive { fid, broker: fb },
-                    ));
+                if self.faults.is_some() {
+                    // Availability-aware fan-out: dead / out-of-sync /
+                    // partitioned followers are skipped — their bytes
+                    // queue for re-replication — and the record's
+                    // awaited-ack set is rebuilt from who is actually
+                    // reachable. With everyone healthy this schedules
+                    // the exact events of the immortal branch below.
+                    let mut pending = 0u8;
+                    let mut acks = 0u8;
+                    for r in 1..self.replication {
+                        let fb = ((leader + r) % n) as u32;
+                        let available = self
+                            .faults
+                            .as_ref()
+                            .unwrap()
+                            .follower_available(leader as u32, fb, now);
+                        if available {
+                            pending |= 1 << r;
+                            acks += 1;
+                            meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
+                            let t_out =
+                                self.brokers[leader].nic_tx.submit(now, bytes) + WIRE_US;
+                            out.push(FabricOut::Schedule(
+                                t_out,
+                                FabricEv::FollowerArrive { fid, broker: fb },
+                            ));
+                        } else {
+                            self.faults.as_mut().unwrap().note_missed(
+                                fb, partition, leader as u32, class, bytes,
+                            );
+                        }
+                    }
+                    let min_isr = self.faults.as_ref().unwrap().min_isr;
+                    let f = &mut self.inflight[fid as usize];
+                    f.remaining_acks = acks;
+                    f.pending = pending;
+                    f.isr = 1 + acks;
+                    if ((1 + acks) as usize) < min_isr {
+                        // The ISR shrank below quorum between admission
+                        // and fan-out: the leader stored it, but it can
+                        // never legally commit — lost (Kafka truncates).
+                        self.lose(fid);
+                    }
+                } else {
+                    for r in 1..self.replication {
+                        let fb = ((leader + r) % n) as u32;
+                        meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
+                        let t_out = self.brokers[leader].nic_tx.submit(now, bytes) + WIRE_US;
+                        out.push(FabricOut::Schedule(
+                            t_out,
+                            FabricEv::FollowerArrive { fid, broker: fb },
+                        ));
+                    }
                 }
             }
             FabricEv::FollowerArrive { fid, broker } => {
@@ -429,6 +930,9 @@ impl Fabric {
                     let f = &self.inflight[fid as usize];
                     (f.bytes, f.records, f.class)
                 };
+                if self.faults.is_some() && self.stale_follower_event(fid, broker) {
+                    return;
+                }
                 meter.add(Class::Broker, Channel::Network, Dir::Read, bytes);
                 let cpu = self.request_cpu_us_n(bytes, records);
                 let b = &mut self.brokers[broker as usize];
@@ -444,6 +948,9 @@ impl Fabric {
                     let f = &self.inflight[fid as usize];
                     (f.bytes, f.class, f.partition)
                 };
+                if self.faults.is_some() && self.stale_follower_event(fid, broker) {
+                    return;
+                }
                 meter.add(Class::Broker, Channel::Storage, Dir::Write, bytes);
                 let t_wr = self.brokers[broker as usize]
                     .storage
@@ -453,33 +960,191 @@ impl Fabric {
                 }
                 out.push(FabricOut::Schedule(
                     t_wr + ACK_TRANSIT_US,
-                    FabricEv::ReplicaAck { fid },
+                    FabricEv::ReplicaAck { fid, broker },
                 ));
             }
             FabricEv::LeaderStored { fid } => {
+                if self.faults.is_some() {
+                    if !self.inflight[fid as usize].active {
+                        return;
+                    }
+                    let leader = self.inflight[fid as usize].leader;
+                    if !self.broker_alive(leader) {
+                        self.lose(fid);
+                        return;
+                    }
+                }
                 self.inflight[fid as usize].leader_stored = true;
                 self.maybe_commit(fid, now, out);
             }
-            FabricEv::ReplicaAck { fid } => {
+            FabricEv::ReplicaAck { fid, broker } => {
+                if self.faults.is_some() {
+                    if !self.inflight[fid as usize].active {
+                        return;
+                    }
+                    let leader = self.inflight[fid as usize].leader;
+                    if !self.broker_alive(leader) {
+                        // The ack arrived at a dead leader: the record
+                        // can never commit.
+                        self.lose(fid);
+                        return;
+                    }
+                    let n = self.brokers.len();
+                    let r = (broker as usize + n - leader as usize) % n;
+                    let f = &mut self.inflight[fid as usize];
+                    if r == 0 || r >= self.replication || f.pending & (1 << r) == 0 {
+                        return; // stale: this ack was already resolved
+                    }
+                    f.pending &= !(1 << r);
+                    debug_assert!(f.remaining_acks > 0);
+                    f.remaining_acks -= 1;
+                    self.maybe_commit(fid, now, out);
+                    return;
+                }
                 let f = &mut self.inflight[fid as usize];
                 debug_assert!(f.remaining_acks > 0);
                 f.remaining_acks -= 1;
                 self.maybe_commit(fid, now, out);
             }
+            FabricEv::Recovery { broker } => {
+                self.recovery_tick(now, broker, meter, out);
+            }
+        }
+    }
+
+    /// Fault-mode validity check for follower-side events: drop events
+    /// aimed at a dead broker, and events whose pending-ack bit was
+    /// already resolved (by the ack itself or by a kill) — they belong
+    /// to a previous life of this fid.
+    fn stale_follower_event(&self, fid: u32, broker: u32) -> bool {
+        if !self.broker_alive(broker) {
+            return true;
+        }
+        let f = &self.inflight[fid as usize];
+        if !f.active {
+            return true;
+        }
+        let n = self.brokers.len();
+        let r = (broker as usize + n - f.leader as usize) % n;
+        r == 0 || r >= self.replication || f.pending & (1 << r) == 0
+    }
+
+    /// One paced catch-up tick for a recovering broker: cold-read up to
+    /// `recovery_bytes_per_sec × RECOVERY_TICK_US` missed bytes off the
+    /// source leaders (request CPU + device read on the write spindle +
+    /// NIC out/in + the follower's own durable write — the maximally-
+    /// lagged-consumer path), then either rejoin the ISR or reschedule.
+    fn recovery_tick(
+        &mut self,
+        now: u64,
+        broker: u32,
+        meter: &mut BandwidthMeter,
+        out: &mut Vec<FabricOut>,
+    ) {
+        let b = broker as usize;
+        let Some(fs) = self.faults.as_mut() else {
+            debug_assert!(false, "Recovery event without fault mode");
+            return;
+        };
+        fs.recovery_ticks[b] = fs.recovery_ticks[b].saturating_sub(1);
+        if fs.recovery_ticks[b] > 0 {
+            return; // a duplicate kick; the queued tick will do the work
+        }
+        if !fs.alive[b] {
+            return; // killed again mid-recovery; a restart re-kicks
+        }
+        if fs.replay[b].is_empty() {
+            if !fs.in_sync[b] {
+                fs.in_sync[b] = true;
+                let at = now.max(fs.last_apply_us[b]);
+                fs.stats.recovered_at_us.push((broker, at));
+            }
+            return;
+        }
+        let mut budget = fs.recovery_bytes_per_sec * (RECOVERY_TICK_US as f64 / 1e6);
+        let mut i = 0;
+        while budget > 1.0 && i < fs.replay[b].len() {
+            let e = fs.replay[b][i];
+            let src = e.leader as usize;
+            if !fs.alive[src] {
+                i += 1; // source down: defer this entry, try the next
+                continue;
+            }
+            let take = e.bytes.min(budget);
+            budget -= take;
+            let cpu = self.tuning.request_cpu_us + self.tuning.per_byte_cpu_us * take;
+            let t_cpu = self.brokers[src].cpu_submit(now, e.class, cpu);
+            meter.add(Class::Broker, Channel::Storage, Dir::Read, take);
+            let t_read = self.brokers[src]
+                .storage
+                .read_cold_classed(t_cpu, take, e.class);
+            meter.add(Class::Broker, Channel::Network, Dir::Write, take);
+            let t_tx = self.brokers[src].nic_tx.submit(t_read, take) + WIRE_US;
+            meter.add(Class::Broker, Channel::Network, Dir::Read, take);
+            let t_rx = self.brokers[b].nic_rx.submit(t_tx, take);
+            meter.add(Class::Broker, Channel::Storage, Dir::Write, take);
+            let t_wr = self.brokers[b].storage.write_classed(t_rx, take, e.class);
+            if let Some(rp) = &mut self.read_path {
+                rp.caches[b].append_group(e.group, take);
+            }
+            fs.last_apply_us[b] = fs.last_apply_us[b].max(t_wr);
+            fs.stats.rereplicated_bytes += take;
+            let entry = &mut fs.replay[b][i];
+            entry.bytes -= take;
+            if entry.bytes <= 1e-9 {
+                fs.replay[b].remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if fs.replay[b].is_empty() {
+            fs.in_sync[b] = true;
+            let at = now.max(fs.last_apply_us[b]);
+            fs.stats.recovered_at_us.push((broker, at));
+        } else {
+            fs.recovery_ticks[b] += 1;
+            out.push(FabricOut::Schedule(
+                now + RECOVERY_TICK_US,
+                FabricEv::Recovery { broker },
+            ));
         }
     }
 
     fn maybe_commit(&mut self, fid: u32, now: u64, out: &mut Vec<FabricOut>) {
-        let f = &mut self.inflight[fid as usize];
-        if f.active && f.leader_stored && f.remaining_acks == 0 {
-            f.active = false;
-            out.push(FabricOut::Committed {
-                token: f.token,
-                partition: f.partition,
-                at: now,
-            });
-            self.free.push(fid);
+        let (active, leader_stored, remaining, isr, records, bytes) = {
+            let f = &self.inflight[fid as usize];
+            (
+                f.active,
+                f.leader_stored,
+                f.remaining_acks,
+                f.isr,
+                f.records,
+                f.bytes,
+            )
+        };
+        if !(active && leader_stored && remaining == 0) {
+            return;
         }
+        if let Some(fs) = &mut self.faults {
+            if (isr as usize) < fs.min_isr {
+                // Structurally unreachable — admission and fan-out both
+                // enforce the quorum — counted rather than assumed so
+                // the differential suite can assert it stayed zero.
+                fs.stats.min_isr_violations += 1;
+                self.lose(fid);
+                return;
+            }
+            fs.stats.records_committed += records;
+            fs.stats.bytes_committed += bytes;
+        }
+        let f = &mut self.inflight[fid as usize];
+        f.active = false;
+        out.push(FabricOut::Committed {
+            token: f.token,
+            partition: f.partition,
+            at: now,
+        });
+        self.free.push(fid);
     }
 
     /// Consumer fetch: request CPU at the leader, page-cache read, NIC out
@@ -977,5 +1642,288 @@ mod tests {
         assert!(!f.read_path_enabled());
         assert!(f.read_path_stats().is_none());
         assert_eq!(f.group_lag_bytes(7), 0);
+    }
+
+    // -- failure / membership dynamics ----------------------------------
+
+    /// Drain the event queue to empty, counting commits.
+    fn drain_all(
+        f: &mut Fabric,
+        q: &mut EventQueue<FabricEv>,
+        meter: &mut BandwidthMeter,
+        out: &mut Vec<FabricOut>,
+    ) -> u64 {
+        let mut commits = 0;
+        loop {
+            for o in out.drain(..) {
+                match o {
+                    FabricOut::Schedule(t, ev) => {
+                        q.at(t, ev);
+                    }
+                    FabricOut::Committed { .. } => commits += 1,
+                }
+            }
+            match q.pop() {
+                Some((t, ev)) => f.handle(t, ev, meter, out),
+                None => break,
+            }
+        }
+        commits
+    }
+
+    /// The fault-mode conservation identity, exact in u64.
+    fn assert_conservation(f: &Fabric) {
+        let s = f.fault_stats().unwrap();
+        let (active, _) = f.active_in_flight();
+        assert_eq!(
+            s.records_offered,
+            s.records_committed + s.records_rejected + s.records_lost + active,
+            "conservation: {s:?} active={active}"
+        );
+    }
+
+    #[test]
+    fn faults_installed_but_inert_matches_immortal_commit() {
+        let run = |faults: bool| -> (u64, u64) {
+            let mut f = fabric();
+            if faults {
+                f.enable_faults(1, 400e6);
+                assert!(f.faults_enabled());
+            }
+            run_one(&mut f, 1000, 37_300.0)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn dead_leader_rejects_at_admission() {
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut out = Vec::new();
+        f.kill_broker(0, 0, &mut out);
+        assert!(!f.broker_alive(0));
+        let admitted = f.send(10, 0, 0, 37_300.0, 1, &mut meter, &mut nic, &mut out);
+        assert!(!admitted);
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_rejected, 1);
+        assert_eq!(s.records_offered, 1);
+        // A send to a *surviving* leader still goes through.
+        let admitted = f.send(10, 1, 1, 37_300.0, 2, &mut meter, &mut nic, &mut out);
+        assert!(admitted);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 1);
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn min_isr_blocks_admission_below_quorum() {
+        let mut f = fabric();
+        f.enable_faults(3, 400e6); // quorum = all three replicas
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut out = Vec::new();
+        f.kill_broker(0, 2, &mut out);
+        // Leader 0 is alive but its ISR is {0, 1} < 3.
+        let admitted = f.send(10, 0, 0, 37_300.0, 1, &mut meter, &mut nic, &mut out);
+        assert!(!admitted);
+        assert_eq!(f.fault_stats().unwrap().records_rejected, 1);
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn kill_follower_commits_on_shrunken_isr_and_queues_replay() {
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        f.kill_broker(0, 2, &mut out);
+        assert!(f.send(0, 0, 0, bytes, 1, &mut meter, &mut nic, &mut out));
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 1, "record must commit on the shrunken ISR");
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_committed, 1);
+        assert!((s.missed_bytes - bytes).abs() < 1e-9);
+        assert!((f.recovery_backlog_bytes(2) - bytes).abs() < 1e-9);
+        assert!(!f.broker_in_sync(2));
+        // The dead follower never wrote.
+        assert_eq!(f.brokers[2].storage.bytes_written(), 0.0);
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn kill_leader_mid_flight_loses_the_record() {
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        assert!(f.send(0, 0, 0, 37_300.0, 1, &mut meter, &mut nic, &mut out));
+        // The record is in flight toward leader 0; the leader dies.
+        f.kill_broker(1, 0, &mut out);
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 0);
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_lost, 1);
+        assert_eq!(s.min_isr_violations, 0);
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn kill_mid_replication_resolves_pending_ack_and_drops_stale_events() {
+        // Let the fan-out reach follower 1's CPU, then kill follower 1:
+        // its pending ack resolves immediately (the commit must not hang),
+        // the queued FollowerCpuDone is recognized as stale and dropped
+        // (no durable write on the dead broker), and the bytes queue for
+        // replay.
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        assert!(f.send(0, 0, 0, bytes, 1, &mut meter, &mut nic, &mut out));
+        let mut killed = false;
+        let mut commits = 0;
+        loop {
+            for o in out.drain(..) {
+                match o {
+                    FabricOut::Schedule(t, ev) => {
+                        q.at(t, ev);
+                    }
+                    FabricOut::Committed { .. } => commits += 1,
+                }
+            }
+            let Some((t, ev)) = q.pop() else { break };
+            f.handle(t, ev, &mut meter, &mut out);
+            if !killed {
+                if let FabricEv::FollowerArrive { broker: 1, .. } = ev {
+                    // Handled: FollowerCpuDone for broker 1 is now queued.
+                    f.kill_broker(t, 1, &mut out);
+                    killed = true;
+                }
+            }
+        }
+        assert!(killed, "fan-out must have reached follower 1");
+        assert_eq!(commits, 1, "commit must not hang on the dead follower");
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_committed, 1);
+        assert!((s.missed_bytes - bytes).abs() < 1e-9);
+        // The stale FollowerCpuDone was dropped before the write.
+        assert_eq!(f.brokers[1].storage.bytes_written(), 0.0);
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn restart_replays_backlog_and_rejoins_isr() {
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        f.kill_broker(0, 2, &mut out);
+        for i in 0..5u64 {
+            assert!(f.send(i * 1_000, 0, 0, bytes, i, &mut meter, &mut nic, &mut out));
+        }
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 5);
+        let missed = f.fault_stats().unwrap().missed_bytes;
+        assert!((missed - 5.0 * bytes).abs() < 1e-6);
+        let read_before = f.device_read_bytes();
+        f.restart_broker(100_000, 2, &mut out);
+        assert!(f.broker_alive(2));
+        assert!(!f.broker_in_sync(2), "out of sync until the backlog drains");
+        drain_all(&mut f, &mut q, &mut meter, &mut out);
+        let s = f.fault_stats().unwrap();
+        assert!(
+            (s.rereplicated_bytes - missed).abs() < 1e-6,
+            "replayed {} of {} missed bytes",
+            s.rereplicated_bytes,
+            missed
+        );
+        assert_eq!(f.recovery_backlog_bytes(2), 0.0);
+        assert!(f.broker_in_sync(2));
+        // Catch-up cold-read the bytes off the source leader's device.
+        assert!(f.device_read_bytes() > read_before);
+        // The recovered broker durably re-wrote the missed bytes.
+        assert!(f.brokers[2].storage.bytes_written() >= missed - 1e-6);
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.recovered_at_us.len(), 1);
+        let (rb, rt) = s.recovered_at_us[0];
+        assert_eq!(rb, 2);
+        assert!(rt >= 100_000, "recovered before the restart: {rt}");
+        assert_conservation(&f);
+    }
+
+    #[test]
+    fn recovery_duration_decreases_with_bandwidth() {
+        let recover = |bw: f64| -> u64 {
+            let mut f = fabric();
+            f.enable_faults(1, bw);
+            let mut meter = BandwidthMeter::new();
+            let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+            let mut q: EventQueue<FabricEv> = EventQueue::new();
+            let mut out = Vec::new();
+            f.kill_broker(0, 2, &mut out);
+            for i in 0..200u64 {
+                assert!(f.send(
+                    i * 500,
+                    (i % 8) as u32,
+                    0,
+                    37_300.0,
+                    i,
+                    &mut meter,
+                    &mut nic,
+                    &mut out
+                ));
+            }
+            drain_all(&mut f, &mut q, &mut meter, &mut out);
+            f.restart_broker(200_000, 2, &mut out);
+            drain_all(&mut f, &mut q, &mut meter, &mut out);
+            let s = f.fault_stats().unwrap();
+            assert_eq!(s.recovered_at_us.len(), 1);
+            s.recovered_at_us[0].1 - 200_000
+        };
+        let slow = recover(50e6);
+        let medium = recover(200e6);
+        let fast = recover(800e6);
+        assert!(
+            slow > medium && medium > fast,
+            "recovery must speed up with bandwidth: {slow} / {medium} / {fast}"
+        );
+    }
+
+    #[test]
+    fn partition_skips_fanout_until_heal_then_catches_up() {
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        // Cut leader 0 from follower 1 for 500 ms; follower 2 unaffected.
+        f.partition_links(0, 0, 1, 500_000, &mut out);
+        assert!(f.send(10, 0, 0, bytes, 1, &mut meter, &mut nic, &mut out));
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 1, "commit proceeds on the reachable ISR");
+        let s = f.fault_stats().unwrap();
+        assert!((s.missed_bytes - bytes).abs() < 1e-9);
+        // The heal-time Recovery kick was queued by partition_links and
+        // drained above (it was scheduled at t=500_000); broker 1 must be
+        // back in sync with the backlog replayed.
+        assert!(f.broker_in_sync(1));
+        assert!((s.rereplicated_bytes - bytes).abs() < 1e-9);
+        assert_eq!(f.recovery_backlog_bytes(1), 0.0);
+        assert_conservation(&f);
     }
 }

@@ -1,0 +1,239 @@
+//! Broker failover: the scenario where the fabric's membership changes
+//! mid-run.
+//!
+//! The paper measures the AI tax on a *healthy* fabric; every
+//! steady-state number implicitly assumes all brokers up and every
+//! replica in sync. But the tax is worst exactly when that assumption
+//! breaks: a broker crash loses its page cache, moves its partition
+//! leadership, and — on restart — replays everything it missed as a
+//! maximally-lagged consumer whose catch-up reads come cold off the
+//! surviving brokers' spindles ([`Fabric`] fault mode, PR 5's measured
+//! read path). This module packages that scenario on the same 3-tenant
+//! registry as [`catchup`](crate::pipeline::catchup):
+//!
+//! * **facerec** — §5.3 acceleration at 4×, the bulk write pressure that
+//!   accumulates the re-replication debt while the victim is down.
+//! * **train-ingest** — large sequential writes; its partitions led by
+//!   the victim must re-elect and its acks shrink to the surviving ISR.
+//! * **rpc** — the latency canary. Its tail through the failover window
+//!   ([`TenantDef::with_observe_window`]) is the headline number: with
+//!   FIFO storage the recovery's cold reads and classed writes stall the
+//!   canary's 2 kB commits; with the GPS spindle scheduler
+//!   ([`MultiTenantConfig::with_storage_qos`]) the replay drains at the
+//!   bulk weight while the canary keeps its share.
+//!
+//! The schedule is one [`FaultPlan`]: kill [`VICTIM`] at
+//! [`FailoverSpec::kill_at_us`], restart it at
+//! [`FailoverSpec::restart_at_us`]. On the kill, the deployment layer
+//! re-elects every partition the victim led and pauses the affected
+//! consumers for the rebalance
+//! ([`dc::REBALANCE_PAUSE_US`](crate::pipeline::dc::REBALANCE_PAUSE_US));
+//! commits continue on the shrunken ISR. On the restart, the victim
+//! drains its replay backlog at
+//! [`FailoverSpec::recovery_bytes_per_sec`] and rejoins the ISR when the
+//! last byte lands. `experiments::failover` sweeps kill time × storage
+//! arm × recovery bandwidth (`aitax experiment failover`);
+//! `tests/failover_differential.rs` pins the empty-plan world bit-exact
+//! to the immortal fabric.
+//!
+//! [`Fabric`]: crate::pipeline::fabric::Fabric
+
+use crate::pipeline::catchup::{self, CatchupSpec};
+use crate::pipeline::fabric::FaultPlan;
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use crate::util::units::SEC;
+
+/// The broker the plan kills. Broker 0 hosts the most partition leaders
+/// under round-robin assignment; killing broker 1 exercises both roles —
+/// leader for a third of the partitions, follower for the rest.
+pub const VICTIM: u32 = 1;
+
+/// How long past the restart the observation window stays open — sized
+/// to sit inside the re-replication contention period at every swept
+/// recovery bandwidth, so every arm's tail is measured over the same
+/// set of request-creation instants.
+pub const OBSERVE_TAIL_US: u64 = 4 * SEC;
+
+/// One failover scenario point.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverSpec {
+    /// Virtual instant the victim broker dies.
+    pub kill_at_us: u64,
+    /// Virtual instant it comes back (empty page cache, out of the ISR,
+    /// replaying its backlog).
+    pub restart_at_us: u64,
+    /// `true`: the per-class GPS spindle scheduler carries recovery
+    /// reads/writes at the bulk weight; `false`: the seed FIFO spindle.
+    pub classed: bool,
+    /// Re-replication pacing, bytes/sec of replay drained by the
+    /// recovering broker.
+    pub recovery_bytes_per_sec: f64,
+    /// Per-broker page-cache capacity (bytes) for the measured read
+    /// path — small enough that the victim's missed window ages out and
+    /// its catch-up goes to the device.
+    pub cache_bytes: f64,
+}
+
+impl FailoverSpec {
+    /// The tail-observation window: request creations in
+    /// `[restart, restart + OBSERVE_TAIL_US]` feed the windowed p99
+    /// ([`crate::pipeline::dc::TenantSummary::e2e_p99_window_us`]).
+    ///
+    /// The window opens at the *restart*, not the kill: the kill-time
+    /// transient (leader re-election plus the
+    /// [`REBALANCE_PAUSE_US`](crate::pipeline::dc::REBALANCE_PAUSE_US)
+    /// consumer pause) hits both storage arms identically and would
+    /// swamp the p99 either way. What the sweep isolates is the
+    /// re-replication period, where the catch-up stream's cold reads
+    /// and classed writes contend with live traffic on the surviving
+    /// spindles — the period the storage arm actually changes.
+    pub fn observe_window(&self) -> (u64, u64) {
+        (self.restart_at_us, self.restart_at_us + OBSERVE_TAIL_US)
+    }
+
+    /// The fault schedule this spec induces.
+    pub fn plan(&self) -> FaultPlan {
+        FaultPlan::new()
+            .kill_broker(self.kill_at_us, VICTIM)
+            .restart_broker(self.restart_at_us, VICTIM)
+            .with_recovery_bandwidth(self.recovery_bytes_per_sec)
+    }
+}
+
+/// The 3-tenant failover registry at one scenario point: the
+/// [`catchup`] registry (same fleets, weights, and seeds — zero consumer
+/// lag, the brokers make their own) plus the fault schedule and the
+/// failover observation window on every tenant.
+pub fn registry(spec: FailoverSpec, horizon_us: u64) -> MultiTenantConfig {
+    let (ws, we) = spec.observe_window();
+    let mut cfg = catchup::registry(
+        CatchupSpec {
+            lag_us: 0,
+            cache_bytes: spec.cache_bytes,
+            classed_reads: spec.classed,
+        },
+        horizon_us,
+    );
+    for t in &mut cfg.tenants {
+        *t = t.clone().with_observe_window(ws, we);
+    }
+    cfg.with_faults(spec.plan())
+}
+
+/// Run one failover scenario point.
+pub fn run(spec: FailoverSpec, horizon_us: u64) -> MultiTenantReport {
+    MultiTenantSim::new(registry(spec, horizon_us)).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+    use crate::pipeline::fabric::FaultEvent;
+
+    fn spec() -> FailoverSpec {
+        FailoverSpec {
+            kill_at_us: 3 * SEC,
+            restart_at_us: 5 * SEC,
+            classed: true,
+            recovery_bytes_per_sec: 400e6,
+            cache_bytes: 200e6,
+        }
+    }
+
+    #[test]
+    fn registry_wires_the_scenario() {
+        let cfg = registry(spec(), 15 * SEC);
+        assert_eq!(cfg.tenants.len(), 3);
+        assert!(cfg.storage_qos);
+        assert_eq!(cfg.read_cache_bytes, Some(200e6));
+        let plan = cfg.faults.as_ref().expect("failover installs a plan");
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::Kill { at_us: 3 * SEC, broker: VICTIM },
+                FaultEvent::Restart { at_us: 5 * SEC, broker: VICTIM },
+            ]
+        );
+        assert_eq!(plan.recovery_bytes_per_sec, 400e6);
+        for t in &cfg.tenants {
+            assert_eq!(
+                t.cfg.observe_window_us,
+                Some((5 * SEC, 5 * SEC + OBSERVE_TAIL_US)),
+                "every tenant observes the re-replication window"
+            );
+        }
+        cfg.validate().unwrap();
+    }
+
+    /// Scaled-down failover world (small fleets, short horizon) so the
+    /// unit test stays fast; full-size runs live in
+    /// `experiments::failover`.
+    fn small_failover(s: FailoverSpec, horizon_us: u64) -> MultiTenantConfig {
+        let mut cfg = registry(s, horizon_us);
+        cfg.tenants[0].cfg.deployment = Deployment {
+            producers: 20,
+            consumers: 30,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 30,
+        };
+        cfg.tenants[1].cfg.deployment = Deployment {
+            producers: 4,
+            consumers: 6,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 6,
+        };
+        cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+        cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+        cfg.fabric = cfg.tenants[0].cfg.clone();
+        cfg
+    }
+
+    #[test]
+    fn failover_world_survives_a_kill_and_recovers() {
+        let r = MultiTenantSim::new(small_failover(spec(), 12 * SEC)).run();
+        let f = r.fault.as_ref().expect("plan ⇒ fault accounting");
+        // The victim missed replication traffic while down and replayed
+        // every byte of it after the restart.
+        assert!(f.missed_bytes > 0.0, "2 s of downtime must miss bytes");
+        assert!(f.rereplicated_bytes > 0.0, "the restart must replay");
+        assert_eq!(f.backlog_bytes, 0.0, "12 s horizon outlives recovery");
+        let done = f.recovery_done_us.expect("recovery must finish");
+        assert!(done >= 5 * SEC, "cannot recover before the restart");
+        assert_eq!(f.min_isr_violations, 0, "no commit below quorum, ever");
+        // Nobody starves, and the canary's windowed tail is populated.
+        for t in &r.tenants {
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+        }
+        let rpc = r.tenant("rpc").unwrap();
+        assert!(
+            rpc.e2e_p99_window_us > 0,
+            "the observe window must capture failover-era requests"
+        );
+        assert_eq!(r.clamped_events, 0);
+    }
+
+    #[test]
+    fn recovery_finishes_sooner_with_more_bandwidth() {
+        // Catch-up must outrun the ~45 MB/s this small world keeps
+        // writing while the victim is out of sync, so both arms sit
+        // above it — the slow one barely, the fast one by an order of
+        // magnitude.
+        let slow = FailoverSpec { recovery_bytes_per_sec: 100e6, ..spec() };
+        let fast = FailoverSpec { recovery_bytes_per_sec: 600e6, ..spec() };
+        let rs = MultiTenantSim::new(small_failover(slow, 12 * SEC)).run();
+        let rf = MultiTenantSim::new(small_failover(fast, 12 * SEC)).run();
+        let ds = rs.fault.as_ref().unwrap().recovery_done_us.expect("slow arm finishes");
+        let df = rf.fault.as_ref().unwrap().recovery_done_us.expect("fast arm finishes");
+        assert!(
+            df < ds,
+            "10× recovery bandwidth must shorten the outage: fast {} vs slow {}",
+            df,
+            ds
+        );
+    }
+}

@@ -29,6 +29,7 @@
 use crate::broker::qos::{QosPolicy, TenantQuota};
 use crate::config::Config;
 use crate::pipeline::dc::{self, FabricSpec, TenantSpec, TenantSummary, WorkloadKind};
+use crate::pipeline::fabric::FaultPlan;
 use crate::pipeline::facerec::{self, SimReport};
 use crate::pipeline::objdet::{self, ObjDetReport};
 
@@ -266,6 +267,16 @@ impl TenantDef {
         self.cfg.flow_quantum_us = quantum_us;
         self
     }
+
+    /// Restrict this tenant's windowed tail metric
+    /// ([`TenantSummary::e2e_p99_window_us`]) to requests *created*
+    /// inside `[start_us, end_us]` — e.g. the failover window, so a
+    /// broker crash's tail damage isn't averaged away by minutes of
+    /// healthy traffic on either side.
+    pub fn with_observe_window(mut self, start_us: u64, end_us: u64) -> Self {
+        self.cfg.observe_window_us = Some((start_us, end_us));
+        self
+    }
 }
 
 /// An N-tenant deployment on one shared fabric.
@@ -306,6 +317,11 @@ pub struct MultiTenantConfig {
     /// classed at the tenant weights when [`Self::storage_qos`] is on,
     /// FIFO otherwise.
     pub read_cache_bytes: Option<f64>,
+    /// Failure schedule injected into the shared fabric (broker kills /
+    /// restarts / fabric partitions, plus ISR + recovery parameters).
+    /// `None` — and an *empty* plan — leave the world bit-exact to the
+    /// immortal fabric (`tests/failover_differential.rs` pins both).
+    pub faults: Option<FaultPlan>,
 }
 
 impl MultiTenantConfig {
@@ -319,6 +335,7 @@ impl MultiTenantConfig {
             storage_qos: false,
             broker_write_budget: None,
             read_cache_bytes: None,
+            faults: None,
         }
     }
 
@@ -343,6 +360,13 @@ impl MultiTenantConfig {
     /// page-cache capacity (see [`Self::read_cache_bytes`]).
     pub fn with_read_cache(mut self, bytes: f64) -> Self {
         self.read_cache_bytes = Some(bytes);
+        self
+    }
+
+    /// Inject a failure schedule into the shared fabric (see
+    /// [`Self::faults`]).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -429,6 +453,47 @@ impl MultiTenantConfig {
     }
 }
 
+/// Fabric-level failure accounting for one N-tenant run — present only
+/// when a [`FaultPlan`] was installed (even an empty one, so a run can
+/// assert that a fault-capable world stayed fault-free).
+#[derive(Clone, Debug)]
+pub struct FaultReport {
+    /// Produce attempts that reached the fabric. The conservation
+    /// identity `offered == committed + rejected + lost + in_flight`
+    /// holds exactly (u64 arithmetic, pinned by
+    /// `tests/failover_differential.rs`).
+    pub records_offered: u64,
+    /// Commits — every one satisfied its ISR quorum.
+    pub records_committed: u64,
+    /// Records still in flight at the horizon (produced, not yet
+    /// committed, lost, or rejected).
+    pub records_in_flight: u64,
+    /// Replication bytes a dead or partitioned follower missed and now
+    /// owes the log (the re-replication debt).
+    pub missed_bytes: f64,
+    /// Bytes the recovery path replayed into restarted followers — cold
+    /// device reads on the source, classed writes on the sink.
+    pub rereplicated_bytes: f64,
+    /// Records lost to a dead leader or a collapsed ISR.
+    pub records_lost: u64,
+    /// Records refused at admission (dead leader / ISR below quorum).
+    pub records_rejected: u64,
+    /// Commits that would have violated `min_isr` — structurally
+    /// unreachable (admission + fan-out guard it); pinned at zero by
+    /// `tests/failover_differential.rs`.
+    pub min_isr_violations: u64,
+    /// Virtual instant the *last* recovering broker drained its replay
+    /// backlog and rejoined the ISR. `None` while any broker is still
+    /// dead, catching up, or was never disturbed.
+    pub recovery_done_us: Option<u64>,
+    /// Share of all NVMe device-read bytes consumed by re-replication —
+    /// the catch-up reads competing with lagging consumers for the
+    /// spindle.
+    pub rereplication_read_share: f64,
+    /// Replay bytes still owed at the horizon (0.0 once recovered).
+    pub backlog_bytes: f64,
+}
+
 /// Results of one N-tenant run: generic per-tenant summaries plus the
 /// shared-broker view.
 #[derive(Clone, Debug)]
@@ -450,6 +515,8 @@ pub struct MultiTenantReport {
     /// Past-time schedules clamped by the event queue — zero in every
     /// healthy run (`tests/qos_regression.rs` asserts it).
     pub clamped_events: u64,
+    /// Failure accounting (`None` when no [`FaultPlan`] was installed).
+    pub fault: Option<FaultReport>,
 }
 
 impl MultiTenantReport {
@@ -476,6 +543,9 @@ impl MultiTenantSim {
         if let Some(bytes) = c.read_cache_bytes {
             spec = spec.with_read_cache(bytes);
         }
+        if let Some(plan) = &c.faults {
+            spec = spec.with_faults(plan.clone());
+        }
         let tenant_specs: Vec<TenantSpec<'_>> = c
             .tenants
             .iter()
@@ -488,6 +558,34 @@ impl MultiTenantSim {
 
         let elapsed = c.duration_us;
         let read_stats = world.shared.fabric.read_path_stats();
+        let fault = world.shared.fabric.fault_stats().map(|fs| {
+            let fabric = &world.shared.fabric;
+            let brokers = c.fabric.deployment.brokers as u32;
+            let backlog_bytes: f64 =
+                (0..brokers).map(|b| fabric.recovery_backlog_bytes(b)).sum();
+            let all_in_sync =
+                (0..brokers).all(|b| fabric.broker_alive(b) && fabric.broker_in_sync(b));
+            let device_reads = fabric.device_read_bytes();
+            FaultReport {
+                records_offered: fs.records_offered,
+                records_committed: fs.records_committed,
+                records_in_flight: fabric.active_in_flight().0,
+                missed_bytes: fs.missed_bytes,
+                rereplicated_bytes: fs.rereplicated_bytes,
+                records_lost: fs.records_lost,
+                records_rejected: fs.records_rejected,
+                min_isr_violations: fs.min_isr_violations,
+                recovery_done_us: (all_in_sync && backlog_bytes == 0.0)
+                    .then(|| fs.recovered_at_us.iter().map(|&(_, t)| t).max())
+                    .flatten(),
+                rereplication_read_share: if device_reads > 0.0 {
+                    (fs.rereplicated_bytes / device_reads).min(1.0)
+                } else {
+                    0.0
+                },
+                backlog_bytes,
+            }
+        });
         MultiTenantReport {
             tenants: c
                 .tenants
@@ -503,6 +601,7 @@ impl MultiTenantSim {
             device_read_share: read_stats.map_or(0.0, |s| s.device_read_share()),
             events: world.processed(),
             clamped_events: world.clamped(),
+            fault,
         }
     }
 }
@@ -710,6 +809,51 @@ mod tests {
             .page_cache_capacity(cfg.fabric.node.memory);
         assert_eq!(cfg.read_cache_bytes, Some(expect));
         assert!(expect > 250e9, "384 GB node ⇒ ~288 GB page cache");
+    }
+
+    #[test]
+    fn fault_report_present_iff_a_plan_is_installed() {
+        let bare = MultiTenantSim::new(small_registry()).run();
+        assert!(bare.fault.is_none(), "no plan ⇒ no fault accounting");
+
+        // An empty plan arms the machinery without disturbing anyone:
+        // accounting runs, but every damage counter stays zero and no
+        // recovery stamp exists.
+        let armed = MultiTenantSim::new(
+            small_registry().with_faults(FaultPlan::new()),
+        )
+        .run();
+        let f = armed.fault.as_ref().expect("plan ⇒ fault accounting");
+        assert_eq!(f.records_lost, 0);
+        assert_eq!(f.records_rejected, 0);
+        assert_eq!(f.min_isr_violations, 0);
+        assert_eq!(f.missed_bytes, 0.0);
+        assert_eq!(f.rereplicated_bytes, 0.0);
+        assert_eq!(f.backlog_bytes, 0.0);
+        assert!(f.recovery_done_us.is_none(), "nothing was ever disturbed");
+        assert!(armed.tenant("facerec").unwrap().completed > 0);
+    }
+
+    #[test]
+    fn kill_and_restart_surface_in_the_fault_report() {
+        let plan = FaultPlan::new()
+            .kill_broker(3 * SEC, 1)
+            .restart_broker(5 * SEC, 1);
+        let r = MultiTenantSim::new(small_registry().with_faults(plan)).run();
+        let f = r.fault.as_ref().expect("plan ⇒ fault accounting");
+        assert!(f.missed_bytes > 0.0, "a dead follower must miss bytes");
+        assert!(
+            f.rereplicated_bytes > 0.0,
+            "the restart must replay the backlog"
+        );
+        assert_eq!(f.min_isr_violations, 0);
+        let done = f.recovery_done_us.expect("10 s horizon outlives recovery");
+        assert!(done >= 5 * SEC, "recovery cannot finish before the restart");
+        assert!(f.backlog_bytes == 0.0, "recovered ⇒ no residual backlog");
+        assert!(f.rereplication_read_share > 0.0);
+        for t in &r.tenants {
+            assert!(t.completed > 0, "tenant {} starved by the failover", t.name);
+        }
     }
 
     #[test]

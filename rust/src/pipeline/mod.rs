@@ -32,11 +32,19 @@
 //!   path ([`fabric::Fabric::enable_read_path`]): a tenant whose
 //!   consumers start behind and must drain their backlog through cold
 //!   device reads that contend with the replicated write stream.
+//! * [`failover`] — failure and membership dynamics: a [`FaultPlan`]
+//!   kills a broker mid-run (leadership re-elects, commits continue on
+//!   the shrunken ISR, consumers pause for the rebalance) and restarts
+//!   it (the victim replays its missed bytes as a maximally-lagged
+//!   consumer through the measured read path, then rejoins the ISR).
+//!
+//! [`FaultPlan`]: fabric::FaultPlan
 
 pub mod catchup;
 pub mod dc;
 pub mod fabric;
 pub mod facerec;
+pub mod failover;
 pub mod frame;
 pub mod mixed;
 pub mod objdet;

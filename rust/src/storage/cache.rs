@@ -227,6 +227,17 @@ impl PageCache {
     pub fn byte_counters(&self) -> (f64, f64) {
         (self.hit_bytes, self.miss_bytes)
     }
+
+    /// Drop the entire cached window — a broker crash loses its RAM.
+    /// The per-group `appended` high-water marks survive (they describe
+    /// the on-disk log, which a fail-stop does not destroy), so
+    /// post-restart reads of pre-crash data all miss to the device:
+    /// exactly the cold catch-up a recovering replica performs.
+    pub fn evict_all(&mut self) {
+        self.window.clear();
+        self.cached_bytes = 0.0;
+        self.live_entries.iter_mut().for_each(|n| *n = 0);
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +364,22 @@ mod tests {
         c.append_group(0, 1_000.0);
         let (hit, miss) = c.read_range_group(0, 0, 1_003);
         assert_eq!((hit, miss), (1_003, 0));
+    }
+
+    #[test]
+    fn evict_all_loses_ram_but_keeps_the_log() {
+        let mut c = PageCache::new(1e6);
+        let end = c.append_group(3, 10_000.0);
+        assert!(c.lookup_group(3, end));
+        c.evict_all();
+        // High-water marks survive (the disk log), residency does not.
+        assert_eq!(c.appended_of(3), end);
+        assert_eq!(c.oldest_cached_group(3), end, "nothing resident");
+        let (hit, miss) = c.read_range_group(3, 0, end);
+        assert_eq!((hit, miss), (0, end));
+        // Post-restart appends are cached again.
+        let next = c.append_group(3, 500.0);
+        assert!(c.lookup_group(3, next));
     }
 
     #[test]

@@ -194,6 +194,12 @@ impl StorageDevice {
         self.bytes_written
     }
 
+    /// Bytes served by the device read path (cold fetches and
+    /// re-replication catch-up; cache-resident reads excluded).
+    pub fn bytes_read_device(&self) -> f64 {
+        self.bytes_read_device
+    }
+
     pub fn cache_read_fraction(&self) -> f64 {
         let total = self.bytes_read_cache + self.bytes_read_device;
         if total == 0.0 {

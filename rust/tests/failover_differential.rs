@@ -1,0 +1,281 @@
+//! Failure-dynamics differential suite.
+//!
+//! PR 7 threads an optional fault layer through the fabric (broker
+//! kills / restarts / link partitions, ISR-gated commits, paced
+//! re-replication catch-up). These tests pin its contract the same way
+//! the PR-4/5 differentials pinned the QoS and read-path layers:
+//!
+//! 1. **Off-path fidelity** — a world with an *empty* `FaultPlan`
+//!    installed (fault machinery armed, nothing ever fails) must be
+//!    bit-exact to the immortal world: same events, same counters, same
+//!    floats, in both storage arms.
+//! 2. **Conservation** — across a mid-run kill, every produce attempt
+//!    is accounted for exactly once:
+//!    `offered == committed + rejected + lost + in_flight` (u64, no
+//!    tolerance), and no commit ever happens below the ISR quorum.
+//! 3. **Quorum admission** — with `min_isr` above the surviving
+//!    replica count, the fabric rejects at admission instead of
+//!    committing thin.
+//! 4. **Repair completeness** — a restarted broker replays every byte
+//!    it missed (re-replicated == missed, empty backlog) and rejoins.
+//! 5. **Recovery pacing** — recovery duration is finite and strictly
+//!    decreasing in catch-up bandwidth.
+//! 6. **The SLO split** — on the full-size sweep points, classed
+//!    storage holds the rpc canary's windowed p99 inside its SLO
+//!    through re-replication while the FIFO arm blows through it.
+
+use aitax::config::Deployment;
+use aitax::experiments::common::Fidelity;
+use aitax::experiments::failover as failover_ex;
+use aitax::pipeline::catchup::{self, CatchupSpec};
+use aitax::pipeline::fabric::FaultPlan;
+use aitax::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use aitax::util::units::SEC;
+
+/// Scaled-down 3-tenant world (same fleets as the catchup/failover unit
+/// tests) so each differential run stays fast.
+fn small_cfg(classed: bool, horizon_us: u64) -> MultiTenantConfig {
+    let mut cfg = catchup::registry(
+        CatchupSpec { lag_us: 0, cache_bytes: 50e6, classed_reads: classed },
+        horizon_us,
+    );
+    cfg.tenants[0].cfg.deployment = Deployment {
+        producers: 20,
+        consumers: 30,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 30,
+    };
+    cfg.tenants[1].cfg.deployment = Deployment {
+        producers: 4,
+        consumers: 6,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 6,
+    };
+    cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+    cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+    cfg.fabric = cfg.tenants[0].cfg.clone();
+    cfg
+}
+
+fn assert_identical(a: &MultiTenantReport, b: &MultiTenantReport, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.clamped_events, b.clamped_events, "{what}: clamped");
+    assert!(
+        a.broker_storage_write_util == b.broker_storage_write_util,
+        "{what}: write util"
+    );
+    assert!(
+        a.broker_storage_read_util == b.broker_storage_read_util,
+        "{what}: read util"
+    );
+    assert!(a.broker_net_rx_util == b.broker_net_rx_util, "{what}: net rx util");
+    assert!(a.broker_cpu_util == b.broker_cpu_util, "{what}: cpu util");
+    assert!(a.cache_hit_ratio == b.cache_hit_ratio, "{what}: cache hit");
+    assert!(
+        a.device_read_share == b.device_read_share,
+        "{what}: device read share"
+    );
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.produced, y.produced, "{what}: {} produced", x.name);
+        assert_eq!(x.completed, y.completed, "{what}: {} completed", x.name);
+        assert!(
+            x.throughput_per_sec == y.throughput_per_sec,
+            "{what}: {} throughput",
+            x.name
+        );
+        assert!(x.wait_mean_us == y.wait_mean_us, "{what}: {} wait mean", x.name);
+        assert_eq!(x.wait_p99_us, y.wait_p99_us, "{what}: {} wait p99", x.name);
+        assert!(x.e2e_mean_us == y.e2e_mean_us, "{what}: {} e2e mean", x.name);
+        assert_eq!(x.e2e_p99_us, y.e2e_p99_us, "{what}: {} e2e p99", x.name);
+        assert_eq!(
+            x.e2e_p99_window_us, y.e2e_p99_window_us,
+            "{what}: {} windowed p99",
+            x.name
+        );
+        assert_eq!(x.stable, y.stable, "{what}: {} stable", x.name);
+        assert!(x.net_tx_bytes == y.net_tx_bytes, "{what}: {} net tx", x.name);
+        assert!(x.net_rx_bytes == y.net_rx_bytes, "{what}: {} net rx", x.name);
+        assert_eq!(
+            x.consumer_lag_bytes, y.consumer_lag_bytes,
+            "{what}: {} consumer lag",
+            x.name
+        );
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bit_exact_to_the_immortal_world() {
+    // Arming the fault machinery without scheduling any fault must be
+    // observationally inert: the fault-aware fan-out/ack/commit paths
+    // see every follower available and must schedule byte-identical
+    // events in identical order — in both storage arms.
+    for classed in [false, true] {
+        let immortal = MultiTenantSim::new(small_cfg(classed, 8 * SEC)).run();
+        let armed = MultiTenantSim::new(
+            small_cfg(classed, 8 * SEC).with_faults(FaultPlan::new()),
+        )
+        .run();
+        assert!(immortal.fault.is_none() && armed.fault.is_some());
+        assert_identical(&immortal, &armed, if classed { "classed" } else { "fifo" });
+        // And the armed accounting saw a perfectly healthy run.
+        let f = armed.fault.as_ref().unwrap();
+        assert_eq!(f.records_offered, f.records_committed + f.records_in_flight);
+        assert_eq!(f.records_rejected + f.records_lost, 0);
+        assert_eq!(f.missed_bytes, 0.0);
+        assert_eq!(f.min_isr_violations, 0);
+    }
+}
+
+#[test]
+fn mid_run_kill_conserves_every_record() {
+    // Kill a broker and never bring it back: leadership re-elects,
+    // commits continue on the shrunken ISR, and at the horizon every
+    // produce attempt is accounted for exactly once.
+    let plan = FaultPlan::new().kill_broker(3 * SEC, 1);
+    let r = MultiTenantSim::new(small_cfg(true, 8 * SEC).with_faults(plan)).run();
+    let f = r.fault.as_ref().expect("plan ⇒ fault accounting");
+    assert_eq!(
+        f.records_offered,
+        f.records_committed + f.records_rejected + f.records_lost + f.records_in_flight,
+        "conservation: {f:?}"
+    );
+    assert_eq!(f.min_isr_violations, 0, "no commit below quorum, ever");
+    assert!(f.records_committed > 0);
+    assert!(
+        f.missed_bytes > 0.0,
+        "a permanently dead follower must keep missing bytes"
+    );
+    assert_eq!(f.rereplicated_bytes, 0.0, "no restart ⇒ no repair");
+    assert!(f.backlog_bytes > 0.0, "the debt is still owed at the horizon");
+    assert!(f.recovery_done_us.is_none(), "a dead broker never recovers");
+    for t in &r.tenants {
+        assert!(t.completed > 0, "tenant {} starved by the kill", t.name);
+    }
+    assert_eq!(r.clamped_events, 0);
+}
+
+#[test]
+fn quorum_loss_rejects_at_admission_not_at_commit() {
+    // min_isr = 3 on a 3-broker fabric: killing one broker makes every
+    // partition's ISR too thin, so sends are refused up front — the
+    // count of commits that *would have* violated the quorum stays
+    // structurally zero.
+    let plan = FaultPlan::new().kill_broker(3 * SEC, 1).with_min_isr(3);
+    let healthy_plan = FaultPlan::new().with_min_isr(3);
+    let killed = MultiTenantSim::new(small_cfg(true, 8 * SEC).with_faults(plan)).run();
+    let healthy =
+        MultiTenantSim::new(small_cfg(true, 8 * SEC).with_faults(healthy_plan)).run();
+    let fk = killed.fault.as_ref().unwrap();
+    let fh = healthy.fault.as_ref().unwrap();
+    assert_eq!(fh.records_rejected, 0, "full ISR ⇒ nothing rejected");
+    assert!(
+        fk.records_rejected > 0,
+        "ISR below quorum must reject at admission"
+    );
+    assert_eq!(fk.min_isr_violations, 0, "rejection happens before commit");
+    assert!(
+        fk.records_committed < fh.records_committed,
+        "a 5 s admission outage must cost commits: {} vs {}",
+        fk.records_committed,
+        fh.records_committed
+    );
+    assert_eq!(
+        fk.records_offered,
+        fk.records_committed + fk.records_rejected + fk.records_lost + fk.records_in_flight,
+        "conservation under rejection: {fk:?}"
+    );
+}
+
+#[test]
+fn restart_replays_every_missed_byte() {
+    let plan = FaultPlan::new()
+        .kill_broker(3 * SEC, 1)
+        .restart_broker(5 * SEC, 1)
+        .with_recovery_bandwidth(400e6);
+    let r = MultiTenantSim::new(small_cfg(true, 12 * SEC).with_faults(plan)).run();
+    let f = r.fault.as_ref().unwrap();
+    assert!(f.missed_bytes > 0.0);
+    assert!(
+        (f.rereplicated_bytes - f.missed_bytes).abs() <= 1e-6 * f.missed_bytes,
+        "repair must replay exactly the missed bytes: replayed {} vs missed {}",
+        f.rereplicated_bytes,
+        f.missed_bytes
+    );
+    assert_eq!(f.backlog_bytes, 0.0, "nothing still owed after rejoin");
+    let done = f.recovery_done_us.expect("recovery finishes inside the horizon");
+    assert!(done >= 5 * SEC);
+    assert!(f.rereplication_read_share > 0.0, "repair reads hit the device");
+    assert_eq!(f.min_isr_violations, 0);
+    assert_eq!(
+        f.records_offered,
+        f.records_committed + f.records_rejected + f.records_lost + f.records_in_flight,
+        "conservation across kill + restart: {f:?}"
+    );
+}
+
+#[test]
+fn recovery_duration_is_finite_and_monotone_in_bandwidth() {
+    // This small world keeps writing ~45 MB/s while the victim is out
+    // of sync; every swept bandwidth sits above that, so catch-up
+    // converges — faster with every step up.
+    let mut durations = Vec::new();
+    for bw in [100e6, 200e6, 800e6] {
+        let plan = FaultPlan::new()
+            .kill_broker(3 * SEC, 1)
+            .restart_broker(5 * SEC, 1)
+            .with_recovery_bandwidth(bw);
+        let r = MultiTenantSim::new(small_cfg(true, 12 * SEC).with_faults(plan)).run();
+        let f = r.fault.as_ref().unwrap();
+        let done = f
+            .recovery_done_us
+            .unwrap_or_else(|| panic!("recovery at {bw} B/s never finished"));
+        durations.push(done - 5 * SEC);
+    }
+    assert!(
+        durations[0] > durations[1] && durations[1] > durations[2],
+        "recovery duration must fall strictly with bandwidth: {durations:?}"
+    );
+}
+
+#[test]
+fn classed_storage_holds_the_canary_through_recovery_where_fifo_does_not() {
+    // The acceptance pin, on the full-size sweep points: during
+    // catch-up the surviving spindles carry the live ~640 MB/s of
+    // writes plus the recovery cold reads — past the drives' effective
+    // bandwidth. FIFO, the rpc canary's 2 kB commits queue behind the
+    // burst and its windowed p99 blows through the SLO; classed at
+    // weight 8 it keeps its share and holds.
+    let sweep = failover_ex::run_points(
+        vec![(0.5, false, 0.8), (0.5, true, 0.8)],
+        Fidelity::Quick,
+    );
+    let fifo = sweep.point(0.5, false, 0.8).unwrap();
+    let classed = sweep.point(0.5, true, 0.8).unwrap();
+    let (p_fifo, p_classed) = (fifo.rpc_window_p99_us(), classed.rpc_window_p99_us());
+    assert!(p_fifo > 0 && p_classed > 0, "window must capture requests");
+    assert!(
+        p_classed <= sweep.slo_p99_us,
+        "classed storage must hold the canary through recovery: {} > SLO {}",
+        p_classed,
+        sweep.slo_p99_us
+    );
+    assert!(
+        p_fifo > sweep.slo_p99_us,
+        "the FIFO arm must show the damage: {} <= SLO {}",
+        p_fifo,
+        sweep.slo_p99_us
+    );
+    for p in [fifo, classed] {
+        let f = p.report.fault.as_ref().unwrap();
+        assert!(p.recovery_duration_us().is_some(), "recovery must finish");
+        assert_eq!(f.min_isr_violations, 0);
+        for t in &p.report.tenants {
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+        }
+    }
+}

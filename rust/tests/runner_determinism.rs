@@ -33,6 +33,39 @@ fn qos_experiment_json_is_identical_at_jobs_1_and_8() {
 }
 
 #[test]
+fn failover_experiment_json_is_identical_at_jobs_1_and_8() {
+    // The failover sweep adds the fault layer (world-level fault events,
+    // ISR bookkeeping, recovery ticks) on top of the registry machinery;
+    // its JSON carries no wall-clock fields, so jobs must be
+    // unobservable here too.
+    use aitax::experiments::failover;
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = failover::run_points(
+            vec![(0.3, false, 1.6), (0.3, true, 1.6)],
+            Fidelity::Quick,
+        );
+        runner::set_jobs_override(None);
+        failover::to_json(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "failover JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 2, "one kill point, both storage arms");
+    for p in points {
+        assert!(
+            p.get("min_isr_violations").and_then(|v| v.as_f64()) == Some(0.0),
+            "no commit below quorum in either arm"
+        );
+    }
+}
+
+#[test]
 fn scale_experiment_model_json_is_identical_at_jobs_1_and_8() {
     // The scale sweep measures wall clock per point, which can never be
     // deterministic — so the contract is pinned on the model-output form
