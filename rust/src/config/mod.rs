@@ -226,6 +226,22 @@ pub struct Config {
     /// failure window instead of diluting it over the whole run.
     /// `None` (the default) leaves the windowed histogram empty.
     pub observe_window_us: Option<(u64, u64)>,
+    /// Client produce resilience: total send attempts per record. 0
+    /// (the default) disables the retry layer entirely — the PR 7
+    /// reject-is-loss client, bit for bit. See
+    /// [`RetryPolicy`](crate::pipeline::dc::RetryPolicy).
+    pub retry_max_attempts: u32,
+    /// Backoff before re-offering failed attempt 1; doubles per attempt.
+    pub retry_base_backoff_us: u64,
+    /// Exponential retry backoff cap.
+    pub retry_max_backoff_us: u64,
+    /// Producer ack timeout (Kafka's `request.timeout.ms`): an admitted
+    /// record unacked this long is retransmitted.
+    pub retry_request_timeout_us: u64,
+    /// In-client retry buffer bound (`buffer.memory`): bytes of
+    /// rejected records a client may hold awaiting backoff before it
+    /// starts dropping (counted as `client_dropped`).
+    pub retry_buffer_bytes: f64,
 }
 
 impl Default for Config {
@@ -246,6 +262,11 @@ impl Default for Config {
             flow_quantum_us: 25_000,
             flow_processes: 0,
             observe_window_us: None,
+            retry_max_attempts: 0,
+            retry_base_backoff_us: 50_000,
+            retry_max_backoff_us: 800_000,
+            retry_request_timeout_us: 1_000_000,
+            retry_buffer_bytes: 32e6,
         }
     }
 }
@@ -283,6 +304,11 @@ impl Config {
                 "flow_clients" => self.flow_clients = req_u64(v, k)?,
                 "flow_quantum_us" => self.flow_quantum_us = req_u64(v, k)?,
                 "flow_processes" => self.flow_processes = req_u64(v, k)? as usize,
+                "retry_max_attempts" => self.retry_max_attempts = req_u64(v, k)? as u32,
+                "retry_base_backoff_us" => self.retry_base_backoff_us = req_u64(v, k)?,
+                "retry_max_backoff_us" => self.retry_max_backoff_us = req_u64(v, k)?,
+                "retry_request_timeout_us" => self.retry_request_timeout_us = req_u64(v, k)?,
+                "retry_buffer_bytes" => self.retry_buffer_bytes = req_f64(v, k)?,
                 "protocol" => {
                     self.protocol = match v.as_str() {
                         Some("ai_share") => AccelProtocol::AiShareOnly,
@@ -304,6 +330,19 @@ impl Config {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text)?;
         self.from_json(&j)
+    }
+
+    /// The client retry policy these knobs describe, or `None` when
+    /// retries are disabled (`retry_max_attempts == 0` — the default,
+    /// and the PR 7 client bit for bit).
+    pub fn retry_policy(&self) -> Option<crate::pipeline::dc::RetryPolicy> {
+        (self.retry_max_attempts > 0).then(|| crate::pipeline::dc::RetryPolicy {
+            max_attempts: self.retry_max_attempts,
+            base_backoff_us: self.retry_base_backoff_us.max(1),
+            max_backoff_us: self.retry_max_backoff_us.max(self.retry_base_backoff_us.max(1)),
+            request_timeout_us: self.retry_request_timeout_us.max(1),
+            buffer_bytes: self.retry_buffer_bytes.max(0.0),
+        })
     }
 }
 

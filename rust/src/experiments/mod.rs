@@ -9,7 +9,10 @@
 //! × {unclassed, classed} device reads; [`failover`] — the broker-crash
 //! sweep: kill time × storage arm × recovery bandwidth, measuring
 //! recovery duration and the rpc tail through the re-replication
-//! window; [`scale`] — the million-client sweep pitting per-record
+//! window; [`cascade`] — the cascading-failure resilience sweep: a
+//! correlated second kill during the first victim's catch-up, crossed
+//! with retrying producers (idempotent commits) and clean vs unclean
+//! election; [`scale`] — the million-client sweep pitting per-record
 //! replay against the hybrid fluid/discrete flow producers, cost and
 //! convergence side by side).
 //!
@@ -23,6 +26,7 @@
 //! input order, so reports are byte-identical at any `AITAX_JOBS`.
 
 pub mod ablation;
+pub mod cascade;
 pub mod common;
 pub mod failover;
 pub mod fig05;

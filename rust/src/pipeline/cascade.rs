@@ -1,0 +1,333 @@
+//! Cascading broker failure: a second kill while the first victim is
+//! still re-replicating.
+//!
+//! PR 7's failover scenario kills one broker and measures the recovery;
+//! its open question — does recovery bandwidth self-throttle or amplify
+//! the overload? — gets sharp exactly when the failure *cascades*: the
+//! cluster loses a second broker while the first is still catching up,
+//! so the ISR collapses below quorum and every produce is refused at
+//! admission. This module packages that schedule on the same 3-tenant
+//! registry as [`failover`](crate::pipeline::failover), crossed with the
+//! two resilience levers this PR adds:
+//!
+//! * **Client retries** ([`RetryPolicy`]): with retries off, the outage
+//!   converts offered records into final rejections — measured loss.
+//!   With retries on, clients buffer and re-offer through the outage,
+//!   converting that loss into bounded tail-latency inflation (and
+//!   `client_dropped` once the retry buffer overflows).
+//! * **Election policy**
+//!   ([`ElectionPolicy`](crate::pipeline::fabric::ElectionPolicy)):
+//!   under `Clean`, the double kill leaves the partitions leaderless
+//!   until a victim restarts — a measured availability gap. Under
+//!   `Unclean`, the still-catching-up first victim is elected leader
+//!   and its missing replay window is discarded as
+//!   `unclean_lost_bytes` — data loss as a measured policy choice.
+//!
+//! The schedule: kill [`FIRST_VICTIM`] (broker 1), restart it, and then
+//! — [`CascadeSpec::kill_gap_us`] into its catch-up — kill *both*
+//! surviving brokers (a correlated rack/power event), restarting them
+//! [`CascadeSpec::outage_us`] later. The gap controls how far broker
+//! 1's catch-up has progressed when it suddenly becomes the only
+//! survivor, which is exactly the unclean-election divergence:
+//! `unclean_lost_bytes` shrinks monotonically as the gap grows.
+//! `experiments::cascade` sweeps gap × retry × election
+//! (`aitax experiment cascade`); `tests/resilience_differential.rs`
+//! pins the extended conservation identity through the double kill.
+//!
+//! [`RetryPolicy`]: crate::pipeline::dc::RetryPolicy
+
+use crate::pipeline::catchup::{self, CatchupSpec};
+use crate::pipeline::dc::RetryPolicy;
+use crate::pipeline::fabric::{ElectionPolicy, FaultPlan};
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use crate::util::units::SEC;
+
+/// The first broker killed (same victim as the failover scenario): its
+/// catch-up is what the cascading second kill interrupts.
+pub const FIRST_VICTIM: u32 = 1;
+
+/// How long past the second kill the observation window stays open —
+/// wide enough to cover the correlated outage, the restarts, and the
+/// retry-drain period where buffered records finally commit (the tail
+/// inflation the retry arm is supposed to show).
+pub const OBSERVE_TAIL_US: u64 = 6 * SEC;
+
+/// One cascading-failure scenario point.
+#[derive(Clone, Copy, Debug)]
+pub struct CascadeSpec {
+    /// Virtual instant the first victim (broker 1) dies.
+    pub first_kill_at_us: u64,
+    /// Virtual instant it comes back and starts replaying its backlog.
+    pub first_restart_at_us: u64,
+    /// How far into that catch-up the correlated second failure lands:
+    /// brokers 0 and 2 both die at `first_restart_at_us + kill_gap_us`,
+    /// leaving the still-out-of-sync broker 1 as the only survivor.
+    pub kill_gap_us: u64,
+    /// How long the correlated outage lasts before brokers 0 and 2
+    /// restart.
+    pub outage_us: u64,
+    /// Client resilience arm: `None` is the PR 7 reject-is-loss client;
+    /// `Some` arms every tenant's producers with the policy.
+    pub retry: Option<RetryPolicy>,
+    /// Leader-election arm for the whole-ISR-dead moment.
+    pub election: ElectionPolicy,
+    /// `true`: per-class GPS spindle scheduler; `false`: seed FIFO.
+    pub classed: bool,
+    /// Re-replication pacing, bytes/sec per recovering broker.
+    pub recovery_bytes_per_sec: f64,
+    /// Per-broker page-cache capacity (bytes) for the measured read
+    /// path.
+    pub cache_bytes: f64,
+}
+
+impl CascadeSpec {
+    /// The canonical retry arm used by the experiment sweep: enough
+    /// attempts and backoff headroom to ride out the correlated outage,
+    /// with a buffer small enough that a long outage visibly overflows
+    /// into `client_dropped`.
+    pub fn default_retry() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 6,
+            base_backoff_us: 100_000,
+            max_backoff_us: 800_000,
+            request_timeout_us: 1_000_000,
+            buffer_bytes: 512e6,
+        }
+    }
+
+    /// Virtual instant the correlated second failure hits.
+    pub fn second_kill_at_us(&self) -> u64 {
+        self.first_restart_at_us + self.kill_gap_us
+    }
+
+    /// Virtual instant brokers 0 and 2 come back.
+    pub fn second_restart_at_us(&self) -> u64 {
+        self.second_kill_at_us() + self.outage_us
+    }
+
+    /// The tail-observation window: request creations in
+    /// `[second kill, second kill + OBSERVE_TAIL_US]` feed the windowed
+    /// p99. Unlike the failover sweep this window *opens at the kill*:
+    /// the outage itself — and what each resilience arm turns it into
+    /// (loss, retry-delayed commits, or unclean continuation) — is the
+    /// measurement, not a nuisance transient.
+    pub fn observe_window(&self) -> (u64, u64) {
+        let k2 = self.second_kill_at_us();
+        (k2, k2 + OBSERVE_TAIL_US)
+    }
+
+    /// The fault schedule this spec induces. The second kill fells both
+    /// survivors at the same virtual instant (broker 0 first, then 2 —
+    /// a correlated failure, not two independent ones), which is what
+    /// forces the whole-ISR-dead election the policy arm decides.
+    pub fn plan(&self) -> FaultPlan {
+        let k2 = self.second_kill_at_us();
+        let r2 = self.second_restart_at_us();
+        let mut plan = FaultPlan::new()
+            .kill_broker(self.first_kill_at_us, FIRST_VICTIM)
+            .restart_broker(self.first_restart_at_us, FIRST_VICTIM)
+            .kill_broker(k2, 0)
+            .kill_broker(k2, 2)
+            .restart_broker(r2, 0)
+            .restart_broker(r2, 2)
+            .with_recovery_bandwidth(self.recovery_bytes_per_sec)
+            .with_election(self.election);
+        if self.retry.is_some() {
+            // The retry arm always runs idempotent: a retransmit racing
+            // a slow ack must be suppressed, not double-committed.
+            plan = plan.with_idempotence();
+        }
+        plan
+    }
+}
+
+/// The 3-tenant cascade registry at one scenario point: the
+/// [`catchup`] registry (same fleets, weights, seeds), the cascading
+/// fault schedule, the outage observation window on every tenant, and —
+/// on the retry arm — the client policy on every tenant's producers.
+pub fn registry(spec: CascadeSpec, horizon_us: u64) -> MultiTenantConfig {
+    let (ws, we) = spec.observe_window();
+    let mut cfg = catchup::registry(
+        CatchupSpec {
+            lag_us: 0,
+            cache_bytes: spec.cache_bytes,
+            classed_reads: spec.classed,
+        },
+        horizon_us,
+    );
+    for t in &mut cfg.tenants {
+        *t = t.clone().with_observe_window(ws, we);
+        if let Some(policy) = spec.retry {
+            *t = t.clone().with_retry(policy);
+        }
+    }
+    cfg.with_faults(spec.plan())
+}
+
+/// Run one cascade scenario point.
+pub fn run(spec: CascadeSpec, horizon_us: u64) -> MultiTenantReport {
+    MultiTenantSim::new(registry(spec, horizon_us)).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+    use crate::pipeline::fabric::FaultEvent;
+
+    fn spec() -> CascadeSpec {
+        CascadeSpec {
+            first_kill_at_us: 3 * SEC,
+            first_restart_at_us: 4 * SEC,
+            kill_gap_us: SEC / 2,
+            outage_us: SEC,
+            retry: None,
+            election: ElectionPolicy::Clean,
+            classed: true,
+            recovery_bytes_per_sec: 400e6,
+            cache_bytes: 200e6,
+        }
+    }
+
+    /// Scaled-down cascade world (small fleets, short horizon) so unit
+    /// tests stay fast; full-size runs live in `experiments::cascade`.
+    fn small_cascade(s: CascadeSpec, horizon_us: u64) -> MultiTenantConfig {
+        let mut cfg = registry(s, horizon_us);
+        cfg.tenants[0].cfg.deployment = Deployment {
+            producers: 20,
+            consumers: 30,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 30,
+        };
+        cfg.tenants[1].cfg.deployment = Deployment {
+            producers: 4,
+            consumers: 6,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 6,
+        };
+        cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+        cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+        cfg.fabric = cfg.tenants[0].cfg.clone();
+        cfg
+    }
+
+    #[test]
+    fn registry_wires_the_cascading_schedule() {
+        let s = CascadeSpec { retry: Some(CascadeSpec::default_retry()), ..spec() };
+        let cfg = registry(s, 15 * SEC);
+        assert_eq!(cfg.tenants.len(), 3);
+        let plan = cfg.faults.as_ref().expect("cascade installs a plan");
+        let k2 = 4 * SEC + SEC / 2;
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::Kill { at_us: 3 * SEC, broker: FIRST_VICTIM },
+                FaultEvent::Restart { at_us: 4 * SEC, broker: FIRST_VICTIM },
+                FaultEvent::Kill { at_us: k2, broker: 0 },
+                FaultEvent::Kill { at_us: k2, broker: 2 },
+                FaultEvent::Restart { at_us: k2 + SEC, broker: 0 },
+                FaultEvent::Restart { at_us: k2 + SEC, broker: 2 },
+            ]
+        );
+        assert!(plan.idempotent, "the retry arm must run idempotent");
+        for t in &cfg.tenants {
+            assert_eq!(t.cfg.retry_max_attempts, 6);
+            assert_eq!(t.cfg.observe_window_us, Some((k2, k2 + OBSERVE_TAIL_US)));
+        }
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn clean_cascade_survives_and_conserves() {
+        let r = MultiTenantSim::new(small_cascade(spec(), 12 * SEC)).run();
+        let f = r.fault.as_ref().expect("plan ⇒ fault accounting");
+        assert!(f.records_rejected > 0, "a leaderless window must reject");
+        assert_eq!(f.unclean_elections, 0, "clean policy never goes unclean");
+        assert_eq!(f.unclean_lost_bytes, 0.0);
+        assert_eq!(f.min_isr_violations, 0, "no commit below quorum, ever");
+        assert_eq!(f.conservation_residual(), 0, "identity must close");
+        for t in &r.tenants {
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+        }
+        assert_eq!(r.clamped_events, 0);
+    }
+
+    #[test]
+    fn unclean_election_trades_bytes_for_availability() {
+        let clean = MultiTenantSim::new(small_cascade(spec(), 12 * SEC)).run();
+        let unclean = MultiTenantSim::new(small_cascade(
+            CascadeSpec { election: ElectionPolicy::Unclean, ..spec() },
+            12 * SEC,
+        ))
+        .run();
+        let fc = clean.fault.as_ref().unwrap();
+        let fu = unclean.fault.as_ref().unwrap();
+        assert!(fu.unclean_elections > 0, "the double kill must force one");
+        assert!(
+            fu.unclean_lost_bytes > 0.0,
+            "electing a catching-up replica discards its missing window"
+        );
+        assert!(
+            fu.records_rejected < fc.records_rejected,
+            "unclean continuation must shrink the rejection window: {} vs {}",
+            fu.records_rejected,
+            fc.records_rejected
+        );
+        assert_eq!(fu.conservation_residual(), 0);
+    }
+
+    #[test]
+    fn retries_convert_final_loss_into_delay() {
+        let bare = MultiTenantSim::new(small_cascade(spec(), 14 * SEC)).run();
+        let armed = MultiTenantSim::new(small_cascade(
+            CascadeSpec { retry: Some(CascadeSpec::default_retry()), ..spec() },
+            14 * SEC,
+        ))
+        .run();
+        let fb = bare.fault.as_ref().unwrap();
+        let fa = armed.fault.as_ref().unwrap();
+        assert_eq!(fb.records_retried, 0, "no policy ⇒ no retries");
+        assert!(fa.records_retried > 0, "the outage must trigger retries");
+        assert!(
+            fa.records_rejected_final + fa.records_client_dropped
+                < fb.records_rejected_final,
+            "retries must save records: armed {}+{} vs bare {}",
+            fa.records_rejected_final,
+            fa.records_client_dropped,
+            fb.records_rejected_final
+        );
+        assert!(
+            fa.records_committed > fb.records_committed,
+            "saved records must land as commits"
+        );
+        assert_eq!(fa.conservation_residual(), 0);
+        assert_eq!(fb.conservation_residual(), 0);
+    }
+
+    #[test]
+    fn unclean_divergence_shrinks_as_the_gap_grows() {
+        let near = CascadeSpec {
+            election: ElectionPolicy::Unclean,
+            kill_gap_us: SEC / 4,
+            ..spec()
+        };
+        let far = CascadeSpec {
+            election: ElectionPolicy::Unclean,
+            kill_gap_us: 2 * SEC,
+            ..spec()
+        };
+        let rn = MultiTenantSim::new(small_cascade(near, 14 * SEC)).run();
+        let rf = MultiTenantSim::new(small_cascade(far, 14 * SEC)).run();
+        let near_loss = rn.fault.as_ref().unwrap().unclean_lost_bytes;
+        let far_loss = rf.fault.as_ref().unwrap().unclean_lost_bytes;
+        assert!(
+            far_loss < near_loss,
+            "more catch-up time before the second kill must mean less \
+             divergence to discard: near {near_loss} vs far {far_loss}"
+        );
+    }
+}

@@ -52,14 +52,16 @@
 //! holds the legacy loops as a differential reference, and
 //! `tests/qos_regression.rs` pins the QoS-off no-op contract).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::broker::qos::{QosPolicy, TokenBucket};
 use crate::config::calibration::{ObjDetCosts, RpcCosts, TrainCosts};
 use crate::config::{AccelProtocol, Config, KafkaTuning};
 use crate::config::hardware::NvmeSpec;
 use crate::metrics::bandwidth::{BandwidthMeter, Class};
-use crate::pipeline::fabric::{Fabric, FabricEv, FabricOut, FaultEvent, FaultPlan, WIRE_US};
+use crate::pipeline::fabric::{
+    Fabric, FabricEv, FabricOut, FaultEvent, FaultPlan, SendOutcome, WIRE_US,
+};
 use crate::pipeline::stage::StageModel;
 use crate::pipeline::video::BurstSchedule;
 use crate::sim::queue::Population;
@@ -82,6 +84,57 @@ pub const PARTITION_UNROUTED: u32 = u32::MAX;
 
 /// Population sampling period (0.25 s), the Fig-7 resolution.
 const POPULATION_SAMPLE_US: u64 = 250_000;
+
+/// Client-side produce resilience: what a producer does when the fabric
+/// rejects a send (dead leader / ISR below quorum) or an ack times out.
+///
+/// Disabled (`Config::retry_max_attempts == 0`, the default) the client
+/// is the PR 7 client bit for bit: a rejected record is dropped and
+/// counted at the fabric. Enabled, rejected records re-enter a bounded
+/// in-client buffer ([`RetryPolicy::buffer_bytes`]) and are re-offered
+/// with exponential backoff; records an in-flight ack never arrives for
+/// are retransmitted after [`RetryPolicy::request_timeout_us`] (the
+/// fabric's idempotence layer suppresses the duplicate if the original
+/// is still alive — see `pipeline/fabric.rs`). When the buffer
+/// overflows, records are dropped *at the client* and counted
+/// (`client_dropped`): graceful degradation instead of silent loss.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total send attempts per record (first try included). A record
+    /// whose last attempt is rejected takes the PR 7 final-loss path.
+    pub max_attempts: u32,
+    /// Backoff before re-offering failed attempt 1; doubles per attempt.
+    pub base_backoff_us: u64,
+    /// Exponential backoff cap.
+    pub max_backoff_us: u64,
+    /// Producer ack timeout: an admitted record unacked this long is
+    /// retransmitted (Kafka's `request.timeout.ms`).
+    pub request_timeout_us: u64,
+    /// In-client retry buffer bound (`buffer.memory`): bytes of
+    /// rejected records awaiting their backoff. Overflow drops at the
+    /// client, counted per tenant.
+    pub buffer_bytes: f64,
+}
+
+impl RetryPolicy {
+    /// Deterministic backoff before re-offering failed attempt
+    /// `attempt` (1-based): exponential in the attempt number, capped
+    /// at `max_backoff_us`, plus a zero-RNG jitter hashed from the
+    /// record's client sequence number so same-instant rejections don't
+    /// re-herd — nothing here draws from an RNG stream, so `jobs=N`
+    /// sweeps stay bit-identical.
+    pub fn backoff_us(&self, attempt: u32, seq: u64) -> u64 {
+        let shift = attempt.saturating_sub(1);
+        let exp = if shift >= 32 {
+            u64::MAX
+        } else {
+            self.base_backoff_us.saturating_mul(1u64 << shift)
+        };
+        let jitter = (seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 48)
+            % (self.base_backoff_us / 2 + 1);
+        self.max_backoff_us.min(exp) + jitter
+    }
+}
 
 /// Which workload a tenant runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -140,6 +193,18 @@ pub enum DcEvent {
     /// its admission time (partition already resolved, bucket already
     /// charged — see the QoS hooks in the module docs).
     DispatchAdmitted { producer: u32, partition: u32, item: Item },
+    /// A buffered (previously rejected) record re-entering the send
+    /// path at the end of its retry backoff ([`RetryPolicy`]). `attempt`
+    /// is the attempt about to be made (1-based); `seq` the client
+    /// sequence number backing the deterministic jitter and ack
+    /// matching. The record itself stays parked in the [`ItemPool`]
+    /// under `token` — its `created_us` is untouched, so e2e latency
+    /// keeps measuring from the *first* attempt.
+    RetryFire { producer: u32, partition: u32, token: u64, attempt: u32, seq: u64 },
+    /// Producer-side ack timeout for in-flight attempt `attempt` of the
+    /// record under `token`: if the commit has not arrived by now (the
+    /// token/`seq` pair is still pending), the client retransmits.
+    AckCheck { producer: u32, partition: u32, token: u64, attempt: u32, seq: u64 },
     /// Broker-fabric hop (routed to [`FabricHub`]).
     Fabric(FabricEv),
     /// Consumer `c` (tenant-local index) polls its partitions.
@@ -183,6 +248,12 @@ impl ItemPool {
 
     pub fn release(&mut self, token: u64) -> Item {
         self.free.push(token);
+        self.in_flight[token as usize]
+    }
+
+    /// Peek a live record without releasing it (the retry path re-offers
+    /// a parked record from its original token).
+    pub fn get(&self, token: u64) -> Item {
         self.in_flight[token as usize]
     }
 }
@@ -254,6 +325,22 @@ pub struct TenantMetrics {
     pub completed: u64,
     /// Completions inside the measurement window (throughput numerator).
     pub completed_in_window: u64,
+    /// Client records re-offered to the fabric by the retry layer
+    /// (record-weighted: a retried macro-record counts its aggregate).
+    /// Every retry attempt — backoff re-offer or ack-timeout
+    /// retransmit — counts here, which is what makes the extended
+    /// conservation identity close (the fabric counts each attempt in
+    /// `offered`).
+    pub retries: u64,
+    /// Records dropped at the client because the retry buffer
+    /// overflowed ([`RetryPolicy::buffer_bytes`]) — the graceful-
+    /// degradation loss mode, never silent.
+    pub client_dropped: u64,
+    /// Fabric rejections the client absorbed instead of letting stand:
+    /// rejections that were retried *plus* rejections converted into
+    /// `client_dropped`. `fabric.rejected - absorbed_rejects` is the
+    /// *final* rejection count in the extended identity.
+    pub absorbed_rejects: u64,
 }
 
 impl TenantMetrics {
@@ -276,6 +363,9 @@ impl TenantMetrics {
             produced: 0,
             completed: 0,
             completed_in_window: 0,
+            retries: 0,
+            client_dropped: 0,
+            absorbed_rejects: 0,
         }
     }
 
@@ -327,6 +417,13 @@ pub struct TenantState {
     /// `(start_us, end_us)` of the windowed-latency observation
     /// ([`Config::observe_window_us`]); `None` = no windowed histogram.
     pub observe_window: Option<(u64, u64)>,
+    /// Client produce-retry policy ([`Config::retry_policy`]); `None`
+    /// (the default) is the PR 7 reject-is-loss client bit for bit.
+    pub retry: Option<RetryPolicy>,
+    /// Bytes of rejected records currently parked in the client retry
+    /// buffer awaiting their backoff (bounded by
+    /// [`RetryPolicy::buffer_bytes`]).
+    pub retry_buffered_bytes: f64,
 }
 
 /// The shared substrate every component can reach through [`Ctx`].
@@ -339,6 +436,22 @@ pub struct DcState {
     pub tenants: Vec<TenantState>,
     pub fabric_comp: CompId,
     pub horizon_us: u64,
+    /// True when any tenant has a [`RetryPolicy`]; gates every retry
+    /// hook so a retry-free world does no extra work (and stays
+    /// bit-exact to PR 7).
+    pub retry_armed: bool,
+    /// token → client seq of sends awaiting an ack. An [`AckCheck`]
+    /// whose (token, seq) no longer matches is stale (the commit
+    /// arrived, or a newer send reused the token) and ignored. Only
+    /// point lookups — never iterated — so the map's hash order can't
+    /// leak into event order.
+    ///
+    /// [`AckCheck`]: DcEvent::AckCheck
+    pub retry_pending: HashMap<u64, u64>,
+    /// Monotone client sequence counter: unique per (re)buffered or
+    /// admitted send, feeding the zero-RNG backoff jitter and the
+    /// stale-ack discrimination above.
+    pub retry_seq: u64,
 }
 
 /// Route buffered fabric outputs: schedule hop events to the
@@ -358,6 +471,11 @@ pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
             FabricOut::Committed { token, partition, at } => {
                 let (wake, dst, consumer) = {
                     let s = &mut *ctx.shared;
+                    if s.retry_armed {
+                        // The ack arrived: retire any outstanding
+                        // timeout watch before the token is recycled.
+                        s.retry_pending.remove(&token);
+                    }
                     let mut item = s.items.release(token);
                     item.visible_us = at;
                     let part = &mut s.partitions[partition as usize];
@@ -442,26 +560,31 @@ impl Component<DcEvent, DcState> for FabricHub {
     }
 }
 
-/// Re-elect every partition led by the dead `broker` to the next alive
-/// broker in ring order, and pause the consumers owning the moved
-/// partitions for the rebalance window ([`REBALANCE_PAUSE_US`]): their
-/// gates' `busy_until` defers any poll landing inside it. If no broker
-/// is alive the partition keeps its dead leader and new produces are
-/// rejected at admission until a restart.
+/// Re-elect every partition led by the dead `broker` per the fabric's
+/// [`ElectionPolicy`](crate::pipeline::fabric::ElectionPolicy) — ring
+/// order among alive in-sync replicas, with an out-of-sync fallback
+/// (divergence measured as `unclean_lost_bytes`) only under `Unclean` —
+/// and pause the consumers owning the moved partitions for the
+/// rebalance window ([`REBALANCE_PAUSE_US`]): their gates' `busy_until`
+/// defers any poll landing inside it. If no electable broker remains
+/// the partition keeps its dead leader and new produces are rejected at
+/// admission until a restart.
 fn reassign_leaders(ctx: &mut Ctx<'_, DcEvent, DcState>, broker: u32) {
     let now = ctx.now();
     let s = &mut *ctx.shared;
-    let n = s.fabric.broker_count() as u32;
+    if !s.partitions.iter().any(|p| p.leader == broker) {
+        return;
+    }
+    // One election per kill, not per partition: the ring scan is
+    // partition-independent, and the unclean branch counts the
+    // replica's divergence exactly once.
+    let elected = s.fabric.elect_leader(broker);
     for pi in 0..s.partitions.len() {
         if s.partitions[pi].leader != broker {
             continue;
         }
-        for r in 1..n {
-            let cand = (broker + r) % n;
-            if s.fabric.broker_alive(cand) {
-                s.partitions[pi].leader = cand;
-                break;
-            }
+        if let Some(cand) = elected {
+            s.partitions[pi].leader = cand;
         }
         let (tenant, consumer) = {
             let part = &s.partitions[pi];
@@ -842,9 +965,12 @@ impl ProducerClient {
                 }
             }
         }
+        let mut ack: Option<(u64, u64)> = None;
+        let mut fire: Option<(u64, u64, u32)> = None;
+        let token;
         {
             let s = &mut *ctx.shared;
-            let token = s.items.alloc(item);
+            token = s.items.alloc(item);
             let leader = s.partitions[partition as usize].leader;
             let sent = s.fabric.send_grouped_classed(
                 now,
@@ -860,6 +986,19 @@ impl ProducerClient {
             );
             if sent {
                 s.tenants[t].metrics.net_tx_bytes += bytes;
+                if let Some(policy) = s.tenants[t].retry {
+                    // Watch for the ack: if the commit hasn't arrived
+                    // by the request timeout, retransmit.
+                    let seq = s.retry_seq;
+                    s.retry_seq += 1;
+                    s.retry_pending.insert(token, seq);
+                    ack = Some((now + policy.request_timeout_us, seq));
+                }
+            } else if s.tenants[t].retry.is_some() {
+                // Resilient client: park the record and back off
+                // instead of letting the rejection stand (this was
+                // attempt 1).
+                fire = client_reject(s, t, token, bytes, 1, now);
             } else {
                 // Fault-mode admission rejection (dead leader / ISR below
                 // quorum): no commit will ever arrive for this token, so
@@ -873,8 +1012,231 @@ impl ProducerClient {
                     .exit_n(now.min(horizon), item.count as i64);
             }
         }
+        if let Some((at, seq)) = ack {
+            ctx.at_self(at, DcEvent::AckCheck { producer: p, partition, token, attempt: 1, seq });
+        }
+        if let Some((at, seq, attempt)) = fire {
+            ctx.at_self(at, DcEvent::RetryFire { producer: p, partition, token, attempt, seq });
+        }
         drain_fabric(ctx);
     }
+
+    /// A buffered record's backoff expired: leave the client buffer and
+    /// re-offer it to the fabric through the idempotent retry entry
+    /// point. Retried macro-records ride the flow fast path whole
+    /// (`Item.count` preserved), and their e2e clock still runs from the
+    /// first attempt (`Item.created_us` is untouched in the pool).
+    fn retry_fire(
+        &mut self,
+        ctx: &mut Ctx<'_, DcEvent, DcState>,
+        p: u32,
+        partition: u32,
+        token: u64,
+        attempt: u32,
+        seq: u64,
+    ) {
+        let now = ctx.now();
+        let t = self.tenant as usize;
+        let pid = p as usize;
+        let mut ack: Option<(u64, u64)> = None;
+        let mut fire: Option<(u64, u64, u32)> = None;
+        {
+            let s = &mut *ctx.shared;
+            let item = s.items.get(token);
+            let overhead = s.tenants[t].fetch.record_overhead;
+            let bytes = item.bytes + overhead * item.count as f64;
+            let ts = &mut s.tenants[t];
+            ts.retry_buffered_bytes = (ts.retry_buffered_bytes - bytes).max(0.0);
+            ts.metrics.retries += item.count;
+            let policy = ts.retry.expect("RetryFire on a tenant without a RetryPolicy");
+            let leader = s.partitions[partition as usize].leader;
+            let outcome = s.fabric.send_retry_grouped_classed(
+                now,
+                partition,
+                leader,
+                bytes,
+                item.count,
+                token,
+                self.tenant,
+                &mut s.meter,
+                &mut self.units[pid].nic,
+                &mut s.fabric_out,
+            );
+            match outcome {
+                SendOutcome::Admitted => {
+                    s.tenants[t].metrics.net_tx_bytes += bytes;
+                    s.retry_pending.insert(token, seq);
+                    ack = Some((now + policy.request_timeout_us, seq));
+                }
+                SendOutcome::Duplicate => {
+                    // A live in-flight copy already exists at the
+                    // fabric — nothing new on the wire; keep watching
+                    // for its ack.
+                    s.retry_pending.insert(token, seq);
+                    ack = Some((now + policy.request_timeout_us, seq));
+                }
+                SendOutcome::Rejected => {
+                    fire = client_reject(s, t, token, bytes, attempt, now);
+                }
+            }
+        }
+        if let Some((at, ack_seq)) = ack {
+            ctx.at_self(
+                at,
+                DcEvent::AckCheck { producer: p, partition, token, attempt, seq: ack_seq },
+            );
+        }
+        if let Some((at, next_seq, next_attempt)) = fire {
+            ctx.at_self(
+                at,
+                DcEvent::RetryFire {
+                    producer: p,
+                    partition,
+                    token,
+                    attempt: next_attempt,
+                    seq: next_seq,
+                },
+            );
+        }
+        drain_fabric(ctx);
+    }
+
+    /// Ack timeout for in-flight attempt `attempt`: if the commit still
+    /// hasn't arrived, retransmit (attempt `attempt + 1`). The fabric's
+    /// dedup layer keeps a retransmit racing a slow original from
+    /// double-committing, and "un-loses" a record whose broker died
+    /// with it in flight.
+    fn ack_check(
+        &mut self,
+        ctx: &mut Ctx<'_, DcEvent, DcState>,
+        p: u32,
+        partition: u32,
+        token: u64,
+        attempt: u32,
+        seq: u64,
+    ) {
+        let now = ctx.now();
+        let t = self.tenant as usize;
+        let pid = p as usize;
+        let mut ack: Option<(u64, u32)> = None;
+        let mut fire: Option<(u64, u64, u32)> = None;
+        {
+            let s = &mut *ctx.shared;
+            if s.retry_pending.get(&token) != Some(&seq) {
+                // Acked (the commit removed the entry) or superseded by
+                // a newer send that reused the token: stale check.
+                return;
+            }
+            let policy = s.tenants[t].retry.expect("AckCheck on a tenant without a RetryPolicy");
+            if attempt >= policy.max_attempts {
+                // Out of attempts with the ack still outstanding: stop
+                // watching, but leave the record's fate to the fabric —
+                // it may still commit (released then), or its broker
+                // died with it and it is already counted lost.
+                // Releasing the token here would hand a possibly
+                // in-flight record's pool slot to a new record.
+                s.retry_pending.remove(&token);
+                return;
+            }
+            let item = s.items.get(token);
+            let overhead = s.tenants[t].fetch.record_overhead;
+            let bytes = item.bytes + overhead * item.count as f64;
+            s.tenants[t].metrics.retries += item.count;
+            let leader = s.partitions[partition as usize].leader;
+            let outcome = s.fabric.send_retry_grouped_classed(
+                now,
+                partition,
+                leader,
+                bytes,
+                item.count,
+                token,
+                self.tenant,
+                &mut s.meter,
+                &mut self.units[pid].nic,
+                &mut s.fabric_out,
+            );
+            match outcome {
+                SendOutcome::Admitted => {
+                    s.tenants[t].metrics.net_tx_bytes += bytes;
+                    ack = Some((now + policy.request_timeout_us, attempt + 1));
+                }
+                SendOutcome::Duplicate => {
+                    ack = Some((now + policy.request_timeout_us, attempt + 1));
+                }
+                SendOutcome::Rejected => {
+                    // Admission refused the retransmit, which implies no
+                    // live fabric copy exists (an active copy would have
+                    // been suppressed as Duplicate above) — safe to park
+                    // the record client-side.
+                    s.retry_pending.remove(&token);
+                    fire = client_reject(s, t, token, bytes, attempt + 1, now);
+                }
+            }
+        }
+        if let Some((at, next_attempt)) = ack {
+            ctx.at_self(
+                at,
+                DcEvent::AckCheck { producer: p, partition, token, attempt: next_attempt, seq },
+            );
+        }
+        if let Some((at, next_seq, next_attempt)) = fire {
+            ctx.at_self(
+                at,
+                DcEvent::RetryFire {
+                    producer: p,
+                    partition,
+                    token,
+                    attempt: next_attempt,
+                    seq: next_seq,
+                },
+            );
+        }
+        drain_fabric(ctx);
+    }
+}
+
+/// Client-side disposition of a rejected attempt `attempt` (1-based) on
+/// a retry-armed tenant. Either the rejection becomes *final* (attempts
+/// exhausted — the PR 7 loss path, record released and counted at the
+/// fabric), or the client absorbs it: parked in the bounded retry
+/// buffer for a deterministic backoff (returns the
+/// `(fire_at, seq, next_attempt)` to schedule), or — buffer full —
+/// dropped at the client and counted (`client_dropped`).
+fn client_reject(
+    s: &mut DcState,
+    t: usize,
+    token: u64,
+    bytes: f64,
+    attempt: u32,
+    now: u64,
+) -> Option<(u64, u64, u32)> {
+    let count = s.items.get(token).count;
+    let horizon = s.horizon_us;
+    let policy = s.tenants[t].retry.expect("client_reject on a tenant without a RetryPolicy");
+    if attempt >= policy.max_attempts {
+        // Final rejection: the record leaves the system exactly as a
+        // retry-free client's would.
+        s.items.release(token);
+        s.tenants[t].metrics.population.exit_n(now.min(horizon), count as i64);
+        return None;
+    }
+    if s.tenants[t].retry_buffered_bytes + bytes > policy.buffer_bytes {
+        // Buffer overflow: graceful degradation, measured. The
+        // rejection is still absorbed (it is not final — the client
+        // converted it into a client-side drop).
+        let m = &mut s.tenants[t].metrics;
+        m.absorbed_rejects += count;
+        m.client_dropped += count;
+        m.population.exit_n(now.min(horizon), count as i64);
+        s.items.release(token);
+        return None;
+    }
+    let ts = &mut s.tenants[t];
+    ts.metrics.absorbed_rejects += count;
+    ts.retry_buffered_bytes += bytes;
+    let seq = s.retry_seq;
+    s.retry_seq += 1;
+    Some((now + policy.backoff_us(attempt, seq), seq, attempt + 1))
 }
 
 impl Component<DcEvent, DcState> for ProducerClient {
@@ -886,6 +1248,12 @@ impl Component<DcEvent, DcState> for ProducerClient {
             }
             DcEvent::DispatchAdmitted { producer, partition, item } => {
                 self.dispatch(ctx, producer, partition, item, true)
+            }
+            DcEvent::RetryFire { producer, partition, token, attempt, seq } => {
+                self.retry_fire(ctx, producer, partition, token, attempt, seq)
+            }
+            DcEvent::AckCheck { producer, partition, token, attempt, seq } => {
+                self.ack_check(ctx, producer, partition, token, attempt, seq)
             }
             _ => debug_assert!(false, "unexpected event for ProducerClient"),
         }
@@ -1259,6 +1627,10 @@ impl FabricSpec {
         }
         if let Some(plan) = &self.faults {
             fabric.enable_faults(plan.min_isr, plan.recovery_bytes_per_sec);
+            fabric.set_election(plan.election);
+            if plan.idempotent {
+                fabric.enable_dedup();
+            }
         }
         fabric
     }
@@ -1378,10 +1750,26 @@ pub fn build_with_qos(
             },
             fetch_bucket: quota.fetch_bucket(),
             observe_window: spec.cfg.observe_window_us,
+            retry: spec.cfg.retry_policy(),
+            retry_buffered_bytes: 0.0,
         });
     }
+    let retry_armed = tenant_states.iter().any(|ts| ts.retry.is_some());
 
     let mut shared_fabric = fabric.build();
+    if retry_armed {
+        // Client retries require idempotent commits: a retransmit
+        // racing a slow ack would otherwise be admitted as a second
+        // live copy of the same token and double-commit it. The dedup
+        // scan lives in the fault layer, so a retry-armed world arms it
+        // even under an empty schedule (pinned observationally inert by
+        // `tests/failover_differential.rs`).
+        if !shared_fabric.faults_enabled() {
+            let defaults = FaultPlan::new();
+            shared_fabric.enable_faults(defaults.min_isr, defaults.recovery_bytes_per_sec);
+        }
+        shared_fabric.enable_dedup();
+    }
     if let Some(weights) = qos.and_then(|p| p.cpu_weights.as_deref()) {
         shared_fabric.enable_weighted_cpu(weights);
     }
@@ -1397,6 +1785,9 @@ pub fn build_with_qos(
         tenants: tenant_states,
         fabric_comp: CompId::INVALID,
         horizon_us,
+        retry_armed,
+        retry_pending: HashMap::new(),
+        retry_seq: 1,
     };
     let mut world = World::new(state);
 
@@ -1696,6 +2087,14 @@ pub struct TenantSummary {
     /// measured read path is disabled — and in any healthy streaming
     /// run; nonzero means the tenant ended the horizon still behind.
     pub consumer_lag_bytes: u64,
+    /// Client records re-offered by the retry layer (0 with no
+    /// [`RetryPolicy`]).
+    pub retries: u64,
+    /// Records dropped at the client on retry-buffer overflow.
+    pub client_dropped: u64,
+    /// Fabric rejections the client absorbed (retried or converted to
+    /// `client_dropped`) instead of letting stand as final loss.
+    pub absorbed_rejects: u64,
 }
 
 /// Summarize tenant `tenant` of a finished world.
@@ -1729,6 +2128,9 @@ pub fn summary_for_tenant(
         consumer_lag_bytes: (ts.part_base..ts.part_base + ts.part_count)
             .map(|g| world.shared.fabric.group_lag_bytes(g))
             .sum(),
+        retries: m.retries,
+        client_dropped: m.client_dropped,
+        absorbed_rejects: m.absorbed_rejects,
     }
 }
 

@@ -93,6 +93,25 @@ pub enum FabricOut {
     Committed { token: u64, partition: u32, at: u64 },
 }
 
+/// Outcome of a retransmission ([`Fabric::send_retry_grouped_classed`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendOutcome {
+    /// Admitted as a fresh produce; a commit (or loss) will follow.
+    Admitted,
+    /// Rejected at admission (dead leader / ISR below quorum); the
+    /// client decides whether the rejection is final.
+    Rejected,
+    /// Suppressed by broker-side dedup: the original attempt is still in
+    /// flight and will resolve the record — committing this copy too
+    /// would deliver it twice. The client should keep waiting.
+    Duplicate,
+}
+
+/// Token value marking an in-flight slot whose record identity has been
+/// retired (committed and freed, or a repaired loss) so later dedup
+/// scans cannot match it against a reused item token.
+const RETIRED_TOKEN: u64 = u64::MAX;
+
 struct InFlight {
     token: u64,
     partition: u32,
@@ -204,6 +223,25 @@ impl FaultEvent {
     }
 }
 
+/// Leader-election policy when a partition's leader dies.
+///
+/// `Clean` (the default, Kafka's `unclean.leader.election.enable=false`)
+/// elects only alive **in-sync** replicas; if the whole ISR is gone the
+/// partition stays leaderless — every produce is rejected at admission
+/// until a replica returns. Availability is sacrificed, data never is.
+///
+/// `Unclean` elects the first *alive* replica in ring order even if it
+/// is out of sync. The elected replica's log becomes the truth: every
+/// byte in its un-replayed catch-up backlog is permanently gone, counted
+/// in [`FaultStats::unclean_lost_bytes`] — data loss becomes a measured
+/// policy choice, never silent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ElectionPolicy {
+    #[default]
+    Clean,
+    Unclean,
+}
+
 /// A world-level fault schedule plus the membership policy knobs.
 /// `FaultPlan::default()` (no events, `min_isr = 1`) installed on a
 /// world is observationally inert — pinned bit-exact by
@@ -219,6 +257,13 @@ pub struct FaultPlan {
     /// how fast catch-up cold-reads the missed bytes off the source
     /// leaders' spindles.
     pub recovery_bytes_per_sec: f64,
+    /// What happens when a partition's whole ISR is dead
+    /// ([`ElectionPolicy`]). `Clean` by default.
+    pub election: ElectionPolicy,
+    /// Broker-side duplicate suppression for retrying producers
+    /// ([`Fabric::enable_dedup`]); off by default. With no client
+    /// retransmissions the dedup machinery is observationally inert.
+    pub idempotent: bool,
 }
 
 impl Default for FaultPlan {
@@ -227,6 +272,8 @@ impl Default for FaultPlan {
             events: Vec::new(),
             min_isr: 1,
             recovery_bytes_per_sec: 400e6,
+            election: ElectionPolicy::Clean,
+            idempotent: false,
         }
     }
 }
@@ -263,12 +310,29 @@ impl FaultPlan {
         self.recovery_bytes_per_sec = bytes_per_sec;
         self
     }
+
+    /// Pick the leader-election policy (`Clean` by default).
+    pub fn with_election(mut self, election: ElectionPolicy) -> Self {
+        self.election = election;
+        self
+    }
+
+    /// Enable broker-side duplicate suppression for retrying producers.
+    pub fn with_idempotence(mut self) -> Self {
+        self.idempotent = true;
+        self
+    }
 }
 
 /// Fault-mode accounting ([`Fabric::fault_stats`]). The conservation
 /// contract pinned by `tests/failover_differential.rs`:
 /// `records_offered == records_committed + records_rejected +
-/// records_lost + active in-flight`.
+/// records_lost + active in-flight`. With retrying producers each
+/// retransmission re-enters `records_offered`, so the identity extends
+/// (pinned by `tests/resilience_differential.rs`) to
+/// `offered − retries == committed + (rejected − rejections absorbed by
+/// the client) + lost + in-flight`, with the client-side terms summed
+/// from the tenants' retry counters.
 #[derive(Clone, Debug, Default)]
 pub struct FaultStats {
     /// Produce attempts entering the fabric (post-dispatch).
@@ -298,6 +362,17 @@ pub struct FaultStats {
     /// `(broker, virtual time)` at which each recovery completed (the
     /// last missed byte applied and the broker back in sync).
     pub recovered_at_us: Vec<(u32, u64)>,
+    /// Retransmissions suppressed by broker-side dedup
+    /// ([`Fabric::enable_dedup`]): the original was still in flight, so
+    /// admitting the duplicate would have double-committed the record.
+    pub dedup_suppressed_records: u64,
+    pub dedup_suppressed_bytes: f64,
+    /// Log divergence consumed by unclean elections: bytes an elected
+    /// out-of-sync replica had not yet replayed when its log became the
+    /// truth ([`ElectionPolicy::Unclean`]).
+    pub unclean_lost_bytes: f64,
+    /// Elections that promoted an out-of-sync replica.
+    pub unclean_elections: u64,
 }
 
 /// One recovering broker's claim on bytes it missed from one source:
@@ -331,6 +406,10 @@ struct FaultState {
     /// Per-broker latest catch-up apply completion (device + NIC +
     /// follower write), for the recovery-duration stamp.
     last_apply_us: Vec<u64>,
+    /// Leader-election policy ([`Fabric::set_election`]).
+    election: ElectionPolicy,
+    /// Broker-side duplicate suppression ([`Fabric::enable_dedup`]).
+    dedup: bool,
     stats: FaultStats,
 }
 
@@ -345,6 +424,8 @@ impl FaultState {
             replay: vec![Vec::new(); brokers],
             recovery_ticks: vec![0; brokers],
             last_apply_us: vec![0; brokers],
+            election: ElectionPolicy::Clean,
+            dedup: false,
             stats: FaultStats::default(),
         }
     }
@@ -545,6 +626,63 @@ impl Fabric {
     /// Whether the failure machinery is installed.
     pub fn faults_enabled(&self) -> bool {
         self.faults.is_some()
+    }
+
+    /// Pick the leader-election policy (fault mode only; `Clean` is the
+    /// default and the bit-exact PR 7-compatible choice on every
+    /// schedule whose candidates are all in sync).
+    pub fn set_election(&mut self, election: ElectionPolicy) {
+        self.faults.as_mut().expect("enable_faults first").election = election;
+    }
+
+    /// Enable broker-side duplicate suppression for retrying producers:
+    /// a retransmission ([`Fabric::send_retry_grouped_classed`]) whose
+    /// original attempt is still in flight is suppressed instead of
+    /// committed twice, and a retransmission of a *lost* record repairs
+    /// the loss accounting (the retry, not the crash, decides the
+    /// record's fate). Inert unless retransmissions actually arrive.
+    pub fn enable_dedup(&mut self) {
+        self.faults.as_mut().expect("enable_faults first").dedup = true;
+    }
+
+    /// Whether broker-side dedup is enabled.
+    pub fn dedup_enabled(&self) -> bool {
+        self.faults.as_ref().map_or(false, |fs| fs.dedup)
+    }
+
+    /// Elect a new leader for partitions led by dead broker `dead`,
+    /// ring-order. Both policies prefer an alive in-sync replica (the
+    /// exact PR 7 scan when everyone but the victim is healthy). When
+    /// the whole ISR is gone, `Clean` returns `None` — the partition
+    /// stays leaderless and admission rejects until a replica returns —
+    /// while `Unclean` promotes the first alive out-of-sync replica,
+    /// consuming its un-replayed backlog as measured divergence
+    /// ([`FaultStats::unclean_lost_bytes`]): the new leader's log is now
+    /// the truth, so it rejoins the ISR with nothing left to replay.
+    pub fn elect_leader(&mut self, dead: u32) -> Option<u32> {
+        let n = self.brokers.len() as u32;
+        for r in 1..n {
+            let cand = (dead + r) % n;
+            if self.broker_alive(cand) && self.broker_in_sync(cand) {
+                return Some(cand);
+            }
+        }
+        let fs = self.faults.as_mut()?;
+        if fs.election != ElectionPolicy::Unclean {
+            return None;
+        }
+        for r in 1..n {
+            let cand = (dead + r) % n;
+            if fs.alive[cand as usize] {
+                let divergence: f64 = fs.replay[cand as usize].iter().map(|e| e.bytes).sum();
+                fs.stats.unclean_lost_bytes += divergence;
+                fs.stats.unclean_elections += 1;
+                fs.replay[cand as usize].clear();
+                fs.in_sync[cand as usize] = true;
+                return Some(cand);
+            }
+        }
+        None
     }
 
     /// Fault-mode accounting (`None` when faults are disabled).
@@ -820,6 +958,76 @@ impl Fabric {
         });
         out.push(FabricOut::Schedule(t_tx, FabricEv::LeaderArrive { fid }));
         true
+    }
+
+    /// A client retransmission of a record already offered once under
+    /// the same `token` (its per-producer sequence number — tokens are
+    /// unique per live record, so the token *is* the idempotence key).
+    ///
+    /// With dedup enabled the broker first checks the token against its
+    /// in-flight state: an **active** original suppresses the duplicate
+    /// (counted, [`SendOutcome::Duplicate`]) — this is the retry racing
+    /// a slow ack, and admitting it would commit the record twice. A
+    /// **lost** original (its slot is retained precisely so this scan
+    /// can find it) is repaired: the loss accounting is reversed and the
+    /// slot's identity retired, because the record's fate now rides this
+    /// retransmission. After the dedup step (or immediately, without
+    /// dedup) the retransmission takes the normal admission path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_retry_grouped_classed(
+        &mut self,
+        now: u64,
+        partition: u32,
+        leader: u32,
+        bytes: f64,
+        records: u64,
+        token: u64,
+        class: u8,
+        meter: &mut BandwidthMeter,
+        producer_nic: &mut FifoServer,
+        out: &mut Vec<FabricOut>,
+    ) -> SendOutcome {
+        debug_assert_ne!(token, RETIRED_TOKEN);
+        if self.dedup_enabled() {
+            let mut repair: Option<u32> = None;
+            for (fid, f) in self.inflight.iter().enumerate() {
+                if f.token != token {
+                    continue;
+                }
+                if f.active {
+                    let fs = self.faults.as_mut().unwrap();
+                    fs.stats.records_offered += records;
+                    fs.stats.bytes_offered += bytes;
+                    fs.stats.dedup_suppressed_records += records;
+                    fs.stats.dedup_suppressed_bytes += bytes;
+                    return SendOutcome::Duplicate;
+                }
+                repair = Some(fid as u32);
+                break;
+            }
+            if let Some(fid) = repair {
+                // Reverse the loss with the slot's own numbers (exact in
+                // u64) and retire its identity so a later retry of a
+                // record that happens to reuse this item token cannot
+                // re-match the slot.
+                let (r, b) = {
+                    let f = &mut self.inflight[fid as usize];
+                    let rb = (f.records, f.bytes);
+                    f.token = RETIRED_TOKEN;
+                    rb
+                };
+                let fs = self.faults.as_mut().unwrap();
+                fs.stats.records_lost -= r;
+                fs.stats.bytes_lost -= b;
+            }
+        }
+        if self.send_grouped_classed(
+            now, partition, leader, bytes, records, token, class, meter, producer_nic, out,
+        ) {
+            SendOutcome::Admitted
+        } else {
+            SendOutcome::Rejected
+        }
     }
 
     /// Advance one fabric event.
@@ -1137,6 +1345,7 @@ impl Fabric {
             fs.stats.records_committed += records;
             fs.stats.bytes_committed += bytes;
         }
+        let dedup = self.dedup_enabled();
         let f = &mut self.inflight[fid as usize];
         f.active = false;
         out.push(FabricOut::Committed {
@@ -1144,6 +1353,12 @@ impl Fabric {
             partition: f.partition,
             at: now,
         });
+        if dedup {
+            // The item token can be released and reused once the commit
+            // is delivered; retire the slot's copy so a later dedup scan
+            // cannot match this freed slot against the token's next life.
+            f.token = RETIRED_TOKEN;
+        }
         self.free.push(fid);
     }
 
@@ -1925,5 +2140,129 @@ mod tests {
         assert!((s.rereplicated_bytes - bytes).abs() < 1e-9);
         assert_eq!(f.recovery_backlog_bytes(1), 0.0);
         assert_conservation(&f);
+    }
+
+    /// The extended identity with driver-tracked retransmissions:
+    /// every retransmit adds to `offered`, so the driver's retry count
+    /// must be subtracted before the PR 7 identity closes.
+    fn assert_conservation_with_retries(f: &Fabric, retries: u64) {
+        let s = f.fault_stats().unwrap();
+        let (active, _) = f.active_in_flight();
+        assert_eq!(
+            s.records_offered - retries,
+            s.records_committed + s.records_rejected + s.records_lost + active,
+            "extended conservation: {s:?} active={active} retries={retries}"
+        );
+    }
+
+    #[test]
+    fn dedup_suppresses_a_retransmit_racing_its_own_ack() {
+        // The original is still in flight when the client times out and
+        // retransmits. Without dedup the fabric would admit a second
+        // live copy of token 7 and commit it twice; with dedup the
+        // duplicate is counted and dropped, and exactly one commit
+        // lands.
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        f.enable_dedup();
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        assert!(f.send(0, 0, 0, bytes, 7, &mut meter, &mut nic, &mut out));
+        let outcome = f.send_retry_grouped_classed(
+            500, 0, 0, bytes, 1, 7, 0, &mut meter, &mut nic, &mut out,
+        );
+        assert_eq!(outcome, SendOutcome::Duplicate);
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 1, "the duplicate must not double-commit");
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_committed, 1);
+        assert_eq!(s.dedup_suppressed_records, 1);
+        assert!((s.dedup_suppressed_bytes - bytes).abs() < 1e-9);
+        // offered counts both attempts; one was the retransmit.
+        assert_eq!(s.records_offered, 2);
+        assert_conservation_with_retries(&f, 1);
+    }
+
+    #[test]
+    fn retransmit_of_a_lost_record_repairs_the_loss() {
+        // Leader 0 dies with token 3 in flight: the record is lost. The
+        // client's retransmit to the re-elected leader finds the lost
+        // slot, reverses the loss accounting (the retry now owns the
+        // record's fate), and commits on the survivors.
+        let mut f = fabric();
+        f.enable_faults(1, 400e6);
+        f.enable_dedup();
+        let mut meter = BandwidthMeter::new();
+        let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+        let mut q: EventQueue<FabricEv> = EventQueue::new();
+        let mut out = Vec::new();
+        let bytes = 37_300.0;
+        assert!(f.send(0, 0, 0, bytes, 3, &mut meter, &mut nic, &mut out));
+        f.kill_broker(1, 0, &mut out);
+        assert_eq!(drain_all(&mut f, &mut q, &mut meter, &mut out), 0);
+        assert_eq!(f.fault_stats().unwrap().records_lost, 1);
+        let elected = f.elect_leader(0).expect("survivors are in sync");
+        let outcome = f.send_retry_grouped_classed(
+            2_000, 0, elected, bytes, 1, 3, 0, &mut meter, &mut nic, &mut out,
+        );
+        assert_eq!(outcome, SendOutcome::Admitted);
+        let commits = drain_all(&mut f, &mut q, &mut meter, &mut out);
+        assert_eq!(commits, 1, "the retransmit must commit the record");
+        let s = f.fault_stats().unwrap();
+        assert_eq!(s.records_lost, 0, "the retry un-lost the record");
+        assert_eq!(s.records_committed, 1);
+        assert_eq!(s.dedup_suppressed_records, 0);
+        assert_conservation_with_retries(&f, 1);
+    }
+
+    #[test]
+    fn clean_election_stops_where_unclean_proceeds_at_a_counted_cost() {
+        // Build the cascade's terminal state by hand: follower 2 died,
+        // missed bytes, restarted (alive, out of sync, backlog not yet
+        // replayed) — then both in-sync brokers die. Clean election
+        // finds no candidate; unclean promotes broker 2 and counts its
+        // un-replayed backlog as divergence.
+        let setup = || {
+            let mut f = fabric();
+            f.enable_faults(1, 400e6);
+            let mut meter = BandwidthMeter::new();
+            let mut nic = FifoServer::new(crate::util::units::gbps(100), 0);
+            let mut q: EventQueue<FabricEv> = EventQueue::new();
+            let mut out = Vec::new();
+            f.kill_broker(0, 2, &mut out);
+            for i in 0..5u64 {
+                assert!(f.send(i * 1_000, 0, 0, 37_300.0, i, &mut meter, &mut nic, &mut out));
+            }
+            drain_all(&mut f, &mut q, &mut meter, &mut out);
+            f.restart_broker(100_000, 2, &mut out);
+            // Do NOT drain: broker 2 is alive but still owes its replay.
+            assert!(f.broker_alive(2) && !f.broker_in_sync(2));
+            f.kill_broker(100_001, 0, &mut out);
+            f.kill_broker(100_001, 1, &mut out);
+            f
+        };
+        let mut clean = setup();
+        assert_eq!(clean.elect_leader(0), None, "clean: whole ISR is gone");
+        assert_eq!(clean.fault_stats().unwrap().unclean_elections, 0);
+
+        let mut unclean = setup();
+        let backlog = unclean.recovery_backlog_bytes(2);
+        assert!(backlog > 0.0);
+        unclean.set_election(ElectionPolicy::Unclean);
+        assert_eq!(unclean.elect_leader(0), Some(2));
+        let s = unclean.fault_stats().unwrap();
+        assert_eq!(s.unclean_elections, 1);
+        assert!(
+            (s.unclean_lost_bytes - backlog).abs() < 1e-9,
+            "divergence must equal the un-replayed backlog: {} vs {backlog}",
+            s.unclean_lost_bytes
+        );
+        // The elected replica's log is now the truth: nothing left to
+        // replay, and it is in sync by definition.
+        assert_eq!(unclean.recovery_backlog_bytes(2), 0.0);
+        assert!(unclean.broker_in_sync(2));
     }
 }

@@ -277,6 +277,19 @@ impl TenantDef {
         self.cfg.observe_window_us = Some((start_us, end_us));
         self
     }
+
+    /// Arm this tenant's producers with a client retry policy
+    /// ([`crate::pipeline::dc::RetryPolicy`]): rejected / unacked sends
+    /// are buffered and re-offered with deterministic backoff instead
+    /// of standing as loss. Off by default (the PR 7 client).
+    pub fn with_retry(mut self, policy: crate::pipeline::dc::RetryPolicy) -> Self {
+        self.cfg.retry_max_attempts = policy.max_attempts;
+        self.cfg.retry_base_backoff_us = policy.base_backoff_us;
+        self.cfg.retry_max_backoff_us = policy.max_backoff_us;
+        self.cfg.retry_request_timeout_us = policy.request_timeout_us;
+        self.cfg.retry_buffer_bytes = policy.buffer_bytes;
+        self
+    }
 }
 
 /// An N-tenant deployment on one shared fabric.
@@ -492,6 +505,44 @@ pub struct FaultReport {
     pub rereplication_read_share: f64,
     /// Replay bytes still owed at the horizon (0.0 once recovered).
     pub backlog_bytes: f64,
+    /// Client retry attempts summed over the tenants (0 without a
+    /// [`crate::pipeline::dc::RetryPolicy`]). With retries, the
+    /// identity extends to `offered − retried == committed +
+    /// rejected_final + lost + in_flight + client_dropped`, still
+    /// u64-exact (`tests/resilience_differential.rs`).
+    pub records_retried: u64,
+    /// Records dropped at the clients on retry-buffer overflow.
+    pub records_client_dropped: u64,
+    /// Rejections that stood: `records_rejected` minus the rejections
+    /// the clients absorbed (retried or converted to client drops).
+    pub records_rejected_final: u64,
+    /// Duplicate retransmits the brokers' idempotence layer suppressed
+    /// (0 without [`FaultPlan::with_idempotence`]).
+    pub records_dedup_suppressed: u64,
+    /// Committed bytes discarded by electing out-of-sync replicas (0
+    /// under [`ElectionPolicy::Clean`], the default) — data loss as a
+    /// measured policy choice, never silent.
+    ///
+    /// [`ElectionPolicy::Clean`]: crate::pipeline::fabric::ElectionPolicy::Clean
+    pub unclean_lost_bytes: f64,
+    /// Out-of-sync leader elections taken (unclean policy only).
+    pub unclean_elections: u64,
+}
+
+impl FaultReport {
+    /// Residual of the extended conservation identity
+    /// `offered − retried − committed − rejected_final − lost −
+    /// in_flight − client_dropped` as a signed count — 0 in every
+    /// healthy run, whatever the fault schedule.
+    pub fn conservation_residual(&self) -> i64 {
+        self.records_offered as i64
+            - self.records_retried as i64
+            - self.records_committed as i64
+            - self.records_rejected_final as i64
+            - self.records_lost as i64
+            - self.records_in_flight as i64
+            - self.records_client_dropped as i64
+    }
 }
 
 /// Results of one N-tenant run: generic per-tenant summaries plus the
@@ -558,6 +609,12 @@ impl MultiTenantSim {
 
         let elapsed = c.duration_us;
         let read_stats = world.shared.fabric.read_path_stats();
+        let tenants: Vec<TenantSummary> = c
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| dc::summary_for_tenant(&world, i, &t.name))
+            .collect();
         let fault = world.shared.fabric.fault_stats().map(|fs| {
             let fabric = &world.shared.fabric;
             let brokers = c.fabric.deployment.brokers as u32;
@@ -566,6 +623,9 @@ impl MultiTenantSim {
             let all_in_sync =
                 (0..brokers).all(|b| fabric.broker_alive(b) && fabric.broker_in_sync(b));
             let device_reads = fabric.device_read_bytes();
+            let retried: u64 = tenants.iter().map(|t| t.retries).sum();
+            let dropped: u64 = tenants.iter().map(|t| t.client_dropped).sum();
+            let absorbed: u64 = tenants.iter().map(|t| t.absorbed_rejects).sum();
             FaultReport {
                 records_offered: fs.records_offered,
                 records_committed: fs.records_committed,
@@ -584,15 +644,16 @@ impl MultiTenantSim {
                     0.0
                 },
                 backlog_bytes,
+                records_retried: retried,
+                records_client_dropped: dropped,
+                records_rejected_final: fs.records_rejected.saturating_sub(absorbed),
+                records_dedup_suppressed: fs.dedup_suppressed_records,
+                unclean_lost_bytes: fs.unclean_lost_bytes,
+                unclean_elections: fs.unclean_elections,
             }
         });
         MultiTenantReport {
-            tenants: c
-                .tenants
-                .iter()
-                .enumerate()
-                .map(|(i, t)| dc::summary_for_tenant(&world, i, &t.name))
-                .collect(),
+            tenants,
             broker_storage_write_util: world.shared.fabric.max_storage_write_util(elapsed),
             broker_storage_read_util: world.shared.fabric.max_storage_read_util(elapsed),
             broker_net_rx_util: world.shared.fabric.max_nic_rx_util(elapsed),

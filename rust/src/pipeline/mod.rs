@@ -37,9 +37,14 @@
 //!   the shrunken ISR, consumers pause for the rebalance) and restarts
 //!   it (the victim replays its missed bytes as a maximally-lagged
 //!   consumer through the measured read path, then rejoins the ISR).
+//! * [`cascade`] — cascading failure on top of [`failover`]: a second,
+//!   correlated kill lands while the first victim is still catching up,
+//!   crossed with the client-resilience levers (retrying producers with
+//!   idempotent commits, clean vs unclean leader election).
 //!
 //! [`FaultPlan`]: fabric::FaultPlan
 
+pub mod cascade;
 pub mod catchup;
 pub mod dc;
 pub mod fabric;

@@ -1,0 +1,360 @@
+//! Client-resilience differential suite.
+//!
+//! PR 8 adds the client half of the failure story: retrying producers
+//! (bounded buffer, exponential deterministic backoff), broker-side
+//! idempotent commits (dedup), and the clean/unclean election policy.
+//! These tests pin its contract the way `failover_differential.rs`
+//! pinned the fault layer:
+//!
+//! 1. **Off-path fidelity** — arming dedup or the (default) election
+//!    policy on a real fault schedule without any retrying client must
+//!    be bit-exact to the PR 7 world: same events, same counters, same
+//!    floats. The retry machinery only exists when a tenant carries a
+//!    `RetryPolicy`, so a policy-free world *is* the PR 7 world.
+//! 2. **Extended conservation** — with retries in play the identity
+//!    grows client terms: `offered − retried == committed +
+//!    rejected_final + lost + in_flight + client_dropped`, u64-exact
+//!    across every fault schedule, including the cascading double kill.
+//! 3. **Loss conversion** — retries turn an admission outage's final
+//!    rejections into delayed commits; a too-small retry buffer
+//!    overflows into counted client drops instead.
+//! 4. **Link partitions** — (small fix riding along) the PR 7
+//!    `partition_fabric` path gets the differential coverage it never
+//!    had: a healed partition conserves and fully re-replicates, and a
+//!    partition spanning a leader rejects like a kill under a strict
+//!    quorum.
+
+use aitax::config::Deployment;
+use aitax::pipeline::catchup::{self, CatchupSpec};
+use aitax::pipeline::dc::RetryPolicy;
+use aitax::pipeline::fabric::{ElectionPolicy, FaultPlan};
+use aitax::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use aitax::util::units::SEC;
+
+/// Scaled-down 3-tenant world (same fleets as the failover
+/// differentials) so each run stays fast.
+fn small_cfg(classed: bool, horizon_us: u64) -> MultiTenantConfig {
+    let mut cfg = catchup::registry(
+        CatchupSpec { lag_us: 0, cache_bytes: 50e6, classed_reads: classed },
+        horizon_us,
+    );
+    cfg.tenants[0].cfg.deployment = Deployment {
+        producers: 20,
+        consumers: 30,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 30,
+    };
+    cfg.tenants[1].cfg.deployment = Deployment {
+        producers: 4,
+        consumers: 6,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 6,
+    };
+    cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+    cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+    cfg.fabric = cfg.tenants[0].cfg.clone();
+    cfg
+}
+
+fn retry_policy() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 6,
+        base_backoff_us: 100_000,
+        max_backoff_us: 800_000,
+        request_timeout_us: 1_000_000,
+        buffer_bytes: 512e6,
+    }
+}
+
+/// Arm every tenant's producers with `policy`.
+fn armed(mut cfg: MultiTenantConfig, policy: RetryPolicy) -> MultiTenantConfig {
+    for t in &mut cfg.tenants {
+        *t = t.clone().with_retry(policy);
+    }
+    cfg
+}
+
+/// An admission outage: quorum of 3 on a 3-broker fabric, one broker
+/// down for `outage_us` — every produce in the window is refused.
+fn outage_plan(outage_us: u64) -> FaultPlan {
+    FaultPlan::new()
+        .kill_broker(3 * SEC, 1)
+        .restart_broker(3 * SEC + outage_us, 1)
+        .with_recovery_bandwidth(400e6)
+        .with_min_isr(3)
+}
+
+/// The cascading double kill on the small world: broker 1 dies and
+/// restarts; both survivors die while it is still catching up.
+fn cascade_plan() -> FaultPlan {
+    FaultPlan::new()
+        .kill_broker(3 * SEC, 1)
+        .restart_broker(4 * SEC, 1)
+        .kill_broker(4 * SEC + SEC / 2, 0)
+        .kill_broker(4 * SEC + SEC / 2, 2)
+        .restart_broker(5 * SEC + SEC / 2, 0)
+        .restart_broker(5 * SEC + SEC / 2, 2)
+        .with_recovery_bandwidth(400e6)
+}
+
+fn assert_identical(a: &MultiTenantReport, b: &MultiTenantReport, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.clamped_events, b.clamped_events, "{what}: clamped");
+    assert!(
+        a.broker_storage_write_util == b.broker_storage_write_util,
+        "{what}: write util"
+    );
+    assert!(
+        a.broker_storage_read_util == b.broker_storage_read_util,
+        "{what}: read util"
+    );
+    assert!(a.broker_net_rx_util == b.broker_net_rx_util, "{what}: net rx util");
+    assert!(a.broker_cpu_util == b.broker_cpu_util, "{what}: cpu util");
+    assert!(a.cache_hit_ratio == b.cache_hit_ratio, "{what}: cache hit");
+    assert!(
+        a.device_read_share == b.device_read_share,
+        "{what}: device read share"
+    );
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.produced, y.produced, "{what}: {} produced", x.name);
+        assert_eq!(x.completed, y.completed, "{what}: {} completed", x.name);
+        assert!(x.wait_mean_us == y.wait_mean_us, "{what}: {} wait mean", x.name);
+        assert_eq!(x.wait_p99_us, y.wait_p99_us, "{what}: {} wait p99", x.name);
+        assert!(x.e2e_mean_us == y.e2e_mean_us, "{what}: {} e2e mean", x.name);
+        assert_eq!(x.e2e_p99_us, y.e2e_p99_us, "{what}: {} e2e p99", x.name);
+        assert_eq!(
+            x.e2e_p99_window_us, y.e2e_p99_window_us,
+            "{what}: {} windowed p99",
+            x.name
+        );
+        assert_eq!(x.retries, y.retries, "{what}: {} retries", x.name);
+        assert_eq!(
+            x.client_dropped, y.client_dropped,
+            "{what}: {} client dropped",
+            x.name
+        );
+        assert!(x.net_tx_bytes == y.net_tx_bytes, "{what}: {} net tx", x.name);
+        assert!(x.net_rx_bytes == y.net_rx_bytes, "{what}: {} net rx", x.name);
+    }
+}
+
+fn residual(r: &MultiTenantReport) -> i64 {
+    r.fault.as_ref().expect("plan ⇒ fault accounting").conservation_residual()
+}
+
+#[test]
+fn armed_idempotence_and_clean_election_are_bit_exact_to_pr7() {
+    // Dedup enabled and the election policy stated explicitly, on a real
+    // kill/restart schedule with NO retrying client: no retransmission
+    // ever arrives, so the dedup scan and the policy branch must be
+    // observationally inert — the PR 7 world, float for float. (Unclean
+    // is likewise inert here: a single kill always leaves an in-sync
+    // survivor, so the clean scan decides every election.)
+    let plan = FaultPlan::new()
+        .kill_broker(3 * SEC, 1)
+        .restart_broker(5 * SEC, 1)
+        .with_recovery_bandwidth(400e6);
+    let pr7 = MultiTenantSim::new(small_cfg(true, 8 * SEC).with_faults(plan.clone())).run();
+    let dedup = MultiTenantSim::new(
+        small_cfg(true, 8 * SEC).with_faults(plan.clone().with_idempotence()),
+    )
+    .run();
+    let unclean = MultiTenantSim::new(
+        small_cfg(true, 8 * SEC)
+            .with_faults(plan.with_election(ElectionPolicy::Unclean)),
+    )
+    .run();
+    assert_identical(&pr7, &dedup, "idempotence armed, no retries");
+    assert_identical(&pr7, &unclean, "unclean policy, in-sync survivor");
+    let f = dedup.fault.as_ref().unwrap();
+    assert_eq!(f.records_dedup_suppressed, 0);
+    assert_eq!(f.records_retried, 0);
+    assert_eq!(f.records_client_dropped, 0);
+    let f = unclean.fault.as_ref().unwrap();
+    assert_eq!(f.unclean_elections, 0);
+    assert_eq!(f.unclean_lost_bytes, 0.0);
+}
+
+#[test]
+fn extended_identity_closes_across_fault_schedules() {
+    // The headline invariant: with retrying producers in play, every
+    // produce attempt is still accounted for exactly once — across a
+    // permanent kill, a kill + restart, a strict-quorum outage, and the
+    // cascading double kill, in both election policies.
+    let schedules: Vec<(&str, FaultPlan)> = vec![
+        ("permanent kill", FaultPlan::new().kill_broker(3 * SEC, 1)),
+        (
+            "kill + restart",
+            FaultPlan::new()
+                .kill_broker(3 * SEC, 1)
+                .restart_broker(4 * SEC, 1)
+                .with_recovery_bandwidth(400e6),
+        ),
+        ("quorum outage", outage_plan(SEC)),
+        ("cascade clean", cascade_plan()),
+        (
+            "cascade unclean",
+            cascade_plan().with_election(ElectionPolicy::Unclean),
+        ),
+    ];
+    for (what, plan) in schedules {
+        let cfg = armed(small_cfg(true, 9 * SEC), retry_policy()).with_faults(plan);
+        let r = MultiTenantSim::new(cfg).run();
+        let f = r.fault.as_ref().unwrap();
+        assert_eq!(
+            f.conservation_residual(),
+            0,
+            "{what}: extended identity must close: {f:?}"
+        );
+        assert_eq!(f.min_isr_violations, 0, "{what}: no commit below quorum");
+        assert_eq!(r.clamped_events, 0, "{what}: no clamped events");
+        for t in &r.tenants {
+            assert!(t.completed > 0, "{what}: tenant {} starved", t.name);
+        }
+    }
+}
+
+#[test]
+fn retries_convert_an_outage_from_loss_into_delayed_commits() {
+    // A 1 s strict-quorum outage. Without retries every produce in the
+    // window is a final rejection; armed, the clients park those records
+    // and re-offer them after the restart — fewer records end lost, more
+    // end committed, and the account still balances to zero.
+    let bare =
+        MultiTenantSim::new(small_cfg(true, 9 * SEC).with_faults(outage_plan(SEC))).run();
+    let armed_r = MultiTenantSim::new(
+        armed(small_cfg(true, 9 * SEC), retry_policy()).with_faults(outage_plan(SEC)),
+    )
+    .run();
+    let fb = bare.fault.as_ref().unwrap();
+    let fa = armed_r.fault.as_ref().unwrap();
+    assert_eq!(fb.records_retried, 0, "no policy ⇒ no retries");
+    assert_eq!(fb.records_rejected_final, fb.records_rejected);
+    assert!(fa.records_retried > 0, "the outage must trigger retries");
+    assert!(
+        fa.records_rejected_final + fa.records_client_dropped < fb.records_rejected_final,
+        "retries must save records: {} + {} vs {}",
+        fa.records_rejected_final,
+        fa.records_client_dropped,
+        fb.records_rejected_final
+    );
+    assert!(
+        fa.records_committed > fb.records_committed,
+        "saved records must land as commits: {} vs {}",
+        fa.records_committed,
+        fb.records_committed
+    );
+    assert_eq!(residual(&bare), 0);
+    assert_eq!(residual(&armed_r), 0);
+}
+
+#[test]
+fn a_tiny_retry_buffer_overflows_into_counted_client_drops() {
+    // Same outage, but the clients can only park ~10 kB: the first
+    // rejected records fill the buffer and the rest are dropped at the
+    // client — visible, counted, and in the identity.
+    let tiny = RetryPolicy { buffer_bytes: 10_000.0, ..retry_policy() };
+    let r = MultiTenantSim::new(
+        armed(small_cfg(true, 9 * SEC), tiny).with_faults(outage_plan(SEC)),
+    )
+    .run();
+    let f = r.fault.as_ref().unwrap();
+    assert!(
+        f.records_client_dropped > 0,
+        "a 10 kB buffer cannot absorb a 1 s outage: {f:?}"
+    );
+    assert_eq!(f.conservation_residual(), 0, "drops must stay in the identity");
+}
+
+#[test]
+fn unclean_cascade_restores_service_at_a_counted_byte_cost() {
+    // The cascading double kill leaves only the catching-up broker 1
+    // alive. Clean: its partitions stay leaderless until the survivors
+    // restart. Unclean: broker 1 is promoted, its un-replayed backlog is
+    // discarded (counted), and admission resumes a full outage earlier.
+    let clean =
+        MultiTenantSim::new(small_cfg(true, 10 * SEC).with_faults(cascade_plan())).run();
+    let unclean = MultiTenantSim::new(
+        small_cfg(true, 10 * SEC)
+            .with_faults(cascade_plan().with_election(ElectionPolicy::Unclean)),
+    )
+    .run();
+    let fc = clean.fault.as_ref().unwrap();
+    let fu = unclean.fault.as_ref().unwrap();
+    assert_eq!(fc.unclean_elections, 0);
+    assert!(fu.unclean_elections > 0, "the dead ISR must force an unclean pick");
+    assert!(fu.unclean_lost_bytes > 0.0, "divergence must be counted");
+    assert!(
+        fu.records_rejected < fc.records_rejected,
+        "unclean continuation must shrink the rejection window: {} vs {}",
+        fu.records_rejected,
+        fc.records_rejected
+    );
+    assert_eq!(residual(&clean), 0);
+    assert_eq!(residual(&unclean), 0);
+}
+
+#[test]
+fn healed_partition_conserves_and_fully_rereplicates() {
+    // PR 7's link-partition path never had differential coverage. A 2 s
+    // cut between brokers 0 and 1 under the default quorum: commits
+    // continue on the reachable ISR, the cut follower misses bytes, and
+    // after the heal it replays every one of them.
+    let plan = FaultPlan::new()
+        .partition_fabric(3 * SEC, 0, 1, 2 * SEC)
+        .with_recovery_bandwidth(400e6);
+    let r = MultiTenantSim::new(small_cfg(true, 10 * SEC).with_faults(plan)).run();
+    let f = r.fault.as_ref().unwrap();
+    assert_eq!(f.records_rejected, 0, "min_isr 1: nothing is refused");
+    assert_eq!(f.records_lost, 0, "a partition kills no broker");
+    assert!(f.missed_bytes > 0.0, "the cut follower must miss bytes");
+    assert!(
+        (f.rereplicated_bytes - f.missed_bytes).abs() <= 1e-6 * f.missed_bytes,
+        "heal must replay exactly the missed bytes: {} vs {}",
+        f.rereplicated_bytes,
+        f.missed_bytes
+    );
+    assert_eq!(f.backlog_bytes, 0.0, "nothing still owed at the horizon");
+    assert!(f.recovery_done_us.is_some(), "the fabric must fully heal");
+    assert_eq!(f.conservation_residual(), 0);
+    assert_eq!(r.clamped_events, 0);
+}
+
+#[test]
+fn partition_spanning_a_leader_rejects_like_a_kill_under_strict_quorum() {
+    // min_isr 3 on 3 brokers: the 0–1 cut makes every partition led by
+    // broker 0 or 1 unable to assemble its full ISR — those produces are
+    // refused at admission, exactly as a kill's would be, and resume on
+    // heal. Partitions led by broker 2 still reach both followers.
+    let cut = FaultPlan::new()
+        .partition_fabric(3 * SEC, 0, 1, SEC)
+        .with_recovery_bandwidth(400e6)
+        .with_min_isr(3);
+    let healthy = FaultPlan::new().with_min_isr(3);
+    let r_cut = MultiTenantSim::new(small_cfg(true, 9 * SEC).with_faults(cut)).run();
+    let r_ok = MultiTenantSim::new(small_cfg(true, 9 * SEC).with_faults(healthy)).run();
+    let fc = r_cut.fault.as_ref().unwrap();
+    let fh = r_ok.fault.as_ref().unwrap();
+    assert_eq!(fh.records_rejected, 0, "full ISR ⇒ nothing rejected");
+    assert!(
+        fc.records_rejected > 0,
+        "a cut ISR below quorum must reject at admission"
+    );
+    assert_eq!(fc.min_isr_violations, 0, "rejection happens before commit");
+    assert!(
+        fc.records_committed > 0,
+        "partitions led by the uncut broker keep committing"
+    );
+    assert!(
+        fc.records_committed < fh.records_committed,
+        "a 1 s partial outage must cost commits: {} vs {}",
+        fc.records_committed,
+        fh.records_committed
+    );
+    assert_eq!(fc.conservation_residual(), 0);
+}

@@ -66,6 +66,44 @@ fn failover_experiment_json_is_identical_at_jobs_1_and_8() {
 }
 
 #[test]
+fn cascade_experiment_json_is_identical_at_jobs_1_and_8() {
+    // The cascade sweep stacks every new mechanism on the runner: the
+    // retry state machine (whose backoff jitter must come from record
+    // sequence numbers, never from host entropy), broker-side dedup, and
+    // unclean elections. Worker count must remain unobservable.
+    use aitax::experiments::cascade;
+    use aitax::util::units::SEC;
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = cascade::run_points(
+            vec![(SEC / 2, true, false), (SEC / 2, true, true)],
+            Fidelity::Quick,
+        );
+        runner::set_jobs_override(None);
+        cascade::to_json(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "cascade JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 2, "one gap, retry on, both election policies");
+    for p in points {
+        assert!(
+            p.get("conservation_residual").and_then(|v| v.as_f64()) == Some(0.0),
+            "the extended identity must close in both arms"
+        );
+        assert!(
+            p.get("min_isr_violations").and_then(|v| v.as_f64()) == Some(0.0),
+            "no commit below quorum in either arm"
+        );
+    }
+}
+
+#[test]
 fn scale_experiment_model_json_is_identical_at_jobs_1_and_8() {
     // The scale sweep measures wall clock per point, which can never be
     // deterministic — so the contract is pinned on the model-output form
