@@ -1,5 +1,12 @@
 //! Hardware specifications — the paper's Table 2 server, verbatim.
 
+/// One-way wire propagation + switching latency within the data center
+/// (a few fat-tree switch hops), microseconds. The single source of
+/// truth consumed by both the broker fabric's hop latency
+/// (`pipeline::fabric::WIRE_US`) and the node NIC model
+/// (`net::nic::Nic::transit_us`).
+pub const WIRE_TRANSIT_US: u64 = 30;
+
 /// Intel SSD DC P4510 1 TB (Table 2).
 #[derive(Clone, Copy, Debug)]
 pub struct NvmeSpec {

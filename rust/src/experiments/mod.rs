@@ -12,9 +12,11 @@
 //! window; [`cascade`] — the cascading-failure resilience sweep: a
 //! correlated second kill during the first victim's catch-up, crossed
 //! with retrying producers (idempotent commits) and clean vs unclean
-//! election; [`scale`] — the million-client sweep pitting per-record
-//! replay against the hybrid fluid/discrete flow producers, cost and
-//! convergence side by side).
+//! election; [`net_path`] — the network-contention sweep: the failover
+//! world on a max-min fair ToR/spine fabric, acceleration ×
+//! oversubscription × broker placement; [`scale`] — the million-client
+//! sweep pitting per-record replay against the hybrid fluid/discrete
+//! flow producers, cost and convergence side by side).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -41,6 +43,7 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod mixed;
+pub mod net_path;
 pub mod qos;
 pub mod read_path;
 pub mod runner;

@@ -1,0 +1,353 @@
+//! Net-path: the network-contention sweep (`aitax experiment net-path`).
+//!
+//! Every sweep so far priced the wire at a fixed 30 µs hop: the AI tax
+//! showed up in broker CPU, spindles, and repair traffic, never in the
+//! fabric between them. This sweep turns the network on
+//! ([`MultiTenantConfig::with_network`]): every producer send, fetch
+//! response, replication copy, and recovery byte now crosses a two-tier
+//! ToR/spine topology ([`crate::net::path`]) whose links hand out
+//! max-min fair shares ([`crate::net::link`]), recomputed at every
+//! transfer entry and exit.
+//!
+//! The scenario is the failover world ([`crate::pipeline::failover`]):
+//! facerec + train-ingest + rpc on the 3-broker fabric, one broker
+//! killed mid-run, restarted a second later, its missed bytes replayed
+//! as a catch-up stream. Three axes:
+//!
+//! * **acceleration** — facerec at 1× vs 4×: how much produce/fetch
+//!   pressure the racks carry before anything breaks;
+//! * **oversubscription** — rack uplink capacity =
+//!   `rack_size × link / oversub`; 1:1 is non-blocking, 8:1 is the
+//!   classic cost-reduced ToR where one busy node starves the rack;
+//! * **placement** — brokers striped across racks with their clients
+//!   ([`Placement::CoLocated`]: replication and recovery cross the
+//!   oversubscribed uplinks) vs packed into their own rack
+//!   ([`Placement::BrokerIsolated`]: broker↔broker traffic — including
+//!   the entire recovery stream — stays on intra-rack links).
+//!
+//! A per-acceleration *network-disabled* baseline anchors each group:
+//! that arm is bit-exact to the PR 8 fabric
+//! (`tests/net_differential.rs` pins it), so every delta in the table
+//! is pure fabric contention. Reported per point: the rpc canary's e2e
+//! p99 over the recovery window, facerec's windowed p99 (its fetch
+//! path is the heaviest uplink consumer), recovery duration, the count
+//! of transfers that ran below their solo share, and the peak uplink
+//! utilization. The headline: on shared uplinks recovery stretches and
+//! the tails grow with oversubscription; isolating the brokers takes
+//! the recovery stream off the uplinks and claws most of it back.
+//!
+//! [`MultiTenantConfig::with_network`]: crate::pipeline::mixed::MultiTenantConfig::with_network
+
+use crate::experiments::common::Fidelity;
+use crate::experiments::runner;
+use crate::net::{NetworkSpec, Placement};
+use crate::pipeline::failover::{self, FailoverSpec, VICTIM};
+use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use crate::util::json::Json;
+use crate::util::units::{fmt_us, gbps, SEC};
+
+/// Facerec acceleration factors swept.
+pub const ACCELS: [f64; 2] = [1.0, 4.0];
+/// Rack-uplink oversubscription factors swept (1.0 = non-blocking).
+pub const OVERSUBS: [f64; 3] = [1.0, 4.0, 8.0];
+/// Per-node access-link rate: the purpose-built compute node's 10 GbE
+/// (Table 4) — tight enough that a busy broker is a meaningful fraction
+/// of its rack's uplink.
+pub const LINK_BW: f64 = gbps(10);
+/// Kill instant as a fraction of the horizon.
+pub const KILL_FRAC: f64 = 0.3;
+/// How long the victim stays down before rejoining.
+pub const DOWNTIME_US: u64 = SEC;
+/// Re-replication pacing — above the world's ongoing write rate on an
+/// uncontended fabric, so any arm where recovery stretches or never
+/// finishes is showing *network* throttling, not pacing.
+pub const RECOVERY_GBPS: f64 = 0.8;
+/// Per-broker page cache, as in the failover sweep: the victim's missed
+/// window has aged out and catch-up reads go to the device.
+pub const CACHE_BYTES: f64 = 2e9;
+
+/// One network arm: `None` = network disabled (the PR 8 fixed-latency
+/// wire), `Some((oversub, placement))` = contention-aware fabric.
+pub type NetArm = Option<(f64, Placement)>;
+
+/// One sweep point: acceleration × network arm, on the failover
+/// scenario.
+pub struct NetPathPoint {
+    pub accel: f64,
+    pub arm: NetArm,
+    pub restart_at_us: u64,
+    pub report: MultiTenantReport,
+}
+
+impl NetPathPoint {
+    /// Restart → ISR rejoin (µs); `None` if recovery never finished
+    /// inside the horizon (on a squeezed uplink it may not).
+    pub fn recovery_duration_us(&self) -> Option<u64> {
+        let f = self.report.fault.as_ref()?;
+        Some(f.recovery_done_us?.saturating_sub(self.restart_at_us))
+    }
+
+    /// The rpc canary's e2e p99 over the recovery window (µs).
+    pub fn rpc_window_p99_us(&self) -> u64 {
+        self.report.tenant("rpc").map(|t| t.e2e_p99_window_us).unwrap_or(0)
+    }
+
+    /// Facerec's e2e p99 over the recovery window (µs) — its fetch
+    /// responses are the heaviest uplink flows in the world.
+    pub fn facerec_window_p99_us(&self) -> u64 {
+        self.report
+            .tenant("facerec")
+            .map(|t| t.e2e_p99_window_us)
+            .unwrap_or(0)
+    }
+
+    fn arm_label(&self) -> String {
+        match self.arm {
+            None => "off".into(),
+            Some((o, Placement::CoLocated)) => format!("{o}:1 colo"),
+            Some((o, Placement::BrokerIsolated)) => format!("{o}:1 isol"),
+        }
+    }
+}
+
+/// The full sweep.
+pub struct NetPathSweep {
+    pub horizon_us: u64,
+    pub points: Vec<NetPathPoint>,
+}
+
+impl NetPathSweep {
+    pub fn point(&self, accel: f64, arm: NetArm) -> Option<&NetPathPoint> {
+        self.points.iter().find(|p| p.accel == accel && p.arm == arm)
+    }
+}
+
+/// The failover registry at one (accel, arm) point.
+pub fn registry_for(accel: f64, arm: NetArm, horizon_us: u64) -> MultiTenantConfig {
+    let kill_at_us = (KILL_FRAC * horizon_us as f64) as u64;
+    let spec = FailoverSpec {
+        kill_at_us,
+        restart_at_us: kill_at_us + DOWNTIME_US,
+        classed: true,
+        recovery_bytes_per_sec: RECOVERY_GBPS * 1e9,
+        cache_bytes: CACHE_BYTES,
+    };
+    let mut cfg = failover::registry(spec, horizon_us);
+    cfg.tenants[0].cfg.accel = accel;
+    cfg.fabric.accel = accel;
+    match arm {
+        Some((oversub, placement)) => {
+            cfg.with_network(NetworkSpec::new(oversub, LINK_BW).with_placement(placement))
+        }
+        None => cfg,
+    }
+}
+
+/// Run an explicit set of `(accel, arm)` points, fanned out over the
+/// deterministic parallel runner.
+pub fn run_points(points: Vec<(f64, NetArm)>, fidelity: Fidelity) -> NetPathSweep {
+    let horizon = fidelity.horizon_us();
+    let points = runner::map(points, move |(accel, arm)| {
+        let restart_at_us = (KILL_FRAC * horizon as f64) as u64 + DOWNTIME_US;
+        NetPathPoint {
+            accel,
+            arm,
+            restart_at_us,
+            report: MultiTenantSim::new(registry_for(accel, arm, horizon)).run(),
+        }
+    });
+    NetPathSweep { horizon_us: horizon, points }
+}
+
+/// The full grid: per acceleration, a disabled baseline plus
+/// oversubscription × placement.
+pub fn run(fidelity: Fidelity) -> NetPathSweep {
+    let mut grid: Vec<(f64, NetArm)> = Vec::new();
+    for &accel in &ACCELS {
+        grid.push((accel, None));
+        for &oversub in &OVERSUBS {
+            grid.push((accel, Some((oversub, Placement::CoLocated))));
+            grid.push((accel, Some((oversub, Placement::BrokerIsolated))));
+        }
+    }
+    run_points(grid, fidelity)
+}
+
+/// The machine-readable report.
+pub fn to_json(sweep: &NetPathSweep) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::Str("net-path".into())),
+        ("horizon_us", Json::Num(sweep.horizon_us as f64)),
+        ("link_gbps", Json::Num(LINK_BW * 8.0 / 1e9)),
+        ("victim_broker", Json::Num(VICTIM as f64)),
+        ("downtime_us", Json::Num(DOWNTIME_US as f64)),
+        ("recovery_gbps", Json::Num(RECOVERY_GBPS)),
+        (
+            "points",
+            Json::arr(sweep.points.iter().map(point_json).collect()),
+        ),
+    ])
+}
+
+fn point_json(p: &NetPathPoint) -> Json {
+    Json::obj(vec![
+        ("accel", Json::Num(p.accel)),
+        ("network", Json::Bool(p.arm.is_some())),
+        (
+            "oversub",
+            match p.arm {
+                Some((o, _)) => Json::Num(o),
+                None => Json::Null,
+            },
+        ),
+        (
+            "placement",
+            Json::Str(
+                match p.arm {
+                    None => "none",
+                    Some((_, Placement::CoLocated)) => "co-located",
+                    Some((_, Placement::BrokerIsolated)) => "broker-isolated",
+                }
+                .into(),
+            ),
+        ),
+        ("rpc_window_p99_us", Json::Num(p.rpc_window_p99_us() as f64)),
+        (
+            "facerec_window_p99_us",
+            Json::Num(p.facerec_window_p99_us() as f64),
+        ),
+        (
+            "recovery_duration_us",
+            match p.recovery_duration_us() {
+                Some(us) => Json::Num(us as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "net_contended_transfers",
+            Json::Num(p.report.net_contended_transfers as f64),
+        ),
+        (
+            "net_max_uplink_util",
+            Json::Num(p.report.net_max_uplink_util),
+        ),
+        (
+            "tenants",
+            Json::arr(
+                p.report
+                    .tenants
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("name", Json::Str(t.name.clone())),
+                            ("completed", Json::Num(t.completed as f64)),
+                            ("e2e_p99_us", Json::Num(t.e2e_p99_us as f64)),
+                            (
+                                "e2e_p99_window_us",
+                                Json::Num(t.e2e_p99_window_us as f64),
+                            ),
+                            ("net_tx_bytes", Json::Num(t.net_tx_bytes)),
+                            ("net_rx_bytes", Json::Num(t.net_rx_bytes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the JSON report next to the AOT artifacts when that directory
+/// exists (same lookup as the other sweep drivers).
+fn write_report(json: &Json) -> Option<std::path::PathBuf> {
+    let dir = crate::runtime::Manifest::default_dir();
+    if !dir.is_dir() {
+        return None;
+    }
+    let path = dir.join("net_path_report.json");
+    std::fs::write(&path, json.pretty()).ok()?;
+    Some(path)
+}
+
+pub fn print(sweep: &NetPathSweep) {
+    println!(
+        "\nNet-path — failover world on a ToR/spine fabric ({} GbE access, \
+         rack uplinks at N:1); broker {} killed at {}×horizon, back {} later",
+        (LINK_BW * 8.0 / 1e9) as u64,
+        VICTIM,
+        KILL_FRAC,
+        fmt_us(DOWNTIME_US),
+    );
+    println!(
+        "  {:>5} {:>9} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "accel", "network", "recovery", "rpc p99(w)", "fr p99(w)", "contended", "uplink%"
+    );
+    for p in &sweep.points {
+        println!(
+            "  {:>4}x {:>9} {:>10} {:>12} {:>12} {:>10} {:>7.1}%",
+            p.accel,
+            p.arm_label(),
+            match p.recovery_duration_us() {
+                Some(us) => fmt_us(us),
+                None => "never".into(),
+            },
+            fmt_us(p.rpc_window_p99_us()),
+            fmt_us(p.facerec_window_p99_us()),
+            p.report.net_contended_transfers,
+            100.0 * p.report.net_max_uplink_util,
+        );
+    }
+    println!(
+        "  takeaway: the wire is only free while it is non-blocking — on \
+         oversubscribed uplinks the recovery stream and the fetch fan-out \
+         fight for the same rack links and both lose; packing the brokers \
+         into their own rack takes replication and repair off the uplinks \
+         and restores most of the disabled-arm numbers"
+    );
+    let json = to_json(sweep);
+    match write_report(&json) {
+        Some(path) => println!("  json report written to {}", path.display()),
+        None => println!("  json report:\n{}", json.pretty()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_arm_has_no_network_numbers_and_json_is_complete() {
+        let sweep = run_points(
+            vec![(4.0, None), (4.0, Some((8.0, Placement::CoLocated)))],
+            Fidelity::Quick,
+        );
+        let off = sweep.point(4.0, None).unwrap();
+        assert_eq!(off.report.net_contended_transfers, 0);
+        assert_eq!(off.report.net_max_uplink_util, 0.0);
+        let on = sweep.point(4.0, Some((8.0, Placement::CoLocated))).unwrap();
+        assert!(
+            on.report.net_contended_transfers > 0,
+            "an 8:1 co-located fabric must see some transfer below its solo share"
+        );
+        assert!(on.report.net_max_uplink_util > 0.0);
+        // Both arms survive the failure and keep every tenant alive.
+        for p in [off, on] {
+            assert!(p.report.fault.is_some());
+            for t in &p.report.tenants {
+                assert!(t.completed > 0, "tenant {} starved", t.name);
+            }
+        }
+        let j = to_json(&sweep);
+        let points = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(points.len(), 2);
+        for p in points {
+            assert!(p.get("rpc_window_p99_us").and_then(|v| v.as_f64()).is_some());
+            assert!(p.get("net_contended_transfers").is_some());
+            assert_eq!(p.get("tenants").and_then(|t| t.as_arr()).unwrap().len(), 3);
+        }
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            reparsed.get("experiment").and_then(|e| e.as_str()),
+            Some("net-path")
+        );
+    }
+}

@@ -4,7 +4,7 @@
 //!   run         live three-layer pipeline (PJRT inference + real broker)
 //!   experiment  regenerate a paper figure/table (fig5..fig15, tco) or an
 //!               extension scenario (mixed, qos, storage-qos, read-path,
-//!               failover, cascade, scale), or all of them
+//!               failover, cascade, net-path, scale), or all of them
 //!   sim         one Face Recognition simulation with overrides
 //!   amdahl      Fig-9 analytic projections
 //!   bench       perf-trajectory benchmarks (kernel: events/sec + sweep
@@ -25,7 +25,7 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched] [--produce-quota BYTES_PER_SEC]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|failover|cascade|scale|all>
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|failover|cascade|net-path|scale|all>
             [--quick]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
@@ -98,9 +98,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// Every experiment id `aitax experiment all` runs, in order. The kernel
 /// benchmark times exactly this list (minus printing), so the measured
 /// workload cannot drift from the command.
-const ALL_EXPERIMENTS: [&str; 18] = [
+const ALL_EXPERIMENTS: [&str; 19] = [
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "fig15", "tco", "mixed", "qos", "storage-qos", "read-path", "failover", "cascade",
+    "net-path",
 ];
 
 /// Print an experiment's report, or (on the benchmark path) just keep
@@ -142,6 +143,9 @@ fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result
         }
         "cascade" => {
             emit(ex::cascade::run(fidelity), quiet, |r| ex::cascade::print(r))
+        }
+        "net-path" => {
+            emit(ex::net_path::run(fidelity), quiet, |r| ex::net_path::print(r))
         }
         // Runnable by name but not part of `all` / ALL_EXPERIMENTS: the
         // sweep measures its own wall clock per point, so folding it

@@ -1,0 +1,295 @@
+//! Max-min fair-share link capacity allocation.
+//!
+//! A [`Link`] is a directed capacity (bytes/sec). Concurrent flows that
+//! cross a link split its capacity **max-min fairly**: capacity is
+//! raised uniformly across all flows until some link saturates, the
+//! flows crossing that link are frozen at their current rate, and the
+//! residual headroom is shared among the rest — the classic
+//! *progressive filling* (water-filling) algorithm, the same shape
+//! dslab's `throughput-model` crate uses for flow-level network
+//! simulation.
+//!
+//! The allocator is deterministic: plain `f64` arithmetic over slices
+//! in index order, no RNG, no wall clock, and it terminates in at most
+//! `flows` iterations (every iteration freezes at least one flow or
+//! exits). [`crate::net::path::PathNet`] calls it at every transfer
+//! entry/exit epoch; the property tests at the bottom pin the max-min
+//! invariants (per-link conservation, bottleneck saturation, and the
+//! "no flow can gain without shrinking a smaller one" optimality
+//! condition).
+
+/// Longest path supported: src access up, source-rack uplink,
+/// destination-rack downlink, dst access down.
+pub const MAX_PATH_LINKS: usize = 4;
+
+/// Saturation slack, relative to link capacity: a link whose residual
+/// headroom is below `capacity * REL_EPS + ABS_EPS` is treated as full.
+const REL_EPS: f64 = 1e-9;
+const ABS_EPS: f64 = 1e-6;
+
+/// One directed link: fixed capacity plus cumulative carried bytes
+/// (utilization accounting) and per-recompute scratch.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Capacity in bytes/sec.
+    pub capacity: f64,
+    /// Total bytes ever routed across this link (charged at transfer
+    /// entry — the utilization numerator).
+    pub bytes_carried: f64,
+    /// Scratch: capacity consumed so far this recompute.
+    alloc: f64,
+    /// Scratch: unfrozen flows currently crossing this link.
+    load: u32,
+}
+
+impl Link {
+    pub fn new(capacity: f64) -> Link {
+        Link { capacity, bytes_carried: 0.0, alloc: 0.0, load: 0 }
+    }
+
+    /// Mean utilization over `[0, elapsed_us]`.
+    pub fn utilization(&self, elapsed_us: u64) -> f64 {
+        if elapsed_us == 0 || self.capacity <= 0.0 {
+            return 0.0;
+        }
+        self.bytes_carried * 1e6 / (elapsed_us as f64 * self.capacity)
+    }
+
+    fn headroom(&self) -> f64 {
+        self.capacity - self.alloc
+    }
+
+    fn saturated(&self) -> bool {
+        self.headroom() <= self.capacity * REL_EPS + ABS_EPS
+    }
+}
+
+/// The (at most [`MAX_PATH_LINKS`]) link indices one flow crosses.
+/// An empty path (loopback, `src == dst`) is unconstrained: the
+/// allocator assigns it `f64::INFINITY` (zero transmission time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlowPath {
+    links: [u32; MAX_PATH_LINKS],
+    nlinks: u8,
+}
+
+impl FlowPath {
+    pub fn push(&mut self, link: u32) {
+        debug_assert!((self.nlinks as usize) < MAX_PATH_LINKS);
+        self.links[self.nlinks as usize] = link;
+        self.nlinks += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nlinks == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.links[..self.nlinks as usize].iter().map(|&l| l as usize)
+    }
+}
+
+/// Progressive-filling max-min allocation: assign `rates[i]` to flow
+/// `i` of `flows`. `frozen` is caller-owned scratch (cleared here) so
+/// the steady-state recompute allocates nothing.
+///
+/// Empty-path flows get `f64::INFINITY`; every other flow gets a
+/// strictly positive rate as long as each link it crosses has positive
+/// capacity.
+pub fn fair_share(links: &mut [Link], flows: &[FlowPath], rates: &mut [f64], frozen: &mut Vec<bool>) {
+    debug_assert_eq!(flows.len(), rates.len());
+    for l in links.iter_mut() {
+        l.alloc = 0.0;
+        l.load = 0;
+    }
+    frozen.clear();
+    frozen.resize(flows.len(), false);
+    let mut unfrozen = 0usize;
+    for (i, f) in flows.iter().enumerate() {
+        if f.is_empty() {
+            // Loopback: no shared medium, infinite rate.
+            rates[i] = f64::INFINITY;
+            frozen[i] = true;
+            continue;
+        }
+        rates[i] = 0.0;
+        unfrozen += 1;
+        for li in f.iter() {
+            links[li].load += 1;
+        }
+    }
+    while unfrozen > 0 {
+        // Uniform raise until the tightest loaded link fills.
+        let mut theta = f64::INFINITY;
+        for l in links.iter() {
+            if l.load > 0 {
+                theta = theta.min(l.headroom().max(0.0) / l.load as f64);
+            }
+        }
+        if !theta.is_finite() {
+            break;
+        }
+        for (r, fz) in rates.iter_mut().zip(frozen.iter()) {
+            if !*fz {
+                *r += theta;
+            }
+        }
+        for l in links.iter_mut() {
+            if l.load > 0 {
+                l.alloc += theta * l.load as f64;
+            }
+        }
+        // Freeze every flow crossing a now-saturated link; it stops
+        // contending for the residual headroom (its links' loads drop,
+        // its allocation stays).
+        let mut froze_any = false;
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            if f.iter().any(|li| links[li].saturated()) {
+                frozen[i] = true;
+                froze_any = true;
+                unfrozen -= 1;
+                for li in f.iter() {
+                    links[li].load -= 1;
+                }
+            }
+        }
+        if !froze_any {
+            // Numerical guard: theta was finite but nothing saturated
+            // (capacities within epsilon of each other). Rates are
+            // already feasible; stop rather than loop.
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share(links: &mut [Link], flows: &[FlowPath]) -> Vec<f64> {
+        let mut rates = vec![0.0; flows.len()];
+        let mut frozen = Vec::new();
+        fair_share(links, flows, &mut rates, &mut frozen);
+        rates
+    }
+
+    fn path(ls: &[u32]) -> FlowPath {
+        let mut p = FlowPath::default();
+        for &l in ls {
+            p.push(l);
+        }
+        p
+    }
+
+    #[test]
+    fn single_flow_gets_the_bottleneck_capacity() {
+        let mut links = vec![Link::new(1e9), Link::new(2.5e8), Link::new(1e9)];
+        let rates = share(&mut links, &[path(&[0, 1, 2])]);
+        assert!((rates[0] - 2.5e8).abs() < 1.0, "rate {}", rates[0]);
+    }
+
+    #[test]
+    fn two_equal_flows_split_a_link_in_half() {
+        let mut links = vec![Link::new(1e9)];
+        let rates = share(&mut links, &[path(&[0]), path(&[0])]);
+        assert!((rates[0] - 5e8).abs() < 1.0);
+        assert!((rates[1] - 5e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn bottlenecked_flow_frees_residual_for_the_other() {
+        // Flow 0 crosses a narrow private link (100 MB/s) and the
+        // shared link (1 GB/s); flow 1 crosses only the shared link.
+        // Max-min: flow 0 capped at 100 MB/s, flow 1 takes the 900 MB/s
+        // residual — not the naive 500/500 split.
+        let mut links = vec![Link::new(1e8), Link::new(1e9)];
+        let rates = share(&mut links, &[path(&[0, 1]), path(&[1])]);
+        assert!((rates[0] - 1e8).abs() < 1.0, "capped flow got {}", rates[0]);
+        assert!((rates[1] - 9e8).abs() < 1e3, "residual flow got {}", rates[1]);
+    }
+
+    #[test]
+    fn loopback_flow_is_unconstrained() {
+        let mut links = vec![Link::new(1e9)];
+        let rates = share(&mut links, &[FlowPath::default(), path(&[0])]);
+        assert!(rates[0].is_infinite());
+        assert!((rates[1] - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn max_min_properties_hold_on_random_topologies() {
+        // Three invariants on random link sets and flow paths:
+        //  1. conservation — per-link allocated rate <= capacity;
+        //  2. bottleneck — every flow crosses at least one saturated
+        //     link (otherwise its rate could rise: not max-min);
+        //  3. optimality — a flow can only be "blocked" by a saturated
+        //     link on which it has the (joint-)largest rate; raising it
+        //     would necessarily shrink a smaller-or-equal flow.
+        crate::util::prop::check(300, |rng| {
+            let nlinks = 1 + rng.below(8) as usize;
+            let mut links: Vec<Link> =
+                (0..nlinks).map(|_| Link::new(1e6 + rng.below(1_000_000_000) as f64)).collect();
+            let nflows = 1 + rng.below(12) as usize;
+            let flows: Vec<FlowPath> = (0..nflows)
+                .map(|_| {
+                    let hops = 1 + rng.below(MAX_PATH_LINKS.min(nlinks) as u64) as usize;
+                    let mut p = FlowPath::default();
+                    let mut used = [false; 8];
+                    for _ in 0..hops {
+                        let l = rng.below(nlinks as u64) as usize;
+                        if !used[l] {
+                            used[l] = true;
+                            p.push(l as u32);
+                        }
+                    }
+                    p
+                })
+                .collect();
+            let mut rates = vec![0.0; nflows];
+            let mut frozen = Vec::new();
+            fair_share(&mut links, &flows, &mut rates, &mut frozen);
+            // 1. conservation + recompute link loads from scratch.
+            let mut carried = vec![0.0f64; nlinks];
+            for (i, f) in flows.iter().enumerate() {
+                if rates[i] <= 0.0 {
+                    return Err(format!("flow {i} got non-positive rate {}", rates[i]));
+                }
+                for li in f.iter() {
+                    carried[li] += rates[i];
+                }
+            }
+            for (li, &c) in carried.iter().enumerate() {
+                if c > links[li].capacity * (1.0 + 1e-6) + 1.0 {
+                    return Err(format!(
+                        "link {li} oversubscribed: {c} > {}",
+                        links[li].capacity
+                    ));
+                }
+            }
+            let tight =
+                |li: usize| carried[li] >= links[li].capacity * (1.0 - 1e-6) - 1.0;
+            for (i, f) in flows.iter().enumerate() {
+                // 2. bottleneck saturation.
+                if !f.iter().any(tight) {
+                    return Err(format!("flow {i} has headroom on every link"));
+                }
+                // 3. max-min optimality: some saturated link where this
+                // flow's rate is maximal among its sharers.
+                let blocked = f.iter().any(|li| {
+                    tight(li)
+                        && flows.iter().enumerate().all(|(j, g)| {
+                            !g.iter().any(|lj| lj == li)
+                                || rates[j] <= rates[i] * (1.0 + 1e-6) + 1.0
+                        })
+                });
+                if !blocked {
+                    return Err(format!("flow {i} is not max-min blocked"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,7 +1,7 @@
-//! Network substrate: fat-tree topology, NIC/link bandwidth accounting and
-//! splitter-cable configurations.
+//! Network substrate: fat-tree topology, NIC/link bandwidth accounting,
+//! splitter-cable configurations, and the contention-aware fabric.
 //!
-//! Two roles in the reproduction:
+//! Three roles in the reproduction:
 //!
 //! * In the DES, each node's NIC directions are FIFO rate servers
 //!   ([`nic::Nic`]); per-class byte counters produce the Fig-11a bandwidth
@@ -9,13 +9,22 @@
 //!   100 Gbps links — our model confirms the same headroom, and it also
 //!   models the purpose-built data center's 10/50 Gbps links where the
 //!   margin shrinks.
+//! * When a [`path::NetworkSpec`] is installed, every fabric hop becomes a
+//!   transfer over concrete ToR/spine links whose capacity concurrent
+//!   flows split max-min fairly ([`link`] + [`path`]) — the measured form
+//!   of Fig-11's bandwidth wall: oversubscribed uplinks slow fetches,
+//!   replication, and recovery down instead of merely being metered.
 //! * For the TCO study (§7), [`topology`] builds and validates fat-trees —
 //!   the 1024-node three-level homogeneous tree of Table 3 and the
 //!   splitter-cable two-level design of Figure 16 — counting switches,
 //!   cables and ports, which feed the `tco` price book.
 
+pub mod link;
 pub mod nic;
+pub mod path;
 pub mod topology;
 
+pub use link::{FlowPath, Link};
 pub use nic::{Direction, Nic};
+pub use path::{NetworkSpec, PathNet, Placement, NO_NODE};
 pub use topology::{FatTree, SplitterPlan};

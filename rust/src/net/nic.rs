@@ -15,8 +15,11 @@ pub enum Direction {
 /// A full-duplex NIC with byte accounting.
 #[derive(Clone, Debug)]
 pub struct Nic {
-    rx: FifoServer,
-    tx: FifoServer,
+    /// Receive direction, directly drivable by the DES (the consumer
+    /// fetch path submits response bytes here).
+    pub rx: FifoServer,
+    /// Transmit direction (the producer dispatch path serializes here).
+    pub tx: FifoServer,
     bw: f64,
     /// One-way propagation + switching latency within the data center
     /// (fat-tree, a few switch hops).
@@ -29,7 +32,7 @@ impl Nic {
             rx: FifoServer::new(bandwidth_bytes_per_sec, 0),
             tx: FifoServer::new(bandwidth_bytes_per_sec, 0),
             bw: bandwidth_bytes_per_sec,
-            transit_us: 30,
+            transit_us: crate::config::hardware::WIRE_TRANSIT_US,
         }
     }
 

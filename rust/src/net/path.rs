@@ -1,0 +1,566 @@
+//! Contention-aware path transfers on a two-tier ToR/spine topology.
+//!
+//! [`PathNet`] places every simulation node (brokers first, then client
+//! units in build order) into racks and routes each node pair over
+//! concrete directed [`Link`]s:
+//!
+//! * per-node **access links** (up + down, capacity = the node's line
+//!   rate [`NetworkSpec::link_bw`]) — the ToR edge ports;
+//! * per-rack **uplink/downlink** into the spine, sized at
+//!   `rack_size x link_bw / oversub` — the oversubscription knob the
+//!   paper's Fig-11 bandwidth wall turns on. The spine itself is
+//!   non-blocking (as in the Table-3 fat tree), so cross-rack paths are
+//!   4 hops: src access up, src-rack uplink, dst-rack downlink, dst
+//!   access down; intra-rack paths use only the two access links.
+//!
+//! Concurrent transfers split every shared link max-min fairly
+//! ([`crate::net::link::fair_share`]), recomputed at **entry/exit
+//! epochs**: whenever a transfer starts or completes, all active
+//! transfers' progress is advanced to `now`, rates are re-solved, and
+//! any asynchronous transfer whose rate changed gets its completion
+//! re-estimated — the old completion event is invalidated by a
+//! generation bump (the caller carries `(xfer, gen)` in its event and
+//! [`PathNet::complete`] ignores stale pairs). Synchronous transfers
+//! (fetch responses, recovery chunks — paths that must return a finish
+//! time immediately) lock their estimate at entry using their max-min
+//! share at that instant, and occupy their links until a caller-
+//! scheduled release event fires.
+//!
+//! Everything is deterministic: index-ordered `f64` arithmetic, no RNG,
+//! no wall clock — `jobs=N` sweeps stay byte-identical.
+
+use crate::net::link::{fair_share, FlowPath, Link};
+use crate::net::topology::FatTree;
+
+/// Sentinel node id: "this endpoint is not placed on the topology".
+/// Transfers involving an unplaced endpoint fall back to the caller's
+/// fixed-latency path.
+pub const NO_NODE: u32 = u32::MAX;
+
+/// Completion-estimate cap for a stalled transfer (a zero-capacity
+/// link); far beyond any horizon, safely below `u64::MAX` arithmetic.
+const STALLED_US: u64 = 1 << 50;
+
+/// Where client nodes land relative to broker nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Clients striped across the same racks as the brokers (rack =
+    /// `node % n_racks`): replication, produce, and fetch traffic all
+    /// compete on the shared oversubscribed uplinks.
+    CoLocated,
+    /// Brokers packed into their own rack(s) (rack = `node /
+    /// rack_size`): with `rack_size >= brokers`, replication stays
+    /// intra-rack on dedicated access links — the placement mitigation
+    /// arm of the net-path experiment.
+    BrokerIsolated,
+}
+
+/// Two-tier topology + fairness parameters (the `with_network` knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkSpec {
+    /// ToR uplink oversubscription factor: rack uplink capacity =
+    /// `rack_size * link_bw / oversub`. 1.0 is non-blocking.
+    pub oversub: f64,
+    /// Per-node access-link line rate, bytes/sec each direction.
+    pub link_bw: f64,
+    /// Nodes per rack (edge-switch down-ports).
+    pub rack_size: usize,
+    pub placement: Placement,
+}
+
+impl NetworkSpec {
+    pub fn new(oversub: f64, link_bw: f64) -> NetworkSpec {
+        NetworkSpec { oversub, link_bw, rack_size: 8, placement: Placement::CoLocated }
+    }
+
+    /// Derive rack size from a BOM fat tree: an edge switch dedicates
+    /// half its ports downward, so `ports_per_switch / 2` nodes share
+    /// one ToR (Table-3 layout).
+    pub fn from_fat_tree(topo: &FatTree, oversub: f64, link_bw: f64) -> NetworkSpec {
+        NetworkSpec {
+            oversub,
+            link_bw,
+            rack_size: (topo.ports_per_switch / 2).max(1),
+            placement: Placement::CoLocated,
+        }
+    }
+
+    pub fn with_rack_size(mut self, rack_size: usize) -> NetworkSpec {
+        self.rack_size = rack_size.max(1);
+        self
+    }
+
+    pub fn with_placement(mut self, placement: Placement) -> NetworkSpec {
+        self.placement = placement;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum XferState {
+    Free,
+    /// Allocated, path resolved, not yet on the links (its start event
+    /// is in flight).
+    Prepared,
+    Active,
+}
+
+/// One transfer: remaining bytes, current max-min rate, and the payload
+/// event the caller wants back at completion.
+#[derive(Clone, Copy, Debug)]
+struct Transfer<P> {
+    remaining: f64,
+    /// Bytes/sec under the current allocation (`f64::INFINITY` for
+    /// loopback paths).
+    rate: f64,
+    /// Last epoch this transfer's progress was integrated to.
+    last_us: u64,
+    /// Staleness generation: bumped whenever the completion estimate
+    /// is invalidated (rate change) or the slot is recycled.
+    gen: u32,
+    /// Propagation latency the caller adds after the last byte lands.
+    prop_us: u64,
+    payload: Option<P>,
+    path: FlowPath,
+    state: XferState,
+    /// Locked-estimate transfer: completion fixed at entry, never
+    /// re-estimated (fetch/recovery legs that must return a time
+    /// synchronously).
+    sync: bool,
+}
+
+/// The contention-aware fabric: racks, links, and in-flight transfers.
+#[derive(Debug)]
+pub struct PathNet<P> {
+    spec: NetworkSpec,
+    /// Node -> rack.
+    racks: Vec<u32>,
+    /// `[2 * node]` up / `[2 * node + 1]` down access links, then per
+    /// rack uplink/downlink starting at `rack_base`.
+    links: Vec<Link>,
+    rack_base: usize,
+    transfers: Vec<Transfer<P>>,
+    free: Vec<u32>,
+    /// Active transfer ids, insertion-ordered (deterministic).
+    active: Vec<u32>,
+    /// Epoch recompute scratch (no steady-state allocation).
+    paths_scratch: Vec<FlowPath>,
+    rates_scratch: Vec<f64>,
+    frozen_scratch: Vec<bool>,
+    /// Re-estimations the last epoch produced: `(done_us, xfer, gen)`
+    /// for the caller to schedule as fresh completion events.
+    pub resched: Vec<(u64, u32, u32)>,
+    /// Transfers that entered at less than their solo (uncontended)
+    /// bottleneck rate — the headline contention counter.
+    pub contended_transfers: u64,
+}
+
+impl<P: Copy> PathNet<P> {
+    /// Build the topology for `brokers + clients` nodes. Brokers are
+    /// nodes `0..brokers`; client units follow in world build order.
+    pub fn new(spec: NetworkSpec, brokers: usize, clients: usize) -> PathNet<P> {
+        let nodes = (brokers + clients).max(1);
+        let n_racks = nodes.div_ceil(spec.rack_size).max(1);
+        let racks: Vec<u32> = (0..nodes)
+            .map(|node| match spec.placement {
+                Placement::CoLocated => (node % n_racks) as u32,
+                Placement::BrokerIsolated => (node / spec.rack_size) as u32,
+            })
+            .collect();
+        let rack_base = 2 * nodes;
+        let uplink_bw = spec.rack_size as f64 * spec.link_bw / spec.oversub.max(1e-9);
+        let mut links = Vec::with_capacity(rack_base + 2 * n_racks);
+        for _ in 0..nodes {
+            links.push(Link::new(spec.link_bw)); // up
+            links.push(Link::new(spec.link_bw)); // down
+        }
+        for _ in 0..n_racks {
+            links.push(Link::new(uplink_bw)); // rack uplink
+            links.push(Link::new(uplink_bw)); // rack downlink
+        }
+        PathNet {
+            spec,
+            racks,
+            links,
+            rack_base,
+            transfers: Vec::new(),
+            free: Vec::new(),
+            active: Vec::new(),
+            paths_scratch: Vec::new(),
+            rates_scratch: Vec::new(),
+            frozen_scratch: Vec::new(),
+            resched: Vec::new(),
+            contended_transfers: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
+    }
+
+    pub fn rack_of(&self, node: u32) -> u32 {
+        self.racks[node as usize]
+    }
+
+    fn route(&self, src: u32, dst: u32) -> FlowPath {
+        let mut p = FlowPath::default();
+        if src == dst {
+            return p; // loopback: no shared medium
+        }
+        p.push(2 * src);
+        let (rs, rd) = (self.racks[src as usize], self.racks[dst as usize]);
+        if rs != rd {
+            p.push((self.rack_base + 2 * rs as usize) as u32);
+            p.push((self.rack_base + 2 * rd as usize + 1) as u32);
+        }
+        p.push(2 * dst + 1);
+        p
+    }
+
+    /// Solo bottleneck rate of a path (min link capacity), used to
+    /// detect contention at entry.
+    fn solo_rate(&self, path: &FlowPath) -> f64 {
+        path.iter().map(|li| self.links[li].capacity).fold(f64::INFINITY, f64::min)
+    }
+
+    fn alloc_slot(&mut self) -> u32 {
+        match self.free.pop() {
+            Some(x) => x,
+            None => {
+                self.transfers.push(Transfer {
+                    remaining: 0.0,
+                    rate: 0.0,
+                    last_us: 0,
+                    gen: 0,
+                    prop_us: 0,
+                    payload: None,
+                    path: FlowPath::default(),
+                    state: XferState::Free,
+                    sync: false,
+                });
+                (self.transfers.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Allocate a transfer whose start event is still in flight (the
+    /// sender is serializing). [`PathNet::start`] puts it on the links.
+    pub fn prepare(&mut self, src: u32, dst: u32, bytes: f64, prop_us: u64, payload: Option<P>) -> u32 {
+        let path = self.route(src, dst);
+        let x = self.alloc_slot();
+        let t = &mut self.transfers[x as usize];
+        debug_assert_eq!(t.state, XferState::Free);
+        t.remaining = bytes.max(0.0);
+        t.rate = 0.0;
+        t.prop_us = prop_us;
+        t.payload = payload;
+        t.path = path;
+        t.state = XferState::Prepared;
+        t.sync = false;
+        x
+    }
+
+    /// Integrate all active transfers' progress up to `now`.
+    fn advance(&mut self, now: u64) {
+        for &xi in &self.active {
+            let t = &mut self.transfers[xi as usize];
+            let elapsed = now.saturating_sub(t.last_us);
+            if elapsed > 0 && t.rate.is_finite() {
+                t.remaining = (t.remaining - t.rate * elapsed as f64 / 1e6).max(0.0);
+            }
+            t.last_us = now;
+        }
+    }
+
+    fn duration_us(remaining: f64, rate: f64) -> u64 {
+        if remaining <= 0.0 || rate.is_infinite() {
+            return 0;
+        }
+        if rate <= 0.0 {
+            return STALLED_US;
+        }
+        let us = (remaining / rate * 1e6).ceil();
+        if us >= STALLED_US as f64 { STALLED_US } else { us as u64 }
+    }
+
+    /// Re-solve the max-min allocation at `now`. Every async transfer
+    /// except `fresh` whose rate changed is re-estimated: its gen bumps
+    /// (invalidating the completion event in the queue) and a
+    /// `(done, xfer, gen)` entry is pushed to [`PathNet::resched`].
+    fn recompute(&mut self, now: u64, fresh: Option<u32>) {
+        let n = self.active.len();
+        self.paths_scratch.clear();
+        self.paths_scratch.extend(self.active.iter().map(|&xi| self.transfers[xi as usize].path));
+        self.rates_scratch.clear();
+        self.rates_scratch.resize(n, 0.0);
+        fair_share(
+            &mut self.links,
+            &self.paths_scratch,
+            &mut self.rates_scratch,
+            &mut self.frozen_scratch,
+        );
+        for k in 0..n {
+            let xi = self.active[k];
+            let new_rate = self.rates_scratch[k];
+            let t = &mut self.transfers[xi as usize];
+            if t.rate == new_rate {
+                continue;
+            }
+            t.rate = new_rate;
+            if t.sync || Some(xi) == fresh {
+                // Locked estimates never move; the fresh transfer's
+                // first estimate is the caller's return value.
+                continue;
+            }
+            t.gen = t.gen.wrapping_add(1);
+            let done = now + Self::duration_us(t.remaining, t.rate);
+            self.resched.push((done, xi, t.gen));
+        }
+    }
+
+    /// Charge the utilization meters and the contention counter for a
+    /// transfer entering the links.
+    fn account_entry(&mut self, xi: u32) {
+        let t = self.transfers[xi as usize];
+        let solo = self.solo_rate(&t.path);
+        for li in t.path.iter() {
+            self.links[li].bytes_carried += t.remaining;
+        }
+        if t.rate < solo * (1.0 - 1e-9) {
+            self.contended_transfers += 1;
+        }
+    }
+
+    /// Activate a prepared transfer at `now` (its serialization
+    /// finished). Returns `(done_us, gen)` — the caller schedules its
+    /// completion event at `done_us` carrying `(xfer, gen)`, then
+    /// drains [`PathNet::resched`] for displaced neighbors.
+    pub fn start(&mut self, now: u64, xfer: u32) -> (u64, u32) {
+        debug_assert_eq!(self.transfers[xfer as usize].state, XferState::Prepared);
+        self.advance(now);
+        {
+            let t = &mut self.transfers[xfer as usize];
+            t.state = XferState::Active;
+            t.last_us = now;
+            t.rate = 0.0;
+        }
+        self.active.push(xfer);
+        self.recompute(now, Some(xfer));
+        self.account_entry(xfer);
+        let t = &self.transfers[xfer as usize];
+        (now + Self::duration_us(t.remaining, t.rate), t.gen)
+    }
+
+    /// Start a locked-estimate transfer at `now`: the finish time is
+    /// computed from the max-min share at entry and never revised, so
+    /// call sites that must return a completion time synchronously
+    /// (fetch responses, recovery chunks) can use it — the transfer
+    /// still loads its links until the caller's release event calls
+    /// [`PathNet::complete`] with the returned `(xfer, gen)`.
+    pub fn transfer_sync(&mut self, now: u64, src: u32, dst: u32, bytes: f64) -> (u32, u32, u64) {
+        let x = self.prepare(src, dst, bytes, 0, None);
+        self.transfers[x as usize].sync = true;
+        let (done, gen) = self.start(now, x);
+        (x, gen, done)
+    }
+
+    /// A completion event fired. Stale `(xfer, gen)` pairs (the rate
+    /// changed since, or the slot was recycled) return `None`; a live
+    /// pair removes the transfer, re-solves the allocation, and hands
+    /// back `(prop_us, payload)` for the caller to deliver.
+    pub fn complete(&mut self, now: u64, xfer: u32, gen: u32) -> Option<(u64, Option<P>)> {
+        let t = &self.transfers[xfer as usize];
+        if t.state != XferState::Active || t.gen != gen {
+            return None;
+        }
+        let prop = t.prop_us;
+        let payload = t.payload;
+        self.advance(now);
+        let pos = self.active.iter().position(|&x| x == xfer).expect("active transfer listed");
+        self.active.swap_remove(pos);
+        {
+            let t = &mut self.transfers[xfer as usize];
+            t.state = XferState::Free;
+            t.gen = t.gen.wrapping_add(1);
+            t.payload = None;
+        }
+        self.free.push(xfer);
+        self.recompute(now, None);
+        Some((prop, payload))
+    }
+
+    pub fn active_transfers(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Peak mean utilization across the rack uplinks/downlinks over
+    /// `[0, elapsed_us]` — the oversubscription pressure gauge.
+    pub fn max_uplink_util(&self, elapsed_us: u64) -> f64 {
+        self.links[self.rack_base..]
+            .iter()
+            .map(|l| l.utilization(elapsed_us))
+            .fold(0.0, f64::max)
+    }
+
+    /// Peak mean utilization across the per-node access links.
+    pub fn max_access_util(&self, elapsed_us: u64) -> f64 {
+        self.links[..self.rack_base]
+            .iter()
+            .map(|l| l.utilization(elapsed_us))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(oversub: f64, placement: Placement) -> PathNet<u32> {
+        // 2 brokers + 6 clients, racks of 4.
+        let spec = NetworkSpec::new(oversub, 1e9).with_rack_size(4).with_placement(placement);
+        PathNet::new(spec, 2, 6)
+    }
+
+    #[test]
+    fn single_transfer_matches_the_closed_form() {
+        // 1 GB across 1 GB/s access links, no contention: exactly 1 s.
+        let mut n = net(1.0, Placement::CoLocated);
+        let x = n.prepare(2, 0, 1e9, 30, Some(7));
+        let (done, gen) = n.start(0, x);
+        assert_eq!(done, 1_000_000);
+        assert!(n.resched.is_empty(), "no neighbors to displace");
+        let (prop, payload) = n.complete(done, x, gen).expect("live completion");
+        assert_eq!(prop, 30);
+        assert_eq!(payload, Some(7));
+        assert_eq!(n.contended_transfers, 0);
+    }
+
+    #[test]
+    fn two_transfers_into_one_node_each_get_half() {
+        // Both target node 0's down link: rates halve, both finish at
+        // 2 s; the second entry displaces the first's estimate.
+        let mut n = net(1.0, Placement::CoLocated);
+        let a = n.prepare(2, 0, 1e9, 0, Some(1));
+        let (done_a, _gen_a) = n.start(0, a);
+        assert_eq!(done_a, 1_000_000);
+        let b = n.prepare(3, 0, 1e9, 0, Some(2));
+        let (done_b, gen_b) = n.start(0, b);
+        assert_eq!(done_b, 2_000_000);
+        // The first transfer was re-estimated to 2 s as well.
+        assert_eq!(n.resched.len(), 1);
+        let (re_done, re_x, re_gen) = n.resched[0];
+        assert_eq!(re_x, a);
+        assert_eq!(re_done, 2_000_000);
+        // Its original completion event is now stale.
+        assert!(n.complete(1_000_000, a, re_gen.wrapping_sub(1)).is_none());
+        n.resched.clear();
+        // B completes at 2 s; that exit epoch re-rates A (0 bytes left,
+        // rate doubles), bumping its gen and rescheduling it at the
+        // same instant — the event-driven self-correction the fabric
+        // relies on: the displaced event is skipped, the fresh one
+        // completes the transfer.
+        assert!(n.complete(2_000_000, b, gen_b).is_some());
+        assert!(n.complete(2_000_000, a, re_gen).is_none(), "displaced again by B's exit");
+        let (re_done2, _, re_gen2) =
+            *n.resched.iter().find(|(_, x, _)| *x == a).expect("A rescheduled at B's exit");
+        assert_eq!(re_done2, 2_000_000);
+        assert!(n.complete(re_done2, a, re_gen2).is_some());
+        assert_eq!(n.contended_transfers, 1, "only the second entered contended");
+    }
+
+    #[test]
+    fn exit_epoch_speeds_up_the_survivor() {
+        // A finishes at 1 s; B (same bottleneck) then speeds up from
+        // half rate to full and its completion is re-estimated earlier.
+        let mut n = net(1.0, Placement::CoLocated);
+        let a = n.prepare(2, 0, 0.5e9, 0, None);
+        let (_, gen_a) = n.start(0, a);
+        let b = n.prepare(3, 0, 1e9, 0, None);
+        let (done_b0, _) = n.start(0, b);
+        assert_eq!(done_b0, 2_000_000, "B at half rate initially");
+        // B's entry (same instant) displaced A's 0.5 s solo estimate:
+        // the original gen is stale; the resched entry carries the
+        // live one — 0.5 GB at the halved 0.5 GB/s rate lands at 1 s.
+        assert!(n.complete(1_000_000, a, gen_a).is_none(), "stale gen ignored");
+        let re = n
+            .resched
+            .iter()
+            .find(|(_, x, _)| *x == a)
+            .map(|&(d, _, g)| (d, g));
+        let (done_a, gen_a2) = re.expect("A re-estimated after B joined");
+        assert_eq!(done_a, 1_000_000);
+        n.resched.clear();
+        assert!(n.complete(done_a, a, gen_a2).is_some());
+        // B re-estimated: 0.5 GB left at full rate -> 1.5 s total.
+        let (done_b1, _, _) = *n.resched.iter().find(|(_, x, _)| *x == b).expect("B resched");
+        assert_eq!(done_b1, 1_500_000);
+    }
+
+    #[test]
+    fn oversubscribed_uplink_throttles_cross_rack_transfers() {
+        // CoLocated, racks of 4, 8 nodes -> 2 racks; node i rack i % 2.
+        // Four cross-rack transfers from rack 0 to rack 1 share rack
+        // 0's uplink: at oversub 8 the uplink is 4 * 1 GB/s / 8 =
+        // 0.5 GB/s, so each flow gets 0.125 GB/s instead of 1 GB/s.
+        let mut n = net(8.0, Placement::CoLocated);
+        // Distinct sources in rack 0 (nodes 0,2,4,6), distinct
+        // destinations in rack 1 (nodes 1,3,5,7).
+        let mut last_done = 0;
+        for (s, d) in [(0u32, 1u32), (2, 3), (4, 5), (6, 7)] {
+            let x = n.prepare(s, d, 1e9, 0, None);
+            let (done, _) = n.start(0, x);
+            last_done = done;
+        }
+        assert_eq!(last_done, 8_000_000, "4 flows on a 0.5 GB/s uplink");
+        assert_eq!(n.contended_transfers, 3, "all but the first entered contended");
+        assert!(n.max_uplink_util(8_000_000) > 0.9);
+    }
+
+    #[test]
+    fn broker_isolated_keeps_broker_traffic_off_the_uplinks() {
+        // BrokerIsolated with rack_size 4 >= 2 brokers: nodes 0,1 (the
+        // brokers) share rack 0, so replication (0 -> 1) is intra-rack.
+        let mut n = net(8.0, Placement::BrokerIsolated);
+        assert_eq!(n.rack_of(0), n.rack_of(1));
+        let x = n.prepare(0, 1, 1e9, 0, None);
+        let (done, _) = n.start(0, x);
+        assert_eq!(done, 1_000_000, "full access rate, no uplink crossed");
+        assert_eq!(n.max_uplink_util(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn sync_transfer_locks_its_estimate() {
+        let mut n = net(1.0, Placement::CoLocated);
+        let (x, gen, done) = n.transfer_sync(0, 2, 0, 1e9);
+        assert_eq!(done, 1_000_000);
+        // A competitor halves the sync flow's rate, but no resched
+        // entry is produced for it (locked estimate)...
+        let b = n.prepare(3, 0, 1e9, 0, None);
+        n.start(0, b);
+        assert!(!n.resched.iter().any(|&(_, xi, _)| xi == x));
+        // ...and its release at the locked time still completes it.
+        assert!(n.complete(done, x, gen).is_some());
+    }
+
+    #[test]
+    fn slot_recycling_invalidates_stale_completions() {
+        let mut n = net(1.0, Placement::CoLocated);
+        let a = n.prepare(2, 0, 1e6, 0, Some(1));
+        let (done_a, gen_a) = n.start(0, a);
+        assert!(n.complete(done_a, a, gen_a).is_some());
+        // Slot reused by a fresh transfer: the old (xfer, gen) pair
+        // must not complete it.
+        let b = n.prepare(3, 1, 1e9, 0, Some(2));
+        assert_eq!(a, b, "slot recycled");
+        let (_, gen_b) = n.start(done_a, b);
+        assert!(n.complete(done_a, b, gen_a).is_none());
+        assert_ne!(gen_a, gen_b);
+    }
+
+    #[test]
+    fn loopback_transfer_is_instant() {
+        let mut n = net(4.0, Placement::CoLocated);
+        let (_, _, done) = n.transfer_sync(5, 3, 3, 1e12);
+        assert_eq!(done, 5);
+    }
+}

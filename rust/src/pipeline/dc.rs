@@ -59,6 +59,8 @@ use crate::config::calibration::{ObjDetCosts, RpcCosts, TrainCosts};
 use crate::config::{AccelProtocol, Config, KafkaTuning};
 use crate::config::hardware::NvmeSpec;
 use crate::metrics::bandwidth::{BandwidthMeter, Class};
+use crate::net::topology::FatTree;
+use crate::net::{NetworkSpec, Nic};
 use crate::pipeline::fabric::{
     Fabric, FabricEv, FabricOut, FaultEvent, FaultPlan, SendOutcome, WIRE_US,
 };
@@ -682,12 +684,18 @@ pub struct FlowState {
 /// Per-producer container state.
 pub struct ProducerUnit {
     pub rng: Rng,
-    pub nic: FifoServer,
+    /// Host NIC: dispatch serializes on `nic.tx` (bit-exact the old
+    /// single FIFO server); the rx direction is idle on producers.
+    pub nic: Nic,
     /// Send-path server (serialization + Kafka client), us of work.
     /// Exercised by Object Detection; idle for Face Recognition.
     pub send: FifoServer,
     /// Frames (FR) / ticks (OD) started.
     pub cycles: u64,
+    /// Network node id on the contention-aware fabric (brokers are
+    /// `0..B`, client units follow in world build order). Unused —
+    /// carried but never read — when the network is disabled.
+    pub node: u32,
 }
 
 /// One tenant's producer fleet: frame/tick cycles, linger, dispatch.
@@ -972,7 +980,7 @@ impl ProducerClient {
             let s = &mut *ctx.shared;
             token = s.items.alloc(item);
             let leader = s.partitions[partition as usize].leader;
-            let sent = s.fabric.send_grouped_classed(
+            let sent = s.fabric.send_grouped_classed_from(
                 now,
                 partition,
                 leader,
@@ -980,8 +988,9 @@ impl ProducerClient {
                 item.count,
                 token,
                 self.tenant,
+                self.units[pid].node,
                 &mut s.meter,
-                &mut self.units[pid].nic,
+                &mut self.units[pid].nic.tx,
                 &mut s.fabric_out,
             );
             if sent {
@@ -1050,7 +1059,7 @@ impl ProducerClient {
             ts.metrics.retries += item.count;
             let policy = ts.retry.expect("RetryFire on a tenant without a RetryPolicy");
             let leader = s.partitions[partition as usize].leader;
-            let outcome = s.fabric.send_retry_grouped_classed(
+            let outcome = s.fabric.send_retry_grouped_classed_from(
                 now,
                 partition,
                 leader,
@@ -1058,8 +1067,9 @@ impl ProducerClient {
                 item.count,
                 token,
                 self.tenant,
+                self.units[pid].node,
                 &mut s.meter,
-                &mut self.units[pid].nic,
+                &mut self.units[pid].nic.tx,
                 &mut s.fabric_out,
             );
             match outcome {
@@ -1143,7 +1153,7 @@ impl ProducerClient {
             let bytes = item.bytes + overhead * item.count as f64;
             s.tenants[t].metrics.retries += item.count;
             let leader = s.partitions[partition as usize].leader;
-            let outcome = s.fabric.send_retry_grouped_classed(
+            let outcome = s.fabric.send_retry_grouped_classed_from(
                 now,
                 partition,
                 leader,
@@ -1151,8 +1161,9 @@ impl ProducerClient {
                 item.count,
                 token,
                 self.tenant,
+                self.units[pid].node,
                 &mut s.meter,
-                &mut self.units[pid].nic,
+                &mut self.units[pid].nic.tx,
                 &mut s.fabric_out,
             );
             match outcome {
@@ -1280,8 +1291,13 @@ pub enum ServiceModel {
 /// Per-consumer container state.
 pub struct ConsumerUnit {
     pub rng: Rng,
-    pub nic_rx: FifoServer,
+    /// Host NIC: fetch responses land on `nic.rx` (bit-exact the old
+    /// single FIFO server); the tx direction is idle on consumers.
+    pub nic: Nic,
     pub done: u64,
+    /// Network node id on the contention-aware fabric (see
+    /// [`ProducerUnit::node`]).
+    pub node: u32,
 }
 
 /// One tenant's consumer fleet: poll scheduling, fetch, serial service.
@@ -1419,18 +1435,24 @@ impl ConsumerPoller {
                 // The global partition id is the read-path group key, so
                 // a lagging consumer's fetch is split against what is
                 // actually still cached for *this* partition.
-                let done = s.fabric.fetch_group_classed(
+                let done = s.fabric.fetch_group_classed_to(
                     now,
                     leader,
                     pi,
                     part_bytes,
                     self.tenant,
-                    &mut self.units[cid].nic_rx,
+                    self.units[cid].node,
+                    &mut self.units[cid].nic.rx,
                     &mut s.meter,
+                    &mut s.fabric_out,
                 );
                 deliver_at = deliver_at.max(done);
             }
         }
+        // Fetch responses on the contention-aware network queue link
+        // release (and re-estimate) events; flush them into the world.
+        // A no-op — `fabric_out` stays empty — when the network is off.
+        drain_fabric(ctx);
         if self.fetched.is_empty() {
             return;
         }
@@ -1575,6 +1597,10 @@ pub struct FabricSpec {
     /// installed-but-inert case `tests/failover_differential.rs` pins
     /// bit-exact against `None`.
     pub faults: Option<FaultPlan>,
+    /// Contention-aware ToR/spine network ([`Fabric::enable_network`]);
+    /// `None` (the default) keeps every wire hop at the fixed transit,
+    /// bit for bit (pinned by `tests/net_differential.rs`).
+    pub network: Option<NetworkSpec>,
 }
 
 impl FabricSpec {
@@ -1595,6 +1621,7 @@ impl FabricSpec {
             tuning: cfg.tuning,
             read_cache_bytes: None,
             faults: None,
+            network: None,
         }
     }
 
@@ -1609,6 +1636,23 @@ impl FabricSpec {
     /// events are scheduled into the world at build time.
     pub fn with_faults(mut self, plan: FaultPlan) -> FabricSpec {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Route every wire hop over a two-tier ToR/spine network derived
+    /// from `topo`'s switch radix: racks hold `ports_per_switch / 2`
+    /// nodes on `link_bw` access links, and each rack's spine uplink
+    /// carries `rack capacity / oversub` — `oversub > 1` is the classic
+    /// oversubscribed fat-tree edge. See [`Fabric::enable_network`].
+    pub fn with_network(mut self, topo: &FatTree, oversub: f64, link_bw: f64) -> FabricSpec {
+        self.network = Some(NetworkSpec::from_fat_tree(topo, oversub, link_bw));
+        self
+    }
+
+    /// [`FabricSpec::with_network`] from an explicit [`NetworkSpec`]
+    /// (rack size and placement control).
+    pub fn with_network_spec(mut self, spec: NetworkSpec) -> FabricSpec {
+        self.network = Some(spec);
         self
     }
 
@@ -1776,6 +1820,15 @@ pub fn build_with_qos(
     if let Some(weights) = qos.and_then(|p| p.storage_weights.as_deref()) {
         shared_fabric.enable_storage_qos(weights);
     }
+    if let Some(spec) = fabric.network {
+        // Client node count must match the ids handed out below:
+        // producer units then consumer units, tenant by tenant.
+        let clients: usize = tenants
+            .iter()
+            .map(|t| producer_unit_count(t.cfg) + t.cfg.deployment.consumers)
+            .sum();
+        shared_fabric.enable_network(spec, clients);
+    }
     let state = DcState {
         fabric: shared_fabric,
         meter,
@@ -1791,6 +1844,10 @@ pub fn build_with_qos(
     };
     let mut world = World::new(state);
 
+    // Network node ids: brokers occupy 0..B; every client unit gets the
+    // next id in world build order (producers then consumers, tenant by
+    // tenant) — the order `producer_unit_count` mirrors above.
+    let mut next_node = fabric.brokers as u32;
     for (tenant, spec) in tenants.iter().enumerate() {
         let cfg = spec.cfg;
         let d = &cfg.deployment;
@@ -1814,8 +1871,10 @@ pub fn build_with_qos(
                         &mut master,
                     )
                 });
-                let units = producer_units(&mut master, d.producers, cfg.node.net_bw);
-                let consumers = consumer_units(&mut master, d.consumers, cfg.node.net_bw);
+                let units =
+                    producer_units(&mut master, d.producers, cfg.node.net_bw, &mut next_node);
+                let consumers =
+                    consumer_units(&mut master, d.consumers, cfg.node.net_bw, &mut next_node);
 
                 let cycle =
                     stages.producer_cycle_mean_us(cfg.calibration.faces.mean_faces) as u64;
@@ -1857,6 +1916,7 @@ pub fn build_with_qos(
                     tenant,
                     cfg,
                     cfg.seed ^ 0x0BDE7,
+                    &mut next_node,
                     ProducerKind::Tick {
                         tick_us: od.tick_us,
                         // Emulation protocol: ingestion and detection
@@ -1881,6 +1941,7 @@ pub fn build_with_qos(
                     tenant,
                     cfg,
                     cfg.seed ^ 0x7EA17,
+                    &mut next_node,
                     ProducerKind::Tick {
                         tick_us: tr.tick_us,
                         records_per_tick: tr.batches_per_tick,
@@ -1900,6 +1961,7 @@ pub fn build_with_qos(
                     tenant,
                     cfg,
                     cfg.seed ^ 0x59C5,
+                    &mut next_node,
                     ProducerKind::Tick {
                         tick_us: rpc.period_us,
                         records_per_tick: 1,
@@ -1945,6 +2007,7 @@ fn add_tick_tenant(
     tenant: usize,
     cfg: &Config,
     seed: u64,
+    next_node: &mut u32,
     kind: ProducerKind,
     service: ServiceModel,
 ) {
@@ -1981,8 +2044,8 @@ fn add_tick_tenant(
                 rr: 0,
             })
             .collect();
-        let units = producer_units(&mut master, nflows, net_bw);
-        let consumers = consumer_units(&mut master, d.consumers, net_bw);
+        let units = producer_units(&mut master, nflows, net_bw, next_node);
+        let consumers = consumer_units(&mut master, d.consumers, net_bw, next_node);
         let producer = world.add(Box::new(ProducerClient {
             tenant: tenant as u8,
             kind: ProducerKind::Flow {
@@ -2013,8 +2076,8 @@ fn add_tick_tenant(
         }
         return;
     }
-    let units = producer_units(&mut master, d.producers, net_bw);
-    let consumers = consumer_units(&mut master, d.consumers, net_bw);
+    let units = producer_units(&mut master, d.producers, net_bw, next_node);
+    let consumers = consumer_units(&mut master, d.consumers, net_bw, next_node);
     let producer = world.add(Box::new(ProducerClient {
         tenant: tenant as u8,
         kind,
@@ -2035,25 +2098,56 @@ fn add_tick_tenant(
     }
 }
 
-fn producer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ProducerUnit> {
+fn producer_units(
+    master: &mut Rng,
+    count: usize,
+    net_bw: f64,
+    next_node: &mut u32,
+) -> Vec<ProducerUnit> {
     (0..count)
-        .map(|_| ProducerUnit {
-            rng: master.fork(),
-            nic: FifoServer::new(net_bw, 0),
-            send: FifoServer::new(1e6, 0),
-            cycles: 0,
+        .map(|_| {
+            let node = *next_node;
+            *next_node += 1;
+            ProducerUnit {
+                rng: master.fork(),
+                nic: Nic::new(net_bw),
+                send: FifoServer::new(1e6, 0),
+                cycles: 0,
+                node,
+            }
         })
         .collect()
 }
 
-fn consumer_units(master: &mut Rng, count: usize, net_bw: f64) -> Vec<ConsumerUnit> {
+fn consumer_units(
+    master: &mut Rng,
+    count: usize,
+    net_bw: f64,
+    next_node: &mut u32,
+) -> Vec<ConsumerUnit> {
     (0..count)
-        .map(|_| ConsumerUnit {
-            rng: master.fork(),
-            nic_rx: FifoServer::new(net_bw, 0),
-            done: 0,
+        .map(|_| {
+            let node = *next_node;
+            *next_node += 1;
+            ConsumerUnit { rng: master.fork(), nic: Nic::new(net_bw), done: 0, node }
         })
         .collect()
+}
+
+/// Producer units a tenant will create — must mirror the branch in
+/// [`add_tick_tenant`] exactly, because [`Fabric::enable_network`] sizes
+/// the node table from this count *before* the units exist.
+fn producer_unit_count(cfg: &Config) -> usize {
+    let d = &cfg.deployment;
+    if cfg.flow_clients > 0 {
+        let auto = d.partitions.min(32);
+        (if cfg.flow_processes > 0 { cfg.flow_processes } else { auto })
+            .min(d.partitions)
+            .max(1)
+            .min(cfg.flow_clients as usize)
+    } else {
+        d.producers
+    }
 }
 
 /// Compact, workload-agnostic per-tenant results view — the common

@@ -26,14 +26,19 @@ use crate::broker::qos::WeightedCpuScheduler;
 use crate::config::hardware::NvmeSpec;
 use crate::config::KafkaTuning;
 use crate::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
+use crate::net::path::{NetworkSpec, PathNet, NO_NODE};
 use crate::sim::resource::FifoServer;
 use crate::storage::cache::PageCache;
 use crate::storage::device::StorageDevice;
 
 /// One-way wire/switch transit within the data center (fat tree, µs).
-pub const WIRE_US: u64 = 30;
+pub const WIRE_US: u64 = crate::config::hardware::WIRE_TRANSIT_US;
 /// Replication ack transit back to the leader.
 pub const ACK_TRANSIT_US: u64 = 60;
+/// Size of a replication ack frame on the contention-aware fabric. Acks
+/// are latency messages, not bandwidth flows; they cross the network as
+/// tiny transfers so a saturated uplink delays (but barely loads) them.
+pub const ACK_BYTES: f64 = 64.0;
 
 /// Sentinel partition group for fetches with no partition identity
 /// (legacy entry points); such reads are always served from memory,
@@ -82,6 +87,15 @@ pub enum FabricEv {
     /// off the source leaders' spindles ([`Fabric::enable_faults`]).
     /// Never scheduled in a fault-free world.
     Recovery { broker: u32 },
+    /// A prepared network transfer's serialization finished; it enters
+    /// the shared links now ([`Fabric::enable_network`]). Never
+    /// scheduled without the contention-aware fabric.
+    NetStart { xfer: u32 },
+    /// A network transfer's estimated last byte arrives. `gen` guards
+    /// against re-estimates: when contention changed the transfer's
+    /// fair-share rate after this event was scheduled, the generation
+    /// won't match and the event is ignored (a fresher one is queued).
+    NetDone { xfer: u32, gen: u32 },
 }
 
 /// Outputs of a fabric step: new events to schedule, or a commit
@@ -475,6 +489,19 @@ pub struct Fabric {
     /// Failure/membership machinery; `None` (the default) is the
     /// immortal fabric bit for bit.
     faults: Option<FaultState>,
+    /// Contention-aware ToR/spine network; `None` (the default) keeps
+    /// every hop at the fixed [`WIRE_US`] transit, bit for bit.
+    net: Option<PathNet<FabricEv>>,
+}
+
+/// Flush the network's re-estimate queue as [`FabricEv::NetDone`]
+/// events: every active transfer whose fair-share rate just changed got
+/// a fresh completion estimate; the stale event already in the host
+/// queue will miss on its generation.
+fn drain_resched(net: &mut PathNet<FabricEv>, out: &mut Vec<FabricOut>) {
+    for (t, xfer, gen) in net.resched.drain(..) {
+        out.push(FabricOut::Schedule(t, FabricEv::NetDone { xfer, gen }));
+    }
 }
 
 impl Fabric {
@@ -506,6 +533,7 @@ impl Fabric {
             free: Vec::new(),
             read_path: None,
             faults: None,
+            net: None,
         }
     }
 
@@ -600,6 +628,43 @@ impl Fabric {
             .unwrap_or(0);
         let consumed = rp.consumed.get(group as usize).copied().unwrap_or(0);
         appended.saturating_sub(consumed)
+    }
+
+    /// Install the contention-aware network: every wire hop (produce
+    /// send, replication fan-out, replication ack, fetch response,
+    /// recovery catch-up stream) becomes a transfer over concrete
+    /// ToR/spine links whose capacity concurrent flows split max-min
+    /// fairly ([`crate::net::path::PathNet`]). Brokers are nodes
+    /// `0..brokers`; client units are nodes `brokers..brokers+clients`
+    /// (assigned in world build order). Call before any traffic flows.
+    /// With this disabled (the default) every hop pays the fixed
+    /// [`WIRE_US`] / [`ACK_TRANSIT_US`] transit, bit for bit the
+    /// pre-network fabric.
+    pub fn enable_network(&mut self, spec: NetworkSpec, clients: usize) {
+        self.net = Some(PathNet::new(spec, self.brokers.len(), clients));
+    }
+
+    /// Whether the contention-aware network is installed.
+    pub fn network_enabled(&self) -> bool {
+        self.net.is_some()
+    }
+
+    /// Transfers that entered the network below their solo (uncontended)
+    /// rate — the contention event counter. Zero when disabled.
+    pub fn net_contended_transfers(&self) -> u64 {
+        self.net.as_ref().map_or(0, |n| n.contended_transfers)
+    }
+
+    /// Peak mean utilization across the rack uplinks/downlinks (0.0 when
+    /// the network is disabled).
+    pub fn net_max_uplink_util(&self, elapsed_us: u64) -> f64 {
+        self.net.as_ref().map_or(0.0, |n| n.max_uplink_util(elapsed_us))
+    }
+
+    /// Peak mean utilization across the node access links (0.0 when the
+    /// network is disabled).
+    pub fn net_max_access_util(&self, elapsed_us: u64) -> f64 {
+        self.net.as_ref().map_or(0.0, |n| n.max_access_util(elapsed_us))
     }
 
     /// Install the failure/membership machinery: liveness + ISR state
@@ -918,6 +983,33 @@ impl Fabric {
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
     ) -> bool {
+        self.send_grouped_classed_from(
+            now, partition, leader, bytes, records, token, class, NO_NODE, meter, producer_nic,
+            out,
+        )
+    }
+
+    /// [`Fabric::send_grouped_classed`] with the producer's network node
+    /// identity. With the contention-aware network installed and
+    /// `src_node != NO_NODE`, the wire hop becomes a transfer over the
+    /// producer's access link and (cross-rack) the shared uplinks;
+    /// otherwise the send pays the fixed [`WIRE_US`] transit, bit for
+    /// bit the pre-network path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_grouped_classed_from(
+        &mut self,
+        now: u64,
+        partition: u32,
+        leader: u32,
+        bytes: f64,
+        records: u64,
+        token: u64,
+        class: u8,
+        src_node: u32,
+        meter: &mut BandwidthMeter,
+        producer_nic: &mut FifoServer,
+        out: &mut Vec<FabricOut>,
+    ) -> bool {
         // Fault-mode admission: a dead leader or an ISR below min_isr
         // refuses the produce (Kafka's NotEnoughReplicas), counted as a
         // rejection. With every broker healthy this computes isr ==
@@ -942,7 +1034,7 @@ impl Fabric {
             }
         }
         meter.add(Class::Producer, Channel::Network, Dir::Write, bytes);
-        let t_tx = producer_nic.submit(now, bytes) + WIRE_US;
+        let t_ser = producer_nic.submit(now, bytes);
         let fid = self.alloc(InFlight {
             token,
             partition,
@@ -956,8 +1048,41 @@ impl Fabric {
             pending: 0,
             isr: self.replication as u8,
         });
-        out.push(FabricOut::Schedule(t_tx, FabricEv::LeaderArrive { fid }));
+        self.emit_transfer(
+            t_ser,
+            src_node,
+            leader,
+            bytes,
+            WIRE_US,
+            FabricEv::LeaderArrive { fid },
+            out,
+        );
         true
+    }
+
+    /// Route one asynchronous wire hop: with the network installed and
+    /// both endpoints mapped, prepare a transfer that enters the shared
+    /// links when serialization finishes at `t_ser` (its payload event
+    /// fires `prop_us` after the last byte arrives); otherwise schedule
+    /// the payload at the fixed `t_ser + prop_us`, bit for bit the
+    /// pre-network arithmetic.
+    fn emit_transfer(
+        &mut self,
+        t_ser: u64,
+        src: u32,
+        dst: u32,
+        bytes: f64,
+        prop_us: u64,
+        ev: FabricEv,
+        out: &mut Vec<FabricOut>,
+    ) {
+        match &mut self.net {
+            Some(net) if src != NO_NODE && dst != NO_NODE => {
+                let xfer = net.prepare(src, dst, bytes, prop_us, Some(ev));
+                out.push(FabricOut::Schedule(t_ser, FabricEv::NetStart { xfer }));
+            }
+            _ => out.push(FabricOut::Schedule(t_ser + prop_us, ev)),
+        }
     }
 
     /// A client retransmission of a record already offered once under
@@ -983,6 +1108,30 @@ impl Fabric {
         records: u64,
         token: u64,
         class: u8,
+        meter: &mut BandwidthMeter,
+        producer_nic: &mut FifoServer,
+        out: &mut Vec<FabricOut>,
+    ) -> SendOutcome {
+        self.send_retry_grouped_classed_from(
+            now, partition, leader, bytes, records, token, class, NO_NODE, meter, producer_nic,
+            out,
+        )
+    }
+
+    /// [`Fabric::send_retry_grouped_classed`] with the producer's
+    /// network node identity (see
+    /// [`Fabric::send_grouped_classed_from`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_retry_grouped_classed_from(
+        &mut self,
+        now: u64,
+        partition: u32,
+        leader: u32,
+        bytes: f64,
+        records: u64,
+        token: u64,
+        class: u8,
+        src_node: u32,
         meter: &mut BandwidthMeter,
         producer_nic: &mut FifoServer,
         out: &mut Vec<FabricOut>,
@@ -1021,8 +1170,9 @@ impl Fabric {
                 fs.stats.bytes_lost -= b;
             }
         }
-        if self.send_grouped_classed(
-            now, partition, leader, bytes, records, token, class, meter, producer_nic, out,
+        if self.send_grouped_classed_from(
+            now, partition, leader, bytes, records, token, class, src_node, meter, producer_nic,
+            out,
         ) {
             SendOutcome::Admitted
         } else {
@@ -1098,12 +1248,16 @@ impl Fabric {
                             pending |= 1 << r;
                             acks += 1;
                             meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
-                            let t_out =
-                                self.brokers[leader].nic_tx.submit(now, bytes) + WIRE_US;
-                            out.push(FabricOut::Schedule(
-                                t_out,
+                            let t_ser = self.brokers[leader].nic_tx.submit(now, bytes);
+                            self.emit_transfer(
+                                t_ser,
+                                leader as u32,
+                                fb,
+                                bytes,
+                                WIRE_US,
                                 FabricEv::FollowerArrive { fid, broker: fb },
-                            ));
+                                out,
+                            );
                         } else {
                             self.faults.as_mut().unwrap().note_missed(
                                 fb, partition, leader as u32, class, bytes,
@@ -1125,11 +1279,16 @@ impl Fabric {
                     for r in 1..self.replication {
                         let fb = ((leader + r) % n) as u32;
                         meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
-                        let t_out = self.brokers[leader].nic_tx.submit(now, bytes) + WIRE_US;
-                        out.push(FabricOut::Schedule(
-                            t_out,
+                        let t_ser = self.brokers[leader].nic_tx.submit(now, bytes);
+                        self.emit_transfer(
+                            t_ser,
+                            leader as u32,
+                            fb,
+                            bytes,
+                            WIRE_US,
                             FabricEv::FollowerArrive { fid, broker: fb },
-                        ));
+                            out,
+                        );
                     }
                 }
             }
@@ -1152,9 +1311,9 @@ impl Fabric {
                 ));
             }
             FabricEv::FollowerCpuDone { fid, broker } => {
-                let (bytes, class, partition) = {
+                let (bytes, class, partition, leader) = {
                     let f = &self.inflight[fid as usize];
-                    (f.bytes, f.class, f.partition)
+                    (f.bytes, f.class, f.partition, f.leader)
                 };
                 if self.faults.is_some() && self.stale_follower_event(fid, broker) {
                     return;
@@ -1166,10 +1325,18 @@ impl Fabric {
                 if let Some(rp) = &mut self.read_path {
                     rp.caches[broker as usize].append_group(partition, bytes);
                 }
-                out.push(FabricOut::Schedule(
-                    t_wr + ACK_TRANSIT_US,
+                // The ack is a tiny frame riding the same fabric back
+                // to the leader; without the network it is the fixed
+                // transit, bit for bit.
+                self.emit_transfer(
+                    t_wr,
+                    broker,
+                    leader,
+                    ACK_BYTES,
+                    ACK_TRANSIT_US,
                     FabricEv::ReplicaAck { fid, broker },
-                ));
+                    out,
+                );
             }
             FabricEv::LeaderStored { fid } => {
                 if self.faults.is_some() {
@@ -1216,6 +1383,24 @@ impl Fabric {
             }
             FabricEv::Recovery { broker } => {
                 self.recovery_tick(now, broker, meter, out);
+            }
+            FabricEv::NetStart { xfer } => {
+                let net = self.net.as_mut().expect("NetStart without enable_network");
+                let (done, gen) = net.start(now, xfer);
+                out.push(FabricOut::Schedule(done, FabricEv::NetDone { xfer, gen }));
+                drain_resched(net, out);
+            }
+            FabricEv::NetDone { xfer, gen } => {
+                let net = self.net.as_mut().expect("NetDone without enable_network");
+                if let Some((prop_us, payload)) = net.complete(now, xfer, gen) {
+                    // Sync transfers (fetch / recovery legs) carry no
+                    // payload: their delivery time was already returned
+                    // to the caller; this event just releases the links.
+                    if let Some(ev) = payload {
+                        out.push(FabricOut::Schedule(now + prop_us, ev));
+                    }
+                }
+                drain_resched(net, out);
             }
         }
     }
@@ -1270,6 +1455,11 @@ impl Fabric {
             return;
         }
         let mut budget = fs.recovery_bytes_per_sec * (RECOVERY_TICK_US as f64 / 1e6);
+        // Latest network delivery this tick: with the contention-aware
+        // fabric the next tick waits for it, so the catch-up stream is
+        // self-clocked by the wire instead of piling transfers onto a
+        // saturated uplink. Zero (inert) without the network.
+        let mut net_gate = 0u64;
         let mut i = 0;
         while budget > 1.0 && i < fs.replay[b].len() {
             let e = fs.replay[b][i];
@@ -1287,9 +1477,19 @@ impl Fabric {
                 .storage
                 .read_cold_classed(t_cpu, take, e.class);
             meter.add(Class::Broker, Channel::Network, Dir::Write, take);
-            let t_tx = self.brokers[src].nic_tx.submit(t_read, take) + WIRE_US;
+            let t_ser = self.brokers[src].nic_tx.submit(t_read, take);
+            let t_net = match &mut self.net {
+                Some(net) => {
+                    let (xfer, gen, done) = net.transfer_sync(now, src as u32, broker, take);
+                    out.push(FabricOut::Schedule(done, FabricEv::NetDone { xfer, gen }));
+                    drain_resched(net, out);
+                    net_gate = net_gate.max(done);
+                    t_ser.max(done) + WIRE_US
+                }
+                None => t_ser + WIRE_US,
+            };
             meter.add(Class::Broker, Channel::Network, Dir::Read, take);
-            let t_rx = self.brokers[b].nic_rx.submit(t_tx, take);
+            let t_rx = self.brokers[b].nic_rx.submit(t_net, take);
             meter.add(Class::Broker, Channel::Storage, Dir::Write, take);
             let t_wr = self.brokers[b].storage.write_classed(t_rx, take, e.class);
             if let Some(rp) = &mut self.read_path {
@@ -1312,7 +1512,7 @@ impl Fabric {
         } else {
             fs.recovery_ticks[b] += 1;
             out.push(FabricOut::Schedule(
-                now + RECOVERY_TICK_US,
+                (now + RECOVERY_TICK_US).max(net_gate),
                 FabricEv::Recovery { broker },
             ));
         }
@@ -1412,6 +1612,37 @@ impl Fabric {
         consumer_nic_rx: &mut FifoServer,
         meter: &mut BandwidthMeter,
     ) -> u64 {
+        let mut tmp = Vec::new();
+        let t = self.fetch_group_classed_to(
+            now, leader, group, bytes, class, NO_NODE, consumer_nic_rx, meter, &mut tmp,
+        );
+        // The NO_NODE path never touches the network, so it has no
+        // release events to schedule (and allocates nothing above).
+        debug_assert!(tmp.is_empty());
+        t
+    }
+
+    /// [`Fabric::fetch_group_classed`] with the consumer's network node
+    /// identity. With the contention-aware network installed and
+    /// `dst_node != NO_NODE`, the response bytes cross the broker's
+    /// access link and (cross-rack) the shared uplinks as a transfer
+    /// whose rate is locked at its max-min share on entry; the link
+    /// release event it needs goes through `out`. The fetch stays
+    /// synchronous — it returns the delivery completion time — so under
+    /// contention the locked estimate is the response's network time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fetch_group_classed_to(
+        &mut self,
+        now: u64,
+        leader: u32,
+        group: u32,
+        bytes: f64,
+        class: u8,
+        dst_node: u32,
+        consumer_nic_rx: &mut FifoServer,
+        meter: &mut BandwidthMeter,
+        out: &mut Vec<FabricOut>,
+    ) -> u64 {
         let cpu = self.request_cpu_us(bytes);
         let b = &mut self.brokers[leader as usize];
         let t_cpu = b.cpu_submit(now, class, cpu);
@@ -1441,8 +1672,19 @@ impl Fabric {
             }
             _ => b.storage.read(t_cpu, bytes, true), // page cache (seed path)
         };
-        let t_tx = b.nic_tx.submit(t_read, bytes) + WIRE_US;
-        let t_rx = consumer_nic_rx.submit(t_tx, bytes);
+        let t_ser = b.nic_tx.submit(t_read, bytes);
+        let t_net = match &mut self.net {
+            Some(net) if dst_node != NO_NODE => {
+                let (xfer, gen, done) = net.transfer_sync(now, leader, dst_node, bytes);
+                out.push(FabricOut::Schedule(done, FabricEv::NetDone { xfer, gen }));
+                drain_resched(net, out);
+                // Delivery is gated by both the serialization chain and
+                // the network transfer; uncontended they coincide.
+                t_ser.max(done) + WIRE_US
+            }
+            _ => t_ser + WIRE_US,
+        };
+        let t_rx = consumer_nic_rx.submit(t_net, bytes);
         meter.add(Class::Broker, Channel::Network, Dir::Write, bytes);
         meter.add(Class::Consumer, Channel::Network, Dir::Read, bytes);
         t_rx

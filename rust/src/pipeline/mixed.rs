@@ -28,6 +28,7 @@
 
 use crate::broker::qos::{QosPolicy, TenantQuota};
 use crate::config::Config;
+use crate::net::NetworkSpec;
 use crate::pipeline::dc::{self, FabricSpec, TenantSpec, TenantSummary, WorkloadKind};
 use crate::pipeline::fabric::FaultPlan;
 use crate::pipeline::facerec::{self, SimReport};
@@ -335,6 +336,11 @@ pub struct MultiTenantConfig {
     /// `None` — and an *empty* plan — leave the world bit-exact to the
     /// immortal fabric (`tests/failover_differential.rs` pins both).
     pub faults: Option<FaultPlan>,
+    /// Contention-aware ToR/spine network on the shared fabric
+    /// ([`FabricSpec::with_network_spec`]); `None` (the default) keeps
+    /// every wire hop at the fixed transit, bit for bit
+    /// (`tests/net_differential.rs` pins it).
+    pub network: Option<NetworkSpec>,
 }
 
 impl MultiTenantConfig {
@@ -349,6 +355,7 @@ impl MultiTenantConfig {
             broker_write_budget: None,
             read_cache_bytes: None,
             faults: None,
+            network: None,
         }
     }
 
@@ -380,6 +387,13 @@ impl MultiTenantConfig {
     /// [`Self::faults`]).
     pub fn with_faults(mut self, plan: FaultPlan) -> Self {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Route every wire hop over a contention-aware ToR/spine network
+    /// (see [`Self::network`]).
+    pub fn with_network(mut self, spec: NetworkSpec) -> Self {
+        self.network = Some(spec);
         self
     }
 
@@ -568,6 +582,11 @@ pub struct MultiTenantReport {
     pub clamped_events: u64,
     /// Failure accounting (`None` when no [`FaultPlan`] was installed).
     pub fault: Option<FaultReport>,
+    /// Transfers whose max-min share was below their solo share at some
+    /// epoch — zero when no network is installed or nothing contends.
+    pub net_contended_transfers: u64,
+    /// Peak time-averaged rack-uplink utilization (0.0 without a network).
+    pub net_max_uplink_util: f64,
 }
 
 impl MultiTenantReport {
@@ -596,6 +615,9 @@ impl MultiTenantSim {
         }
         if let Some(plan) = &c.faults {
             spec = spec.with_faults(plan.clone());
+        }
+        if let Some(net) = c.network {
+            spec = spec.with_network_spec(net);
         }
         let tenant_specs: Vec<TenantSpec<'_>> = c
             .tenants
@@ -663,6 +685,8 @@ impl MultiTenantSim {
             events: world.processed(),
             clamped_events: world.clamped(),
             fault,
+            net_contended_transfers: world.shared.fabric.net_contended_transfers(),
+            net_max_uplink_util: world.shared.fabric.net_max_uplink_util(elapsed),
         }
     }
 }

@@ -1,0 +1,378 @@
+//! Contention-aware network differential suite.
+//!
+//! Three contracts around `net::{link, path}` and the fabric threading:
+//!
+//! 1. **Disabled is free**: driving a fabric through the node-less
+//!    wrappers (`send_grouped_classed`, `fetch_group_classed`) must be
+//!    bit-exact whether or not `enable_network` was called — the armed
+//!    code path with `NO_NODE` endpoints is the pre-network arithmetic,
+//!    byte for byte.
+//! 2. **Mapped nodes only add**: routing the same traffic over the
+//!    topology can delay but never accelerate a commit, and the network
+//!    counters actually move.
+//! 3. **Accounting closes**: per-tenant `net_tx_bytes`/`net_rx_bytes`
+//!    sum to the shared `BandwidthMeter`'s class totals, with the
+//!    network off *and* on — the wire model changes timing, never byte
+//!    conservation.
+//!
+//! Plus public-API pins of the allocator itself: the single-flow closed
+//! form, two-flow halving, and the max-min invariants (conservation,
+//! bottleneck saturation, positivity) over randomized topologies.
+
+use std::collections::BTreeMap;
+
+use aitax::config::{Config, Deployment};
+use aitax::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
+use aitax::net::link::fair_share;
+use aitax::net::{FlowPath, Link, NetworkSpec, PathNet};
+use aitax::pipeline::dc::{self, FabricSpec, TenantSpec, WorkloadKind};
+use aitax::pipeline::fabric::{Fabric, FabricEv, FabricOut};
+use aitax::sim::resource::FifoServer;
+use aitax::util::rng::Rng;
+use aitax::util::units::{gbps, SEC};
+
+// ---------------------------------------------------------------------------
+// A minimal deterministic event pump around one Fabric, mirroring the
+// world's (time, insertion-seq) ordering.
+// ---------------------------------------------------------------------------
+
+struct Pump {
+    queue: Vec<(u64, u64, FabricEv)>,
+    seq: u64,
+    /// Debug-formatted record of every handled event and commit.
+    trace: Vec<String>,
+    /// token -> commit time.
+    commits: BTreeMap<u64, u64>,
+}
+
+impl Pump {
+    fn new() -> Pump {
+        Pump { queue: Vec::new(), seq: 0, trace: Vec::new(), commits: BTreeMap::new() }
+    }
+
+    fn absorb(&mut self, out: &mut Vec<FabricOut>) {
+        for o in out.drain(..) {
+            match o {
+                FabricOut::Schedule(t, ev) => {
+                    self.queue.push((t, self.seq, ev));
+                    self.seq += 1;
+                }
+                FabricOut::Committed { token, partition, at } => {
+                    self.trace.push(format!("{at}:commit tok={token} p={partition}"));
+                    self.commits.insert(token, at);
+                }
+            }
+        }
+    }
+
+    fn run(&mut self, fabric: &mut Fabric, meter: &mut BandwidthMeter) {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let mut best = 0;
+            for i in 1..self.queue.len() {
+                let (t, s, _) = self.queue[i];
+                let (bt, bs, _) = self.queue[best];
+                if (t, s) < (bt, bs) {
+                    best = i;
+                }
+            }
+            let (now, _, ev) = self.queue.remove(best);
+            self.trace.push(format!("{now}:{ev:?}"));
+            fabric.handle(now, ev, meter, &mut out);
+            self.absorb(&mut out);
+        }
+    }
+}
+
+fn mini_fabric() -> Fabric {
+    let mut cfg = Config::default();
+    cfg.deployment = Deployment {
+        producers: 2,
+        consumers: 2,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 4,
+    };
+    let spec = FabricSpec::from_config(&cfg);
+    Fabric::new(
+        spec.brokers,
+        spec.drives_per_broker,
+        spec.replication,
+        spec.nvme,
+        spec.effective_write_bw,
+        spec.net_bw,
+        spec.tuning,
+    )
+}
+
+/// Drive a fixed produce + fetch script. `nodes = Some((src, dst))`
+/// uses the node-aware entry points; `None` uses the legacy wrappers
+/// (which pass `NO_NODE` internally).
+fn drive(fabric: &mut Fabric, nodes: Option<(u32, u32)>) -> (Pump, Vec<u64>) {
+    let mut meter = BandwidthMeter::new();
+    let mut nic_tx = FifoServer::new(gbps(100), 0);
+    let mut nic_rx = FifoServer::new(gbps(100), 0);
+    let mut out = Vec::new();
+    let mut pump = Pump::new();
+    for i in 0..24u64 {
+        let now = i * 400;
+        let (partition, leader) = ((i % 4) as u32, (i % 3) as u32);
+        let sent = match nodes {
+            Some((src, _)) => fabric.send_grouped_classed_from(
+                now, partition, leader, 120_000.0, 4, i, 0, src, &mut meter, &mut nic_tx,
+                &mut out,
+            ),
+            None => fabric.send_grouped_classed(
+                now, partition, leader, 120_000.0, 4, i, 0, &mut meter, &mut nic_tx, &mut out,
+            ),
+        };
+        assert!(sent, "healthy fabric admits every produce");
+        pump.absorb(&mut out);
+    }
+    pump.run(fabric, &mut meter);
+    // Fetches after the produce wave: the sync path returns delivery
+    // times directly.
+    let mut fetches = Vec::new();
+    for i in 0..6u64 {
+        let now = 40_000 + i * 1_000;
+        let leader = (i % 3) as u32;
+        let t = match nodes {
+            Some((_, dst)) => fabric.fetch_group_classed_to(
+                now, leader, 0, 500_000.0, 0, dst, &mut nic_rx, &mut meter, &mut out,
+            ),
+            None => fabric
+                .fetch_group_classed(now, leader, 0, 500_000.0, 0, &mut nic_rx, &mut meter),
+        };
+        fetches.push(t);
+        pump.absorb(&mut out);
+    }
+    // Drain the fetch transfers' link-release events.
+    pump.run(fabric, &mut meter);
+    (pump, fetches)
+}
+
+#[test]
+fn armed_fabric_with_unmapped_endpoints_is_bit_exact() {
+    let mut plain = mini_fabric();
+    let (trace_plain, fetch_plain) = drive(&mut plain, None);
+
+    let mut armed = mini_fabric();
+    armed.enable_network(NetworkSpec::new(8.0, gbps(10)), 4);
+    assert!(armed.network_enabled());
+    let (trace_armed, fetch_armed) = drive(&mut armed, None);
+
+    assert_eq!(
+        trace_plain.trace, trace_armed.trace,
+        "NO_NODE endpoints must take the fixed-latency path, byte for byte"
+    );
+    assert_eq!(fetch_plain, fetch_armed);
+    assert_eq!(armed.net_contended_transfers(), 0);
+    assert_eq!(armed.net_max_uplink_util(SEC), 0.0);
+    assert_eq!(armed.net_max_access_util(SEC), 0.0);
+}
+
+#[test]
+fn mapped_endpoints_route_over_links_and_never_beat_the_fixed_wire() {
+    let mut plain = mini_fabric();
+    let (base, fetch_base) = drive(&mut plain, None);
+
+    // Brokers are nodes 0..3; producer on node 3, consumer on node 4.
+    // A tight 8:1 fabric on 1 GbE access links so contention is real.
+    let mut armed = mini_fabric();
+    armed.enable_network(NetworkSpec::new(8.0, gbps(1)).with_rack_size(2), 4);
+    let (net, fetch_net) = drive(&mut armed, Some((3, 4)));
+
+    assert_eq!(base.commits.len(), 24, "every produce commits");
+    assert_eq!(net.commits.len(), 24, "the network must not lose commits");
+    for (token, &at) in &base.commits {
+        let net_at = net.commits[token];
+        assert!(
+            net_at >= at,
+            "token {token}: network commit at {net_at} beat the fixed wire ({at})"
+        );
+    }
+    assert!(
+        net.commits.values().zip(base.commits.values()).any(|(n, b)| n > b),
+        "a 1 GbE contended fabric must delay at least one commit"
+    );
+    for (f_net, f_base) in fetch_net.iter().zip(fetch_base.iter()) {
+        assert!(f_net >= f_base, "fetch delivery cannot beat the fixed wire");
+    }
+    assert!(
+        net.trace.iter().any(|l| l.contains("NetStart")),
+        "mapped transfers must enter the link layer"
+    );
+    assert!(armed.net_max_access_util(SEC) > 0.0);
+    assert_eq!(plain.net_contended_transfers(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Byte-conservation invariant: tenant NIC meters vs the shared meter.
+// ---------------------------------------------------------------------------
+
+fn small_world_spec() -> (Config, Config) {
+    let mut fr = Config::default();
+    fr.deployment = Deployment {
+        producers: 10,
+        consumers: 15,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 15,
+    };
+    fr.duration_us = 3 * SEC;
+    fr.seed = 0xD1FF;
+    let mut rpc = Config::default();
+    rpc.deployment = Deployment {
+        producers: 4,
+        consumers: 4,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 4,
+    };
+    rpc.duration_us = 3 * SEC;
+    rpc.seed = 0x29C;
+    (fr, rpc)
+}
+
+fn assert_net_bytes_close(a: f64, b: f64, what: &str) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= 1e-9 * scale,
+        "{what}: tenant sum {a} vs meter {b}"
+    );
+}
+
+fn check_meter_invariant(network: Option<NetworkSpec>) {
+    let (fr, rpc) = small_world_spec();
+    let mut spec = FabricSpec::from_config(&fr);
+    if let Some(n) = network {
+        spec = spec.with_network_spec(n);
+    }
+    let tenants = [
+        TenantSpec { kind: WorkloadKind::FaceRec, cfg: &fr },
+        TenantSpec { kind: WorkloadKind::Rpc, cfg: &rpc },
+    ];
+    let mut world = dc::build_with_qos(&tenants, &spec, None, 3 * SEC);
+    world.run_until(3 * SEC);
+    let summaries: Vec<_> = (0..2).map(|i| dc::summary_for_tenant(&world, i, "t")).collect();
+    let tx: f64 = summaries.iter().map(|s| s.net_tx_bytes).sum();
+    let rx: f64 = summaries.iter().map(|s| s.net_rx_bytes).sum();
+    assert!(tx > 0.0 && rx > 0.0, "the world must move bytes both ways");
+    let meter = &world.shared.meter;
+    assert_net_bytes_close(
+        tx,
+        meter.total(Class::Producer, Channel::Network, Dir::Write),
+        "producer tx",
+    );
+    assert_net_bytes_close(
+        rx,
+        meter.total(Class::Consumer, Channel::Network, Dir::Read),
+        "consumer rx",
+    );
+    // The network changes timing, never admission-side byte accounting.
+    match network {
+        Some(_) => assert!(world.shared.fabric.network_enabled()),
+        None => {
+            assert_eq!(world.shared.fabric.net_contended_transfers(), 0);
+            assert_eq!(world.shared.fabric.net_max_uplink_util(3 * SEC), 0.0);
+        }
+    }
+}
+
+#[test]
+fn tenant_net_bytes_sum_to_meter_totals_network_off() {
+    check_meter_invariant(None);
+}
+
+#[test]
+fn tenant_net_bytes_sum_to_meter_totals_network_on() {
+    check_meter_invariant(Some(NetworkSpec::new(8.0, gbps(10))));
+}
+
+// ---------------------------------------------------------------------------
+// Public-API pins of the allocator.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_flow_closed_form() {
+    // 1 GB over 10 GbE access links, non-blocking: 800 ms exactly.
+    let mut n: PathNet<u32> = PathNet::new(NetworkSpec::new(1.0, gbps(10)), 1, 3);
+    let (x, gen, done) = n.transfer_sync(0, 1, 0, 1e9);
+    assert_eq!(done, 800_000);
+    assert_eq!(n.contended_transfers, 0);
+    assert!(n.complete(done, x, gen).is_some());
+    assert_eq!(n.active_transfers(), 0);
+}
+
+#[test]
+fn two_flows_on_a_shared_link_each_get_half() {
+    // Both transfers land on node 0's access down-link: the second
+    // enters at half rate, and the first's estimate is displaced to the
+    // same 2x completion via the resched queue.
+    let mut n: PathNet<u32> = PathNet::new(NetworkSpec::new(1.0, 1e9), 1, 3);
+    let a = n.prepare(1, 0, 1e9, 0, Some(1));
+    let (done_a, _) = n.start(0, a);
+    assert_eq!(done_a, 1_000_000);
+    let b = n.prepare(2, 0, 1e9, 0, Some(2));
+    let (done_b, _) = n.start(0, b);
+    assert_eq!(done_b, 2_000_000, "the shared down-link halves the rate");
+    let (re_done, re_x, _) = n.resched[0];
+    assert_eq!((re_x, re_done), (a, 2_000_000), "A re-estimated to the same instant");
+    assert_eq!(n.contended_transfers, 1);
+}
+
+#[test]
+fn max_min_invariants_hold_across_random_topologies() {
+    let mut rng = Rng::new(0xFA1);
+    for case in 0..200 {
+        let nlinks = 1 + rng.below(7) as usize;
+        let mut caps = Vec::with_capacity(nlinks);
+        let mut links = Vec::with_capacity(nlinks);
+        for _ in 0..nlinks {
+            let cap = (1 + rng.below(9)) as f64 * 1e8;
+            caps.push(cap);
+            links.push(Link::new(cap));
+        }
+        let nflows = 1 + rng.below(9) as usize;
+        let mut flows = Vec::with_capacity(nflows);
+        for _ in 0..nflows {
+            let mut p = FlowPath::default();
+            let hops = 1 + rng.below(4.min(nlinks as u64)) as usize;
+            let first = rng.below(nlinks as u64) as usize;
+            for h in 0..hops {
+                // Distinct links: a strided walk from a random start.
+                p.push(((first + h) % nlinks) as u32);
+            }
+            flows.push(p);
+        }
+        let mut rates = vec![0.0; nflows];
+        let mut frozen = Vec::new();
+        fair_share(&mut links, &flows, &mut rates, &mut frozen);
+
+        // Positivity: every capacity is positive, so every rate is.
+        for (i, &r) in rates.iter().enumerate() {
+            assert!(r > 0.0 && r.is_finite(), "case {case} flow {i}: rate {r}");
+        }
+        // Conservation: no link over-allocated.
+        let mut alloc = vec![0.0f64; nlinks];
+        for (f, &r) in flows.iter().zip(rates.iter()) {
+            for li in f.iter() {
+                alloc[li] += r;
+            }
+        }
+        for (li, (&a, &c)) in alloc.iter().zip(caps.iter()).enumerate() {
+            assert!(a <= c * (1.0 + 1e-6) + 1e-3, "case {case} link {li}: {a} > {c}");
+        }
+        // Bottleneck saturation (max-min): every flow crosses at least
+        // one effectively-full link — otherwise it could still grow.
+        for (i, f) in flows.iter().enumerate() {
+            let bottlenecked = f
+                .iter()
+                .any(|li| caps[li] - alloc[li] <= caps[li] * 1e-6 + 1e-3);
+            assert!(bottlenecked, "case {case} flow {i} has headroom everywhere");
+        }
+    }
+}

@@ -104,6 +104,44 @@ fn cascade_experiment_json_is_identical_at_jobs_1_and_8() {
 }
 
 #[test]
+fn net_path_experiment_json_is_identical_at_jobs_1_and_8() {
+    // The net-path sweep adds the contention-aware link layer: max-min
+    // re-solves at every transfer entry/exit, generation-guarded
+    // re-estimates, and the sync fetch/recovery legs. All of it is
+    // index-ordered f64 arithmetic with no RNG, so worker count must be
+    // unobservable — including the contention counters.
+    use aitax::experiments::net_path;
+    use aitax::net::Placement;
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = net_path::run_points(
+            vec![(4.0, None), (4.0, Some((8.0, Placement::CoLocated)))],
+            Fidelity::Quick,
+        );
+        runner::set_jobs_override(None);
+        net_path::to_json(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "net-path JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 2, "disabled baseline + one contended arm");
+    let disabled = points
+        .iter()
+        .find(|p| p.get("network").and_then(|v| v.as_bool()) == Some(false))
+        .expect("baseline point");
+    assert_eq!(
+        disabled.get("net_contended_transfers").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "the disabled arm must never touch the link layer"
+    );
+}
+
+#[test]
 fn scale_experiment_model_json_is_identical_at_jobs_1_and_8() {
     // The scale sweep measures wall clock per point, which can never be
     // deterministic — so the contract is pinned on the model-output form
