@@ -219,6 +219,10 @@ fn point_json(p: &CascadePoint) -> Json {
             Json::Num(f.map(|f| f.min_isr_violations).unwrap_or(0) as f64),
         ),
         (
+            "metrics",
+            crate::metrics::registry::MetricsRegistry::from_report(&p.report).to_json(),
+        ),
+        (
             "tenants",
             Json::arr(
                 p.report

@@ -228,6 +228,10 @@ fn point_json(p: &FailoverPoint) -> Json {
         ("device_read_share", Json::Num(p.report.device_read_share)),
         ("cache_hit_ratio", Json::Num(p.report.cache_hit_ratio)),
         (
+            "metrics",
+            crate::metrics::registry::MetricsRegistry::from_report(&p.report).to_json(),
+        ),
+        (
             "tenants",
             Json::arr(
                 p.report

@@ -16,7 +16,9 @@
 //! world on a max-min fair ToR/spine fabric, acceleration ×
 //! oversubscription × broker placement; [`scale`] — the million-client
 //! sweep pitting per-record replay against the hybrid fluid/discrete
-//! flow producers, cost and convergence side by side).
+//! flow producers, cost and convergence side by side; [`tax`] — the
+//! latency-provenance sweep: per-record AI-vs-tax attribution across
+//! acceleration × {baseline, network, catch-up} arms).
 //!
 //! Each module exposes a `run(...)` returning structured results and a
 //! `print_*` helper producing the same rows/series the paper reports with
@@ -50,3 +52,4 @@ pub mod runner;
 pub mod scale;
 pub mod storage_qos;
 pub mod table34;
+pub mod tax;

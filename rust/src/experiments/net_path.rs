@@ -232,6 +232,10 @@ fn point_json(p: &NetPathPoint) -> Json {
             Json::Num(p.report.net_max_uplink_util),
         ),
         (
+            "metrics",
+            crate::metrics::registry::MetricsRegistry::from_report(&p.report).to_json(),
+        ),
+        (
             "tenants",
             Json::arr(
                 p.report

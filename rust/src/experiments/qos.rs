@@ -170,6 +170,11 @@ pub fn to_json(sweep: &QosSweep) -> Json {
                             ("broker_cpu_util", Json::Num(p.report.broker_cpu_util)),
                             ("events", Json::Num(p.report.events as f64)),
                             (
+                                "metrics",
+                                crate::metrics::registry::MetricsRegistry::from_report(&p.report)
+                                    .to_json(),
+                            ),
+                            (
                                 "tenants",
                                 Json::arr(
                                     p.report

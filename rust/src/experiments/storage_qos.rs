@@ -163,6 +163,11 @@ pub fn to_json(sweep: &StorageQosSweep) -> Json {
                             ),
                             ("events", Json::Num(p.report.events as f64)),
                             (
+                                "metrics",
+                                crate::metrics::registry::MetricsRegistry::from_report(&p.report)
+                                    .to_json(),
+                            ),
+                            (
                                 "tenants",
                                 Json::arr(
                                     p.report

@@ -4,7 +4,7 @@
 //!   run         live three-layer pipeline (PJRT inference + real broker)
 //!   experiment  regenerate a paper figure/table (fig5..fig15, tco) or an
 //!               extension scenario (mixed, qos, storage-qos, read-path,
-//!               failover, cascade, net-path, scale), or all of them
+//!               failover, cascade, net-path, scale, tax), or all of them
 //!   sim         one Face Recognition simulation with overrides
 //!   amdahl      Fig-9 analytic projections
 //!   bench       perf-trajectory benchmarks (kernel: events/sec + sweep
@@ -25,8 +25,8 @@ aitax — reproduction of 'AI Tax: The Hidden Cost of AI Data Center Application
 USAGE:
   aitax run [--secs N] [--producers N] [--consumers N] [--fps F]
             [--file-backed] [--batched] [--produce-quota BYTES_PER_SEC]
-  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|failover|cascade|net-path|scale|all>
-            [--quick]
+  aitax experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|tco|mixed|qos|storage-qos|read-path|failover|cascade|net-path|scale|tax|all>
+            [--quick] [--trace]
   aitax sim [--accel K] [--producers N] [--consumers N] [--brokers N]
             [--drives N] [--face-bytes B] [--secs N] [--seed S] [--config FILE]
   aitax amdahl
@@ -98,10 +98,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// Every experiment id `aitax experiment all` runs, in order. The kernel
 /// benchmark times exactly this list (minus printing), so the measured
 /// workload cannot drift from the command.
-const ALL_EXPERIMENTS: [&str; 19] = [
+const ALL_EXPERIMENTS: [&str; 20] = [
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "fig15", "tco", "mixed", "qos", "storage-qos", "read-path", "failover", "cascade",
-    "net-path",
+    "net-path", "tax",
 ];
 
 /// Print an experiment's report, or (on the benchmark path) just keep
@@ -115,8 +115,10 @@ fn emit<T>(r: T, quiet: bool, print: impl Fn(&T)) {
 }
 
 /// Run one experiment by id; `quiet` skips the report output (the
-/// sweep-scaling benchmark wants the work without the printing).
-fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result<()> {
+/// sweep-scaling benchmark wants the work without the printing);
+/// `trace` arms the flight recorder on the experiments that support it
+/// (currently `tax`).
+fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool, trace: bool) -> anyhow::Result<()> {
     match name {
         "fig5" => emit(ex::fig05::run(16), quiet, |r| ex::fig05::print(r)),
         "fig6" => emit(ex::fig06::run(fidelity), quiet, |r| ex::fig06::print(r)),
@@ -147,6 +149,7 @@ fn run_experiment(name: &str, fidelity: Fidelity, quiet: bool) -> anyhow::Result
         "net-path" => {
             emit(ex::net_path::run(fidelity), quiet, |r| ex::net_path::print(r))
         }
+        "tax" => emit(ex::tax::run(fidelity, trace), quiet, |r| ex::tax::print(r)),
         // Runnable by name but not part of `all` / ALL_EXPERIMENTS: the
         // sweep measures its own wall clock per point, so folding it
         // into the timed `experiment all` suite (which the kernel bench
@@ -164,14 +167,15 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     } else {
         Fidelity::from_env()
     };
+    let trace = args.flag("trace");
     let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
     if which == "all" {
         for name in ALL_EXPERIMENTS {
-            run_experiment(name, fidelity, false)?;
+            run_experiment(name, fidelity, false, trace)?;
         }
         Ok(())
     } else {
-        run_experiment(which, fidelity, false)
+        run_experiment(which, fidelity, false, trace)
     }
 }
 
@@ -243,7 +247,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 /// jobs=1 vs jobs=N.
 fn run_experiment_suite(fidelity: Fidelity) {
     for name in ALL_EXPERIMENTS {
-        run_experiment(name, fidelity, true).expect("known experiment id");
+        run_experiment(name, fidelity, true, false).expect("known experiment id");
     }
 }
 

@@ -47,16 +47,23 @@ impl Breakdown {
             });
         }
 
-        // Per-frame end-to-end totals.
+        // Per-frame end-to-end totals, ingested in sorted frame_id order.
+        // `Histogram` bucket counts are ingestion-order-insensitive, but
+        // the `Running` mean/m2 embedded in it accumulates in float order
+        // — iterating the HashMap directly would make the report JSON
+        // depend on the hasher's per-process seed. Sorting first keeps
+        // every derived report byte-stable across runs and hosts.
         let mut per_frame: std::collections::HashMap<u64, u64> = Default::default();
         for e in log.events() {
             if kinds.contains(&e.kind) {
                 *per_frame.entry(e.frame_id).or_insert(0) += e.compute_us;
             }
         }
+        let mut totals: Vec<(u64, u64)> = per_frame.into_iter().collect();
+        totals.sort_unstable_by_key(|&(frame_id, _)| frame_id);
         let mut e2e = Histogram::new();
-        for (_, total) in per_frame.iter() {
-            e2e.record((*total).max(1));
+        for (_, total) in totals {
+            e2e.record(total.max(1));
         }
         Breakdown {
             stages,
@@ -171,6 +178,34 @@ mod tests {
         let b = Breakdown::from_log(&log, FR);
         assert_eq!(b.stage_mean(EventKind::Identification), 0.0);
         assert_eq!(b.fraction(EventKind::Ingestion), 1.0);
+    }
+
+    #[test]
+    fn per_frame_aggregation_is_ingestion_order_invariant() {
+        // Same events, reversed log order: identical breakdown — the
+        // per-frame totals are ingested in sorted frame_id order, so no
+        // HashMap seed or log ordering can leak into the float mean.
+        let evs: Vec<Event> = (0..50)
+            .flat_map(|f| {
+                vec![
+                    ev(EventKind::Ingestion, f, 100 + f * 7),
+                    ev(EventKind::BrokerWait, f, 300 + f * 13),
+                ]
+            })
+            .collect();
+        let mut fwd = EventLog::new();
+        for e in &evs {
+            fwd.log(*e);
+        }
+        let mut rev = EventLog::new();
+        for e in evs.iter().rev() {
+            rev.log(*e);
+        }
+        let a = Breakdown::from_log(&fwd, FR);
+        let b = Breakdown::from_log(&rev, FR);
+        assert_eq!(a.e2e_mean_us.to_bits(), b.e2e_mean_us.to_bits());
+        assert_eq!(a.e2e_p99_us, b.e2e_p99_us);
+        assert_eq!(a.frames, b.frames);
     }
 
     #[test]

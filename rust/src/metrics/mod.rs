@@ -7,12 +7,25 @@
 //! * [`breakdown`] — aggregates events into the Fig-6/Fig-13 stage-latency
 //!   breakdowns and §4.2 tail-latency summaries.
 //! * [`bandwidth`] — per-class byte meters producing Fig 11.
+//! * [`tax`] — per-record latency provenance: the per-segment µs
+//!   accumulator every `Item` carries and its per-tenant aggregate (the
+//!   paper's AI-tax attribution, §4–§6).
+//! * [`trace`] — opt-in bounded flight recorder exporting sampled record
+//!   spans + world events as Chrome trace-event JSON.
+//! * [`registry`] — every counter of a run flattened into one
+//!   deterministic `metrics.json` object.
 
 pub mod bandwidth;
 pub mod query;
 pub mod breakdown;
 pub mod event;
+pub mod registry;
+pub mod tax;
+pub mod trace;
 
 pub use bandwidth::BandwidthMeter;
 pub use breakdown::{Breakdown, StageStat};
 pub use event::{Event, EventKind, EventLog};
+pub use registry::MetricsRegistry;
+pub use tax::{Segment, TaxBreakdown, TaxCell, TaxSummary};
+pub use trace::{TraceRecorder, TraceSpec};

@@ -1,0 +1,193 @@
+//! Machine-readable metrics registry: every counter one multi-tenant
+//! run produces, flattened into a single deterministic JSON object.
+//!
+//! Before this module each experiment cherry-picked its own ad-hoc
+//! subset of [`MultiTenantReport`] fields into its point JSON, so
+//! counters like `unclean_lost_bytes`, `net_contended_transfers`, and
+//! `clamped_events` were visible in some reports and silently absent
+//! from others. [`MetricsRegistry::from_report`] dumps the *whole*
+//! report — world counters, shared-broker utilizations, cache and
+//! network stats, the full fault ledger, and every per-tenant summary —
+//! under stable dotted keys in a `BTreeMap`, so the serialized form is
+//! byte-stable and key order never depends on hash seeds. Every
+//! experiment embeds it as the point's `"metrics"` object, and
+//! `aitax experiment tax` additionally writes one `metrics.json` per
+//! run.
+//!
+//! Fault keys are always present (zeros when no [`FaultPlan`] was
+//! installed, with `fault.armed` discriminating "healthy" from
+//! "unmeasured"), so downstream tooling can jq the same path in every
+//! report.
+//!
+//! [`FaultPlan`]: crate::pipeline::fabric::FaultPlan
+
+use std::collections::BTreeMap;
+
+use crate::pipeline::mixed::MultiTenantReport;
+use crate::util::json::Json;
+
+/// Flat `key → value` view of one run (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    entries: BTreeMap<String, Json>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry { entries: BTreeMap::new() }
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<Json>) {
+        self.entries.insert(key.to_string(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Collect every counter of one finished run.
+    pub fn from_report(r: &MultiTenantReport) -> Self {
+        let mut reg = MetricsRegistry::new();
+        reg.set("events", r.events);
+        reg.set("clamped_events", r.clamped_events);
+        reg.set("broker.storage_write_util", r.broker_storage_write_util);
+        reg.set("broker.storage_read_util", r.broker_storage_read_util);
+        reg.set("broker.net_rx_util", r.broker_net_rx_util);
+        reg.set("broker.cpu_util", r.broker_cpu_util);
+        reg.set("cache.hit_ratio", r.cache_hit_ratio);
+        reg.set("cache.device_read_share", r.device_read_share);
+        reg.set("net.contended_transfers", r.net_contended_transfers);
+        reg.set("net.max_uplink_util", r.net_max_uplink_util);
+
+        reg.set("fault.armed", r.fault.is_some());
+        let f = r.fault.as_ref();
+        reg.set("fault.records_offered", f.map_or(0, |f| f.records_offered));
+        reg.set("fault.records_committed", f.map_or(0, |f| f.records_committed));
+        reg.set("fault.records_in_flight", f.map_or(0, |f| f.records_in_flight));
+        reg.set("fault.records_lost", f.map_or(0, |f| f.records_lost));
+        reg.set("fault.records_rejected", f.map_or(0, |f| f.records_rejected));
+        reg.set("fault.records_rejected_final", f.map_or(0, |f| f.records_rejected_final));
+        reg.set("fault.records_retried", f.map_or(0, |f| f.records_retried));
+        reg.set("fault.records_client_dropped", f.map_or(0, |f| f.records_client_dropped));
+        reg.set("fault.records_dedup_suppressed", f.map_or(0, |f| f.records_dedup_suppressed));
+        reg.set("fault.min_isr_violations", f.map_or(0, |f| f.min_isr_violations));
+        reg.set("fault.missed_bytes", f.map_or(0.0, |f| f.missed_bytes));
+        reg.set("fault.rereplicated_bytes", f.map_or(0.0, |f| f.rereplicated_bytes));
+        reg.set("fault.backlog_bytes", f.map_or(0.0, |f| f.backlog_bytes));
+        reg.set(
+            "fault.rereplication_read_share",
+            f.map_or(0.0, |f| f.rereplication_read_share),
+        );
+        reg.set("fault.unclean_lost_bytes", f.map_or(0.0, |f| f.unclean_lost_bytes));
+        reg.set("fault.unclean_elections", f.map_or(0, |f| f.unclean_elections));
+        reg.set("fault.conservation_residual", f.map_or(0, |f| f.conservation_residual()));
+        reg.set(
+            "fault.recovery_done_us",
+            f.and_then(|f| f.recovery_done_us).map_or(Json::Null, Json::from),
+        );
+
+        for t in &r.tenants {
+            let k = |field: &str| format!("tenant.{}.{}", t.name, field);
+            reg.entries.insert(k("produced"), Json::from(t.produced));
+            reg.entries.insert(k("completed"), Json::from(t.completed));
+            reg.entries
+                .insert(k("throughput_per_sec"), Json::from(t.throughput_per_sec));
+            reg.entries.insert(k("e2e_mean_us"), Json::from(t.e2e_mean_us));
+            reg.entries.insert(k("e2e_p99_us"), Json::from(t.e2e_p99_us));
+            reg.entries.insert(k("wait_p99_us"), Json::from(t.wait_p99_us));
+            reg.entries.insert(k("net_tx_bytes"), Json::from(t.net_tx_bytes));
+            reg.entries.insert(k("net_rx_bytes"), Json::from(t.net_rx_bytes));
+            reg.entries
+                .insert(k("consumer_lag_bytes"), Json::from(t.consumer_lag_bytes));
+            reg.entries.insert(k("retries"), Json::from(t.retries));
+            reg.entries.insert(k("client_dropped"), Json::from(t.client_dropped));
+            reg.entries
+                .insert(k("absorbed_rejects"), Json::from(t.absorbed_rejects));
+            reg.entries.insert(k("stable"), Json::from(t.stable));
+            if let Some(tax) = &t.tax {
+                reg.entries.insert(k("tax_share"), Json::from(tax.tax_share));
+                reg.entries.insert(k("tax_us"), Json::from(tax.tax_us));
+                reg.entries.insert(k("ai_us"), Json::from(tax.ai_us));
+                reg.entries
+                    .insert(k("tax_max_residual_us"), Json::from(tax.max_residual_us));
+            }
+        }
+        reg
+    }
+
+    /// The registry as one flat JSON object (`BTreeMap` ⇒ sorted keys).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.entries.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::pipeline::dc::WorkloadKind;
+    use crate::pipeline::mixed::{MultiTenantConfig, MultiTenantSim, TenantDef};
+    use crate::util::units::SEC;
+
+    fn tiny_report() -> MultiTenantReport {
+        let mut cfg = Config::default();
+        cfg.deployment = crate::config::Deployment {
+            producers: 10,
+            consumers: 10,
+            brokers: 3,
+            drives_per_broker: 1,
+            replication: 3,
+            partitions: 10,
+        };
+        cfg.seed = 0xACCE1;
+        let fabric = cfg.clone();
+        MultiTenantSim::new(
+            MultiTenantConfig::new(fabric, 2 * SEC)
+                .tenant(TenantDef::new("facerec", WorkloadKind::FaceRec, cfg)),
+        )
+        .run()
+    }
+
+    #[test]
+    fn registry_carries_world_broker_and_tenant_counters() {
+        let r = tiny_report();
+        let reg = MetricsRegistry::from_report(&r);
+        assert_eq!(reg.get("events").and_then(|v| v.as_f64()), Some(r.events as f64));
+        assert_eq!(reg.get("clamped_events").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(reg.get("broker.storage_write_util").is_some());
+        assert!(reg.get("tenant.facerec.completed").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // No tax arming ⇒ no tax keys.
+        assert!(reg.get("tenant.facerec.tax_share").is_none());
+    }
+
+    #[test]
+    fn fault_keys_are_uniform_even_without_a_plan() {
+        let reg = MetricsRegistry::from_report(&tiny_report());
+        assert_eq!(reg.get("fault.armed").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(reg.get("fault.unclean_lost_bytes").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(reg.get("fault.conservation_residual").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(reg.get("net.contended_transfers").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(matches!(reg.get("fault.recovery_done_us"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn json_form_is_a_single_sorted_object() {
+        let reg = MetricsRegistry::from_report(&tiny_report());
+        let j = reg.to_json();
+        let obj = j.as_obj().expect("one flat object");
+        assert_eq!(obj.len(), reg.len());
+        // BTreeMap: serialization order is key order, not hash order.
+        let keys: Vec<&String> = obj.keys().collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,484 @@
+//! Latency provenance: per-record AI-tax attribution.
+//!
+//! The paper's headline result is an *attribution*, not a p99: as AI is
+//! accelerated, the pre/post-processing, broker wait, storage, and
+//! network shares grow from a footnote into the dominant "AI tax" slice
+//! of end-to-end time (AI Tax §4–§6). This module gives every record a
+//! compact per-segment µs accumulator ([`TaxCell`], embedded in
+//! `pipeline::dc::Item` and `pipeline::fabric::InFlight`) that is
+//! charged at every hop, and a per-tenant aggregate ([`TaxBreakdown`])
+//! surfaced as `TenantSummary::tax`.
+//!
+//! ## The telescoping contract
+//!
+//! A cell remembers only the **last charged instant** (`last_us`). Each
+//! `charge(seg, now)` attributes the whole interval `[last, now]` to one
+//! segment and advances `last` to `now`; [`TaxCell::charge_split`]
+//! divides one interval between two segments without changing its
+//! total. Because every hop charges with the timestamps the simulator
+//! already computes — and those are non-decreasing along a record's path
+//! — the segment sums telescope: **Σ segments == final `last_us` −
+//! `created_us` exactly**, so per-record residual against measured e2e
+//! is 0 µs by construction ([`TaxBreakdown::max_residual_us`] pins it).
+//!
+//! Retransmits are the one place two copies of a record exist at once
+//! (client retries, PR 8): the client charges its wait to
+//! [`Segment::ClientWait`] while the original attempt may still commit.
+//! [`TaxCell::reconcile`] absorbs the winning fabric copy's cell and
+//! settles the signed residual against `ClientWait` — the segment that
+//! double-charged — restoring the exact identity.
+//!
+//! Flow macro-records (PR 6) carry `Item.count` aggregated clients;
+//! [`TaxBreakdown::record`] weights every ingest by that count so the
+//! aggregates stay per-record-faithful.
+//!
+//! Segment widths are `u32` µs: saturating, and ample for the ≤ 30 s
+//! (3 × 10⁷ µs) virtual horizons the experiments run.
+
+use crate::util::json::Json;
+use crate::util::stats::{Histogram, Running};
+
+/// Number of provenance segments ([`Segment::ALL`] has this length).
+pub const SEG_COUNT: usize = 11;
+
+/// One attributable slice of a record's end-to-end latency.
+///
+/// Everything except [`Segment::Service`] is **tax** — time the record
+/// spent waiting on or moving through the coordination substrate rather
+/// than being processed by the AI application itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Segment {
+    /// Client-side buffer/linger, retry backoff, and loss windows
+    /// before the record is (re)offered to the fabric.
+    ClientWait = 0,
+    /// Quota-throttle delay imposed by broker QoS (PR 2/4).
+    Throttle = 1,
+    /// Wire + NIC serialization, producer → leader (contention-inflated
+    /// when the PR 9 network is installed).
+    Network = 2,
+    /// Broker request-CPU queueing (time beyond the ideal service).
+    CpuQueue = 3,
+    /// Broker request-CPU service at the ideal (uncontended) rate.
+    CpuService = 4,
+    /// NVMe write path: queue + device time for the leader append.
+    StorageWrite = 5,
+    /// Waiting for the ISR follower quorum to acknowledge.
+    Replication = 6,
+    /// Committed and visible, waiting for a consumer poll (plus the
+    /// consumer's serve queue).
+    BrokerWait = 7,
+    /// Fetch transfer: page-cache or cold NVMe read plus the reply wire.
+    Fetch = 8,
+    /// Visible time overlapped by a leader-election rebalance pause.
+    Rebalance = 9,
+    /// The AI application's own processing — the *accelerated* side of
+    /// the tax ratio.
+    Service = 10,
+}
+
+impl Segment {
+    /// Canonical charging order (the order segments occur along a
+    /// record's path; trace reconstruction relies on it).
+    pub const ALL: [Segment; SEG_COUNT] = [
+        Segment::ClientWait,
+        Segment::Throttle,
+        Segment::Network,
+        Segment::CpuQueue,
+        Segment::CpuService,
+        Segment::StorageWrite,
+        Segment::Replication,
+        Segment::BrokerWait,
+        Segment::Fetch,
+        Segment::Rebalance,
+        Segment::Service,
+    ];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case label used in report JSON and trace events.
+    pub fn label(self) -> &'static str {
+        match self {
+            Segment::ClientWait => "client_wait",
+            Segment::Throttle => "throttle",
+            Segment::Network => "network",
+            Segment::CpuQueue => "cpu_queue",
+            Segment::CpuService => "cpu_service",
+            Segment::StorageWrite => "storage_write",
+            Segment::Replication => "replication",
+            Segment::BrokerWait => "broker_wait",
+            Segment::Fetch => "fetch",
+            Segment::Rebalance => "rebalance",
+            Segment::Service => "service",
+        }
+    }
+
+    /// True for the non-AI segments (everything but [`Segment::Service`]).
+    pub fn is_tax(self) -> bool {
+        !matches!(self, Segment::Service)
+    }
+}
+
+fn as_u32(us: u64) -> u32 {
+    us.min(u32::MAX as u64) as u32
+}
+
+/// Compact per-record segment accumulator (52 bytes, `Copy`).
+///
+/// Embedded in every `Item` and `InFlight`; charging is gated by the
+/// provenance flag at the call sites, so a disabled world never touches
+/// the cell after construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TaxCell {
+    /// Last charged instant (µs). Starts at the record's creation time.
+    pub last_us: u64,
+    seg: [u32; SEG_COUNT],
+}
+
+impl TaxCell {
+    pub fn new(created_us: u64) -> Self {
+        TaxCell { last_us: created_us, seg: [0; SEG_COUNT] }
+    }
+
+    /// Attribute the whole interval `[last_us, now_us]` to `seg` and
+    /// advance `last_us`. Out-of-order timestamps (now < last) charge
+    /// nothing and leave `last_us` untouched, so a cell can never
+    /// over-charge past the clock.
+    pub fn charge(&mut self, seg: Segment, now_us: u64) {
+        let dt = now_us.saturating_sub(self.last_us);
+        let s = &mut self.seg[seg.idx()];
+        *s = s.saturating_add(as_u32(dt));
+        self.last_us = self.last_us.max(now_us);
+    }
+
+    /// Split the interval `[last_us, now_us]` between two segments:
+    /// up to `first_us` goes to `first`, the remainder to `rest`. The
+    /// interval total is preserved exactly whatever `first_us` claims.
+    pub fn charge_split(&mut self, first: Segment, first_us: u64, rest: Segment, now_us: u64) {
+        let dt = now_us.saturating_sub(self.last_us);
+        let a = first_us.min(dt);
+        let f = &mut self.seg[first.idx()];
+        *f = f.saturating_add(as_u32(a));
+        let r = &mut self.seg[rest.idx()];
+        *r = r.saturating_add(as_u32(dt - a));
+        self.last_us = self.last_us.max(now_us);
+    }
+
+    pub fn seg_us(&self, seg: Segment) -> u64 {
+        self.seg[seg.idx()] as u64
+    }
+
+    /// Sum of all segment charges (µs).
+    pub fn total_us(&self) -> u64 {
+        self.seg.iter().map(|&v| v as u64).sum()
+    }
+
+    /// Absorb the committed fabric copy of this record and settle the
+    /// residual so that `total_us() == commit_us − created_us` exactly.
+    ///
+    /// The fabric cell covers `[send, commit]`; this (client) cell
+    /// covers `[created, last]`. In the common case `last == send` and
+    /// plain addition already telescopes. Under retransmits the client
+    /// kept charging [`Segment::ClientWait`] past the *winning* copy's
+    /// send time (or an unacked loss window never got charged at all),
+    /// so the signed difference is settled against `ClientWait` — the
+    /// exact segment that double- or under-charged.
+    pub fn reconcile(&mut self, fabric: &TaxCell, created_us: u64, commit_us: u64) {
+        for (mine, theirs) in self.seg.iter_mut().zip(fabric.seg.iter()) {
+            *mine = mine.saturating_add(*theirs);
+        }
+        let target = commit_us.saturating_sub(created_us);
+        let have = self.total_us();
+        let cw = &mut self.seg[Segment::ClientWait.idx()];
+        if target >= have {
+            *cw = cw.saturating_add(as_u32(target - have));
+        } else {
+            *cw = cw.saturating_sub(as_u32(have - target));
+        }
+        self.last_us = self.last_us.max(commit_us);
+    }
+}
+
+/// Per-tenant aggregate of record [`TaxCell`]s: a [`Running`] (exact
+/// mean/variance) plus a [`Histogram`] (tail quantiles) per segment,
+/// weighted by the record's client `count`.
+#[derive(Clone, Debug)]
+pub struct TaxBreakdown {
+    seg_stats: [Running; SEG_COUNT],
+    seg_hist: Box<[Histogram; SEG_COUNT]>,
+    e2e: Running,
+    records: u64,
+    max_residual_us: u64,
+}
+
+impl TaxBreakdown {
+    pub fn new() -> Self {
+        TaxBreakdown {
+            seg_stats: std::array::from_fn(|_| Running::new()),
+            seg_hist: Box::new(std::array::from_fn(|_| Histogram::new())),
+            e2e: Running::new(),
+            records: 0,
+            max_residual_us: 0,
+        }
+    }
+
+    /// Ingest one completed record (or flow macro-record of `count`
+    /// clients). `e2e_us` is the measured end-to-end latency the serve
+    /// loop already computed; the |e2e − Σ segments| residual is
+    /// tracked so tests can pin it at 0.
+    pub fn record(&mut self, cell: &TaxCell, e2e_us: u64, count: u64) {
+        if count == 0 {
+            return;
+        }
+        for seg in Segment::ALL {
+            let v = cell.seg_us(seg);
+            self.seg_stats[seg.idx()].add_n(v as f64, count);
+            self.seg_hist[seg.idx()].record_n(v, count);
+        }
+        self.e2e.add_n(e2e_us as f64, count);
+        self.records += count;
+        let residual = e2e_us.abs_diff(cell.total_us());
+        self.max_residual_us = self.max_residual_us.max(residual);
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn max_residual_us(&self) -> u64 {
+        self.max_residual_us
+    }
+
+    pub fn summary(&self) -> TaxSummary {
+        let mut seg_mean_us = [0.0; SEG_COUNT];
+        let mut seg_p99_us = [0u64; SEG_COUNT];
+        let mut ai_us = 0.0;
+        let mut tax_us = 0.0;
+        for seg in Segment::ALL {
+            let mean = self.seg_stats[seg.idx()].mean();
+            seg_mean_us[seg.idx()] = mean;
+            seg_p99_us[seg.idx()] = self.seg_hist[seg.idx()].p99();
+            if seg.is_tax() {
+                tax_us += mean;
+            } else {
+                ai_us += mean;
+            }
+        }
+        let denom = ai_us + tax_us;
+        TaxSummary {
+            records: self.records,
+            e2e_mean_us: self.e2e.mean(),
+            ai_us,
+            tax_us,
+            tax_share: if denom > 0.0 { tax_us / denom } else { 0.0 },
+            seg_mean_us,
+            seg_p99_us,
+            max_residual_us: self.max_residual_us,
+        }
+    }
+}
+
+impl Default for TaxBreakdown {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Report-ready snapshot of a [`TaxBreakdown`].
+#[derive(Clone, Debug)]
+pub struct TaxSummary {
+    /// Client-weighted record count the means are over.
+    pub records: u64,
+    pub e2e_mean_us: f64,
+    /// Mean µs/record in [`Segment::Service`] — the AI side.
+    pub ai_us: f64,
+    /// Mean µs/record summed over every non-`Service` segment.
+    pub tax_us: f64,
+    /// `tax_us / (ai_us + tax_us)` — the paper's headline ratio.
+    pub tax_share: f64,
+    pub seg_mean_us: [f64; SEG_COUNT],
+    pub seg_p99_us: [u64; SEG_COUNT],
+    /// Worst |e2e − Σ segments| seen (µs) — 0 by construction.
+    pub max_residual_us: u64,
+}
+
+impl TaxSummary {
+    pub fn to_json(&self) -> Json {
+        let segments = Json::obj(
+            Segment::ALL
+                .iter()
+                .map(|&seg| {
+                    (
+                        seg.label(),
+                        Json::obj(vec![
+                            ("mean_us", Json::from(self.seg_mean_us[seg.idx()])),
+                            ("p99_us", Json::from(self.seg_p99_us[seg.idx()])),
+                        ]),
+                    )
+                })
+                .collect::<Vec<_>>(),
+        );
+        Json::obj(vec![
+            ("records", Json::from(self.records)),
+            ("e2e_mean_us", Json::from(self.e2e_mean_us)),
+            ("ai_us", Json::from(self.ai_us)),
+            ("tax_us", Json::from(self.tax_us)),
+            ("tax_share", Json::from(self.tax_share)),
+            ("max_residual_us", Json::from(self.max_residual_us)),
+            ("segments", segments),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_are_canonical_and_labeled() {
+        assert_eq!(Segment::ALL.len(), SEG_COUNT);
+        for (i, seg) in Segment::ALL.iter().enumerate() {
+            assert_eq!(seg.idx(), i, "ALL must be in discriminant order");
+        }
+        let mut labels: Vec<&str> = Segment::ALL.iter().map(|s| s.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), SEG_COUNT, "labels must be unique");
+        assert!(Segment::ClientWait.is_tax());
+        assert!(!Segment::Service.is_tax());
+    }
+
+    #[test]
+    fn charges_telescope_to_the_elapsed_interval() {
+        // Any monotone sequence of charges must sum to exactly
+        // last − created, whatever the segment pattern.
+        let created = 1_000;
+        let stamps = [1_000, 1_003, 1_050, 1_050, 2_000, 2_777, 10_000];
+        let mut cell = TaxCell::new(created);
+        for (i, &t) in stamps.iter().enumerate() {
+            cell.charge(Segment::ALL[i % SEG_COUNT], t);
+        }
+        assert_eq!(cell.total_us(), 10_000 - created);
+        assert_eq!(cell.last_us, 10_000);
+    }
+
+    #[test]
+    fn out_of_order_charge_is_a_no_op() {
+        let mut cell = TaxCell::new(500);
+        cell.charge(Segment::Network, 700);
+        cell.charge(Segment::Fetch, 600); // behind last — charges nothing
+        assert_eq!(cell.seg_us(Segment::Fetch), 0);
+        assert_eq!(cell.last_us, 700);
+        assert_eq!(cell.total_us(), 200);
+    }
+
+    #[test]
+    fn charge_split_preserves_the_interval_total() {
+        let mut cell = TaxCell::new(0);
+        // Claim more service than the interval holds: the cap wins.
+        cell.charge_split(Segment::CpuService, 500, Segment::CpuQueue, 300);
+        assert_eq!(cell.seg_us(Segment::CpuService), 300);
+        assert_eq!(cell.seg_us(Segment::CpuQueue), 0);
+        // Claim part of a later interval: the rest goes to the queue.
+        cell.charge_split(Segment::CpuService, 100, Segment::CpuQueue, 1_000);
+        assert_eq!(cell.seg_us(Segment::CpuService), 400);
+        assert_eq!(cell.seg_us(Segment::CpuQueue), 600);
+        assert_eq!(cell.total_us(), 1_000);
+    }
+
+    #[test]
+    fn reconcile_settles_the_plain_case_exactly() {
+        // Client: created 0, ClientWait to 100, send at 100.
+        let mut item = TaxCell::new(0);
+        item.charge(Segment::ClientWait, 100);
+        // Fabric copy: send 100 → commit 900.
+        let mut fab = TaxCell::new(100);
+        fab.charge(Segment::Network, 200);
+        fab.charge(Segment::StorageWrite, 600);
+        fab.charge(Segment::Replication, 900);
+        item.reconcile(&fab, 0, 900);
+        assert_eq!(item.total_us(), 900, "Σ segments == commit − created");
+        assert_eq!(item.seg_us(Segment::ClientWait), 100);
+        assert_eq!(item.last_us, 900);
+    }
+
+    #[test]
+    fn reconcile_absorbs_retransmit_overlap_into_client_wait() {
+        // Client sends at 100, times out, charges ClientWait to the
+        // retransmit at 400 — but the ORIGINAL copy wins at 900. The
+        // overlap [100, 400] was charged twice (client ClientWait +
+        // fabric segments); reconcile must claw it back.
+        let mut item = TaxCell::new(0);
+        item.charge(Segment::ClientWait, 100); // pre-send buffer
+        item.charge(Segment::ClientWait, 400); // timeout window
+        let mut fab = TaxCell::new(100);
+        fab.charge(Segment::Network, 300);
+        fab.charge(Segment::Replication, 900);
+        item.reconcile(&fab, 0, 900);
+        assert_eq!(item.total_us(), 900);
+        assert_eq!(item.seg_us(Segment::ClientWait), 100, "overlap clawed back");
+    }
+
+    #[test]
+    fn reconcile_fills_uncharged_loss_windows() {
+        // A lost attempt nobody charged: item last stops at 100, the
+        // winning copy was sent at 500. The [100, 500] gap lands in
+        // ClientWait.
+        let mut item = TaxCell::new(0);
+        item.charge(Segment::ClientWait, 100);
+        let mut fab = TaxCell::new(500);
+        fab.charge(Segment::Network, 600);
+        item.reconcile(&fab, 0, 600);
+        assert_eq!(item.total_us(), 600);
+        assert_eq!(item.seg_us(Segment::ClientWait), 500);
+    }
+
+    #[test]
+    fn breakdown_weights_by_count_and_pins_residual() {
+        let mut tb = TaxBreakdown::new();
+        let mut a = TaxCell::new(0);
+        a.charge(Segment::Network, 100);
+        a.charge(Segment::Service, 300);
+        tb.record(&a, 300, 10); // flow macro-record: 10 clients
+        let mut b = TaxCell::new(0);
+        b.charge(Segment::Network, 500);
+        b.charge(Segment::Service, 600);
+        tb.record(&b, 600, 1);
+        assert_eq!(tb.records(), 11);
+        assert_eq!(tb.max_residual_us(), 0);
+        let s = tb.summary();
+        // Count-weighted means: network (10×100 + 1×500)/11, service
+        // (10×200 + 1×100)/11.
+        assert!((s.seg_mean_us[Segment::Network.idx()] - 1500.0 / 11.0).abs() < 1e-9);
+        assert!((s.ai_us - 2100.0 / 11.0).abs() < 1e-9);
+        assert!((s.tax_us - 1500.0 / 11.0).abs() < 1e-9);
+        assert!((s.tax_share - 1500.0 / 3600.0).abs() < 1e-9);
+        assert!((s.e2e_mean_us - (10.0 * 300.0 + 600.0) / 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_flags_nonzero_residuals() {
+        let mut tb = TaxBreakdown::new();
+        let mut cell = TaxCell::new(0);
+        cell.charge(Segment::Service, 100);
+        tb.record(&cell, 105, 1); // e2e disagrees by 5 µs
+        assert_eq!(tb.max_residual_us(), 5);
+    }
+
+    #[test]
+    fn summary_json_carries_every_segment() {
+        let mut tb = TaxBreakdown::new();
+        let mut cell = TaxCell::new(0);
+        cell.charge(Segment::Throttle, 50);
+        cell.charge(Segment::Service, 150);
+        tb.record(&cell, 150, 1);
+        let j = tb.summary().to_json();
+        let segs = j.get("segments").and_then(|s| s.as_obj()).expect("segments");
+        assert_eq!(segs.len(), SEG_COUNT);
+        for seg in Segment::ALL {
+            assert!(segs.contains_key(seg.label()), "missing {}", seg.label());
+        }
+        assert_eq!(j.path(&["segments", "throttle", "mean_us"]).and_then(|v| v.as_f64()), Some(50.0));
+    }
+}

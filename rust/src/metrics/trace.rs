@@ -1,0 +1,237 @@
+//! Flight-recorder tracing: a bounded ring buffer of sampled record
+//! spans and world events, exported as Chrome trace-event JSON.
+//!
+//! Opt-in (off by default, like every provenance feature): when a
+//! [`TraceSpec`] is installed, the consumer serve loop offers every
+//! completed record to [`TraceRecorder::record_span`], which keeps one
+//! in `sample_every` and expands its [`TaxCell`] into per-segment `"X"`
+//! duration events — the timestamps are reconstructed cumulatively from
+//! the record's creation time in [`Segment::ALL`] order, which is
+//! exactly the order the segments occur along the path. World events
+//! (broker kills/restarts, partitions, leader elections, sampled
+//! network-transfer epochs) land as `"i"` instant events. The buffer is
+//! a fixed-capacity ring: old events fall off the front, so a trace
+//! costs bounded memory however long the run ([`TraceRecorder::dropped`]
+//! counts the overflow).
+//!
+//! The output loads directly in Perfetto / `chrome://tracing`: records
+//! are grouped per tenant (`pid`) with one track per sampled record
+//! (`tid` = sample sequence number).
+
+use std::collections::VecDeque;
+
+use crate::metrics::tax::{Segment, TaxCell};
+use crate::util::json::Json;
+
+/// Flight-recorder parameters. `Default` is a 4096-event ring sampling
+/// one record in 64.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    /// Ring capacity in trace events (spans + instants).
+    pub capacity: usize,
+    /// Keep one completed record in this many (1 = every record).
+    pub sample_every: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec { capacity: 4096, sample_every: 64 }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum TraceEvent {
+    /// One segment of one sampled record ("X" duration event).
+    Span { tenant: u8, seq: u64, seg: Segment, ts_us: u64, dur_us: u64 },
+    /// One world event ("i" instant event).
+    Instant { name: &'static str, ts_us: u64 },
+}
+
+/// Bounded flight recorder (see the module docs).
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    spec: TraceSpec,
+    /// Completed records offered so far (drives span sampling).
+    seen: u64,
+    /// Instants offered to the *sampled* instant channel so far.
+    ticks: u64,
+    dropped: u64,
+    events: VecDeque<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new(spec: TraceSpec) -> Self {
+        TraceRecorder {
+            spec,
+            seen: 0,
+            ticks: 0,
+            dropped: 0,
+            events: VecDeque::with_capacity(spec.capacity.min(4096)),
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.spec.capacity == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() >= self.spec.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Offer one completed record; every `sample_every`-th is expanded
+    /// into per-segment spans reconstructed from `created_us` in
+    /// canonical segment order.
+    pub fn record_span(&mut self, tenant: u8, created_us: u64, cell: &TaxCell) {
+        self.seen += 1;
+        if self.spec.sample_every > 1 && self.seen % self.spec.sample_every != 0 {
+            return;
+        }
+        let seq = self.seen;
+        let mut ts = created_us;
+        for seg in Segment::ALL {
+            let dur = cell.seg_us(seg);
+            if dur > 0 {
+                self.push(TraceEvent::Span { tenant, seq, seg, ts_us: ts, dur_us: dur });
+            }
+            ts += dur;
+        }
+    }
+
+    /// Record a world event (fault, election, rebalance) unconditionally.
+    pub fn instant(&mut self, name: &'static str, ts_us: u64) {
+        self.push(TraceEvent::Instant { name, ts_us });
+    }
+
+    /// Record a high-frequency world event (e.g. network-transfer
+    /// epochs) through the same 1-in-`sample_every` decimation as spans.
+    pub fn instant_sampled(&mut self, name: &'static str, ts_us: u64) {
+        self.ticks += 1;
+        if self.spec.sample_every > 1 && self.ticks % self.spec.sample_every != 0 {
+            return;
+        }
+        self.push(TraceEvent::Instant { name, ts_us });
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events that fell off the front (or were refused by a zero-capacity
+    /// ring).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Chrome trace-event JSON array (Perfetto's legacy-JSON format).
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|ev| match ev {
+                TraceEvent::Span { tenant, seq, seg, ts_us, dur_us } => Json::obj(vec![
+                    ("name", Json::from(seg.label())),
+                    ("cat", Json::from("record")),
+                    ("ph", Json::from("X")),
+                    ("ts", Json::from(*ts_us)),
+                    ("dur", Json::from(*dur_us)),
+                    ("pid", Json::from(*tenant as u64)),
+                    ("tid", Json::from(*seq)),
+                ]),
+                TraceEvent::Instant { name, ts_us } => Json::obj(vec![
+                    ("name", Json::from(*name)),
+                    ("cat", Json::from("world")),
+                    ("ph", Json::from("i")),
+                    ("s", Json::from("g")),
+                    ("ts", Json::from(*ts_us)),
+                    ("pid", Json::from(0u64)),
+                    ("tid", Json::from(0u64)),
+                ]),
+            })
+            .collect();
+        Json::Arr(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> TaxCell {
+        let mut c = TaxCell::new(1_000);
+        c.charge(Segment::Network, 1_100);
+        c.charge(Segment::BrokerWait, 1_400);
+        c.charge(Segment::Service, 1_600);
+        c
+    }
+
+    #[test]
+    fn sampling_keeps_one_record_in_n() {
+        let mut tr = TraceRecorder::new(TraceSpec { capacity: 1024, sample_every: 4 });
+        for _ in 0..8 {
+            tr.record_span(0, 1_000, &cell());
+        }
+        // 2 sampled records × 3 nonzero segments.
+        assert_eq!(tr.len(), 6);
+    }
+
+    #[test]
+    fn spans_reconstruct_cumulative_timestamps() {
+        let mut tr = TraceRecorder::new(TraceSpec { capacity: 1024, sample_every: 1 });
+        tr.record_span(2, 1_000, &cell());
+        let arr = tr.to_chrome_json();
+        let events = arr.as_arr().expect("array");
+        assert_eq!(events.len(), 3);
+        // Network starts at creation; BrokerWait and Service stack after.
+        let ts: Vec<f64> =
+            events.iter().map(|e| e.get("ts").and_then(|v| v.as_f64()).unwrap()).collect();
+        assert_eq!(ts, vec![1_000.0, 1_100.0, 1_400.0]);
+        let durs: Vec<f64> =
+            events.iter().map(|e| e.get("dur").and_then(|v| v.as_f64()).unwrap()).collect();
+        assert_eq!(durs, vec![100.0, 300.0, 200.0]);
+        assert!(events.iter().all(|e| e.get("pid").and_then(|v| v.as_f64()) == Some(2.0)));
+        assert!(events.iter().all(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X")));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut tr = TraceRecorder::new(TraceSpec { capacity: 4, sample_every: 1 });
+        for i in 0..10 {
+            tr.instant("fault", i * 100);
+        }
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr.dropped(), 6);
+        // The ring keeps the *latest* events.
+        let arr = tr.to_chrome_json();
+        let first_ts = arr.as_arr().unwrap()[0].get("ts").and_then(|v| v.as_f64());
+        assert_eq!(first_ts, Some(600.0));
+    }
+
+    #[test]
+    fn instants_carry_the_world_category() {
+        let mut tr = TraceRecorder::new(TraceSpec::default());
+        tr.instant("broker-kill", 3_000_000);
+        let arr = tr.to_chrome_json();
+        let ev = &arr.as_arr().unwrap()[0];
+        assert_eq!(ev.get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(ev.get("cat").and_then(|v| v.as_str()), Some("world"));
+        assert_eq!(ev.get("name").and_then(|v| v.as_str()), Some("broker-kill"));
+    }
+
+    #[test]
+    fn sampled_instants_decimate() {
+        let mut tr = TraceRecorder::new(TraceSpec { capacity: 1024, sample_every: 8 });
+        for i in 0..64 {
+            tr.instant_sampled("net-epoch", i);
+        }
+        assert_eq!(tr.len(), 8);
+    }
+}

@@ -59,6 +59,8 @@ use crate::config::calibration::{ObjDetCosts, RpcCosts, TrainCosts};
 use crate::config::{AccelProtocol, Config, KafkaTuning};
 use crate::config::hardware::NvmeSpec;
 use crate::metrics::bandwidth::{BandwidthMeter, Class};
+use crate::metrics::tax::{Segment, TaxBreakdown, TaxCell, TaxSummary};
+use crate::metrics::trace::{TraceRecorder, TraceSpec};
 use crate::net::topology::FatTree;
 use crate::net::{NetworkSpec, Nic};
 use crate::pipeline::fabric::{
@@ -181,6 +183,12 @@ pub struct Item {
     /// whose `bytes` are the records' aggregate payload. Metrics weight
     /// by this count so tenant means match the per-record simulation.
     pub count: u64,
+    /// Latency provenance (PR 10): per-segment µs accumulator, charged
+    /// at every hop only when the world was built with provenance armed
+    /// ([`FabricSpec::provenance`]) — otherwise it stays at its
+    /// construction state and the world is bit-exact to the
+    /// pre-provenance build.
+    pub tax: TaxCell,
 }
 
 /// Events routed between data-center components.
@@ -257,6 +265,13 @@ impl ItemPool {
     /// a parked record from its original token).
     pub fn get(&self, token: u64) -> Item {
         self.in_flight[token as usize]
+    }
+
+    /// Mutable access to a parked record (the provenance path charges
+    /// retry backoff/timeout windows on the *pooled* copy, so they
+    /// survive until the record is released at commit).
+    pub fn get_mut(&mut self, token: u64) -> &mut Item {
+        &mut self.in_flight[token as usize]
     }
 }
 
@@ -343,6 +358,11 @@ pub struct TenantMetrics {
     /// `client_dropped`. `fabric.rejected - absorbed_rejects` is the
     /// *final* rejection count in the extended identity.
     pub absorbed_rejects: u64,
+    /// Latency provenance (PR 10): per-segment attribution of this
+    /// tenant's end-to-end latency, armed (`Some`) only when the world
+    /// was built with [`FabricSpec::provenance`]. Ingested in the serve
+    /// loop under the same warmup/horizon gate as `hist_e2e`.
+    pub tax: Option<TaxBreakdown>,
 }
 
 impl TenantMetrics {
@@ -368,6 +388,7 @@ impl TenantMetrics {
             retries: 0,
             client_dropped: 0,
             absorbed_rejects: 0,
+            tax: None,
         }
     }
 
@@ -454,6 +475,15 @@ pub struct DcState {
     /// admitted send, feeding the zero-RNG backoff jitter and the
     /// stale-ack discrimination above.
     pub retry_seq: u64,
+    /// Latency provenance (PR 10): global rebalance pause windows
+    /// `(start_us, end_us)` recorded by [`reassign_leaders`], so the
+    /// serve loop can attribute the overlap of a record's visible wait
+    /// to [`Segment::Rebalance`]. Only appended when provenance is
+    /// armed; a handful of entries per fault schedule.
+    pub rebalance_pauses: Vec<(u64, u64)>,
+    /// Flight recorder ([`TraceRecorder`]); `None` (the default) records
+    /// nothing.
+    pub trace: Option<TraceRecorder>,
 }
 
 /// Route buffered fabric outputs: schedule hop events to the
@@ -479,6 +509,14 @@ pub fn drain_fabric(ctx: &mut Ctx<'_, DcEvent, DcState>) {
                         s.retry_pending.remove(&token);
                     }
                     let mut item = s.items.release(token);
+                    if s.fabric.provenance_enabled() {
+                        // Absorb the winning fabric copy's cell and
+                        // settle the telescoping residual (retransmit
+                        // overlap / loss gaps) against ClientWait.
+                        if let Some(cell) = s.fabric.take_committed_tax(token) {
+                            item.tax.reconcile(&cell, item.created_us, at);
+                        }
+                    }
                     item.visible_us = at;
                     let part = &mut s.partitions[partition as usize];
                     let tenant = part.tenant as usize;
@@ -528,6 +566,14 @@ impl Component<DcEvent, DcState> for FabricHub {
             DcEvent::Fabric(fev) => {
                 {
                     let s = &mut *ctx.shared;
+                    if let Some(tr) = s.trace.as_mut() {
+                        // Network epochs are per-transfer; decimate them
+                        // through the recorder's sampling so a contended
+                        // run doesn't flood the ring.
+                        if matches!(fev, FabricEv::NetStart { .. }) {
+                            tr.instant_sampled("net-epoch", now);
+                        }
+                    }
                     s.fabric.handle(now, fev, &mut s.meter, &mut s.fabric_out);
                 }
                 drain_fabric(ctx);
@@ -538,16 +584,25 @@ impl Component<DcEvent, DcState> for FabricHub {
                     FaultEvent::Kill { broker, .. } => {
                         {
                             let s = &mut *ctx.shared;
+                            if let Some(tr) = s.trace.as_mut() {
+                                tr.instant("broker-kill", now);
+                            }
                             s.fabric.kill_broker(now, broker, &mut s.fabric_out);
                         }
                         reassign_leaders(ctx, broker);
                     }
                     FaultEvent::Restart { broker, .. } => {
                         let s = &mut *ctx.shared;
+                        if let Some(tr) = s.trace.as_mut() {
+                            tr.instant("broker-restart", now);
+                        }
                         s.fabric.restart_broker(now, broker, &mut s.fabric_out);
                     }
                     FaultEvent::Partition { a, b, duration_us, .. } => {
                         let s = &mut *ctx.shared;
+                        if let Some(tr) = s.trace.as_mut() {
+                            tr.instant("net-partition", now);
+                        }
                         s.fabric.partition_links(now, a, b, duration_us, &mut s.fabric_out);
                     }
                 }
@@ -580,6 +635,15 @@ fn reassign_leaders(ctx: &mut Ctx<'_, DcEvent, DcState>, broker: u32) {
     // One election per kill, not per partition: the ring scan is
     // partition-independent, and the unclean branch counts the
     // replica's divergence exactly once.
+    if s.fabric.provenance_enabled() {
+        // One global pause window per election; the serve loop splits a
+        // record's visible wait against these so stop-the-world time is
+        // attributed to Segment::Rebalance, not BrokerWait.
+        s.rebalance_pauses.push((now, now + REBALANCE_PAUSE_US));
+    }
+    if let Some(tr) = s.trace.as_mut() {
+        tr.instant("leader-election", now);
+    }
     let elected = s.fabric.elect_leader(broker);
     for pi in 0..s.partitions.len() {
         if s.partitions[pi].leader != broker {
@@ -752,6 +816,7 @@ impl ProducerClient {
                         visible_us: 0,
                         bytes,
                         count: 1,
+                        tax: TaxCell::new(now),
                     };
                     {
                         let ts = &mut ctx.shared.tenants[t];
@@ -825,6 +890,7 @@ impl ProducerClient {
                         visible_us: 0,
                         bytes,
                         count: 1,
+                        tax: TaxCell::new(now),
                     };
                     ctx.at_self(
                         t_sent + WIRE_US,
@@ -907,6 +973,7 @@ impl ProducerClient {
                             visible_us: 0,
                             bytes: recs as f64 * *record_bytes,
                             count: recs,
+                            tax: TaxCell::new(created),
                         };
                         ctx.at_self(
                             t_sent + WIRE_US,
@@ -929,11 +996,18 @@ impl ProducerClient {
         ctx: &mut Ctx<'_, DcEvent, DcState>,
         p: u32,
         partition: u32,
-        item: Item,
+        mut item: Item,
         admitted: bool,
     ) {
         let now = ctx.now();
         let t = self.tenant as usize;
+        if ctx.shared.fabric.provenance_enabled() {
+            // Fresh records charge any client-buffer wait since creation;
+            // re-dispatched records spent the gap parked by their quota
+            // bucket (the deferral below), so it lands in Throttle.
+            let seg = if admitted { Segment::Throttle } else { Segment::ClientWait };
+            item.tax.charge(seg, now);
+        }
         let pid = p as usize;
         let partition = if partition == PARTITION_UNROUTED {
             // Random rotation at dispatch time: deterministic lockstep
@@ -1051,6 +1125,13 @@ impl ProducerClient {
         let mut fire: Option<(u64, u64, u32)> = None;
         {
             let s = &mut *ctx.shared;
+            if s.fabric.provenance_enabled() {
+                // The backoff window just spent parked in the client
+                // buffer is client wait; charging it here keeps the
+                // commit-time reconcile residual at zero for the common
+                // reject→backoff→admit path.
+                s.items.get_mut(token).tax.charge(Segment::ClientWait, now);
+            }
             let item = s.items.get(token);
             let overhead = s.tenants[t].fetch.record_overhead;
             let bytes = item.bytes + overhead * item.count as f64;
@@ -1147,6 +1228,13 @@ impl ProducerClient {
                 // in-flight record's pool slot to a new record.
                 s.retry_pending.remove(&token);
                 return;
+            }
+            if s.fabric.provenance_enabled() {
+                // The ack-timeout window counts as client wait. If the
+                // slow original commits anyway, the fabric copy measured
+                // the same wall-clock span — the commit-time reconcile
+                // settles the double-charge back out of ClientWait.
+                s.items.get_mut(token).tax.charge(Segment::ClientWait, now);
             }
             let item = s.items.get(token);
             let overhead = s.tenants[t].fetch.record_overhead;
@@ -1314,6 +1402,10 @@ pub struct ConsumerPoller {
     /// Scratch: half-open `[head, end)` bounds of each run in `fetched`;
     /// `head` advances as the serve loop merges the runs.
     runs: Vec<(u32, u32)>,
+    /// Scratch, parallel to `runs`: fetch-transfer completion time of
+    /// each run's partition (latency provenance: the serve loop charges
+    /// `[poll, run_done]` to [`Segment::Fetch`]).
+    run_done: Vec<u64>,
 }
 
 impl ConsumerPoller {
@@ -1330,6 +1422,7 @@ impl ConsumerPoller {
             owned,
             fetched: Vec::new(),
             runs: Vec::new(),
+            run_done: Vec::new(),
         }
     }
 
@@ -1394,6 +1487,7 @@ impl ConsumerPoller {
         // allocates nothing.
         self.fetched.clear();
         self.runs.clear();
+        self.run_done.clear();
         let mut deliver_at = now;
         let mut fetched_bytes = 0.0;
         for &pi in &self.owned[cid] {
@@ -1446,6 +1540,7 @@ impl ConsumerPoller {
                     &mut s.meter,
                     &mut s.fabric_out,
                 );
+                self.run_done.push(done);
                 deliver_at = deliver_at.max(done);
             }
         }
@@ -1473,6 +1568,7 @@ impl ConsumerPoller {
         let horizon = ctx.shared.horizon_us;
         let mut busy = ctx.shared.tenants[t].gates[cid].busy_until.max(deliver_at);
         let is_facerec = matches!(self.service, ServiceModel::FaceRec(_));
+        let provenance = ctx.shared.fabric.provenance_enabled();
         for _ in 0..self.fetched.len() {
             let mut best: Option<usize> = None;
             let mut best_key = 0u64;
@@ -1514,6 +1610,19 @@ impl ConsumerPoller {
                 }
             };
             busy = start + dur;
+            // Latency provenance: finish the ledger on a local copy of
+            // the record's cell (`it` is the serve-loop copy; the pool
+            // slot is long released). The chain is monotone — visible ≤
+            // poll ≤ fetch-done ≤ service-start ≤ service-end — so the
+            // telescoping charges partition [created, busy] exactly.
+            let mut cell = it.tax;
+            if provenance {
+                let paused = pause_overlap(&ctx.shared.rebalance_pauses, cell.last_us, now);
+                cell.charge_split(Segment::Rebalance, paused, Segment::BrokerWait, now);
+                cell.charge(Segment::Fetch, self.run_done[best]);
+                cell.charge(Segment::BrokerWait, start);
+                cell.charge(Segment::Service, busy);
+            }
             self.units[cid].done += k;
             let ts = &mut ctx.shared.tenants[t];
             ts.metrics.population.exit_n(busy.min(horizon), k as i64);
@@ -1521,7 +1630,8 @@ impl ConsumerPoller {
             if busy >= ts.warmup_us && busy <= horizon {
                 ts.metrics.completed_in_window += k;
             }
-            if it.created_us >= ts.warmup_us && busy <= horizon {
+            let in_window = it.created_us >= ts.warmup_us && busy <= horizon;
+            if in_window {
                 ts.metrics.hist_wait.record_n(wait_us.max(1), k);
                 if is_facerec {
                     ts.metrics.hist_service.record(dur.max(1));
@@ -1536,6 +1646,9 @@ impl ConsumerPoller {
                 }
                 let e2e = busy - it.created_us;
                 ts.metrics.hist_e2e.record_n(e2e.max(1), k);
+                if let Some(tb) = ts.metrics.tax.as_mut() {
+                    tb.record(&cell, e2e, k);
+                }
                 if let Some((ws, we)) = ts.observe_window {
                     if it.created_us >= ws && it.created_us <= we {
                         ts.metrics.hist_e2e_window.record_n(e2e.max(1), k);
@@ -1545,6 +1658,11 @@ impl ConsumerPoller {
                 if sec < ts.metrics.lat_sum.len() {
                     ts.metrics.lat_sum[sec] += e2e * k;
                     ts.metrics.lat_n[sec] += k;
+                }
+            }
+            if provenance && in_window {
+                if let Some(tr) = ctx.shared.trace.as_mut() {
+                    tr.record_span(self.tenant, it.created_us, &cell);
                 }
             }
         }
@@ -1558,6 +1676,22 @@ impl ConsumerPoller {
         // fetch-quota mute expires, whichever is later).
         ctx.at_self(busy.max(throttled_until), DcEvent::Poll(c));
     }
+}
+
+/// Microseconds of `[lo, hi)` covered by the rebalance-pause windows.
+/// Windows from elections less than a pause apart can overlap; the
+/// `charge_split` consuming this clamps to the interval length, so an
+/// over-estimate here can never inflate a record's total.
+fn pause_overlap(windows: &[(u64, u64)], lo: u64, hi: u64) -> u64 {
+    let mut total = 0;
+    for &(ws, we) in windows {
+        let a = ws.max(lo);
+        let b = we.min(hi);
+        if b > a {
+            total += b - a;
+        }
+    }
+    total
 }
 
 impl Component<DcEvent, DcState> for ConsumerPoller {
@@ -1601,6 +1735,15 @@ pub struct FabricSpec {
     /// `None` (the default) keeps every wire hop at the fixed transit,
     /// bit for bit (pinned by `tests/net_differential.rs`).
     pub network: Option<NetworkSpec>,
+    /// Latency provenance: charge every [`Item`]'s per-segment tax cell
+    /// at each hop and arm the per-tenant [`TaxBreakdown`]. `false` (the
+    /// default) takes none of the charging branches — the record flow is
+    /// bit-exact (pinned by `tests/tax_differential.rs`).
+    pub provenance: bool,
+    /// Opt-in flight recorder; implies nothing unless [`Self::provenance`]
+    /// is also set (spans come from tax cells). World instants (faults,
+    /// elections, net epochs) record whenever the recorder exists.
+    pub trace: Option<TraceSpec>,
 }
 
 impl FabricSpec {
@@ -1622,6 +1765,8 @@ impl FabricSpec {
             read_cache_bytes: None,
             faults: None,
             network: None,
+            provenance: false,
+            trace: None,
         }
     }
 
@@ -1656,6 +1801,19 @@ impl FabricSpec {
         self
     }
 
+    /// Arm latency provenance (per-record tax cells + per-tenant
+    /// [`TaxBreakdown`]).
+    pub fn with_provenance(mut self) -> FabricSpec {
+        self.provenance = true;
+        self
+    }
+
+    /// Install the flight recorder (see [`TraceRecorder`]).
+    pub fn with_trace(mut self, spec: TraceSpec) -> FabricSpec {
+        self.trace = Some(spec);
+        self
+    }
+
     fn build(&self) -> Fabric {
         let mut fabric = Fabric::new(
             self.brokers,
@@ -1675,6 +1833,9 @@ impl FabricSpec {
             if plan.idempotent {
                 fabric.enable_dedup();
             }
+        }
+        if self.provenance {
+            fabric.enable_provenance();
         }
         fabric
     }
@@ -1798,6 +1959,11 @@ pub fn build_with_qos(
             retry_buffered_bytes: 0.0,
         });
     }
+    if fabric.provenance {
+        for ts in &mut tenant_states {
+            ts.metrics.tax = Some(TaxBreakdown::new());
+        }
+    }
     let retry_armed = tenant_states.iter().any(|ts| ts.retry.is_some());
 
     let mut shared_fabric = fabric.build();
@@ -1841,6 +2007,8 @@ pub fn build_with_qos(
         retry_armed,
         retry_pending: HashMap::new(),
         retry_seq: 1,
+        rebalance_pauses: Vec::new(),
+        trace: fabric.trace.map(TraceRecorder::new),
     };
     let mut world = World::new(state);
 
@@ -2189,6 +2357,9 @@ pub struct TenantSummary {
     /// Fabric rejections the client absorbed (retried or converted to
     /// `client_dropped`) instead of letting stand as final loss.
     pub absorbed_rejects: u64,
+    /// Per-segment latency attribution (`Some` only when the world was
+    /// built with [`FabricSpec::with_provenance`]).
+    pub tax: Option<TaxSummary>,
 }
 
 /// Summarize tenant `tenant` of a finished world.
@@ -2225,6 +2396,7 @@ pub fn summary_for_tenant(
         retries: m.retries,
         client_dropped: m.client_dropped,
         absorbed_rejects: m.absorbed_rejects,
+        tax: m.tax.as_ref().map(|tb| tb.summary()),
     }
 }
 

@@ -26,6 +26,7 @@ use crate::broker::qos::WeightedCpuScheduler;
 use crate::config::hardware::NvmeSpec;
 use crate::config::KafkaTuning;
 use crate::metrics::bandwidth::{BandwidthMeter, Channel, Class, Dir};
+use crate::metrics::tax::{Segment, TaxCell};
 use crate::net::path::{NetworkSpec, PathNet, NO_NODE};
 use crate::sim::resource::FifoServer;
 use crate::storage::cache::PageCache;
@@ -153,6 +154,11 @@ struct InFlight {
     /// record. Checked against `min_isr` at commit; `replication`
     /// without faults.
     isr: u8,
+    /// Latency provenance (PR 10): per-segment µs accumulator covering
+    /// this attempt's fabric traversal, `[send, commit]`. Initialized at
+    /// send; charged at each hop only when [`Fabric::enable_provenance`]
+    /// armed the fabric, so the disabled path never touches it.
+    tax: TaxCell,
 }
 
 /// The measured consumer read path (opt-in; see
@@ -492,6 +498,16 @@ pub struct Fabric {
     /// Contention-aware ToR/spine network; `None` (the default) keeps
     /// every hop at the fixed [`WIRE_US`] transit, bit for bit.
     net: Option<PathNet<FabricEv>>,
+    /// Latency provenance (PR 10): when armed, every in-flight record's
+    /// [`TaxCell`] is charged at each fabric hop and handed to the
+    /// client layer at commit via [`Fabric::take_committed_tax`]. Off by
+    /// default; charging is pure arithmetic on timestamps the fabric
+    /// already computes, so the disabled path is bit-exact.
+    provenance: bool,
+    /// Commit-time cells awaiting pickup by the dc layer, keyed by the
+    /// record token (drained by [`Fabric::take_committed_tax`]; stays
+    /// empty when provenance is off).
+    committed_tax: Vec<(u64, TaxCell)>,
 }
 
 /// Flush the network's re-estimate queue as [`FabricEv::NetDone`]
@@ -534,6 +550,8 @@ impl Fabric {
             read_path: None,
             faults: None,
             net: None,
+            provenance: false,
+            committed_tax: Vec::new(),
         }
     }
 
@@ -647,6 +665,31 @@ impl Fabric {
     /// Whether the contention-aware network is installed.
     pub fn network_enabled(&self) -> bool {
         self.net.is_some()
+    }
+
+    /// Arm latency provenance: from now on every in-flight record's
+    /// [`TaxCell`] is charged at each fabric hop ([`Segment::Network`],
+    /// CPU queue/service, [`Segment::StorageWrite`],
+    /// [`Segment::Replication`]) and the commit-time cell is queued for
+    /// [`Fabric::take_committed_tax`]. Call before any traffic flows.
+    /// With this disabled (the default) no cell is ever charged and the
+    /// fabric is bit-exact to the pre-provenance build.
+    pub fn enable_provenance(&mut self) {
+        self.provenance = true;
+    }
+
+    /// Whether latency provenance is armed.
+    pub fn provenance_enabled(&self) -> bool {
+        self.provenance
+    }
+
+    /// Claim the committed fabric cell for `token` (provenance only;
+    /// `None` when disarmed or when the commit predates arming). The
+    /// buffer holds only commits not yet drained by the dc layer — one
+    /// event-turn's worth — so the scan is O(few).
+    pub fn take_committed_tax(&mut self, token: u64) -> Option<TaxCell> {
+        let pos = self.committed_tax.iter().position(|&(t, _)| t == token)?;
+        Some(self.committed_tax.swap_remove(pos).1)
     }
 
     /// Transfers that entered the network below their solo (uncontended)
@@ -1047,6 +1090,9 @@ impl Fabric {
             active: true,
             pending: 0,
             isr: self.replication as u8,
+            // Fabric cell covers [send, commit]; charged only when
+            // provenance is armed.
+            tax: TaxCell::new(now),
         });
         self.emit_transfer(
             t_ser,
@@ -1202,6 +1248,17 @@ impl Fabric {
                 let b = &mut self.brokers[leader];
                 let t_rx = b.nic_rx.submit(now, bytes);
                 let t_cpu = b.cpu_submit(t_rx, class, cpu);
+                if self.provenance {
+                    // [send, t_rx] is producer-NIC serialization + wire
+                    // (+ contention) + leader-NIC drain; [t_rx, t_cpu]
+                    // splits into the ideal uncontended service time
+                    // (work / cores) vs queueing behind other requests.
+                    let svc_ideal =
+                        (cpu / self.tuning.request_handler_cores as f64).round() as u64;
+                    let f = &mut self.inflight[fid as usize];
+                    f.tax.charge(Segment::Network, t_rx);
+                    f.tax.charge_split(Segment::CpuService, svc_ideal, Segment::CpuQueue, t_cpu);
+                }
                 out.push(FabricOut::Schedule(t_cpu, FabricEv::LeaderCpuDone { fid }));
             }
             FabricEv::LeaderCpuDone { fid } => {
@@ -1222,6 +1279,11 @@ impl Fabric {
                 // class (inert unless storage QoS is enabled).
                 meter.add(Class::Broker, Channel::Storage, Dir::Write, bytes);
                 let t_wr = self.brokers[leader].storage.write_classed(now, bytes, class);
+                if self.provenance {
+                    // [cpu done, t_wr]: NVMe write queue + device time
+                    // for the leader append.
+                    self.inflight[fid as usize].tax.charge(Segment::StorageWrite, t_wr);
+                }
                 if let Some(rp) = &mut self.read_path {
                     rp.caches[leader].append_group(partition, bytes);
                 }
@@ -1546,6 +1608,7 @@ impl Fabric {
             fs.stats.bytes_committed += bytes;
         }
         let dedup = self.dedup_enabled();
+        let provenance = self.provenance;
         let f = &mut self.inflight[fid as usize];
         f.active = false;
         out.push(FabricOut::Committed {
@@ -1553,11 +1616,20 @@ impl Fabric {
             partition: f.partition,
             at: now,
         });
+        // Capture the record identity before dedup retires the slot: the
+        // dc layer claims the commit cell by this token.
+        let (token, mut cell) = (f.token, f.tax);
         if dedup {
             // The item token can be released and reused once the commit
             // is delivered; retire the slot's copy so a later dedup scan
             // cannot match this freed slot against the token's next life.
             f.token = RETIRED_TOKEN;
+        }
+        if provenance {
+            // [leader stored ∨ last follower ack, commit]: waiting for
+            // the ISR quorum.
+            cell.charge(Segment::Replication, now);
+            self.committed_tax.push((token, cell));
         }
         self.free.push(fid);
     }

@@ -28,11 +28,13 @@
 
 use crate::broker::qos::{QosPolicy, TenantQuota};
 use crate::config::Config;
+use crate::metrics::trace::TraceSpec;
 use crate::net::NetworkSpec;
 use crate::pipeline::dc::{self, FabricSpec, TenantSpec, TenantSummary, WorkloadKind};
 use crate::pipeline::fabric::FaultPlan;
 use crate::pipeline::facerec::{self, SimReport};
 use crate::pipeline::objdet::{self, ObjDetReport};
+use crate::util::json::Json;
 
 /// Configuration of a two-tenant deployment on one shared fabric.
 ///
@@ -341,6 +343,15 @@ pub struct MultiTenantConfig {
     /// every wire hop at the fixed transit, bit for bit
     /// (`tests/net_differential.rs` pins it).
     pub network: Option<NetworkSpec>,
+    /// Latency provenance ([`FabricSpec::with_provenance`]): per-record
+    /// tax cells + per-tenant [`TaxSummary`] in the report. `false`
+    /// (the default) is bit-exact (`tests/tax_differential.rs`).
+    ///
+    /// [`TaxSummary`]: crate::metrics::tax::TaxSummary
+    pub provenance: bool,
+    /// Opt-in flight recorder; the run's sampled trace lands in
+    /// [`MultiTenantReport::trace`] as Chrome trace-event JSON.
+    pub trace: Option<TraceSpec>,
 }
 
 impl MultiTenantConfig {
@@ -356,6 +367,8 @@ impl MultiTenantConfig {
             read_cache_bytes: None,
             faults: None,
             network: None,
+            provenance: false,
+            trace: None,
         }
     }
 
@@ -394,6 +407,18 @@ impl MultiTenantConfig {
     /// (see [`Self::network`]).
     pub fn with_network(mut self, spec: NetworkSpec) -> Self {
         self.network = Some(spec);
+        self
+    }
+
+    /// Arm latency provenance (see [`Self::provenance`]).
+    pub fn with_provenance(mut self) -> Self {
+        self.provenance = true;
+        self
+    }
+
+    /// Install the flight recorder (see [`Self::trace`]).
+    pub fn with_trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
         self
     }
 
@@ -587,6 +612,9 @@ pub struct MultiTenantReport {
     pub net_contended_transfers: u64,
     /// Peak time-averaged rack-uplink utilization (0.0 without a network).
     pub net_max_uplink_util: f64,
+    /// Flight-recorder contents as Chrome trace-event JSON (`None`
+    /// unless [`MultiTenantConfig::with_trace`] installed the recorder).
+    pub trace: Option<Json>,
 }
 
 impl MultiTenantReport {
@@ -618,6 +646,12 @@ impl MultiTenantSim {
         }
         if let Some(net) = c.network {
             spec = spec.with_network_spec(net);
+        }
+        if c.provenance {
+            spec = spec.with_provenance();
+        }
+        if let Some(tr) = c.trace {
+            spec = spec.with_trace(tr);
         }
         let tenant_specs: Vec<TenantSpec<'_>> = c
             .tenants
@@ -687,6 +721,7 @@ impl MultiTenantSim {
             fault,
             net_contended_transfers: world.shared.fabric.net_contended_transfers(),
             net_max_uplink_util: world.shared.fabric.net_max_uplink_util(elapsed),
+            trace: world.shared.trace.as_ref().map(|t| t.to_chrome_json()),
         }
     }
 }

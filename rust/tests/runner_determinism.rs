@@ -171,3 +171,39 @@ fn scale_experiment_model_json_is_identical_at_jobs_1_and_8() {
         "model form must not leak host timing"
     );
 }
+
+#[test]
+fn tax_experiment_json_is_identical_at_jobs_1_and_8() {
+    // The provenance sweep aggregates per-record segment ledgers into
+    // per-tenant means and p99s, and dumps the whole registry per point
+    // — all of it derived from the same deterministic worlds, so the
+    // full JSON (attribution included) must be jobs-invariant.
+    use aitax::experiments::tax::{self, TaxArm};
+    let run_with = |jobs: usize| {
+        runner::set_jobs_override(Some(jobs));
+        let sweep = tax::run_points(
+            vec![(1.0, TaxArm::Baseline), (8.0, TaxArm::Baseline)],
+            Fidelity::Quick,
+            false,
+        );
+        runner::set_jobs_override(None);
+        tax::to_json(&sweep).pretty()
+    };
+    let sequential = run_with(1);
+    let parallel = run_with(8);
+    assert!(
+        sequential == parallel,
+        "tax JSON diverged between jobs=1 and jobs=8:\n--- jobs=1 ---\n{sequential}\n--- jobs=8 ---\n{parallel}"
+    );
+    let parsed = aitax::util::json::Json::parse(&sequential).expect("valid JSON");
+    let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+    assert_eq!(points.len(), 2, "two baseline accelerations");
+    for p in points {
+        let share = p
+            .get("tax")
+            .and_then(|t| t.get("tax_share"))
+            .and_then(|v| v.as_f64())
+            .expect("attributed tax share");
+        assert!(share > 0.0 && share < 1.0);
+    }
+}

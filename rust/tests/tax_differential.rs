@@ -1,0 +1,211 @@
+//! Latency-provenance differential suite.
+//!
+//! PR 10 threads a per-record `TaxCell` through every hop of the
+//! pipeline — client buffer, quota throttle, wire, broker CPU queue,
+//! storage, replication, broker wait, fetch, rebalance pause, and the
+//! accelerated service itself. The attribution must be *free*: it
+//! observes timestamps the simulation already computes and never feeds
+//! anything back. These tests pin that contract the way
+//! `net_differential.rs` pinned the fabric:
+//!
+//! 1. **Armed is inert** — a world run with `.with_provenance()` (and
+//!    even `.with_trace(..)`) must be bit-exact to the unarmed world on
+//!    every shared observable: same events, same counters, same floats.
+//!    Transitively the disabled path is the PR 9 path, because the only
+//!    difference between the two builds is a dead `TaxCell` riding in
+//!    each `Item`.
+//! 2. **Exact attribution** — with provenance on, the eleven segments
+//!    telescope: per record the segment sum equals the measured e2e
+//!    exactly (`max_residual_us == 0`), and in aggregate
+//!    `ai_us + tax_us` reconciles with the e2e mean to ≤ 1 µs.
+//! 3. **Faults and retries don't break the ledger** — retransmitted
+//!    records overlap the fabric's span with the client's backoff
+//!    window; `TaxCell::reconcile` settles the overlap into client
+//!    wait, so the residual stays zero even across an admission outage
+//!    with retrying producers.
+
+use aitax::config::Deployment;
+use aitax::metrics::trace::TraceSpec;
+use aitax::pipeline::catchup::{self, CatchupSpec};
+use aitax::pipeline::dc::RetryPolicy;
+use aitax::pipeline::fabric::FaultPlan;
+use aitax::pipeline::mixed::{MultiTenantConfig, MultiTenantReport, MultiTenantSim};
+use aitax::util::units::SEC;
+
+/// Scaled-down 3-tenant world (same fleets as the resilience
+/// differentials) so each run stays fast.
+fn small_cfg(horizon_us: u64) -> MultiTenantConfig {
+    let mut cfg = catchup::registry(
+        CatchupSpec { lag_us: 0, cache_bytes: 50e6, classed_reads: true },
+        horizon_us,
+    );
+    cfg.tenants[0].cfg.deployment = Deployment {
+        producers: 20,
+        consumers: 30,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 30,
+    };
+    cfg.tenants[1].cfg.deployment = Deployment {
+        producers: 4,
+        consumers: 6,
+        brokers: 3,
+        drives_per_broker: 1,
+        replication: 3,
+        partitions: 6,
+    };
+    cfg.tenants[1].cfg.calibration.train.batch_bytes = 250_000.0;
+    cfg.tenants[1].cfg.calibration.train.fetch_min_bytes = 500_000;
+    cfg.fabric = cfg.tenants[0].cfg.clone();
+    cfg
+}
+
+/// Every observable the unarmed world reports, compared bit-for-bit.
+/// (The tax block itself is `None` vs `Some` by design and is asserted
+/// separately.)
+fn assert_identical(a: &MultiTenantReport, b: &MultiTenantReport, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.clamped_events, b.clamped_events, "{what}: clamped");
+    assert!(
+        a.broker_storage_write_util == b.broker_storage_write_util,
+        "{what}: write util"
+    );
+    assert!(
+        a.broker_storage_read_util == b.broker_storage_read_util,
+        "{what}: read util"
+    );
+    assert!(a.broker_net_rx_util == b.broker_net_rx_util, "{what}: net rx util");
+    assert!(a.broker_cpu_util == b.broker_cpu_util, "{what}: cpu util");
+    assert!(a.cache_hit_ratio == b.cache_hit_ratio, "{what}: cache hit");
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.produced, y.produced, "{what}: {} produced", x.name);
+        assert_eq!(x.completed, y.completed, "{what}: {} completed", x.name);
+        assert!(x.wait_mean_us == y.wait_mean_us, "{what}: {} wait mean", x.name);
+        assert_eq!(x.wait_p99_us, y.wait_p99_us, "{what}: {} wait p99", x.name);
+        assert!(x.e2e_mean_us == y.e2e_mean_us, "{what}: {} e2e mean", x.name);
+        assert_eq!(x.e2e_p99_us, y.e2e_p99_us, "{what}: {} e2e p99", x.name);
+        assert_eq!(x.retries, y.retries, "{what}: {} retries", x.name);
+        assert!(x.net_tx_bytes == y.net_tx_bytes, "{what}: {} net tx", x.name);
+        assert!(x.net_rx_bytes == y.net_rx_bytes, "{what}: {} net rx", x.name);
+    }
+}
+
+/// Aggregate reconciliation: residual pinned to zero, `ai + tax`
+/// within 1 µs of the e2e mean, and the segment means partitioning it.
+fn assert_reconciles(r: &MultiTenantReport, what: &str) {
+    for t in &r.tenants {
+        if t.completed == 0 {
+            continue;
+        }
+        let tax = t.tax.as_ref().unwrap_or_else(|| {
+            panic!("{what}: {} completed records but no tax block", t.name)
+        });
+        assert!(tax.records > 0, "{what}: {} recorded no cells", t.name);
+        assert_eq!(
+            tax.max_residual_us, 0,
+            "{what}: {} worst per-record residual must be zero",
+            t.name
+        );
+        assert!(
+            (tax.ai_us + tax.tax_us - tax.e2e_mean_us).abs() <= 1.0,
+            "{what}: {} ai {} + tax {} must reconcile with e2e mean {}",
+            t.name,
+            tax.ai_us,
+            tax.tax_us,
+            tax.e2e_mean_us
+        );
+        let seg_sum: f64 = tax.seg_mean_us.iter().sum();
+        assert!(
+            (seg_sum - tax.e2e_mean_us).abs() <= 1.0,
+            "{what}: {} segment means {} must sum to the e2e mean {}",
+            t.name,
+            seg_sum,
+            tax.e2e_mean_us
+        );
+        // The attributed e2e mean is the histogram's e2e mean: both are
+        // derived from the same (busy - created) per record.
+        assert!(
+            (tax.e2e_mean_us - t.e2e_mean_us).abs() <= 1.0,
+            "{what}: {} tax e2e mean {} must match the report's {}",
+            t.name,
+            tax.e2e_mean_us,
+            t.e2e_mean_us
+        );
+    }
+}
+
+#[test]
+fn provenance_armed_world_is_bit_exact_on_shared_observables() {
+    let plain = MultiTenantSim::new(small_cfg(4 * SEC)).run();
+    let armed = MultiTenantSim::new(small_cfg(4 * SEC).with_provenance()).run();
+    let traced = MultiTenantSim::new(
+        small_cfg(4 * SEC).with_provenance().with_trace(TraceSpec::default()),
+    )
+    .run();
+    assert_identical(&plain, &armed, "provenance armed");
+    assert_identical(&plain, &traced, "provenance + trace armed");
+    // The arming is visible only in the new, additive outputs.
+    for t in &plain.tenants {
+        assert!(t.tax.is_none(), "unarmed world must not attribute");
+    }
+    assert!(plain.trace.is_none());
+    assert!(armed.trace.is_none(), "trace needs its own opt-in");
+    assert!(traced.trace.is_some());
+}
+
+#[test]
+fn segment_sums_reconcile_with_e2e_per_record() {
+    let r = MultiTenantSim::new(small_cfg(4 * SEC).with_provenance()).run();
+    assert!(r.tenants.iter().any(|t| t.completed > 0));
+    assert_reconciles(&r, "steady state");
+    // The accelerated service time is real on every tenant that
+    // completed records, and so is at least some tax.
+    for t in &r.tenants {
+        if let Some(tax) = &t.tax {
+            assert!(tax.ai_us > 0.0, "{}: service segment must be charged", t.name);
+            assert!(tax.tax_us > 0.0, "{}: some hop must cost something", t.name);
+            assert!(tax.tax_share > 0.0 && tax.tax_share < 1.0);
+        }
+    }
+}
+
+#[test]
+fn ledger_survives_faults_and_retrying_producers() {
+    // An admission outage with retrying producers: records retransmit,
+    // back off, and commit late. The client's view (send → ack) and the
+    // fabric's view (last attempt → commit) overlap; reconcile settles
+    // the overlap into client wait, so the telescoping stays exact.
+    let policy = RetryPolicy {
+        max_attempts: 6,
+        base_backoff_us: 100_000,
+        max_backoff_us: 800_000,
+        request_timeout_us: 1_000_000,
+        buffer_bytes: 512e6,
+    };
+    let plan = FaultPlan::new()
+        .kill_broker(SEC, 1)
+        .restart_broker(2 * SEC, 1)
+        .with_recovery_bandwidth(400e6)
+        .with_min_isr(3);
+    let mut cfg = small_cfg(5 * SEC).with_faults(plan.clone()).with_provenance();
+    for t in &mut cfg.tenants {
+        *t = t.clone().with_retry(policy);
+    }
+    let r = MultiTenantSim::new(cfg).run();
+    let retried: u64 = r.tenants.iter().map(|t| t.retries).sum();
+    assert!(retried > 0, "the outage must force retransmissions");
+    assert_reconciles(&r, "outage + retries");
+
+    // And arming provenance on the fault schedule still perturbs
+    // nothing: same world, with and without the ledger.
+    let base = {
+        let mut cfg = small_cfg(5 * SEC).with_faults(plan);
+        for t in &mut cfg.tenants {
+            *t = t.clone().with_retry(policy);
+        }
+        MultiTenantSim::new(cfg).run()
+    };
+    assert_identical(&base, &r, "provenance armed under faults");
+}
